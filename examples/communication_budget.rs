@@ -1,0 +1,88 @@
+//! Communication-budget study: time-to-accuracy on constrained links.
+//!
+//! The paper's motivation (§I) is bandwidth-constrained edge deployments.
+//! This example converts the byte-exact wire accounting of FedEP vs FedS
+//! runs into wall-clock transfer time under the `comm::bandwidth` link
+//! models (10 Mbit/s edge vs 1 Gbit/s datacenter), and prints
+//! accuracy-vs-transfer-seconds tables — the deployment-facing view of
+//! Table III.
+//!
+//! ```bash
+//! cargo run --release --example communication_budget
+//! ```
+
+use feds::comm::BandwidthModel;
+use feds::data::generator::{generate, GeneratorConfig};
+use feds::data::partition::partition;
+use feds::fed::{run_federated, Algo, Backend, FedRunConfig, RunOutcome};
+use feds::kge::{Hyper, Method};
+
+fn main() -> anyhow::Result<()> {
+    let kg = generate(&GeneratorConfig {
+        num_entities: 512,
+        num_relations: 24,
+        num_triples: 8_000,
+        seed: 23,
+        ..Default::default()
+    });
+    let data = partition(&kg, 5, 23);
+    let backend = Backend::Native {
+        hyper: Hyper { dim: 32, learning_rate: 3e-3, ..Default::default() },
+        batch: 128,
+        negatives: 32,
+        eval_batch: 64,
+    };
+
+    let run = |algo: Algo| -> anyhow::Result<RunOutcome> {
+        let cfg = FedRunConfig {
+            algo,
+            method: Method::TransE,
+            max_rounds: 40,
+            eval_every: 5,
+            eval_cap: 256,
+            seed: 3,
+            ..Default::default()
+        };
+        Ok(run_federated(&data, &cfg, &backend)?)
+    };
+    let fedep = run(Algo::FedEP)?;
+    let feds = run(Algo::FedS { sync: true })?;
+
+    for (lname, link) in [
+        ("edge 10 Mbit/s + 20 ms", BandwidthModel::edge()),
+        ("datacenter 1 Gbit/s + 1 ms", BandwidthModel::datacenter()),
+    ] {
+        println!("== link: {lname} ==");
+        println!(
+            "{:>8} | {:>10} {:>12} | {:>10} {:>12}",
+            "", "FedEP MRR", "transfer s", "FedS MRR", "transfer s"
+        );
+        let rows = fedep.history.records.len().max(feds.history.records.len());
+        for i in 0..rows {
+            let cell = |o: &RunOutcome| {
+                o.history.records.get(i).map(|r| {
+                    let msgs = o.acct.messages() / o.history.records.len().max(1) as u64;
+                    (r.round, r.test.mrr, link.time_for(r.bytes_cum, msgs * i as u64))
+                })
+            };
+            let a = cell(&fedep);
+            let b = cell(&feds);
+            let round = a.map(|x| x.0).or(b.map(|x| x.0)).unwrap_or(0);
+            println!(
+                "round {round:>3} | {:>10} {:>12} | {:>10} {:>12}",
+                a.map(|x| format!("{:.4}", x.1)).unwrap_or_else(|| "-".into()),
+                a.map(|x| format!("{:.1}", x.2)).unwrap_or_else(|| "-".into()),
+                b.map(|x| format!("{:.4}", x.1)).unwrap_or_else(|| "-".into()),
+                b.map(|x| format!("{:.1}", x.2)).unwrap_or_else(|| "-".into()),
+            );
+        }
+        let speedup = link.time_for(fedep.history.converged().bytes_cum, 1)
+            / link.time_for(feds.history.converged().bytes_cum, 1).max(1e-9);
+        println!(
+            "at convergence: FedS needs {speedup:.2}x less transfer time for MRR {:.4} (FedEP {:.4})\n",
+            feds.history.mrr_cg(),
+            fedep.history.mrr_cg()
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,78 @@
+//! Quickstart: 60 seconds to FedS.
+//!
+//! Generates a small federated KG (3 clients, relation-partitioned), trains
+//! FedEP (dense baseline) and FedS (Entity-Wise Top-K sparsification) on
+//! the pure-Rust backend, and prints accuracy + communication savings.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+//! No artifacts needed — for the production AOT/PJRT path see
+//! `examples/e2e_federated_training.rs`.
+
+use feds::data::generator::{generate, GeneratorConfig};
+use feds::data::partition::partition;
+use feds::fed::{run_federated, Algo, Backend, FedRunConfig};
+use feds::kge::{Hyper, Method};
+
+fn main() -> anyhow::Result<()> {
+    // 1. a synthetic FB15k-237-like KG, split into 3 clients by relation
+    let kg = generate(&GeneratorConfig {
+        num_entities: 512,
+        num_relations: 24,
+        num_triples: 8_000,
+        seed: 42,
+        ..Default::default()
+    });
+    let data = partition(&kg, 3, 42);
+    println!(
+        "federated KG: {} entities ({} shared), {} relations, {} triples, {} clients\n",
+        data.num_entities,
+        data.shared.len(),
+        data.num_relations,
+        data.total_triples(),
+        data.clients.len()
+    );
+
+    // 2. a local-training backend (pure Rust here; Backend::Xla for PJRT)
+    let backend = Backend::Native {
+        hyper: Hyper { dim: 32, learning_rate: 3e-3, ..Default::default() },
+        batch: 128,
+        negatives: 32,
+        eval_batch: 64,
+    };
+
+    // 3. run the dense baseline and FedS
+    let mut results = Vec::new();
+    for algo in [Algo::FedEP, Algo::FedS { sync: true }] {
+        let cfg = FedRunConfig {
+            algo,
+            method: Method::TransE,
+            max_rounds: 40,
+            eval_every: 5,
+            eval_cap: 256,
+            seed: 7,
+            ..Default::default()
+        };
+        let out = run_federated(&data, &cfg, &backend)?;
+        println!(
+            "{:<8} converged @ round {:>3}: MRR {:.4}  Hits@10 {:.4}  transmitted {:>11} params",
+            out.history.label,
+            out.history.rounds_cg(),
+            out.history.mrr_cg(),
+            out.history.hits10_cg(),
+            out.history.params_cg(),
+        );
+        results.push(out);
+    }
+
+    // 4. the headline: accuracy parity at a fraction of the traffic
+    let (fedep, feds) = (&results[0], &results[1]);
+    println!(
+        "\nFedS transmitted {:.1}% of FedEP's parameters at convergence \
+         (Eq.5 worst-case bound: {:.1}%)",
+        100.0 * feds.history.params_cg() as f64 / fedep.history.params_cg() as f64,
+        100.0 * feds.eq5_ratio.unwrap()
+    );
+    Ok(())
+}

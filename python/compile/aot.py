@@ -1,0 +1,257 @@
+"""AOT pipeline: lower every L2 function to HLO *text* + write the manifest.
+
+HLO text (not ``.serialize()``) is the interchange format: jax ≥ 0.5 emits
+HloModuleProtos with 64-bit instruction ids which the runtime's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly.  See /opt/xla-example/README.md.
+
+Run once via ``make artifacts``:
+    cd python && python -m compile.aot --out-dir ../artifacts
+
+Artifacts produced (per method m ∈ {transe, rotate, complex}):
+  train_{m}_d{D}.hlo.txt     — one local training step (loss + dense Adam)
+  eval_{m}_d{D}.hlo.txt      — filtered link-prediction ranks
+  change_{m}_d{D}.hlo.txt    — Eq.1 cosine change scores (FedS upstream)
+  train/eval at the FedEPL dimension (Appendix VI-C)
+  train_kd_{m}_d{D}.hlo.txt  — FedE-KD dual-dim co-distillation (Table I),
+                               transe & rotate only, as in the paper
+
+plus ``manifest.json`` describing every artifact's I/O signature so the Rust
+runtime can validate shapes before compiling.
+"""
+
+import argparse
+import json
+import os
+from dataclasses import replace
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .config import DEFAULT, METHODS, Config
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def i32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+def _sig(specs):
+    return [[list(s.shape), str(s.dtype)] for s in specs]
+
+
+def train_specs(cfg: Config, method: str):
+    e, r = cfg.num_entities, cfg.num_relations
+    we, wr = cfg.entity_width(method), cfg.relation_width(method)
+    b, n = cfg.batch, cfg.negatives
+    return [
+        f32(e, we), f32(r, wr),               # ent, rel
+        f32(e, we), f32(e, we),               # ent_m, ent_v
+        f32(r, wr), f32(r, wr),               # rel_m, rel_v
+        f32(),                                # adam step (1-based)
+        i32(b, 3), i32(b, n), f32(b), f32(b)  # pos, neg, neg_is_head, mask
+    ]
+
+
+def train_epoch_specs(cfg: Config, method: str):
+    e, r = cfg.num_entities, cfg.num_relations
+    we, wr = cfg.entity_width(method), cfg.relation_width(method)
+    b, n, s = cfg.batch, cfg.negatives, cfg.scan_steps
+    return [
+        f32(e, we), f32(r, wr),
+        f32(e, we), f32(e, we),
+        f32(r, wr), f32(r, wr),
+        f32(),                                   # step0
+        i32(s, b, 3), i32(s, b, n), f32(s, b), f32(s, b),
+    ]
+
+
+def kd_epoch_specs(cfg: Config, cfg_lo: Config, method: str):
+    e, r = cfg.num_entities, cfg.num_relations
+    we, wr = cfg.entity_width(method), cfg.relation_width(method)
+    wel, wrl = cfg_lo.entity_width(method), cfg_lo.relation_width(method)
+    b, n, s = cfg.batch, cfg.negatives, cfg.scan_steps
+    return [
+        f32(e, we), f32(r, wr), f32(e, we), f32(e, we), f32(r, wr), f32(r, wr),
+        f32(e, wel), f32(r, wrl), f32(e, wel), f32(e, wel), f32(r, wrl),
+        f32(r, wrl),
+        f32(), i32(s, b, 3), i32(s, b, n), f32(s, b), f32(s, b),
+    ]
+
+
+def eval_specs(cfg: Config, method: str):
+    e, r = cfg.num_entities, cfg.num_relations
+    we, wr = cfg.entity_width(method), cfg.relation_width(method)
+    eb = cfg.eval_batch
+    return [
+        f32(e, we), f32(r, wr),
+        i32(eb), i32(eb), i32(eb), f32(eb), f32(eb, e),
+    ]
+
+
+def change_specs(cfg: Config, method: str):
+    e, we = cfg.num_entities, cfg.entity_width(method)
+    return [f32(e, we), f32(e, we)]
+
+
+def kd_specs(cfg: Config, cfg_lo: Config, method: str):
+    e, r = cfg.num_entities, cfg.num_relations
+    we, wr = cfg.entity_width(method), cfg.relation_width(method)
+    wel, wrl = cfg_lo.entity_width(method), cfg_lo.relation_width(method)
+    b, n = cfg.batch, cfg.negatives
+    return [
+        f32(e, we), f32(r, wr), f32(e, we), f32(e, we), f32(r, wr), f32(r, wr),
+        f32(e, wel), f32(r, wrl), f32(e, wel), f32(e, wel), f32(r, wrl),
+        f32(r, wrl),
+        f32(), i32(b, 3), i32(b, n), f32(b), f32(b),
+    ]
+
+
+def lower_one(fn, specs, path: str) -> int:
+    lowered = jax.jit(fn).lower(*specs)
+    text = to_hlo_text(lowered)
+    with open(path, "w") as f:
+        f.write(text)
+    return len(text)
+
+
+def build_all(out_dir: str, cfg: Config, quick: bool = False) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    artifacts = []
+
+    def entry(name, role, method, c: Config, specs, n_outputs, extra=None):
+        rec = {
+            "name": name,
+            "file": f"{name}.hlo.txt",
+            "role": role,
+            "method": method,
+            "dim": c.dim,
+            "entity_width": c.entity_width(method),
+            "relation_width": c.relation_width(method),
+            "num_entities": c.num_entities,
+            "num_relations": c.num_relations,
+            "batch": c.batch,
+            "negatives": c.negatives,
+            "eval_batch": c.eval_batch,
+            "inputs": _sig(specs),
+            "n_outputs": n_outputs,
+        }
+        if extra:
+            rec.update(extra)
+        return rec
+
+    dims = {"base": cfg}
+    if not quick:
+        dims["fedepl"] = replace(cfg, dim=cfg.fedepl_dim())
+
+    methods = METHODS if not quick else ("transe",)
+    for method in methods:
+        for variant, c in dims.items():
+            name = f"train_{method}_d{c.dim}"
+            specs = train_specs(c, method)
+            n = lower_one(model.make_train_step(method, c), specs,
+                          os.path.join(out_dir, f"{name}.hlo.txt"))
+            artifacts.append(entry(name, "train", method, c, specs, 7))
+            print(f"  {name}: {n} chars")
+
+            name = f"train_epoch_{method}_d{c.dim}"
+            specs = train_epoch_specs(c, method)
+            n = lower_one(model.make_train_epoch(method, c, c.scan_steps),
+                          specs, os.path.join(out_dir, f"{name}.hlo.txt"))
+            artifacts.append(entry(name, "train_epoch", method, c, specs, 8,
+                                   extra={"scan_steps": c.scan_steps}))
+            print(f"  {name}: {n} chars")
+
+            name = f"eval_{method}_d{c.dim}"
+            specs = eval_specs(c, method)
+            n = lower_one(model.make_eval_step(method, c), specs,
+                          os.path.join(out_dir, f"{name}.hlo.txt"))
+            artifacts.append(entry(name, "eval", method, c, specs, 1))
+            print(f"  {name}: {n} chars")
+
+            if variant == "base":
+                name = f"change_{method}_d{c.dim}"
+                specs = change_specs(c, method)
+                n = lower_one(model.make_change_fn(c), specs,
+                              os.path.join(out_dir, f"{name}.hlo.txt"))
+                artifacts.append(entry(name, "change", method, c, specs, 1))
+                print(f"  {name}: {n} chars")
+
+        if method in ("transe", "rotate") and not quick:
+            cfg_lo = replace(cfg, dim=cfg.kd_dim())
+            name = f"train_kd_{method}_d{cfg.dim}"
+            specs = kd_specs(cfg, cfg_lo, method)
+            n = lower_one(model.make_kd_train_step(method, cfg, cfg_lo),
+                          specs, os.path.join(out_dir, f"{name}.hlo.txt"))
+            artifacts.append(entry(
+                name, "train_kd", method, cfg, specs, 13,
+                extra={"kd_dim": cfg_lo.dim,
+                       "kd_entity_width": cfg_lo.entity_width(method),
+                       "kd_relation_width": cfg_lo.relation_width(method)}))
+            print(f"  {name}: {n} chars")
+
+            name = f"train_kd_epoch_{method}_d{cfg.dim}"
+            specs = kd_epoch_specs(cfg, cfg_lo, method)
+            n = lower_one(
+                model.make_kd_train_epoch(method, cfg, cfg_lo,
+                                          cfg.scan_steps),
+                specs, os.path.join(out_dir, f"{name}.hlo.txt"))
+            artifacts.append(entry(
+                name, "train_kd_epoch", method, cfg, specs, 14,
+                extra={"kd_dim": cfg_lo.dim,
+                       "kd_entity_width": cfg_lo.entity_width(method),
+                       "kd_relation_width": cfg_lo.relation_width(method),
+                       "scan_steps": cfg.scan_steps}))
+            print(f"  {name}: {n} chars")
+
+    manifest = {
+        "version": 1,
+        "config": cfg.to_dict(),
+        "fedepl_dim": cfg.fedepl_dim(),
+        "kd_dim": cfg.kd_dim(),
+        "artifacts": artifacts,
+    }
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    return manifest
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--entities", type=int, default=DEFAULT.num_entities)
+    ap.add_argument("--relations", type=int, default=DEFAULT.num_relations)
+    ap.add_argument("--dim", type=int, default=DEFAULT.dim)
+    ap.add_argument("--batch", type=int, default=DEFAULT.batch)
+    ap.add_argument("--negatives", type=int, default=DEFAULT.negatives)
+    ap.add_argument("--quick", action="store_true",
+                    help="transe/base-dim only (CI smoke)")
+    args = ap.parse_args()
+
+    cfg = replace(
+        DEFAULT,
+        num_entities=args.entities,
+        num_relations=args.relations,
+        dim=args.dim,
+        batch=args.batch,
+        negatives=args.negatives,
+    )
+    m = build_all(args.out_dir, cfg, quick=args.quick)
+    print(f"wrote {len(m['artifacts'])} artifacts to {args.out_dir}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,85 @@
+"""Single source of truth for artifact shapes and hyper-parameters.
+
+The Rust runtime never recomputes any of this: everything lands in
+``artifacts/manifest.json`` and is validated against the dataset config at
+load time.  The defaults are the *scaled* reproduction setup described in
+DESIGN.md §4 (the paper runs FB15k-237 / dim 256 on GPUs; we run a synthetic
+FB15k-237-like KG / dim 64 on CPU-PJRT).
+"""
+
+from dataclasses import dataclass, field, asdict
+
+
+@dataclass(frozen=True)
+class Config:
+    # --- shapes -----------------------------------------------------------
+    num_entities: int = 2048      # E  (power of two so eval tiles divide)
+    num_relations: int = 24       # R
+    dim: int = 64                 # D, the "base" dimension (paper: 256)
+    batch: int = 256              # B, training batch (paper: 512)
+    negatives: int = 64           # NEG, negative samples per positive
+    eval_batch: int = 128         # EB, queries per eval step
+    scan_steps: int = 32          # S, steps fused per train_epoch artifact
+
+    # --- hyper-parameters (paper §IV-B) ------------------------------------
+    gamma: float = 8.0            # margin γ
+    epsilon: float = 2.0          # ε for the init range (γ+ε)/D
+    adv_temperature: float = 1.0  # self-adversarial sampling temperature
+    learning_rate: float = 1e-3   # paper: 1e-4 at dim 256; scaled up for dim 64
+    adam_beta1: float = 0.9
+    adam_beta2: float = 0.999
+    adam_eps: float = 1e-8
+    complex_reg: float = 1e-5     # L2 regularisation used for ComplEx (FedE)
+
+    # --- FedS / FedEPL derived dims ----------------------------------------
+    sparsity: float = 0.4         # p
+    sync_interval: int = 4        # s
+
+    # KD baseline: low-dim transport embeddings at 0.75·D (paper: 192/256)
+    kd_ratio: float = 0.75
+
+    def entity_width(self, method: str) -> int:
+        """Row width of the entity table (complex methods store re‖im)."""
+        return self.dim if method == "transe" else 2 * self.dim
+
+    def relation_width(self, method: str) -> int:
+        if method == "transe":
+            return self.dim
+        if method == "rotate":
+            return self.dim          # phases
+        if method == "complex":
+            return 2 * self.dim
+        raise ValueError(method)
+
+    @property
+    def embedding_range(self) -> float:
+        return (self.gamma + self.epsilon) / self.dim
+
+    def fedepl_dim(self) -> int:
+        """Embedding dimension of the FedEPL baseline (paper Appendix VI-C).
+
+        FedEPL lowers the dense baseline's dimension so that its per-cycle
+        transmitted volume matches FedS's ratio R_c^p (Eq. 5).  Rounded up,
+        as in the paper ("for benefiting FedEPL").
+        """
+        r = self.comm_ratio()
+        d = int(self.dim * r)
+        if self.dim * r > d:
+            d += 1
+        return d
+
+    def comm_ratio(self) -> float:
+        """Eq. 5: worst-case transmitted-parameter ratio of FedS vs dense."""
+        p, s, d = self.sparsity, self.sync_interval, float(self.dim)
+        return (p * s + 1.0 + (2.0 + p) * s / (2.0 * d)) / (s + 1.0)
+
+    def kd_dim(self) -> int:
+        return int(self.dim * self.kd_ratio)
+
+    def to_dict(self) -> dict:
+        return asdict(self)
+
+
+DEFAULT = Config()
+
+METHODS = ("transe", "rotate", "complex")

@@ -1,0 +1,46 @@
+"""L1 Pallas kernel: rowwise cosine change scores (Eq. 1, upstream Top-K).
+
+``change_scores(cur, hist) = 1 - cos(cur[i], hist[i])`` over the full entity
+table.  Bandwidth-bound: 2·E·W reads per E outputs, so the TPU schedule is a
+single-axis grid over row blocks with both operand tiles streamed through
+VMEM (BlockSpec handles the HBM→VMEM double buffering).  VMEM per tile at
+TN=256, W=128: 2·256·128·4 B = 256 KiB.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+from .score import _tile
+
+_INTERPRET = True
+
+
+def _row_cosine_kernel(a_ref, b_ref, o_ref):
+    a = a_ref[...]                        # (TN, W)
+    b = b_ref[...]
+    num = jnp.sum(a * b, axis=-1)
+    den = jnp.sqrt(jnp.sum(a * a, axis=-1) * jnp.sum(b * b, axis=-1))
+    o_ref[...] = num / jnp.maximum(den, ref.EPS)
+
+
+def row_cosine(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    n, w = a.shape
+    tn = _tile(n, 256)
+    return pl.pallas_call(
+        _row_cosine_kernel,
+        grid=(n // tn,),
+        in_specs=[
+            pl.BlockSpec((tn, w), lambda i: (i, 0)),
+            pl.BlockSpec((tn, w), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((tn,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.float32),
+        interpret=_INTERPRET,
+    )(a, b)
+
+
+def change_scores(cur: jnp.ndarray, hist: jnp.ndarray) -> jnp.ndarray:
+    """Eq. 1: M_c^t = 1 - cos(E_c^t, E_c^h) per entity row."""
+    return 1.0 - row_cosine(cur, hist)

@@ -1,0 +1,70 @@
+"""Pure-jnp oracles for every Pallas kernel.
+
+These are the correctness ground truth: ``python/tests/test_kernels.py``
+sweeps shapes/dtypes with hypothesis and asserts the Pallas kernels
+(`score.py`, `change.py`) match these to float32 tolerance.  They are also
+what the L2 model *would* use if Pallas were unavailable — the HLO the Rust
+runtime loads is produced with the Pallas path.
+"""
+
+import jax.numpy as jnp
+
+EPS = 1e-12
+
+
+# --- pairwise scores: one query row vs its own NEG candidates ---------------
+
+def pairwise_l1(q: jnp.ndarray, c: jnp.ndarray) -> jnp.ndarray:
+    """sum_w |q[b,w] - c[b,n,w]|  →  (B, N).  TransE distance."""
+    return jnp.sum(jnp.abs(q[:, None, :] - c), axis=-1)
+
+
+def pairwise_cmod(q: jnp.ndarray, c: jnp.ndarray) -> jnp.ndarray:
+    """Complex-modulus distance, RotatE.  Width W = 2*Dh laid out re‖im.
+
+    score[b,n] = sum_d sqrt((qre-cre)^2 + (qim-cim)^2)
+    """
+    w = q.shape[-1]
+    dh = w // 2
+    dre = q[:, None, :dh] - c[..., :dh]
+    dim = q[:, None, dh:] - c[..., dh:]
+    return jnp.sum(jnp.sqrt(dre * dre + dim * dim + EPS), axis=-1)
+
+
+def pairwise_dot(q: jnp.ndarray, c: jnp.ndarray) -> jnp.ndarray:
+    """Plain dot product  →  (B, N).  ComplEx (re‖im layout folds the
+    conjugation into the query construction, see model.py)."""
+    return jnp.einsum("bw,bnw->bn", q, c)
+
+
+# --- all-entity scores: query rows vs the full entity table ------------------
+
+def all_l1(q: jnp.ndarray, table: jnp.ndarray) -> jnp.ndarray:
+    """(EB, W) vs (E, W) → (EB, E) of sum_w |q - t|."""
+    return jnp.sum(jnp.abs(q[:, None, :] - table[None, :, :]), axis=-1)
+
+
+def all_cmod(q: jnp.ndarray, table: jnp.ndarray) -> jnp.ndarray:
+    w = q.shape[-1]
+    dh = w // 2
+    dre = q[:, None, :dh] - table[None, :, :dh]
+    dim = q[:, None, dh:] - table[None, :, dh:]
+    return jnp.sum(jnp.sqrt(dre * dre + dim * dim + EPS), axis=-1)
+
+
+def all_dot(q: jnp.ndarray, table: jnp.ndarray) -> jnp.ndarray:
+    return q @ table.T
+
+
+# --- rowwise cosine change (upstream Top-K, Eq. 1) ---------------------------
+
+def row_cosine(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """cos(a[i], b[i]) per row → (N,).  Zero rows cos to 0 (guarded)."""
+    num = jnp.sum(a * b, axis=-1)
+    den = jnp.sqrt(jnp.sum(a * a, axis=-1) * jnp.sum(b * b, axis=-1))
+    return num / jnp.maximum(den, EPS)
+
+
+def change_scores(cur: jnp.ndarray, hist: jnp.ndarray) -> jnp.ndarray:
+    """Eq. 1: M = 1 - cos(E^t, E^h), per entity row."""
+    return 1.0 - row_cosine(cur, hist)

@@ -1,0 +1,208 @@
+"""L1 Pallas kernels: the KGE scoring hot-spots.
+
+Two families:
+
+* ``pairwise_*`` — each query row scored against its own NEG candidate rows
+  (training-time negative sampling):  (B, W) × (B, N, W) → (B, N).
+* ``all_*`` — each query row scored against the *full* entity table
+  (link-prediction evaluation):       (EB, W) × (E, W) → (EB, E).
+
+TPU mapping (DESIGN.md §6 Hardware-Adaptation): the original FKGE systems
+run these as CUDA batched ops.  On TPU we tile for VMEM instead of shared
+memory — the grid walks (query-tile, entity-tile) blocks, each block's
+operands are staged HBM→VMEM by BlockSpec, and the reduction over W is fused
+inside the tile so the (EB, E) score matrix is written exactly once.  The
+MXU path is ``all_dot`` (a (TQ,W)×(W,TE) matmul per tile); the distance
+kernels are VPU-bound element-wise reductions.
+
+VMEM budget at the default tile sizes (f32):
+  pairwise: TB=64, N=64, W≤128  →  64·128 + 64·64·128 + 64·64   ≈ 2.2 MiB
+  all_*:    TQ=32, TE=256, W≤128 → 32·128 + 256·128 + 32·256    ≈ 0.2 MiB
+both well under the ~16 MiB/core VMEM of a TPUv4.
+
+Pallas runs with ``interpret=True`` (CPU PJRT cannot execute Mosaic
+custom-calls); gradients flow through ``jax.custom_vjp`` with closed-form
+jnp backward passes, so the lowered HLO contains the kernel forward and a
+fused dense backward.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+_INTERPRET = True
+EPS = ref.EPS
+
+
+def _tile(n: int, pref: int) -> int:
+    """Largest tile ≤ pref that divides n (falls back to n itself)."""
+    t = min(pref, n)
+    while n % t != 0:
+        t -= 1
+    return t
+
+
+# ---------------------------------------------------------------------------
+# pairwise kernels: (B, W) × (B, N, W) → (B, N)
+# ---------------------------------------------------------------------------
+
+def _pairwise_l1_kernel(q_ref, c_ref, o_ref):
+    q = q_ref[...]                       # (TB, W)
+    c = c_ref[...]                       # (TB, N, W)
+    o_ref[...] = jnp.sum(jnp.abs(q[:, None, :] - c), axis=-1)
+
+
+def _pairwise_cmod_kernel(q_ref, c_ref, o_ref):
+    q = q_ref[...]
+    c = c_ref[...]
+    dh = q.shape[-1] // 2
+    dre = q[:, None, :dh] - c[..., :dh]
+    dim = q[:, None, dh:] - c[..., dh:]
+    o_ref[...] = jnp.sum(jnp.sqrt(dre * dre + dim * dim + EPS), axis=-1)
+
+
+def _pairwise_dot_kernel(q_ref, c_ref, o_ref):
+    q = q_ref[...]
+    c = c_ref[...]
+    o_ref[...] = jnp.einsum("bw,bnw->bn", q, c,
+                            preferred_element_type=jnp.float32)
+
+
+def _pairwise_call(kernel, q, c):
+    b, w = q.shape
+    _, n, _ = c.shape
+    tb = _tile(b, 64)
+    return pl.pallas_call(
+        kernel,
+        grid=(b // tb,),
+        in_specs=[
+            pl.BlockSpec((tb, w), lambda i: (i, 0)),
+            pl.BlockSpec((tb, n, w), lambda i: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((tb, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, n), jnp.float32),
+        interpret=_INTERPRET,
+    )(q, c)
+
+
+# custom_vjp wrappers — backward in closed form (jnp), so autodiff through
+# the train-step loss works regardless of Pallas' own transpose support.
+
+@jax.custom_vjp
+def pairwise_l1(q, c):
+    return _pairwise_call(_pairwise_l1_kernel, q, c)
+
+
+def _pairwise_l1_fwd(q, c):
+    return pairwise_l1(q, c), (q, c)
+
+
+def _pairwise_l1_bwd(res, g):
+    q, c = res
+    sgn = jnp.sign(q[:, None, :] - c)            # (B, N, W)
+    dq = jnp.einsum("bn,bnw->bw", g, sgn)
+    dc = -g[..., None] * sgn
+    return dq, dc
+
+
+pairwise_l1.defvjp(_pairwise_l1_fwd, _pairwise_l1_bwd)
+
+
+@jax.custom_vjp
+def pairwise_cmod(q, c):
+    return _pairwise_call(_pairwise_cmod_kernel, q, c)
+
+
+def _pairwise_cmod_fwd(q, c):
+    return pairwise_cmod(q, c), (q, c)
+
+
+def _pairwise_cmod_bwd(res, g):
+    q, c = res
+    dh = q.shape[-1] // 2
+    dre = q[:, None, :dh] - c[..., :dh]
+    dim = q[:, None, dh:] - c[..., dh:]
+    mod = jnp.sqrt(dre * dre + dim * dim + EPS)
+    gre = g[..., None] * dre / mod               # (B, N, Dh)
+    gim = g[..., None] * dim / mod
+    dq = jnp.concatenate([gre.sum(axis=1), gim.sum(axis=1)], axis=-1)
+    dc = jnp.concatenate([-gre, -gim], axis=-1)
+    return dq, dc
+
+
+pairwise_cmod.defvjp(_pairwise_cmod_fwd, _pairwise_cmod_bwd)
+
+
+@jax.custom_vjp
+def pairwise_dot(q, c):
+    return _pairwise_call(_pairwise_dot_kernel, q, c)
+
+
+def _pairwise_dot_fwd(q, c):
+    return pairwise_dot(q, c), (q, c)
+
+
+def _pairwise_dot_bwd(res, g):
+    q, c = res
+    dq = jnp.einsum("bn,bnw->bw", g, c)
+    dc = g[..., None] * q[:, None, :]
+    return dq, dc
+
+
+pairwise_dot.defvjp(_pairwise_dot_fwd, _pairwise_dot_bwd)
+
+
+# ---------------------------------------------------------------------------
+# all-entity kernels: (EB, W) × (E, W) → (EB, E)   — eval path, no grads
+# ---------------------------------------------------------------------------
+
+def _all_l1_kernel(q_ref, t_ref, o_ref):
+    q = q_ref[...]                       # (TQ, W)
+    t = t_ref[...]                       # (TE, W)
+    o_ref[...] = jnp.sum(jnp.abs(q[:, None, :] - t[None, :, :]), axis=-1)
+
+
+def _all_cmod_kernel(q_ref, t_ref, o_ref):
+    q = q_ref[...]
+    t = t_ref[...]
+    dh = q.shape[-1] // 2
+    dre = q[:, None, :dh] - t[None, :, :dh]
+    dim = q[:, None, dh:] - t[None, :, dh:]
+    o_ref[...] = jnp.sum(jnp.sqrt(dre * dre + dim * dim + EPS), axis=-1)
+
+
+def _all_dot_kernel(q_ref, t_ref, o_ref):
+    # The MXU tile: (TQ, W) @ (W, TE)
+    o_ref[...] = jnp.dot(q_ref[...], t_ref[...].T,
+                         preferred_element_type=jnp.float32)
+
+
+def _all_call(kernel, q, table):
+    eb, w = q.shape
+    e, _ = table.shape
+    tq = _tile(eb, 32)
+    te = _tile(e, 256)
+    return pl.pallas_call(
+        kernel,
+        grid=(eb // tq, e // te),
+        in_specs=[
+            pl.BlockSpec((tq, w), lambda i, j: (i, 0)),
+            pl.BlockSpec((te, w), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((tq, te), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((eb, e), jnp.float32),
+        interpret=_INTERPRET,
+    )(q, table)
+
+
+all_l1 = functools.partial(_all_call, _all_l1_kernel)
+all_cmod = functools.partial(_all_call, _all_cmod_kernel)
+all_dot = functools.partial(_all_call, _all_dot_kernel)
+
+
+PAIRWISE = {"l1": pairwise_l1, "cmod": pairwise_cmod, "dot": pairwise_dot}
+ALL = {"l1": all_l1, "cmod": all_cmod, "dot": all_dot}

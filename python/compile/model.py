@@ -1,0 +1,402 @@
+"""L2: the KGE compute graph (forward/backward/Adam + evaluation), in JAX.
+
+Everything here is lowered ONCE by ``aot.py`` to HLO text and executed by the
+Rust runtime — Python is never on the request path.  The scoring hot-spots
+call the L1 Pallas kernels in ``kernels/score.py`` / ``kernels/change.py``.
+
+Three KGE methods (paper §IV-B):
+
+* TransE   — score  γ − ‖h + r − t‖₁            (entity width D,  relation D)
+* RotatE   — score  γ − Σ|h ∘ e^{iθ_r} − t|      (entity width 2D, relation D)
+* ComplEx  — score  Re⟨h, r, t̄⟩                  (entity width 2D, relation 2D)
+
+Complex-valued tables are stored re‖im concatenated along the row.
+
+The training step implements FedE's local objective: self-adversarial
+negative sampling (Sun et al., RotatE) + dense Adam over the full embedding
+tables (identical semantics to ``torch.optim.Adam`` on a dense
+``nn.Embedding``, which is what FedE uses).
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .config import Config
+from .kernels import change as change_kernels
+from .kernels import score as score_kernels
+
+BIG = 1e9
+
+
+def score_kind(method: str) -> str:
+    """Which kernel family scores this method ('distance' kinds rank lower-
+    is-better and are negated into goodness at the call sites)."""
+    return {"transe": "l1", "rotate": "cmod", "complex": "dot"}[method]
+
+
+def is_distance(method: str) -> bool:
+    return method in ("transe", "rotate")
+
+
+# ---------------------------------------------------------------------------
+# query composition: fold (known entity, relation) into a single query row so
+# every score is a kernel primitive (L1 / complex-modulus / dot) between the
+# query and candidate entity rows.
+# ---------------------------------------------------------------------------
+
+def _split(x):
+    dh = x.shape[-1] // 2
+    return x[..., :dh], x[..., dh:]
+
+
+def _rotate_phase(r, cfg: Config):
+    # raw relation row → rotation phase, as in the reference RotatE impl.
+    return r * (jnp.pi / cfg.embedding_range)
+
+
+def compose(method: str, src, rel, predict_head, cfg: Config):
+    """Build the query rows for scoring candidates.
+
+    src:  (B, We) embedding of the *known* entity (head if predicting tail,
+          tail if predicting head).
+    rel:  (B, Wr)
+    predict_head: (B,) float 0/1 — which side the candidates replace.
+    Returns (B, We) query rows to feed the kernel with candidate rows.
+    """
+    flag = predict_head[:, None]
+    if method == "transe":
+        # tail: |h + r - t| ; head: |t - r - h|  → query = src ± r
+        return src + rel * (1.0 - 2.0 * flag)
+    if method == "rotate":
+        theta = _rotate_phase(rel, cfg)
+        cos, sin = jnp.cos(theta), jnp.sin(theta)
+        sre, sim = _split(src)
+        # tail: src ∘ e^{iθ} ; head: src ∘ e^{-iθ}  (|r| = 1 so the distance
+        # |h∘r − t| equals |h − t∘r̄|).
+        sin = sin * (1.0 - 2.0 * flag)
+        qre = sre * cos - sim * sin
+        qim = sre * sin + sim * cos
+        return jnp.concatenate([qre, qim], axis=-1)
+    if method == "complex":
+        sre, sim = _split(src)
+        rre, rim = _split(rel)
+        # tail: Re⟨h∘r, t̄⟩ = dot(q, t) with q = (hr_re ‖ hr_im)
+        t_qre = sre * rre - sim * rim
+        t_qim = sre * rim + sim * rre
+        # head: Re⟨h, r∘t̄ ⟩ = dot(q, h) with q = (w_re ‖ -w_im), w = r∘t̄
+        #   (here src is the known tail)
+        h_qre = rre * sre + rim * sim
+        h_qim = -(rim * sre - rre * sim)
+        qre = jnp.where(flag > 0.5, h_qre, t_qre)
+        qim = jnp.where(flag > 0.5, h_qim, t_qim)
+        return jnp.concatenate([qre, qim], axis=-1)
+    raise ValueError(method)
+
+
+def goodness_pairwise(method: str, q, cand, cfg: Config):
+    """Kernel-scored logits, higher-is-better: γ − dist or raw dot."""
+    raw = score_kernels.PAIRWISE[score_kind(method)](q, cand)
+    return cfg.gamma - raw if is_distance(method) else raw
+
+
+def goodness_all(method: str, q, table, cfg: Config):
+    raw = score_kernels.ALL[score_kind(method)](q, table)
+    return cfg.gamma - raw if is_distance(method) else raw
+
+
+# ---------------------------------------------------------------------------
+# loss
+# ---------------------------------------------------------------------------
+
+def _logsigmoid(x):
+    return -jax.nn.softplus(-x)
+
+
+def nss_logits(method: str, ent, rel, pos, neg, neg_is_head, cfg: Config):
+    """Positive and negative logits for a batch.
+
+    pos: (B, 3) i32 [h, r, t];  neg: (B, NEG) i32 entity ids;
+    neg_is_head: (B,) f32 — negatives corrupt the head (else the tail).
+    """
+    h = jnp.take(ent, pos[:, 0], axis=0)
+    r = jnp.take(rel, pos[:, 1], axis=0)
+    t = jnp.take(ent, pos[:, 2], axis=0)
+    cand = jnp.take(ent, neg.reshape(-1), axis=0).reshape(
+        neg.shape[0], neg.shape[1], ent.shape[1])
+
+    # known side is the one NOT corrupted
+    src = jnp.where(neg_is_head[:, None] > 0.5, t, h)
+    q = compose(method, src, r, neg_is_head, cfg)
+    neg_logit = goodness_pairwise(method, q, cand, cfg)
+
+    true_cand = jnp.where(neg_is_head[:, None] > 0.5, h, t)[:, None, :]
+    pos_logit = goodness_pairwise(method, q, true_cand, cfg)[:, 0]
+    return pos_logit, neg_logit, (h, r, t, cand)
+
+
+def nss_loss(method: str, ent, rel, pos, neg, neg_is_head, mask, cfg: Config):
+    """Self-adversarial negative-sampling loss, masked mean over the batch."""
+    pos_logit, neg_logit, gathered = nss_logits(
+        method, ent, rel, pos, neg, neg_is_head, cfg)
+    p = jax.nn.softmax(cfg.adv_temperature * neg_logit, axis=-1)
+    p = jax.lax.stop_gradient(p)
+    l_pos = -_logsigmoid(pos_logit)
+    l_neg = -jnp.sum(p * _logsigmoid(-neg_logit), axis=-1)
+    per = 0.5 * (l_pos + l_neg)
+    denom = jnp.maximum(jnp.sum(mask), 1.0)
+    loss = jnp.sum(per * mask) / denom
+    if method == "complex":
+        h, r, t, cand = gathered
+        reg = (jnp.mean(h * h) + jnp.mean(r * r) + jnp.mean(t * t)
+               + jnp.mean(cand * cand))
+        loss = loss + cfg.complex_reg * reg
+    return loss
+
+
+# ---------------------------------------------------------------------------
+# Adam (dense, torch semantics) over (ent, rel)
+# ---------------------------------------------------------------------------
+
+def adam_update(p, g, m, v, step, cfg: Config):
+    b1, b2, eps, lr = (cfg.adam_beta1, cfg.adam_beta2,
+                       cfg.adam_eps, cfg.learning_rate)
+    m2 = b1 * m + (1.0 - b1) * g
+    v2 = b2 * v + (1.0 - b2) * g * g
+    mh = m2 / (1.0 - jnp.power(b1, step))
+    vh = v2 / (1.0 - jnp.power(b2, step))
+    return p - lr * mh / (jnp.sqrt(vh) + eps), m2, v2
+
+
+def make_train_step(method: str, cfg: Config):
+    """One local SGD step: grads through the Pallas-scored loss + dense Adam.
+
+    Signature (all f32 unless noted):
+      ent (E,We), rel (R,Wr), ent_m, ent_v, rel_m, rel_v,
+      step (scalar, 1-based Adam step),
+      pos (B,3) i32, neg (B,NEG) i32, neg_is_head (B,), mask (B,)
+    → (ent', rel', ent_m', ent_v', rel_m', rel_v', loss)
+    """
+
+    def train_step(ent, rel, ent_m, ent_v, rel_m, rel_v, step,
+                   pos, neg, neg_is_head, mask):
+        def loss_fn(params):
+            e, r = params
+            return nss_loss(method, e, r, pos, neg, neg_is_head, mask, cfg)
+
+        loss, (g_ent, g_rel) = jax.value_and_grad(loss_fn)((ent, rel))
+        ent2, ent_m2, ent_v2 = adam_update(ent, g_ent, ent_m, ent_v, step, cfg)
+        rel2, rel_m2, rel_v2 = adam_update(rel, g_rel, rel_m, rel_v, step, cfg)
+        return ent2, rel2, ent_m2, ent_v2, rel_m2, rel_v2, loss
+
+    return train_step
+
+
+def make_train_epoch(method: str, cfg: Config, steps: int):
+    """`steps` training steps fused into ONE executable via `lax.scan`.
+
+    The L3 hot-path optimization (EXPERIMENTS.md §Perf): the single-step
+    artifact round-trips all six state tables host↔device per batch; this
+    variant streams a whole local-training phase (padded to `steps` scan
+    iterations) per PJRT call, so the tables cross the boundary once per
+    communication round instead of once per batch.
+
+    Fully-padded iterations (mask all-zero) are skipped EXACTLY: tables and
+    the Adam step counter pass through unchanged, so a padded call is
+    bit-identical to fewer single-step calls.
+
+    Signature:
+      ent, rel, ent_m, ent_v, rel_m, rel_v,
+      step0 (scalar f32 — Adam steps completed before this call),
+      pos (S,B,3) i32, neg (S,B,NEG) i32, nih (S,B) f32, mask (S,B) f32
+    → (ent', rel', ent_m', ent_v', rel_m', rel_v', mean_loss, steps_done)
+    """
+
+    def train_epoch(ent, rel, ent_m, ent_v, rel_m, rel_v, step0,
+                    pos, neg, neg_is_head, mask):
+        def body(carry, xs):
+            ent, rel, ent_m, ent_v, rel_m, rel_v, step = carry
+            pos_b, neg_b, nih_b, mask_b = xs
+            valid = jnp.sum(mask_b) > 0.0
+
+            def loss_fn(params):
+                e, r = params
+                return nss_loss(method, e, r, pos_b, neg_b, nih_b, mask_b, cfg)
+
+            loss, (g_ent, g_rel) = jax.value_and_grad(loss_fn)((ent, rel))
+            step2 = step + 1.0
+            ent2, ent_m2, ent_v2 = adam_update(ent, g_ent, ent_m, ent_v, step2, cfg)
+            rel2, rel_m2, rel_v2 = adam_update(rel, g_rel, rel_m, rel_v, step2, cfg)
+
+            sel = lambda a, b: jnp.where(valid, a, b)
+            carry2 = (
+                sel(ent2, ent), sel(rel2, rel),
+                sel(ent_m2, ent_m), sel(ent_v2, ent_v),
+                sel(rel_m2, rel_m), sel(rel_v2, rel_v),
+                jnp.where(valid, step2, step),
+            )
+            return carry2, (jnp.where(valid, loss, 0.0),
+                            jnp.where(valid, 1.0, 0.0))
+
+        carry0 = (ent, rel, ent_m, ent_v, rel_m, rel_v, step0)
+        carry, (losses, valids) = jax.lax.scan(
+            body, carry0, (pos, neg, neg_is_head, mask), length=steps)
+        ent, rel, ent_m, ent_v, rel_m, rel_v, _ = carry
+        n = jnp.maximum(jnp.sum(valids), 1.0)
+        return (ent, rel, ent_m, ent_v, rel_m, rel_v,
+                jnp.sum(losses) / n, jnp.sum(valids))
+
+    return train_epoch
+
+
+# ---------------------------------------------------------------------------
+# evaluation: filtered link-prediction ranks
+# ---------------------------------------------------------------------------
+
+def make_eval_step(method: str, cfg: Config):
+    """Filtered ranks for a batch of queries.
+
+    Signature:
+      ent (E,We), rel (R,Wr),
+      src (EB,) i32   — the known entity,
+      r   (EB,) i32   — the relation,
+      true (EB,) i32  — the answer entity,
+      predict_head (EB,) f32,
+      filter (EB,E) f32 — 1 marks known positives to exclude (never the true
+                          answer itself; the Rust side guarantees that),
+    → ranks (EB,) f32 with average tie-breaking.
+    """
+
+    def eval_step(ent, rel, src, r, true, predict_head, filt):
+        src_e = jnp.take(ent, src, axis=0)
+        rel_e = jnp.take(rel, r, axis=0)
+        q = compose(method, src_e, rel_e, predict_head, cfg)
+        good = goodness_all(method, q, ent, cfg)          # (EB, E)
+        eb = src.shape[0]
+        true_good = good[jnp.arange(eb), true]
+        good = good - BIG * filt
+        # exclude the true answer from both counts
+        is_true = jax.nn.one_hot(true, good.shape[1], dtype=good.dtype)
+        greater = jnp.sum((good > true_good[:, None]) * (1.0 - is_true), axis=1)
+        equal = jnp.sum((good == true_good[:, None]) * (1.0 - is_true), axis=1)
+        return 1.0 + greater + 0.5 * equal
+
+    return eval_step
+
+
+# ---------------------------------------------------------------------------
+# upstream change scores (Eq. 1) — used by the FedS client before Top-K
+# ---------------------------------------------------------------------------
+
+def make_change_fn(cfg: Config):
+    def change_fn(cur, hist):
+        return change_kernels.change_scores(cur, hist)
+
+    return change_fn
+
+
+# ---------------------------------------------------------------------------
+# FedE-KD baseline (paper Appendix VI-A): dual-dimension co-distillation.
+# The *low*-dim table is what gets transmitted; both are trained jointly with
+# mutual KL on softmaxed score vectors, with the adaptive 1/(L_L+L_H) weight.
+# ---------------------------------------------------------------------------
+
+def kd_loss(method: str, cfg: Config, cfg_lo: Config, params,
+            pos, neg, neg_is_head, mask):
+    """Eq. 6: supervised losses of both models + adaptive co-distillation."""
+    eh, rh, el, rl = params
+    ph, nh, _ = nss_logits(method, eh, rh, pos, neg, neg_is_head, cfg)
+    pl_, nl, _ = nss_logits(method, el, rl, pos, neg, neg_is_head, cfg_lo)
+
+    def sup(p_log, n_log):
+        adv = jax.lax.stop_gradient(
+            jax.nn.softmax(cfg.adv_temperature * n_log, axis=-1))
+        per = 0.5 * (-_logsigmoid(p_log)
+                     - jnp.sum(adv * _logsigmoid(-n_log), axis=-1))
+        return jnp.sum(per * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+    l_h = sup(ph, nh)
+    l_l = sup(pl_, nl)
+
+    # mutual distillation on softmaxed [pos ‖ neg] score vectors
+    sh = jax.nn.log_softmax(jnp.concatenate([ph[:, None], nh], axis=-1), axis=-1)
+    sl = jax.nn.log_softmax(jnp.concatenate([pl_[:, None], nl], axis=-1), axis=-1)
+
+    def kl(lp, lq):
+        per = jnp.sum(jnp.exp(lp) * (lp - lq), axis=-1)
+        return jnp.sum(per * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+    w = jax.lax.stop_gradient(jnp.maximum(l_h + l_l, 1e-3))
+    return l_h + l_l + (kl(sl, sh) + kl(sh, sl)) / w
+
+
+def make_kd_train_step(method: str, cfg: Config, cfg_lo: Config):
+    def kd_train_step(ent_h, rel_h, ent_h_m, ent_h_v, rel_h_m, rel_h_v,
+                      ent_l, rel_l, ent_l_m, ent_l_v, rel_l_m, rel_l_v,
+                      step, pos, neg, neg_is_head, mask):
+        def loss_fn(params):
+            return kd_loss(method, cfg, cfg_lo, params, pos, neg,
+                           neg_is_head, mask)
+
+        loss, grads = jax.value_and_grad(loss_fn)((ent_h, rel_h, ent_l, rel_l))
+        g_eh, g_rh, g_el, g_rl = grads
+        ent_h2, ent_h_m2, ent_h_v2 = adam_update(ent_h, g_eh, ent_h_m,
+                                                 ent_h_v, step, cfg)
+        rel_h2, rel_h_m2, rel_h_v2 = adam_update(rel_h, g_rh, rel_h_m,
+                                                 rel_h_v, step, cfg)
+        ent_l2, ent_l_m2, ent_l_v2 = adam_update(ent_l, g_el, ent_l_m,
+                                                 ent_l_v, step, cfg)
+        rel_l2, rel_l_m2, rel_l_v2 = adam_update(rel_l, g_rl, rel_l_m,
+                                                 rel_l_v, step, cfg)
+        return (ent_h2, rel_h2, ent_h_m2, ent_h_v2, rel_h_m2, rel_h_v2,
+                ent_l2, rel_l2, ent_l_m2, ent_l_v2, rel_l_m2, rel_l_v2, loss)
+
+    return kd_train_step
+
+
+def make_kd_train_epoch(method: str, cfg: Config, cfg_lo: Config, steps: int):
+    """KD multi-step variant (scan), same padding semantics as
+    `make_train_epoch`.  13 carried tables: hi model (6), lo model (6), step.
+
+    → (12 tables, mean_loss, steps_done)
+    """
+
+    def kd_train_epoch(ent_h, rel_h, ent_h_m, ent_h_v, rel_h_m, rel_h_v,
+                       ent_l, rel_l, ent_l_m, ent_l_v, rel_l_m, rel_l_v,
+                       step0, pos, neg, neg_is_head, mask):
+        def body(carry, xs):
+            (eh, rh, ehm, ehv, rhm, rhv, el, rl, elm, elv, rlm, rlv,
+             step) = carry
+            pos_b, neg_b, nih_b, mask_b = xs
+            valid = jnp.sum(mask_b) > 0.0
+
+            def loss_fn(params):
+                return kd_loss(method, cfg, cfg_lo, params, pos_b, neg_b,
+                               nih_b, mask_b)
+
+            loss, grads = jax.value_and_grad(loss_fn)((eh, rh, el, rl))
+            g_eh, g_rh, g_el, g_rl = grads
+            step2 = step + 1.0
+            eh2, ehm2, ehv2 = adam_update(eh, g_eh, ehm, ehv, step2, cfg)
+            rh2, rhm2, rhv2 = adam_update(rh, g_rh, rhm, rhv, step2, cfg)
+            el2, elm2, elv2 = adam_update(el, g_el, elm, elv, step2, cfg_lo)
+            rl2, rlm2, rlv2 = adam_update(rl, g_rl, rlm, rlv, step2, cfg_lo)
+
+            sel = lambda a, b: jnp.where(valid, a, b)
+            carry2 = (
+                sel(eh2, eh), sel(rh2, rh), sel(ehm2, ehm), sel(ehv2, ehv),
+                sel(rhm2, rhm), sel(rhv2, rhv),
+                sel(el2, el), sel(rl2, rl), sel(elm2, elm), sel(elv2, elv),
+                sel(rlm2, rlm), sel(rlv2, rlv),
+                jnp.where(valid, step2, step),
+            )
+            return carry2, (jnp.where(valid, loss, 0.0),
+                            jnp.where(valid, 1.0, 0.0))
+
+        carry0 = (ent_h, rel_h, ent_h_m, ent_h_v, rel_h_m, rel_h_v,
+                  ent_l, rel_l, ent_l_m, ent_l_v, rel_l_m, rel_l_v, step0)
+        carry, (losses, valids) = jax.lax.scan(
+            body, carry0, (pos, neg, neg_is_head, mask), length=steps)
+        n = jnp.maximum(jnp.sum(valids), 1.0)
+        return (*carry[:12], jnp.sum(losses) / n, jnp.sum(valids))
+
+    return kd_train_epoch

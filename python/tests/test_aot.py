@@ -1,0 +1,76 @@
+"""AOT pipeline: lowering produces parseable HLO text and a complete,
+consistent manifest on a tiny config (fast, independent of `make artifacts`).
+"""
+
+import json
+import os
+from dataclasses import replace
+
+import pytest
+
+from compile import aot
+from compile.config import DEFAULT, Config
+
+
+TINY = replace(Config(), num_entities=128, num_relations=4, dim=8,
+               batch=16, negatives=4, eval_batch=8)
+
+
+@pytest.fixture(scope="module")
+def built(tmp_path_factory):
+    out = str(tmp_path_factory.mktemp("artifacts"))
+    manifest = aot.build_all(out, TINY, quick=True)
+    return out, manifest
+
+
+def test_manifest_written(built):
+    out, manifest = built
+    with open(os.path.join(out, "manifest.json")) as f:
+        on_disk = json.load(f)
+    assert on_disk["version"] == manifest["version"]
+    assert len(on_disk["artifacts"]) == len(manifest["artifacts"])
+
+
+def test_quick_build_has_train_eval_change(built):
+    _, manifest = built
+    roles = sorted(a["role"] for a in manifest["artifacts"])
+    assert roles == ["change", "eval", "train", "train_epoch"]
+
+
+def test_hlo_text_is_hlo(built):
+    out, manifest = built
+    for a in manifest["artifacts"]:
+        with open(os.path.join(out, a["file"])) as f:
+            text = f.read()
+        assert text.startswith("HloModule"), a["name"]
+        assert "ENTRY" in text, a["name"]
+
+
+def test_input_signatures_match_config(built):
+    _, manifest = built
+    by_role = {a["role"]: a for a in manifest["artifacts"]}
+    train = by_role["train"]
+    e, we = TINY.num_entities, TINY.entity_width("transe")
+    assert train["inputs"][0] == [[e, we], "float32"]
+    assert train["inputs"][7] == [[TINY.batch, 3], "int32"]
+    assert train["n_outputs"] == 7
+    ev = by_role["eval"]
+    assert ev["inputs"][6] == [[TINY.eval_batch, e], "float32"]
+    assert ev["n_outputs"] == 1
+
+
+def test_fedepl_dim_formula():
+    # Appendix VI-C at paper scale: p=0.7, s=4, D=256 → R≈0.7642, dim 196
+    c = replace(Config(), dim=256, sparsity=0.7, sync_interval=4)
+    assert abs(c.comm_ratio() - 0.7642) < 1e-3
+    assert c.fedepl_dim() == 196
+    # and p=0.4 → 135
+    c = replace(Config(), dim=256, sparsity=0.4, sync_interval=4)
+    assert c.fedepl_dim() == 135
+
+
+def test_default_config_tiles_divide():
+    # power-of-two entity count so the eval kernel tiles divide exactly
+    assert DEFAULT.num_entities % 256 == 0
+    assert DEFAULT.batch % 64 == 0
+    assert DEFAULT.eval_batch % 32 == 0

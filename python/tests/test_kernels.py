@@ -1,0 +1,157 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle (ref.py).
+
+Hypothesis sweeps shapes (including non-power-of-two sizes that exercise the
+tile-fallback path) and value distributions; every kernel must match the
+oracle to float32 tolerance, and the custom_vjp backward passes must match
+autodiff through the oracle.
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import change, ref, score
+
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")
+
+
+def _arr(rng, *shape, scale=1.0):
+    return jnp.asarray(rng.normal(size=shape) * scale, jnp.float32)
+
+
+PAIRWISE_CASES = [
+    ("l1", ref.pairwise_l1),
+    ("cmod", ref.pairwise_cmod),
+    ("dot", ref.pairwise_dot),
+]
+
+ALL_CASES = [
+    ("l1", ref.all_l1),
+    ("cmod", ref.all_cmod),
+    ("dot", ref.all_dot),
+]
+
+
+@pytest.mark.parametrize("kind,oracle", PAIRWISE_CASES)
+@given(
+    b=st.sampled_from([1, 3, 16, 64, 100]),
+    n=st.sampled_from([1, 4, 7, 32]),
+    dh=st.sampled_from([1, 3, 8, 32]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_pairwise_matches_ref(kind, oracle, b, n, dh, seed):
+    w = 2 * dh  # cmod needs an even width; use it everywhere for uniformity
+    rng = np.random.default_rng(seed)
+    q = _arr(rng, b, w)
+    c = _arr(rng, b, n, w)
+    got = score.PAIRWISE[kind](q, c)
+    want = oracle(q, c)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("kind,oracle", ALL_CASES)
+@given(
+    eb=st.sampled_from([1, 5, 32]),
+    e=st.sampled_from([1, 13, 64, 300]),
+    dh=st.sampled_from([1, 4, 16]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_all_matches_ref(kind, oracle, eb, e, dh, seed):
+    w = 2 * dh
+    rng = np.random.default_rng(seed)
+    q = _arr(rng, eb, w)
+    t = _arr(rng, e, w)
+    got = score.ALL[kind](q, t)
+    want = oracle(q, t)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("kind,oracle", PAIRWISE_CASES)
+def test_pairwise_vjp_matches_ref_autodiff(kind, oracle):
+    rng = np.random.default_rng(7)
+    q = _arr(rng, 8, 10)
+    c = _arr(rng, 8, 5, 10)
+    g = _arr(rng, 8, 5)
+
+    def via_kernel(q, c):
+        return jnp.sum(score.PAIRWISE[kind](q, c) * g)
+
+    def via_ref(q, c):
+        return jnp.sum(oracle(q, c) * g)
+
+    gq1, gc1 = jax.grad(via_kernel, argnums=(0, 1))(q, c)
+    gq2, gc2 = jax.grad(via_ref, argnums=(0, 1))(q, c)
+    np.testing.assert_allclose(gq1, gq2, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(gc1, gc2, rtol=1e-4, atol=1e-4)
+
+
+def test_pairwise_l1_vjp_finite_difference():
+    # independent of the oracle: check against numeric differentiation
+    rng = np.random.default_rng(3)
+    q = _arr(rng, 4, 6)
+    c = _arr(rng, 4, 3, 6)
+
+    def f(qv):
+        return float(jnp.sum(score.pairwise_l1(qv, c)))
+
+    g = jax.grad(lambda qv: jnp.sum(score.pairwise_l1(qv, c)))(q)
+    eps = 1e-3
+    for _ in range(5):
+        i, j = rng.integers(0, 4), rng.integers(0, 6)
+        dq = np.zeros_like(np.asarray(q))
+        dq[i, j] = eps
+        fd = (f(q + dq) - f(q - dq)) / (2 * eps)
+        assert abs(fd - float(g[i, j])) < 1e-2
+
+
+@given(
+    n=st.sampled_from([1, 7, 64, 300]),
+    w=st.sampled_from([2, 9, 64]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_change_matches_ref(n, w, seed):
+    rng = np.random.default_rng(seed)
+    a = _arr(rng, n, w)
+    b = _arr(rng, n, w)
+    got = change.change_scores(a, b)
+    want = ref.change_scores(a, b)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_change_identical_rows_is_zero():
+    rng = np.random.default_rng(0)
+    a = _arr(rng, 32, 16)
+    got = np.asarray(change.change_scores(a, a))
+    np.testing.assert_allclose(got, np.zeros(32), atol=1e-5)
+
+
+def test_change_opposite_rows_is_two():
+    rng = np.random.default_rng(0)
+    a = _arr(rng, 16, 8)
+    got = np.asarray(change.change_scores(a, -a))
+    np.testing.assert_allclose(got, 2.0 * np.ones(16), atol=1e-4)
+
+
+def test_change_zero_rows_guarded():
+    a = jnp.zeros((4, 8), jnp.float32)
+    got = np.asarray(change.change_scores(a, a))
+    assert np.isfinite(got).all()
+
+
+def test_all_dot_orthogonal_rows():
+    q = jnp.eye(4, 8, dtype=jnp.float32)
+    t = jnp.eye(6, 8, dtype=jnp.float32)
+    got = np.asarray(score.all_dot(q, t))
+    want = np.eye(4, 6, dtype=np.float32)
+    np.testing.assert_allclose(got, want, atol=1e-6)
+
+
+def test_pairwise_cmod_zero_distance():
+    rng = np.random.default_rng(1)
+    q = _arr(rng, 8, 10)
+    c = jnp.broadcast_to(q[:, None, :], (8, 3, 10))
+    got = np.asarray(score.pairwise_cmod(q, c))
+    np.testing.assert_allclose(got, np.zeros((8, 3)), atol=1e-3)

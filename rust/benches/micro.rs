@@ -1,0 +1,127 @@
+//! Micro-benchmarks of the L3 coordinator hot paths: Top-K selection,
+//! personalized aggregation, wire codec, SVD codec, change scoring, and a
+//! native train step.  `cargo bench --bench micro`.
+
+use feds::comm::wire::{WireReader, WireWriter};
+use feds::data::dataset::BatchIter;
+use feds::data::Triple;
+use feds::fed::compression::SvdCodec;
+use feds::fed::protocol::{Download, Upload};
+use feds::fed::topk::{select_by_change, select_by_priority};
+use feds::fed::Server;
+use feds::kge::native::NativeModel;
+use feds::kge::{Hyper, Method};
+use feds::util::bench::{bb, Bench};
+use feds::util::rng::Rng;
+
+fn main() {
+    let mut b = Bench::from_env("micro");
+    let mut rng = Rng::new(1);
+
+    // --- Top-K selection ----------------------------------------------------
+    for n in [2_048usize, 16_384] {
+        let scores: Vec<f32> = (0..n).map(|_| rng.uniform(0.0, 2.0)).collect();
+        let k = n * 4 / 10;
+        b.bench(&format!("topk_change/{n}"), || bb(select_by_change(&scores, k)));
+        let prios: Vec<u32> = (0..n).map(|_| rng.u32_below(10)).collect();
+        let mut r2 = rng.fork(2);
+        b.bench(&format!("topk_priority/{n}"), || {
+            bb(select_by_priority(&prios, k, &mut r2))
+        });
+    }
+
+    // --- server aggregation round --------------------------------------------
+    {
+        let e = 2_048;
+        let w = 64;
+        let n_clients = 10;
+        let shared: Vec<Vec<u32>> = (0..n_clients)
+            .map(|_| (0..e as u32).filter(|_| rng.bool(0.6)).collect())
+            .collect();
+        let uploads: Vec<(Vec<u32>, Vec<f32>)> = shared
+            .iter()
+            .map(|ids| {
+                let sel: Vec<u32> = ids.iter().copied().filter(|_| rng.bool(0.4)).collect();
+                let rows: Vec<f32> = (0..sel.len() * w).map(|_| rng.uniform(-1.0, 1.0)).collect();
+                (sel, rows)
+            })
+            .collect();
+        let mut server = Server::new(e, w, shared);
+        let mut r3 = rng.fork(3);
+        b.bench("server/feds_round_10c_2048e", || {
+            server.begin_round();
+            for (c, (ids, rows)) in uploads.iter().enumerate() {
+                server.receive(c as u16, ids, rows);
+            }
+            for c in 0..n_clients {
+                bb(server.feds_download(c as u16, 800, &mut r3));
+            }
+        });
+    }
+
+    // --- wire codec -----------------------------------------------------------
+    {
+        let emb: Vec<f32> = (0..800 * 64).map(|_| rng.uniform(-1.0, 1.0)).collect();
+        let sign: Vec<bool> = (0..2_048).map(|_| rng.bool(0.4)).collect();
+        let mut w = WireWriter::new();
+        w.f32s(&emb);
+        let buf = w.finish();
+        let up = Upload::Sparse { round: 9, client: 3, sign, emb };
+        b.bench("wire/encode_sparse_upload_800x64", || bb(up.encode()));
+        let frame = up.encode();
+        b.bench("wire/decode_sparse_upload_800x64", || {
+            bb(Upload::decode(&frame).unwrap())
+        });
+        let down = Download::Sparse {
+            round: 9,
+            sign: (0..2_048).map(|i| i % 3 == 0).collect(),
+            emb: (0..700 * 64).map(|_| 0.5f32).collect(),
+            prio: vec![2; 700],
+        };
+        b.bench("wire/roundtrip_sparse_download_700x64", || {
+            bb(Download::decode(&down.encode()).unwrap())
+        });
+        b.bench("wire/read_f32s_51k", || {
+            bb(WireReader::new(&buf).f32s().unwrap())
+        });
+    }
+
+    // --- SVD codec -------------------------------------------------------------
+    {
+        let codec = SvdCodec::for_width(64, 8);
+        let row: Vec<f32> = (0..64).map(|_| rng.uniform(-0.1, 0.1)).collect();
+        b.bench("svd/encode_row_w64", || bb(codec.encode_row(&row)));
+        let packed = codec.encode_row(&row);
+        b.bench("svd/decode_row_w64", || bb(codec.decode_row(&packed, 64)));
+    }
+
+    // --- cosine change scoring ---------------------------------------------------
+    {
+        let w = 64;
+        let n = 2_048;
+        let a: Vec<f32> = (0..n * w).map(|_| rng.uniform(-1.0, 1.0)).collect();
+        let c: Vec<f32> = (0..n * w).map(|_| rng.uniform(-1.0, 1.0)).collect();
+        b.bench("change/cosine_2048x64", || {
+            let mut acc = 0.0f32;
+            for i in 0..n {
+                acc += feds::linalg::change_score(&a[i * w..(i + 1) * w], &c[i * w..(i + 1) * w]);
+            }
+            bb(acc)
+        });
+    }
+
+    // --- native train step --------------------------------------------------------
+    {
+        let hyper = Hyper { dim: 32, ..Default::default() };
+        let mut model = NativeModel::new(Method::TransE, hyper, 512, 8, &mut rng);
+        let triples: Vec<Triple> = (0..128)
+            .map(|_| Triple::new(rng.u32_below(512), rng.u32_below(8), rng.u32_below(512)))
+            .collect();
+        let ents: Vec<u32> = (0..512).collect();
+        let mut r4 = rng.fork(4);
+        let batch = BatchIter::new(&triples, &ents, 128, 32, &mut r4).next().unwrap();
+        b.bench("native/train_step_b128_n32_d32", || bb(model.train_batch(&batch)));
+    }
+
+    b.finish();
+}

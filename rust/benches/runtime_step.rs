@@ -1,0 +1,82 @@
+//! PJRT runtime benchmarks: artifact compile time, single-step vs
+//! scan-fused training latency, eval and change-score latency — the L2/L1
+//! perf numbers in EXPERIMENTS.md §Perf.  Self-skips without artifacts.
+//! `cargo bench --bench runtime_step`.
+
+use std::path::Path;
+use std::rc::Rc;
+
+use feds::data::dataset::{BatchIter, EvalSet, FilterIndex};
+use feds::data::generator::{generate, GeneratorConfig};
+use feds::kge::{Method, Table};
+use feds::runtime::Runtime;
+use feds::trainer::{LocalTrainer, XlaTrainer};
+use feds::util::bench::{bb, Bench};
+use feds::util::rng::Rng;
+
+fn main() {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        println!("runtime_step: artifacts not built, skipping (run `make artifacts`)");
+        return;
+    }
+    let rt: Rc<Runtime> = Runtime::load(&dir).expect("runtime");
+    let m = rt.manifest.clone();
+    let mut b = Bench::from_env("runtime_step");
+
+    // compile time (fresh runtime → cold cache)
+    {
+        let t0 = std::time::Instant::now();
+        let rt2 = Runtime::load(&dir).unwrap();
+        let meta = rt2.manifest.find(feds::runtime::Role::Train, Method::TransE, m.hyper.dim).unwrap();
+        rt2.executable(meta).unwrap();
+        b.report_value("compile/train_transe_cold_ms", t0.elapsed().as_secs_f64() * 1e3, "ms");
+    }
+
+    let kg = generate(&GeneratorConfig {
+        num_entities: m.num_entities,
+        num_relations: m.num_relations,
+        num_triples: 6_000,
+        seed: 3,
+        ..Default::default()
+    });
+    let ents: Vec<u32> = (0..m.num_entities as u32).collect();
+
+    for method in Method::ALL {
+        let mut rng = Rng::new(5);
+        let mut t = XlaTrainer::new(rt.clone(), method, m.hyper.dim, &mut rng).unwrap();
+        let mut brng = Rng::new(7);
+        let batches: Vec<_> =
+            BatchIter::new(&kg.triples, &ents, m.batch, m.negatives, &mut brng)
+                .take(8)
+                .collect();
+
+        b.bench(&format!("train_step/{}", method.name()), || {
+            bb(t.train_batch(&batches[0]).unwrap())
+        });
+        let s = b.bench(&format!("train_epoch8/{}", method.name()), || {
+            bb(t.train_batches(&batches).unwrap())
+        });
+        b.report_value(
+            &format!("train_epoch8/{}/per_step_ms", method.name()),
+            s.mean_ns / 8.0 / 1e6,
+            "ms/step",
+        );
+
+        let filters = FilterIndex::build(kg.triples.iter());
+        let es = EvalSet::new(&kg.triples[..m.eval_batch / 2], m.num_entities);
+        let eb = es.batches(m.eval_batch, &filters).remove(0);
+        b.bench(&format!("eval_step/{}", method.name()), || {
+            bb(t.eval_ranks(&eb).unwrap())
+        });
+
+        let we = t.entity_width();
+        let hist = Table::zeros(m.num_entities, we);
+        let ids: Vec<u32> = (0..m.num_entities as u32).collect();
+        b.bench(&format!("change_scores/{}", method.name()), || {
+            bb(t.change_scores(&ids, &hist).unwrap())
+        });
+    }
+
+    b.finish();
+}

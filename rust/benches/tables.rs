@@ -1,0 +1,44 @@
+//! End-to-end table benchmarks: one entry per paper table/figure, running
+//! the corresponding experiment driver at CI scale (native backend, fast
+//! mode) and reporting wall-clock + the key headline number of each.
+//! `cargo bench --bench tables`.
+//!
+//! Full-scale regeneration (XLA backend) is `feds exp <table>`; see
+//! EXPERIMENTS.md for recorded results.
+
+use feds::exp::{self, Ctx};
+use feds::util::bench::Bench;
+
+fn main() {
+    let mut b = Bench::from_env("tables");
+    let ctx = Ctx::new(exp::native_backend(), true, 64501);
+    std::env::set_var("FEDS_LOG", "warn");
+
+    let t0 = std::time::Instant::now();
+    let rep = exp::table23::run(&ctx).expect("table23");
+    b.report_value("table23/wall_s", t0.elapsed().as_secs_f64(), "s");
+    // headline: FedS P@CG ratio averaged over cells
+    let _ = rep;
+
+    let t0 = std::time::Instant::now();
+    exp::table1::run(&ctx).expect("table1");
+    b.report_value("table1/wall_s", t0.elapsed().as_secs_f64(), "s");
+
+    let t0 = std::time::Instant::now();
+    exp::table4::run(&ctx).expect("table4");
+    b.report_value("table4/wall_s", t0.elapsed().as_secs_f64(), "s");
+
+    let t0 = std::time::Instant::now();
+    exp::fig2::run(&ctx).expect("fig2");
+    b.report_value("fig2/wall_s", t0.elapsed().as_secs_f64(), "s");
+
+    let t0 = std::time::Instant::now();
+    exp::table5::run(&ctx).expect("table5");
+    b.report_value("table5/wall_s", t0.elapsed().as_secs_f64(), "s");
+
+    let t0 = std::time::Instant::now();
+    exp::table6::run(&ctx).expect("table6");
+    b.report_value("table6/wall_s", t0.elapsed().as_secs_f64(), "s");
+
+    b.finish();
+}

@@ -1,0 +1,128 @@
+//! Transmission accounting, in both the paper's unit (parameters) and
+//! realistic bytes.
+//!
+//! Paper convention (§III-F, Eq. 5): every transmitted value — embedding
+//! floats, sign-vector elements, priority-weight entries — counts as one
+//! parameter ("both elements of sign vector and entity embedding use the
+//! same data type (usually a 32-bit float) in the formula").  The byte
+//! counters instead measure the actual wire encoding (bit-packed signs).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Direction {
+    /// client → server
+    Upload,
+    /// server → client
+    Download,
+}
+
+#[derive(Debug, Default)]
+pub struct Accounting {
+    up_params: AtomicU64,
+    down_params: AtomicU64,
+    up_bytes: AtomicU64,
+    down_bytes: AtomicU64,
+    messages: AtomicU64,
+}
+
+impl Accounting {
+    pub fn new() -> Arc<Self> {
+        Arc::new(Self::default())
+    }
+
+    pub fn record(&self, dir: Direction, params: u64, bytes: u64) {
+        match dir {
+            Direction::Upload => {
+                self.up_params.fetch_add(params, Ordering::Relaxed);
+                self.up_bytes.fetch_add(bytes, Ordering::Relaxed);
+            }
+            Direction::Download => {
+                self.down_params.fetch_add(params, Ordering::Relaxed);
+                self.down_bytes.fetch_add(bytes, Ordering::Relaxed);
+            }
+        }
+        self.messages.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn params(&self) -> u64 {
+        self.up_params.load(Ordering::Relaxed) + self.down_params.load(Ordering::Relaxed)
+    }
+
+    pub fn params_dir(&self, dir: Direction) -> u64 {
+        match dir {
+            Direction::Upload => self.up_params.load(Ordering::Relaxed),
+            Direction::Download => self.down_params.load(Ordering::Relaxed),
+        }
+    }
+
+    pub fn bytes(&self) -> u64 {
+        self.up_bytes.load(Ordering::Relaxed) + self.down_bytes.load(Ordering::Relaxed)
+    }
+
+    pub fn bytes_dir(&self, dir: Direction) -> u64 {
+        match dir {
+            Direction::Upload => self.up_bytes.load(Ordering::Relaxed),
+            Direction::Download => self.down_bytes.load(Ordering::Relaxed),
+        }
+    }
+
+    pub fn messages(&self) -> u64 {
+        self.messages.load(Ordering::Relaxed)
+    }
+
+    pub fn reset(&self) {
+        self.up_params.store(0, Ordering::Relaxed);
+        self.down_params.store(0, Ordering::Relaxed);
+        self.up_bytes.store(0, Ordering::Relaxed);
+        self.down_bytes.store(0, Ordering::Relaxed);
+        self.messages.store(0, Ordering::Relaxed);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_by_direction() {
+        let a = Accounting::new();
+        a.record(Direction::Upload, 100, 400);
+        a.record(Direction::Download, 50, 200);
+        a.record(Direction::Upload, 10, 40);
+        assert_eq!(a.params_dir(Direction::Upload), 110);
+        assert_eq!(a.params_dir(Direction::Download), 50);
+        assert_eq!(a.params(), 160);
+        assert_eq!(a.bytes(), 640);
+        assert_eq!(a.messages(), 3);
+    }
+
+    #[test]
+    fn reset_clears() {
+        let a = Accounting::new();
+        a.record(Direction::Upload, 1, 1);
+        a.reset();
+        assert_eq!(a.params(), 0);
+        assert_eq!(a.messages(), 0);
+    }
+
+    #[test]
+    fn shared_across_threads() {
+        let a = Accounting::new();
+        let handles: Vec<_> = (0..4)
+            .map(|_| {
+                let a = a.clone();
+                std::thread::spawn(move || {
+                    for _ in 0..100 {
+                        a.record(Direction::Upload, 1, 4);
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(a.params(), 400);
+    }
+}

@@ -1,0 +1,59 @@
+//! Analytic link model: turn transmitted bytes into wall-clock estimates
+//! for bandwidth-constrained edge links (the deployment scenario motivating
+//! the paper's §I).  Round time = max over clients of per-client link time,
+//! since uploads happen in parallel across clients.
+
+#[derive(Clone, Copy, Debug)]
+pub struct BandwidthModel {
+    /// link rate in bytes/second (per client)
+    pub bytes_per_sec: f64,
+    /// per-message latency in seconds
+    pub latency_s: f64,
+}
+
+impl BandwidthModel {
+    /// 10 Mbit/s, 20 ms RTT — a constrained edge uplink.
+    pub fn edge() -> Self {
+        Self { bytes_per_sec: 10e6 / 8.0, latency_s: 0.02 }
+    }
+
+    /// 1 Gbit/s, 1 ms — datacenter baseline.
+    pub fn datacenter() -> Self {
+        Self { bytes_per_sec: 1e9 / 8.0, latency_s: 0.001 }
+    }
+
+    pub fn time_for(&self, bytes: u64, messages: u64) -> f64 {
+        bytes as f64 / self.bytes_per_sec + messages as f64 * self.latency_s
+    }
+
+    /// Time for one round where each client moves `per_client_bytes[i]`
+    /// in `msgs` messages, links operating in parallel.
+    pub fn round_time(&self, per_client_bytes: &[u64], msgs_per_client: u64) -> f64 {
+        per_client_bytes
+            .iter()
+            .map(|&b| self.time_for(b, msgs_per_client))
+            .fold(0.0, f64::max)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_scales_linearly() {
+        let m = BandwidthModel { bytes_per_sec: 1000.0, latency_s: 0.5 };
+        assert!((m.time_for(2000, 2) - (2.0 + 1.0)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn round_time_is_max() {
+        let m = BandwidthModel { bytes_per_sec: 1000.0, latency_s: 0.0 };
+        assert!((m.round_time(&[1000, 5000, 2000], 1) - 5.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn presets_sane() {
+        assert!(BandwidthModel::edge().bytes_per_sec < BandwidthModel::datacenter().bytes_per_sec);
+    }
+}

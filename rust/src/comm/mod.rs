@@ -1,0 +1,23 @@
+//! Simulated client↔server communication substrate.
+//!
+//! The paper's efficiency metrics count *transmitted parameters*; real
+//! deployments care about bytes and wall-clock under constrained links.
+//! This module provides all three views:
+//!
+//! * `wire` — a compact binary codec for the protocol messages (sign
+//!   vectors as bitmaps, embeddings as raw f32le), giving exact byte sizes;
+//! * `accounting` — per-client, per-direction parameter AND byte counters,
+//!   with the paper's convention (every sign-vector element counts as one
+//!   f32 parameter, Eq. 5) kept separate from the realistic byte count;
+//! * `transport` — metered in-process duplex links (std::sync::mpsc);
+//! * `bandwidth` — an analytic link model to turn bytes into seconds.
+
+pub mod accounting;
+pub mod bandwidth;
+pub mod transport;
+pub mod wire;
+
+pub use accounting::{Accounting, Direction};
+pub use bandwidth::BandwidthModel;
+pub use transport::{duplex, Endpoint};
+pub use wire::{WireReader, WireWriter};

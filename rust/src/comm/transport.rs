@@ -1,0 +1,112 @@
+//! Metered in-process duplex links over `std::sync::mpsc`.
+//!
+//! Each `Endpoint` pair models one client↔server connection: sending a
+//! frame records its byte size (and caller-supplied parameter count) into
+//! the shared `Accounting`.  Used by the threaded orchestrator; the
+//! sequential orchestrator calls the same `record` hooks directly so both
+//! paths meter identically.
+
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::Arc;
+use std::time::Duration;
+
+use super::accounting::{Accounting, Direction};
+
+pub struct Endpoint {
+    tx: Sender<Vec<u8>>,
+    rx: Receiver<Vec<u8>>,
+    acct: Arc<Accounting>,
+    dir: Direction,
+}
+
+/// Build a connected (client_end, server_end) pair sharing `acct`.
+/// Frames sent from the client end are recorded as uploads; frames sent
+/// from the server end as downloads.
+pub fn duplex(acct: Arc<Accounting>) -> (Endpoint, Endpoint) {
+    let (tx_up, rx_up) = channel();
+    let (tx_down, rx_down) = channel();
+    let client = Endpoint {
+        tx: tx_up,
+        rx: rx_down,
+        acct: acct.clone(),
+        dir: Direction::Upload,
+    };
+    let server = Endpoint {
+        tx: tx_down,
+        rx: rx_up,
+        acct,
+        dir: Direction::Download,
+    };
+    (client, server)
+}
+
+impl Endpoint {
+    /// Send a frame, recording `params` logical parameters and the frame's
+    /// real byte size.
+    pub fn send(&self, frame: Vec<u8>, params: u64) -> anyhow::Result<()> {
+        self.acct.record(self.dir, params, frame.len() as u64);
+        self.tx
+            .send(frame)
+            .map_err(|_| anyhow::anyhow!("peer disconnected"))
+    }
+
+    pub fn recv(&self) -> anyhow::Result<Vec<u8>> {
+        self.rx.recv().map_err(|_| anyhow::anyhow!("peer disconnected"))
+    }
+
+    pub fn recv_timeout(&self, d: Duration) -> anyhow::Result<Option<Vec<u8>>> {
+        match self.rx.recv_timeout(d) {
+            Ok(f) => Ok(Some(f)),
+            Err(RecvTimeoutError::Timeout) => Ok(None),
+            Err(RecvTimeoutError::Disconnected) => anyhow::bail!("peer disconnected"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_and_metering() {
+        let acct = Accounting::new();
+        let (client, server) = duplex(acct.clone());
+        client.send(vec![1, 2, 3], 10).unwrap();
+        assert_eq!(server.recv().unwrap(), vec![1, 2, 3]);
+        server.send(vec![9; 8], 2).unwrap();
+        assert_eq!(client.recv().unwrap(), vec![9; 8]);
+        assert_eq!(acct.params_dir(Direction::Upload), 10);
+        assert_eq!(acct.params_dir(Direction::Download), 2);
+        assert_eq!(acct.bytes_dir(Direction::Upload), 3);
+        assert_eq!(acct.bytes_dir(Direction::Download), 8);
+    }
+
+    #[test]
+    fn cross_thread() {
+        let acct = Accounting::new();
+        let (client, server) = duplex(acct.clone());
+        let h = std::thread::spawn(move || {
+            let f = server.recv().unwrap();
+            server.send(f, 1).unwrap();
+        });
+        client.send(vec![42], 1).unwrap();
+        assert_eq!(client.recv().unwrap(), vec![42]);
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn timeout_returns_none() {
+        let acct = Accounting::new();
+        let (client, _server) = duplex(acct);
+        let r = client.recv_timeout(Duration::from_millis(10)).unwrap();
+        assert!(r.is_none());
+    }
+
+    #[test]
+    fn disconnected_peer_errors() {
+        let acct = Accounting::new();
+        let (client, server) = duplex(acct);
+        drop(server);
+        assert!(client.send(vec![1], 1).is_err());
+    }
+}

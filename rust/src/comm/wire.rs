@@ -1,0 +1,222 @@
+//! Binary wire codec: little-endian primitives, length-prefixed vectors,
+//! and bit-packed 0/1 sign vectors.
+//!
+//! Every protocol message serializes through this codec, so the byte
+//! accounting measures exactly what a real deployment would put on the
+//! network (embeddings as raw f32, sign vectors as ceil(N/8) bytes).
+
+#[derive(Default)]
+pub struct WireWriter {
+    buf: Vec<u8>,
+}
+
+impl WireWriter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn u8(&mut self, v: u8) -> &mut Self {
+        self.buf.push(v);
+        self
+    }
+
+    pub fn u16(&mut self, v: u16) -> &mut Self {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+        self
+    }
+
+    pub fn u32(&mut self, v: u32) -> &mut Self {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+        self
+    }
+
+    pub fn u64(&mut self, v: u64) -> &mut Self {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+        self
+    }
+
+    pub fn f32(&mut self, v: f32) -> &mut Self {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+        self
+    }
+
+    pub fn u32s(&mut self, v: &[u32]) -> &mut Self {
+        self.u32(v.len() as u32);
+        for &x in v {
+            self.buf.extend_from_slice(&x.to_le_bytes());
+        }
+        self
+    }
+
+    pub fn f32s(&mut self, v: &[f32]) -> &mut Self {
+        self.u32(v.len() as u32);
+        for &x in v {
+            self.buf.extend_from_slice(&x.to_le_bytes());
+        }
+        self
+    }
+
+    /// Bit-packed 0/1 sign vector (the realistic encoding the paper notes
+    /// "may utilize a 1-bit data type").
+    pub fn bits(&mut self, v: &[bool]) -> &mut Self {
+        self.u32(v.len() as u32);
+        let mut byte = 0u8;
+        for (i, &b) in v.iter().enumerate() {
+            if b {
+                byte |= 1 << (i % 8);
+            }
+            if i % 8 == 7 {
+                self.buf.push(byte);
+                byte = 0;
+            }
+        }
+        if v.len() % 8 != 0 {
+            self.buf.push(byte);
+        }
+        self
+    }
+
+    pub fn finish(self) -> Vec<u8> {
+        self.buf
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+}
+
+pub struct WireReader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> WireReader<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        Self { buf, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> anyhow::Result<&'a [u8]> {
+        if self.pos + n > self.buf.len() {
+            anyhow::bail!(
+                "wire underrun: need {n} bytes at {} of {}",
+                self.pos,
+                self.buf.len()
+            );
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    pub fn u8(&mut self) -> anyhow::Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub fn u16(&mut self) -> anyhow::Result<u16> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+    }
+
+    pub fn u32(&mut self) -> anyhow::Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub fn u64(&mut self) -> anyhow::Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub fn f32(&mut self) -> anyhow::Result<f32> {
+        Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub fn u32s(&mut self) -> anyhow::Result<Vec<u32>> {
+        let n = self.u32()? as usize;
+        let raw = self.take(n * 4)?;
+        Ok(raw
+            .chunks_exact(4)
+            .map(|c| u32::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+
+    pub fn f32s(&mut self) -> anyhow::Result<Vec<f32>> {
+        let n = self.u32()? as usize;
+        let raw = self.take(n * 4)?;
+        Ok(raw
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+
+    pub fn bits(&mut self) -> anyhow::Result<Vec<bool>> {
+        let n = self.u32()? as usize;
+        let raw = self.take(n.div_ceil(8))?;
+        Ok((0..n).map(|i| raw[i / 8] & (1 << (i % 8)) != 0).collect())
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::check;
+
+    #[test]
+    fn primitives_roundtrip() {
+        let mut w = WireWriter::new();
+        w.u8(7).u16(300).u32(70_000).u64(1 << 40).f32(-2.5);
+        let buf = w.finish();
+        let mut r = WireReader::new(&buf);
+        assert_eq!(r.u8().unwrap(), 7);
+        assert_eq!(r.u16().unwrap(), 300);
+        assert_eq!(r.u32().unwrap(), 70_000);
+        assert_eq!(r.u64().unwrap(), 1 << 40);
+        assert_eq!(r.f32().unwrap(), -2.5);
+        assert_eq!(r.remaining(), 0);
+    }
+
+    #[test]
+    fn vectors_roundtrip_property() {
+        check("wire_vecs", 40, |rng| {
+            let n = rng.usize_below(50);
+            let us: Vec<u32> = (0..n).map(|_| rng.next_u64() as u32).collect();
+            let fs: Vec<f32> = (0..n).map(|_| rng.uniform(-10.0, 10.0)).collect();
+            let bs: Vec<bool> = (0..rng.usize_below(70)).map(|_| rng.bool(0.5)).collect();
+            let mut w = WireWriter::new();
+            w.u32s(&us).f32s(&fs).bits(&bs);
+            let buf = w.finish();
+            let mut r = WireReader::new(&buf);
+            assert_eq!(r.u32s().unwrap(), us);
+            assert_eq!(r.f32s().unwrap(), fs);
+            assert_eq!(r.bits().unwrap(), bs);
+        });
+    }
+
+    #[test]
+    fn bits_pack_tightly() {
+        let v = vec![true; 16];
+        let mut w = WireWriter::new();
+        w.bits(&v);
+        // 4-byte length + 2 payload bytes
+        assert_eq!(w.len(), 6);
+    }
+
+    #[test]
+    fn underrun_is_error() {
+        let buf = [1u8, 2];
+        let mut r = WireReader::new(&buf);
+        assert!(r.u32().is_err());
+    }
+
+    #[test]
+    fn f32s_byte_size_is_4n_plus_len() {
+        let mut w = WireWriter::new();
+        w.f32s(&[0.0; 100]);
+        assert_eq!(w.len(), 4 + 400);
+    }
+}

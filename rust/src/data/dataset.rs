@@ -1,0 +1,356 @@
+//! Per-client dataset: splits, batching with negative sampling, and the
+//! filtered-evaluation index.
+//!
+//! Batches are laid out exactly as the AOT train-step artifact expects
+//! (`pos (B,3) i32`, `neg (B,NEG) i32`, `neg_is_head (B,) f32`,
+//! `mask (B,) f32`, padding masked out), so the same structures drive both
+//! the XLA trainer and the pure-Rust oracle.
+
+use std::collections::{HashMap, HashSet};
+
+use crate::util::rng::Rng;
+
+use super::Triple;
+
+/// One client's local KG.
+#[derive(Clone, Debug)]
+pub struct ClientData {
+    pub id: u16,
+    pub train: Vec<Triple>,
+    pub valid: Vec<Triple>,
+    pub test: Vec<Triple>,
+    /// local entities (sorted, global ids)
+    pub entities: Vec<u32>,
+    /// local relations (sorted, global ids)
+    pub relations: Vec<u32>,
+}
+
+impl ClientData {
+    pub fn new(
+        id: u16,
+        train: Vec<Triple>,
+        valid: Vec<Triple>,
+        test: Vec<Triple>,
+        _num_entities: usize,
+    ) -> Self {
+        let mut ents = HashSet::new();
+        let mut rels = HashSet::new();
+        for t in train.iter().chain(&valid).chain(&test) {
+            ents.insert(t.h);
+            ents.insert(t.t);
+            rels.insert(t.r);
+        }
+        let mut entities: Vec<u32> = ents.into_iter().collect();
+        entities.sort_unstable();
+        let mut relations: Vec<u32> = rels.into_iter().collect();
+        relations.sort_unstable();
+        Self { id, train, valid, test, entities, relations }
+    }
+
+    /// Filter index over ALL local triples (train+valid+test) — the standard
+    /// "filtered" evaluation setting.
+    pub fn filter_index(&self) -> FilterIndex {
+        FilterIndex::build(self.train.iter().chain(&self.valid).chain(&self.test))
+    }
+}
+
+/// Known-positive lookup for filtered ranking: (known entity, relation) →
+/// answers, per direction.
+#[derive(Clone, Debug, Default)]
+pub struct FilterIndex {
+    /// (h, r) → tails
+    tails: HashMap<(u32, u32), Vec<u32>>,
+    /// (t, r) → heads
+    heads: HashMap<(u32, u32), Vec<u32>>,
+}
+
+impl FilterIndex {
+    pub fn build<'a>(triples: impl Iterator<Item = &'a Triple>) -> Self {
+        let mut f = FilterIndex::default();
+        for t in triples {
+            f.tails.entry((t.h, t.r)).or_default().push(t.t);
+            f.heads.entry((t.t, t.r)).or_default().push(t.h);
+        }
+        f
+    }
+
+    pub fn known_tails(&self, h: u32, r: u32) -> &[u32] {
+        self.tails.get(&(h, r)).map(|v| v.as_slice()).unwrap_or(&[])
+    }
+
+    pub fn known_heads(&self, t: u32, r: u32) -> &[u32] {
+        self.heads.get(&(t, r)).map(|v| v.as_slice()).unwrap_or(&[])
+    }
+}
+
+/// A padded training batch in artifact layout.
+#[derive(Clone, Debug)]
+pub struct Batch {
+    pub pos: Vec<i32>,         // B*3 [h, r, t]
+    pub neg: Vec<i32>,         // B*NEG entity ids
+    pub neg_is_head: Vec<f32>, // B
+    pub mask: Vec<f32>,        // B
+    pub len: usize,            // real (unpadded) rows
+    pub batch_size: usize,
+    pub negatives: usize,
+}
+
+/// Shuffled epoch iterator producing padded batches with uniform negative
+/// sampling from the client's local entity set (FedE convention) and
+/// per-sample head/tail corruption.
+pub struct BatchIter<'a> {
+    triples: Vec<&'a Triple>,
+    entities: &'a [u32],
+    batch_size: usize,
+    negatives: usize,
+    pos_idx: usize,
+    rng: &'a mut Rng,
+}
+
+impl<'a> BatchIter<'a> {
+    pub fn new(
+        triples: &'a [Triple],
+        entities: &'a [u32],
+        batch_size: usize,
+        negatives: usize,
+        rng: &'a mut Rng,
+    ) -> Self {
+        let mut refs: Vec<&Triple> = triples.iter().collect();
+        rng.shuffle(&mut refs);
+        Self { triples: refs, entities, batch_size, negatives, pos_idx: 0, rng }
+    }
+
+    pub fn batches_per_epoch(n_triples: usize, batch_size: usize) -> usize {
+        n_triples.div_ceil(batch_size)
+    }
+}
+
+impl<'a> Iterator for BatchIter<'a> {
+    type Item = Batch;
+
+    fn next(&mut self) -> Option<Batch> {
+        if self.pos_idx >= self.triples.len() {
+            return None;
+        }
+        let b = self.batch_size;
+        let n = self.negatives;
+        let take = (self.triples.len() - self.pos_idx).min(b);
+        let mut pos = vec![0i32; b * 3];
+        let mut neg = vec![0i32; b * n];
+        let mut neg_is_head = vec![0f32; b];
+        let mut mask = vec![0f32; b];
+        for i in 0..take {
+            let t = self.triples[self.pos_idx + i];
+            pos[i * 3] = t.h as i32;
+            pos[i * 3 + 1] = t.r as i32;
+            pos[i * 3 + 2] = t.t as i32;
+            neg_is_head[i] = if self.rng.bool(0.5) { 1.0 } else { 0.0 };
+            mask[i] = 1.0;
+            for j in 0..n {
+                neg[i * n + j] =
+                    self.entities[self.rng.usize_below(self.entities.len())] as i32;
+            }
+        }
+        self.pos_idx += take;
+        Some(Batch {
+            pos,
+            neg,
+            neg_is_head,
+            mask,
+            len: take,
+            batch_size: b,
+            negatives: n,
+        })
+    }
+}
+
+/// A padded evaluation batch in artifact layout (one query per row).
+#[derive(Clone, Debug)]
+pub struct EvalBatch {
+    pub src: Vec<i32>,       // EB known entity
+    pub rel: Vec<i32>,       // EB
+    pub truth: Vec<i32>,     // EB answer entity
+    pub pred_head: Vec<f32>, // EB
+    pub filter: Vec<f32>,    // EB*E — 1 marks known positives to exclude
+    pub len: usize,
+    pub eval_batch: usize,
+}
+
+/// All queries for a triple set: two per triple (tail- and head-prediction).
+pub struct EvalSet {
+    queries: Vec<(u32, u32, u32, bool)>, // (src, rel, truth, pred_head)
+    pub num_entities: usize,
+}
+
+impl EvalSet {
+    pub fn new(triples: &[Triple], num_entities: usize) -> Self {
+        let mut queries = Vec::with_capacity(triples.len() * 2);
+        for t in triples {
+            queries.push((t.h, t.r, t.t, false)); // predict tail
+            queries.push((t.t, t.r, t.h, true));  // predict head
+        }
+        Self { queries, num_entities }
+    }
+
+    pub fn len(&self) -> usize {
+        self.queries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.queries.is_empty()
+    }
+
+    /// Deterministically subsample to at most `max_queries` (evaluation cap
+    /// for the scaled experiment harness; 0 = keep all).
+    pub fn subsample(&mut self, max_queries: usize, rng: &mut crate::util::rng::Rng) {
+        if max_queries == 0 || self.queries.len() <= max_queries {
+            return;
+        }
+        rng.shuffle(&mut self.queries);
+        self.queries.truncate(max_queries);
+    }
+
+    /// Produce padded eval batches; `filter` excludes every known positive
+    /// except the true answer itself.
+    pub fn batches(&self, eval_batch: usize, filters: &FilterIndex) -> Vec<EvalBatch> {
+        let e = self.num_entities;
+        let mut out = Vec::new();
+        for chunk in self.queries.chunks(eval_batch) {
+            let mut eb = EvalBatch {
+                src: vec![0; eval_batch],
+                rel: vec![0; eval_batch],
+                truth: vec![0; eval_batch],
+                pred_head: vec![0.0; eval_batch],
+                filter: vec![0.0; eval_batch * e],
+                len: chunk.len(),
+                eval_batch,
+            };
+            for (i, &(src, rel, truth, ph)) in chunk.iter().enumerate() {
+                eb.src[i] = src as i32;
+                eb.rel[i] = rel as i32;
+                eb.truth[i] = truth as i32;
+                eb.pred_head[i] = if ph { 1.0 } else { 0.0 };
+                let known: &[u32] = if ph {
+                    filters.known_heads(src, rel)
+                } else {
+                    filters.known_tails(src, rel)
+                };
+                let row = &mut eb.filter[i * e..(i + 1) * e];
+                for &k in known {
+                    row[k as usize] = 1.0;
+                }
+                row[truth as usize] = 0.0; // never filter the answer itself
+            }
+            out.push(eb);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn triples() -> Vec<Triple> {
+        vec![
+            Triple::new(0, 0, 1),
+            Triple::new(0, 0, 2),
+            Triple::new(2, 1, 3),
+            Triple::new(3, 0, 0),
+            Triple::new(1, 1, 4),
+        ]
+    }
+
+    #[test]
+    fn client_data_collects_vocab() {
+        let c = ClientData::new(0, triples(), vec![], vec![], 16);
+        assert_eq!(c.entities, vec![0, 1, 2, 3, 4]);
+        assert_eq!(c.relations, vec![0, 1]);
+    }
+
+    #[test]
+    fn filter_index_lookups() {
+        let ts = triples();
+        let f = FilterIndex::build(ts.iter());
+        let mut tails = f.known_tails(0, 0).to_vec();
+        tails.sort_unstable();
+        assert_eq!(tails, vec![1, 2]);
+        assert_eq!(f.known_heads(0, 0), &[3]);
+        assert!(f.known_tails(9, 9).is_empty());
+    }
+
+    #[test]
+    fn batches_cover_all_triples_once() {
+        let ts: Vec<Triple> = (0..10).map(|i| Triple::new(i, 0, i + 1)).collect();
+        let ents: Vec<u32> = (0..12).collect();
+        let mut rng = Rng::new(1);
+        let batches: Vec<Batch> = BatchIter::new(&ts, &ents, 4, 2, &mut rng).collect();
+        assert_eq!(batches.len(), 3);
+        assert_eq!(batches.iter().map(|b| b.len).sum::<usize>(), 10);
+        // every real row's positive must be one of the source triples
+        let set: HashSet<(i32, i32, i32)> =
+            ts.iter().map(|t| (t.h as i32, t.r as i32, t.t as i32)).collect();
+        let mut count = 0;
+        for b in &batches {
+            for i in 0..b.len {
+                let key = (b.pos[i * 3], b.pos[i * 3 + 1], b.pos[i * 3 + 2]);
+                assert!(set.contains(&key));
+                count += 1;
+            }
+            // padding is masked
+            for i in b.len..b.batch_size {
+                assert_eq!(b.mask[i], 0.0);
+            }
+        }
+        assert_eq!(count, 10);
+    }
+
+    #[test]
+    fn negatives_from_local_entities() {
+        let ts: Vec<Triple> = (0..6).map(|i| Triple::new(i, 0, i + 1)).collect();
+        let ents: Vec<u32> = vec![100, 101, 102];
+        let mut rng = Rng::new(2);
+        for b in BatchIter::new(&ts, &ents, 4, 8, &mut rng) {
+            for i in 0..b.len {
+                for j in 0..b.negatives {
+                    let id = b.neg[i * b.negatives + j] as u32;
+                    assert!(ents.contains(&id));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn eval_set_two_queries_per_triple() {
+        let ts = triples();
+        let es = EvalSet::new(&ts, 16);
+        assert_eq!(es.len(), 10);
+    }
+
+    #[test]
+    fn eval_filter_excludes_known_but_not_answer() {
+        let ts = triples();
+        let f = FilterIndex::build(ts.iter());
+        let es = EvalSet::new(&ts, 16);
+        let batches = es.batches(4, &f);
+        // first query: (0, 0, predict tail, answer 1); known tails {1, 2}
+        let b = &batches[0];
+        assert_eq!(b.src[0], 0);
+        assert_eq!(b.truth[0], 1);
+        assert_eq!(b.pred_head[0], 0.0);
+        let row = &b.filter[0..16];
+        assert_eq!(row[1], 0.0, "answer must not be filtered");
+        assert_eq!(row[2], 1.0, "other known positive must be filtered");
+        assert_eq!(row[5], 0.0);
+    }
+
+    #[test]
+    fn eval_batches_pad_correctly() {
+        let ts = triples();
+        let f = FilterIndex::build(ts.iter());
+        let es = EvalSet::new(&ts, 16);
+        let batches = es.batches(4, &f);
+        assert_eq!(batches.len(), 3); // 10 queries / 4
+        assert_eq!(batches[2].len, 2);
+    }
+}

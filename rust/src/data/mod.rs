@@ -1,0 +1,29 @@
+//! Federated knowledge-graph data substrate.
+//!
+//! FB15k-237 is not available offline, so `generator` produces a synthetic
+//! FB15k-237-like KG with the structural properties FedS exploits (Zipf
+//! entity usage, relation-typed structure), and `partition` applies the same
+//! relation-partitioning pipeline the paper used to build
+//! FB15k-237-R10/R5/R3 (DESIGN.md §5).
+
+pub mod dataset;
+pub mod generator;
+pub mod partition;
+
+pub use dataset::{Batch, BatchIter, ClientData, EvalBatch, EvalSet, FilterIndex};
+pub use generator::{generate, GeneratorConfig, Kg};
+pub use partition::{partition, FedDataset};
+
+/// A (head, relation, tail) triple over global ids.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct Triple {
+    pub h: u32,
+    pub r: u32,
+    pub t: u32,
+}
+
+impl Triple {
+    pub fn new(h: u32, r: u32, t: u32) -> Self {
+        Self { h, r, t }
+    }
+}

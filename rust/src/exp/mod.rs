@@ -1,0 +1,151 @@
+//! Experiment harness: one driver per table/figure in the paper's
+//! evaluation (§IV + Appendix), regenerating the same rows/series on the
+//! scaled testbed (DESIGN.md §4 maps each to modules and CLI commands).
+//!
+//! All drivers share a single synthetic FB15k-237-like KG (seeded) split
+//! into R10/R5/R3 analogues, and print + save their report under
+//! `reports/`.
+
+pub mod fig2;
+pub mod report;
+pub mod table1;
+pub mod table23;
+pub mod table4;
+pub mod table5;
+pub mod table6;
+
+use std::rc::Rc;
+
+use anyhow::Result;
+
+use crate::data::generator::{generate, GeneratorConfig};
+use crate::data::partition::{partition, FedDataset};
+use crate::fed::{Algo, Backend, FedRunConfig, RunOutcome};
+use crate::kge::{Hyper, Method};
+use crate::runtime::Runtime;
+
+/// Shared experiment context.
+pub struct Ctx {
+    pub backend: Backend,
+    /// fast mode: fewer rounds / smaller eval cap (CI smoke)
+    pub fast: bool,
+    pub seed: u64,
+    pub max_rounds: usize,
+    pub eval_cap: usize,
+}
+
+impl Ctx {
+    pub fn new(backend: Backend, fast: bool, seed: u64) -> Self {
+        // budgets sized for the single-core CPU testbed; see EXPERIMENTS.md
+        let (max_rounds, eval_cap) = if fast { (24, 128) } else { (50, 256) };
+        Self { backend, fast, seed, max_rounds, eval_cap }
+    }
+
+    /// Build from CLI-ish options: `backend` ∈ {"xla", "native"}.
+    pub fn from_options(backend: &str, fast: bool, seed: u64) -> Result<Self> {
+        let backend = match backend {
+            "xla" => Backend::Xla(xla_runtime()?),
+            "native" => native_backend(),
+            other => anyhow::bail!("unknown backend '{other}' (xla|native)"),
+        };
+        Ok(Self::new(backend, fast, seed))
+    }
+
+    /// The generator config matching the backend's artifact shapes.
+    pub fn gen_config(&self) -> GeneratorConfig {
+        match &self.backend {
+            Backend::Xla(rt) => GeneratorConfig {
+                num_entities: rt.manifest.num_entities,
+                num_relations: rt.manifest.num_relations,
+                num_triples: rt.manifest.num_entities * 15,
+                num_clusters: 8,
+                seed: self.seed,
+                ..Default::default()
+            },
+            Backend::Native { .. } => GeneratorConfig {
+                num_entities: 512,
+                num_relations: 24,
+                num_triples: 8_000,
+                num_clusters: 8,
+                seed: self.seed,
+                ..Default::default()
+            },
+        }
+    }
+
+    /// The paper's three datasets: relation-partitioned into 10/5/3 clients.
+    pub fn datasets(&self, client_counts: &[usize]) -> Vec<(String, FedDataset)> {
+        let kg = generate(&self.gen_config());
+        client_counts
+            .iter()
+            .map(|&n| (format!("R{n}"), partition(&kg, n, self.seed)))
+            .collect()
+    }
+
+    /// Baseline run configuration (paper §IV-B defaults, scaled).
+    pub fn run_cfg(&self, algo: Algo, method: Method) -> FedRunConfig {
+        FedRunConfig {
+            algo,
+            method,
+            max_rounds: self.max_rounds,
+            local_epochs: 3,
+            eval_every: if self.fast { 3 } else { 5 },
+            patience: 3,
+            sparsity: 0.4,
+            sync_interval: 4,
+            eval_cap: self.eval_cap,
+            seed: self.seed ^ 0xA11CE,
+            svd_cols: 8,
+        }
+    }
+
+    pub fn run(&self, data: &FedDataset, cfg: &FedRunConfig) -> Result<RunOutcome> {
+        crate::fed::run_federated(data, cfg, &self.backend)
+    }
+}
+
+/// The default XLA runtime (artifacts dir from $FEDS_ARTIFACTS or ./artifacts).
+pub fn xla_runtime() -> Result<Rc<Runtime>> {
+    Runtime::load_default()
+}
+
+/// The default native backend used by fast sweeps and artifact-free tests.
+pub fn native_backend() -> Backend {
+    Backend::Native {
+        hyper: Hyper { dim: 32, learning_rate: 3e-3, ..Default::default() },
+        batch: 128,
+        negatives: 32,
+        eval_batch: 64,
+    }
+}
+
+pub fn reports_dir() -> std::path::PathBuf {
+    std::path::PathBuf::from(
+        std::env::var("FEDS_REPORTS").unwrap_or_else(|_| "reports".to_string()),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn datasets_share_one_kg() {
+        let ctx = Ctx::new(native_backend(), true, 3);
+        let ds = ctx.datasets(&[3, 5]);
+        assert_eq!(ds.len(), 2);
+        assert_eq!(ds[0].0, "R3");
+        assert_eq!(
+            ds[0].1.total_triples(),
+            ds[1].1.total_triples(),
+            "same KG, different partitioning"
+        );
+    }
+
+    #[test]
+    fn fast_mode_shrinks_budget() {
+        let fast = Ctx::new(native_backend(), true, 1);
+        let full = Ctx::new(native_backend(), false, 1);
+        assert!(fast.max_rounds < full.max_rounds);
+    }
+}

@@ -1,0 +1,144 @@
+//! Report writers: markdown tables (mirroring the paper's layout) plus raw
+//! JSON, written under `reports/`.
+
+use std::path::Path;
+
+use crate::util::json::Json;
+
+/// A simple markdown table builder.
+pub struct MdTable {
+    pub header: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl MdTable {
+    pub fn new(header: &[&str]) -> Self {
+        Self {
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.header.len(), "row arity mismatch");
+        self.rows.push(cells);
+    }
+
+    pub fn to_markdown(&self) -> String {
+        let mut s = String::new();
+        s.push_str(&format!("| {} |\n", self.header.join(" | ")));
+        s.push_str(&format!(
+            "|{}\n",
+            self.header.iter().map(|_| "---|").collect::<String>()
+        ));
+        for r in &self.rows {
+            s.push_str(&format!("| {} |\n", r.join(" | ")));
+        }
+        s
+    }
+}
+
+/// A report: title, commentary, tables, raw data.
+pub struct Report {
+    pub name: String,
+    pub title: String,
+    pub notes: Vec<String>,
+    pub tables: Vec<(String, MdTable)>,
+    pub raw: Json,
+}
+
+impl Report {
+    pub fn new(name: &str, title: &str) -> Self {
+        Self {
+            name: name.to_string(),
+            title: title.to_string(),
+            notes: Vec::new(),
+            tables: Vec::new(),
+            raw: Json::obj(),
+        }
+    }
+
+    pub fn note(&mut self, s: impl Into<String>) {
+        self.notes.push(s.into());
+    }
+
+    pub fn table(&mut self, caption: &str, t: MdTable) {
+        self.tables.push((caption.to_string(), t));
+    }
+
+    pub fn to_markdown(&self) -> String {
+        let mut s = format!("# {}\n\n", self.title);
+        for n in &self.notes {
+            s.push_str(&format!("- {n}\n"));
+        }
+        s.push('\n');
+        for (cap, t) in &self.tables {
+            s.push_str(&format!("## {cap}\n\n{}\n", t.to_markdown()));
+        }
+        s
+    }
+
+    /// Write `reports/<name>.md` (+ `.json` when raw data was attached)
+    /// and echo the markdown to stdout.
+    pub fn save(&self, dir: &Path) -> anyhow::Result<()> {
+        std::fs::create_dir_all(dir)?;
+        let md = self.to_markdown();
+        std::fs::write(dir.join(format!("{}.md", self.name)), &md)?;
+        if self.raw != Json::obj() {
+            std::fs::write(
+                dir.join(format!("{}.json", self.name)),
+                self.raw.to_string_pretty(),
+            )?;
+        }
+        println!("{md}");
+        println!("(saved to {}/{}.md)", dir.display(), self.name);
+        Ok(())
+    }
+}
+
+pub fn fmt4(x: f64) -> String {
+    format!("{x:.4}")
+}
+
+pub fn fmt_ratio(x: Option<f64>) -> String {
+    match x {
+        Some(v) => format!("{v:.4}x"),
+        None => "-".to_string(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn markdown_shape() {
+        let mut t = MdTable::new(&["a", "b"]);
+        t.row(vec!["1".into(), "2".into()]);
+        let md = t.to_markdown();
+        assert!(md.contains("| a | b |"));
+        assert!(md.contains("| 1 | 2 |"));
+        assert_eq!(md.lines().count(), 3);
+    }
+
+    #[test]
+    #[should_panic]
+    fn arity_mismatch_panics() {
+        let mut t = MdTable::new(&["a", "b"]);
+        t.row(vec!["1".into()]);
+    }
+
+    #[test]
+    fn report_saves() {
+        let mut r = Report::new("test_report", "Test");
+        r.note("a note");
+        let mut t = MdTable::new(&["x"]);
+        t.row(vec!["y".into()]);
+        r.table("cap", t);
+        let dir = std::env::temp_dir().join("feds_test_reports");
+        r.save(&dir).unwrap();
+        let md = std::fs::read_to_string(dir.join("test_report.md")).unwrap();
+        assert!(md.contains("# Test"));
+        assert!(md.contains("a note"));
+    }
+}

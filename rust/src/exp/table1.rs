@@ -1,0 +1,85 @@
+//! Table I — why naive compression fails (§III-A).
+//!
+//! Compares FedE(P) against FedE-KD / FedE-SVD / FedE-SVD+ on the total
+//! transmitted parameter size when first reaching 98% of FedE(P)'s
+//! converged MRR.  The paper's finding: all three *inflate* total traffic
+//! (1.3×–2.5×) despite compressing every round, because they reduce
+//! embedding precision for all entities and slow convergence.
+
+use anyhow::Result;
+
+use crate::fed::{Algo, Backend};
+use crate::kge::Method;
+use crate::util::json::Json;
+
+use super::report::{MdTable, Report};
+use super::Ctx;
+
+pub fn run(ctx: &Ctx) -> Result<Report> {
+    let datasets = ctx.datasets(&[10, 5, 3]);
+    let methods = [Method::TransE, Method::RotatE];
+    let kd_available = matches!(ctx.backend, Backend::Xla(_));
+
+    let mut t = MdTable::new(&["KGE", "Model", "Dataset", "P@98 (scaled by FedE)"]);
+    let mut raw = Vec::new();
+
+    for method in methods {
+        for (dname, data) in &datasets {
+            let fede = ctx.run(data, &ctx.run_cfg(Algo::FedEP, method))?;
+            let target = 0.98 * fede.history.mrr_cg();
+            let base_params = fede.history.params_at_mrr(target);
+
+            let mut variants: Vec<(&str, Algo)> = vec![
+                ("FedE-SVD", Algo::FedSvd { constrained: false }),
+                ("FedE-SVD+", Algo::FedSvd { constrained: true }),
+            ];
+            if kd_available {
+                variants.insert(0, ("FedE-KD", Algo::FedKd));
+            }
+
+            t.row(vec![
+                method.name().into(),
+                "FedE".into(),
+                dname.clone(),
+                "1.00x".into(),
+            ]);
+            for (label, algo) in variants {
+                let out = ctx.run(data, &ctx.run_cfg(algo, method))?;
+                let reached = out.history.params_at_mrr(target);
+                let cell = match (reached, base_params) {
+                    (Some(m), Some(b)) => format!("{:.2}x", m as f64 / b.max(1) as f64),
+                    // never reached 98% within budget: report the lower
+                    // bound from total traffic (the paper's point, amplified)
+                    (None, Some(b)) => format!(
+                        ">{:.2}x (never reached)",
+                        out.acct.params() as f64 / b.max(1) as f64
+                    ),
+                    _ => "-".into(),
+                };
+                t.row(vec![method.name().into(), label.into(), dname.clone(), cell.clone()]);
+                raw.push(
+                    Json::obj()
+                        .set("method", method.name())
+                        .set("model", label)
+                        .set("dataset", dname.as_str())
+                        .set("ratio", cell)
+                        .set("model_mrr", out.history.mrr_cg())
+                        .set("fede_mrr", fede.history.mrr_cg()),
+                );
+            }
+        }
+    }
+
+    let mut rep = Report::new(
+        "table1",
+        "Table I — total transmitted parameters to reach 98% of FedE's converged MRR",
+    );
+    rep.note("Paper shape to verify: every compression baseline lands ABOVE 1.0x (naive per-round compression increases total traffic).");
+    if !kd_available {
+        rep.note("FedE-KD skipped: requires the XLA backend (co-distillation artifact).");
+    }
+    rep.note("SVD rank auto-chosen per width (DESIGN.md §5); paper used rank 5 of 8 at D=256.");
+    rep.table("Table I", t);
+    rep.raw = Json::obj().set("rows", Json::Arr(raw));
+    Ok(rep)
+}

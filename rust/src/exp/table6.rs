@@ -1,0 +1,77 @@
+//! Table VI — sensitivity to batch size (128/256/512), FedEP vs FedS,
+//! TransE on the R10 analogue.
+//!
+//! Batch size is baked into the AOT artifact shapes, so this sweep always
+//! runs on the native backend (identical math; DESIGN.md §5) — the knob
+//! under study is a training hyper-parameter, not a runtime property.
+
+use anyhow::Result;
+
+use crate::fed::{Algo, Backend};
+use crate::kge::{Hyper, Method};
+use crate::metrics::tracker::efficiency;
+use crate::util::json::Json;
+
+use super::report::{fmt4, fmt_ratio, MdTable, Report};
+use super::Ctx;
+
+pub fn run(ctx: &Ctx) -> Result<Report> {
+    let datasets = ctx.datasets(&[10]);
+    let (_, data) = &datasets[0];
+    let mut t = MdTable::new(&[
+        "Batch size", "Setting", "MRR", "Hits@10", "P@CG", "P@99", "P@98",
+    ]);
+    let mut raw = Vec::new();
+
+    let batches: &[usize] = if ctx.fast { &[128, 256] } else { &[128, 256, 512] };
+    for &bs in batches {
+        let backend = Backend::Native {
+            hyper: Hyper { dim: 32, learning_rate: 3e-3, ..Default::default() },
+            batch: bs,
+            negatives: 32,
+            eval_batch: 64,
+        };
+        let run = |algo: Algo| -> Result<_> {
+            let cfg = ctx.run_cfg(algo, Method::TransE);
+            crate::fed::run_federated(data, &cfg, &backend)
+        };
+        let fedep = run(Algo::FedEP)?;
+        let feds = run(Algo::FedS { sync: true })?;
+        let eff = efficiency(&feds.history, &fedep.history);
+        t.row(vec![
+            bs.to_string(),
+            "FedEP".into(),
+            fmt4(fedep.history.mrr_cg()),
+            fmt4(fedep.history.hits10_cg()),
+            "1.00x".into(),
+            "1.00x".into(),
+            "1.00x".into(),
+        ]);
+        t.row(vec![
+            bs.to_string(),
+            "FedS".into(),
+            fmt4(feds.history.mrr_cg()),
+            fmt4(feds.history.hits10_cg()),
+            format!("{:.4}x", eff.p_cg),
+            fmt_ratio(eff.p99),
+            fmt_ratio(eff.p98),
+        ]);
+        raw.push(
+            Json::obj()
+                .set("batch", bs)
+                .set("fedep_mrr", fedep.history.mrr_cg())
+                .set("feds_mrr", feds.history.mrr_cg())
+                .set("p_cg", eff.p_cg),
+        );
+    }
+
+    let mut rep = Report::new(
+        "table6",
+        "Table VI — batch-size sensitivity (TransE, R10 analogue, native backend)",
+    );
+    rep.note("Paper shape to verify: FedS ≈ FedEP accuracy at every batch size with P@* below 1.0x.");
+    rep.note("Runs on the native backend: batch size is an artifact-shape constant on the XLA path.");
+    rep.table("Table VI", t);
+    rep.raw = Json::obj().set("rows", Json::Arr(raw));
+    Ok(rep)
+}

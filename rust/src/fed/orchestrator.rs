@@ -1,0 +1,674 @@
+//! The federated round loop: local training → evaluation/early-stop →
+//! communication, for every algorithm in the paper's evaluation.
+//!
+//! Algorithms (§IV-B, Appendix VI):
+//! * `Single`  — local training only, no communication.
+//! * `FedEP`   — dense FedE with personalized evaluation (the baseline all
+//!               efficiency metrics are scaled against).
+//! * `FedEPL`  — FedEP at the reduced dimension of Appendix VI-C.
+//! * `FedS`    — Entity-Wise Top-K sparsification both ways + Intermittent
+//!               Synchronization; `sync: false` is the FedS/syn ablation.
+//! * `FedKd`   — dual-dimension co-distillation transport (Table I).
+//! * `FedSvd`  — SVD-compressed update transport; `constrained` adds the
+//!               SVD+ low-rank training constraint (Table I).
+//!
+//! Execution is sequential over clients within a round (the PJRT client is
+//! not Send; all clients share one compiled artifact cache), but every
+//! exchanged message round-trips through the byte-exact wire codec and the
+//! parameter/byte accounting, so the communication metrics are identical
+//! to a distributed deployment's.
+
+use std::rc::Rc;
+
+use anyhow::Result;
+
+use crate::comm::accounting::{Accounting, Direction};
+use crate::data::dataset::{BatchIter, EvalSet, FilterIndex};
+use crate::data::partition::FedDataset;
+use crate::kge::{Hyper, Method, Table};
+use crate::metrics::tracker::{RoundRecord, RunHistory};
+use crate::metrics::{EarlyStop, RankMetrics};
+use crate::runtime::Runtime;
+use crate::trainer::{evaluate, KdXlaTrainer, LocalTrainer, NativeTrainer, XlaTrainer};
+use crate::util::rng::Rng;
+
+use super::compression::SvdCodec;
+use super::protocol::{Download, Upload};
+use super::server::Server;
+use super::sync::SyncSchedule;
+use super::topk::{select_by_change, top_k_count};
+use super::{comm_ratio, fedepl_dim};
+
+/// Which algorithm drives the communication phase.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Algo {
+    Single,
+    FedEP,
+    FedEPL,
+    FedS { sync: bool },
+    FedKd,
+    FedSvd { constrained: bool },
+}
+
+impl Algo {
+    pub fn label(&self) -> &'static str {
+        match self {
+            Algo::Single => "Single",
+            Algo::FedEP => "FedEP",
+            Algo::FedEPL => "FedEPL",
+            Algo::FedS { sync: true } => "FedS",
+            Algo::FedS { sync: false } => "FedS/syn",
+            Algo::FedKd => "FedE-KD",
+            Algo::FedSvd { constrained: false } => "FedE-SVD",
+            Algo::FedSvd { constrained: true } => "FedE-SVD+",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Algo> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "single" => Algo::Single,
+            "fedep" | "fede" => Algo::FedEP,
+            "fedepl" => Algo::FedEPL,
+            "feds" => Algo::FedS { sync: true },
+            "feds-nosync" | "feds/syn" => Algo::FedS { sync: false },
+            "fedkd" | "fede-kd" => Algo::FedKd,
+            "fedsvd" | "fede-svd" => Algo::FedSvd { constrained: false },
+            "fedsvd+" | "fede-svd+" => Algo::FedSvd { constrained: true },
+            other => anyhow::bail!(
+                "unknown algorithm '{other}' \
+                 (single|fedep|fedepl|feds|feds-nosync|fedkd|fedsvd|fedsvd+)"
+            ),
+        })
+    }
+}
+
+/// Where local training executes.
+#[derive(Clone)]
+pub enum Backend {
+    /// AOT artifacts via PJRT — the production path.
+    Xla(Rc<Runtime>),
+    /// Pure-Rust oracle — artifact-free tests and the SVD+ native path.
+    Native {
+        hyper: Hyper,
+        batch: usize,
+        negatives: usize,
+        eval_batch: usize,
+    },
+}
+
+impl Backend {
+    fn batch_shape(&self) -> (usize, usize) {
+        match self {
+            Backend::Xla(rt) => (rt.manifest.batch, rt.manifest.negatives),
+            Backend::Native { batch, negatives, .. } => (*batch, *negatives),
+        }
+    }
+
+    fn sparsity_defaults(&self) -> (f64, usize) {
+        match self {
+            Backend::Xla(rt) => (rt.manifest.sparsity, rt.manifest.sync_interval),
+            Backend::Native { .. } => (0.4, 4),
+        }
+    }
+
+    fn make_trainer(
+        &self,
+        algo: Algo,
+        method: Method,
+        num_entities: usize,
+        num_relations: usize,
+        seed: u64,
+    ) -> Result<Box<dyn LocalTrainer>> {
+        let mut rng = Rng::new(seed);
+        match self {
+            Backend::Xla(rt) => match algo {
+                Algo::FedKd => Ok(Box::new(KdXlaTrainer::new(rt.clone(), method, &mut rng)?)),
+                Algo::FedEPL => {
+                    let dim = rt.manifest.fedepl_dim;
+                    Ok(Box::new(XlaTrainer::new(rt.clone(), method, dim, &mut rng)?))
+                }
+                _ => Ok(Box::new(XlaTrainer::new(
+                    rt.clone(),
+                    method,
+                    rt.manifest.hyper.dim,
+                    &mut rng,
+                )?)),
+            },
+            Backend::Native { hyper, eval_batch, .. } => {
+                anyhow::ensure!(
+                    algo != Algo::FedKd,
+                    "FedE-KD requires the XLA backend (co-distillation artifact)"
+                );
+                let hyper = if algo == Algo::FedEPL {
+                    let (p, s) = self.sparsity_defaults();
+                    Hyper { dim: fedepl_dim(hyper.dim, p, s), ..hyper.clone() }
+                } else {
+                    hyper.clone()
+                };
+                Ok(Box::new(NativeTrainer::new(
+                    method,
+                    hyper,
+                    num_entities,
+                    num_relations,
+                    *eval_batch,
+                    &mut rng,
+                )))
+            }
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct FedRunConfig {
+    pub algo: Algo,
+    pub method: Method,
+    /// hard cap on communication rounds
+    pub max_rounds: usize,
+    /// local epochs per round (paper default 3)
+    pub local_epochs: usize,
+    /// evaluate every N rounds (paper: every 5)
+    pub eval_every: usize,
+    /// early-stop patience in evaluations (paper: 3)
+    pub patience: usize,
+    /// FedS sparsity ratio p (paper: 0.4, 0.7 for one config)
+    pub sparsity: f64,
+    /// FedS synchronization interval s (paper: 4)
+    pub sync_interval: usize,
+    /// cap on eval queries per client per split (0 = all)
+    pub eval_cap: usize,
+    pub seed: u64,
+    /// columns of the SVD reshape (paper: 8)
+    pub svd_cols: usize,
+}
+
+impl Default for FedRunConfig {
+    fn default() -> Self {
+        Self {
+            algo: Algo::FedS { sync: true },
+            method: Method::TransE,
+            max_rounds: 200,
+            local_epochs: 3,
+            eval_every: 5,
+            patience: 3,
+            sparsity: 0.4,
+            sync_interval: 4,
+            eval_cap: 0,
+            seed: 0xFED5,
+            svd_cols: 8,
+        }
+    }
+}
+
+struct ClientCtx {
+    id: u16,
+    trainer: Box<dyn LocalTrainer>,
+    /// shared entities (sorted global ids) — the communicated set N_c
+    shared: Vec<u32>,
+    /// FedS history table E^h (full-size; only shared rows meaningful)
+    hist: Option<Table>,
+    /// SVD variants: the client/server-agreed reference state
+    svd_ref: Option<Table>,
+    filters: FilterIndex,
+    valid_set: EvalSet,
+    test_set: EvalSet,
+    rng: Rng,
+}
+
+/// Outcome of a federated run: history plus final accounting.
+pub struct RunOutcome {
+    pub history: RunHistory,
+    pub acct: std::sync::Arc<Accounting>,
+    /// analytic Eq. 5 ratio for this configuration (FedS only)
+    pub eq5_ratio: Option<f64>,
+}
+
+/// Run one federated training experiment.
+pub fn run_federated(
+    data: &FedDataset,
+    cfg: &FedRunConfig,
+    backend: &Backend,
+) -> Result<RunOutcome> {
+    let acct = Accounting::new();
+    let (batch_size, negatives) = backend.batch_shape();
+    let n_clients = data.clients.len();
+
+    // --- build clients (identical entity init: same trainer seed) ----------
+    let mut clients: Vec<ClientCtx> = Vec::with_capacity(n_clients);
+    for c in &data.clients {
+        let trainer = backend.make_trainer(
+            cfg.algo,
+            cfg.method,
+            data.num_entities,
+            data.num_relations,
+            cfg.seed,
+        )?;
+        let mut rng = Rng::new(cfg.seed ^ (0xC11E57 + c.id as u64));
+        let filters = c.filter_index();
+        let mut valid_set = EvalSet::new(&c.valid, data.num_entities);
+        let mut test_set = EvalSet::new(&c.test, data.num_entities);
+        valid_set.subsample(cfg.eval_cap, &mut rng);
+        test_set.subsample(cfg.eval_cap, &mut rng);
+        clients.push(ClientCtx {
+            id: c.id,
+            trainer,
+            shared: data.shared_entities_of(c.id),
+            hist: None,
+            svd_ref: None,
+            filters,
+            valid_set,
+            test_set,
+            rng,
+        });
+    }
+
+    let width = clients[0].trainer.entity_width();
+    let is_feds = matches!(cfg.algo, Algo::FedS { .. });
+    let is_svd = matches!(cfg.algo, Algo::FedSvd { .. });
+
+    // FedS history tables / SVD reference tables start at the initial state
+    for ctx in clients.iter_mut() {
+        if is_feds || is_svd {
+            let mut t = Table::zeros(data.num_entities, width);
+            let rows = ctx.trainer.get_entity_rows(&ctx.shared)?;
+            for (k, &id) in ctx.shared.iter().enumerate() {
+                t.set_row(id as usize, &rows[k * width..(k + 1) * width]);
+            }
+            if is_feds {
+                ctx.hist = Some(t);
+            } else {
+                ctx.svd_ref = Some(t);
+            }
+        }
+    }
+
+    let mut server = Server::new(
+        data.num_entities,
+        width,
+        clients.iter().map(|c| c.shared.clone()).collect(),
+    );
+    let mut server_rng = Rng::new(cfg.seed ^ 0x5E4E4);
+    let mut sync = SyncSchedule::new(match cfg.algo {
+        Algo::FedS { sync: true } => Some(cfg.sync_interval),
+        _ => None,
+    });
+    // codec only meaningful (and width-compatible) for the SVD baselines
+    let codec = if is_svd || cfg.algo == (Algo::FedSvd { constrained: true }) {
+        SvdCodec::for_width(width, cfg.svd_cols.min(width))
+    } else {
+        SvdCodec::new(1, 1)
+    };
+    let weights = data.test_weights();
+    let mut es = EarlyStop::new(cfg.patience);
+    let mut history = RunHistory::new(&format!(
+        "{}-{}-{}c",
+        cfg.algo.label(),
+        cfg.method.name(),
+        n_clients
+    ));
+
+    crate::info!(
+        "run {}: {} clients, {} shared entities, width {}, p={}, s={}",
+        history.label,
+        n_clients,
+        data.shared.len(),
+        width,
+        cfg.sparsity,
+        cfg.sync_interval
+    );
+
+    for round in 1..=cfg.max_rounds {
+        // --- 1. local training ---------------------------------------------
+        let mut loss_sum = 0.0f64;
+        let mut loss_n = 0usize;
+        for (ci, ctx) in clients.iter_mut().enumerate() {
+            let train = &data.clients[ci].train;
+            let local_ents = &data.clients[ci].entities;
+            // all epochs' batches gathered so the XLA trainers can fuse the
+            // whole phase into scan-stepped executions
+            let mut batches = Vec::new();
+            for _ in 0..cfg.local_epochs {
+                let mut brng = ctx.rng.fork(round as u64);
+                batches
+                    .extend(BatchIter::new(train, local_ents, batch_size, negatives, &mut brng));
+            }
+            let n = batches.len();
+            loss_sum += ctx.trainer.train_batches(&batches)? as f64 * n as f64;
+            loss_n += n;
+        }
+
+        // SVD+ low-rank constraint: project this round's local update
+        if cfg.algo == (Algo::FedSvd { constrained: true }) {
+            for ctx in clients.iter_mut() {
+                let refs = ctx.svd_ref.as_ref().unwrap();
+                let cur = ctx.trainer.get_entity_rows(&ctx.shared)?;
+                let mut projected = Vec::with_capacity(cur.len());
+                for (k, &id) in ctx.shared.iter().enumerate() {
+                    let row = &cur[k * width..(k + 1) * width];
+                    let upd = crate::linalg::sub(row, refs.row(id as usize));
+                    let proj = codec.project_row(&upd);
+                    let mut out = refs.row(id as usize).to_vec();
+                    crate::linalg::axpy(1.0, &proj, &mut out);
+                    projected.extend_from_slice(&out);
+                }
+                ctx.trainer.set_entity_rows(&ctx.shared, &projected)?;
+            }
+        }
+
+        // --- 2. evaluation + early stopping --------------------------------
+        if round % cfg.eval_every == 0 {
+            let (valid, test) = eval_all(&mut clients, &weights)?;
+            let mean_loss = if loss_n > 0 { loss_sum / loss_n as f64 } else { 0.0 };
+            history.push(RoundRecord {
+                round,
+                params_cum: acct.params(),
+                bytes_cum: acct.bytes(),
+                valid,
+                test,
+                mean_loss,
+            });
+            crate::info!(
+                "{} round {round}: loss {mean_loss:.4} valid MRR {:.4} test MRR {:.4} params {:.2}M",
+                history.label,
+                valid.mrr,
+                test.mrr,
+                acct.params() as f64 / 1e6
+            );
+            if es.update(valid.mrr) {
+                history.mark_converged(es.best_index());
+                break;
+            }
+        }
+
+        // --- 3. communication -----------------------------------------------
+        match cfg.algo {
+            Algo::Single => {}
+            Algo::FedEP | Algo::FedEPL | Algo::FedKd => {
+                dense_round(round as u32, &mut clients, &mut server, &acct, width)?;
+            }
+            Algo::FedSvd { .. } => {
+                svd_round(round as u32, &mut clients, &mut server, &acct, width, &codec)?;
+            }
+            Algo::FedS { .. } => {
+                if sync.step(round) {
+                    feds_sync_round(round as u32, &mut clients, &mut server, &acct, width)?;
+                } else {
+                    feds_sparse_round(
+                        round as u32,
+                        &mut clients,
+                        &mut server,
+                        &acct,
+                        width,
+                        cfg.sparsity,
+                        &mut server_rng,
+                    )?;
+                }
+            }
+        }
+    }
+
+    if history.converged_idx.is_none() && !history.records.is_empty() {
+        history.mark_converged(es.best_index().min(history.records.len() - 1));
+    }
+
+    let eq5 = is_feds.then(|| comm_ratio(cfg.sparsity, cfg.sync_interval, width));
+    Ok(RunOutcome { history, acct, eq5_ratio: eq5 })
+}
+
+fn eval_all(
+    clients: &mut [ClientCtx],
+    weights: &[f64],
+) -> Result<(RankMetrics, RankMetrics)> {
+    let mut valid = Vec::with_capacity(clients.len());
+    let mut test = Vec::with_capacity(clients.len());
+    for ctx in clients.iter_mut() {
+        valid.push(evaluate(ctx.trainer.as_mut(), &ctx.valid_set, &ctx.filters)?);
+        test.push(evaluate(ctx.trainer.as_mut(), &ctx.test_set, &ctx.filters)?);
+    }
+    Ok((
+        RankMetrics::weighted(&valid, weights),
+        RankMetrics::weighted(&test, weights),
+    ))
+}
+
+/// Dense FedE-style exchange (FedEP, FedEPL, FedE-KD).
+fn dense_round(
+    round: u32,
+    clients: &mut [ClientCtx],
+    server: &mut Server,
+    acct: &Accounting,
+    width: usize,
+) -> Result<()> {
+    server.begin_round();
+    for ctx in clients.iter_mut() {
+        if ctx.shared.is_empty() {
+            continue;
+        }
+        let rows = ctx.trainer.get_entity_rows(&ctx.shared)?;
+        let msg = Upload::Full { round, client: ctx.id, emb: rows };
+        let frame = msg.encode();
+        acct.record(Direction::Upload, msg.params(), frame.len() as u64);
+        let Upload::Full { emb, client, .. } = Upload::decode(&frame)? else {
+            unreachable!()
+        };
+        server.receive(client, &ctx.shared, &emb);
+    }
+    for ctx in clients.iter_mut() {
+        if ctx.shared.is_empty() {
+            continue;
+        }
+        let rows = server.fede_download(ctx.id);
+        let msg = Download::Full { round, emb: rows };
+        let frame = msg.encode();
+        acct.record(Direction::Download, msg.params(), frame.len() as u64);
+        let Download::Full { emb, .. } = Download::decode(&frame)? else {
+            unreachable!()
+        };
+        debug_assert_eq!(emb.len(), ctx.shared.len() * width);
+        ctx.trainer.set_entity_rows(&ctx.shared, &emb)?;
+    }
+    Ok(())
+}
+
+/// FedS full synchronization round (§III-E): dense exchange + history reset.
+fn feds_sync_round(
+    round: u32,
+    clients: &mut [ClientCtx],
+    server: &mut Server,
+    acct: &Accounting,
+    width: usize,
+) -> Result<()> {
+    server.begin_round();
+    for ctx in clients.iter_mut() {
+        if ctx.shared.is_empty() {
+            continue;
+        }
+        let rows = ctx.trainer.get_entity_rows(&ctx.shared)?;
+        // E^h := what was sent (all entities on sync rounds)
+        let hist = ctx.hist.as_mut().unwrap();
+        for (k, &id) in ctx.shared.iter().enumerate() {
+            hist.set_row(id as usize, &rows[k * width..(k + 1) * width]);
+        }
+        let msg = Upload::Full { round, client: ctx.id, emb: rows };
+        let frame = msg.encode();
+        acct.record(Direction::Upload, msg.params(), frame.len() as u64);
+        let Upload::Full { emb, client, .. } = Upload::decode(&frame)? else {
+            unreachable!()
+        };
+        server.receive(client, &ctx.shared, &emb);
+    }
+    for ctx in clients.iter_mut() {
+        if ctx.shared.is_empty() {
+            continue;
+        }
+        let rows = server.fede_download(ctx.id);
+        let msg = Download::Full { round, emb: rows };
+        let frame = msg.encode();
+        acct.record(Direction::Download, msg.params(), frame.len() as u64);
+        let Download::Full { emb, .. } = Download::decode(&frame)? else {
+            unreachable!()
+        };
+        ctx.trainer.set_entity_rows(&ctx.shared, &emb)?;
+    }
+    Ok(())
+}
+
+/// FedS sparsified round: upstream Top-K by change (§III-C), downstream
+/// personalized aggregation + priority Top-K (§III-D), Eq. 4 merge.
+fn feds_sparse_round(
+    round: u32,
+    clients: &mut [ClientCtx],
+    server: &mut Server,
+    acct: &Accounting,
+    width: usize,
+    sparsity: f64,
+    server_rng: &mut Rng,
+) -> Result<()> {
+    server.begin_round();
+
+    // upstream
+    for ctx in clients.iter_mut() {
+        if ctx.shared.is_empty() {
+            continue;
+        }
+        let hist = ctx.hist.as_ref().unwrap();
+        let scores = ctx.trainer.change_scores(&ctx.shared, hist)?;
+        let k = top_k_count(ctx.shared.len(), sparsity);
+        let sel = select_by_change(&scores, k);
+        let ids: Vec<u32> = sel.iter().map(|&i| ctx.shared[i]).collect();
+        let rows = ctx.trainer.get_entity_rows(&ids)?;
+
+        let hist = ctx.hist.as_mut().unwrap();
+        for (k2, &id) in ids.iter().enumerate() {
+            hist.set_row(id as usize, &rows[k2 * width..(k2 + 1) * width]);
+        }
+
+        let mut sign = vec![false; ctx.shared.len()];
+        for &i in &sel {
+            sign[i] = true;
+        }
+        let msg = Upload::Sparse { round, client: ctx.id, sign, emb: rows };
+        let frame = msg.encode();
+        acct.record(Direction::Upload, msg.params(), frame.len() as u64);
+        let Upload::Sparse { sign, emb, client, .. } = Upload::decode(&frame)? else {
+            unreachable!()
+        };
+        let ids: Vec<u32> = sign
+            .iter()
+            .enumerate()
+            .filter(|(_, &s)| s)
+            .map(|(i, _)| ctx.shared[i])
+            .collect();
+        server.receive(client, &ids, &emb);
+    }
+
+    // downstream
+    for ctx in clients.iter_mut() {
+        if ctx.shared.is_empty() {
+            continue;
+        }
+        let k = top_k_count(ctx.shared.len(), sparsity);
+        let (sign, rows, prio) = server.feds_download(ctx.id, k, server_rng);
+        let msg = Download::Sparse { round, sign, emb: rows, prio };
+        let frame = msg.encode();
+        acct.record(Direction::Download, msg.params(), frame.len() as u64);
+        let Download::Sparse { sign, emb, prio, .. } = Download::decode(&frame)? else {
+            unreachable!()
+        };
+
+        let ids: Vec<u32> = sign
+            .iter()
+            .enumerate()
+            .filter(|(_, &s)| s)
+            .map(|(i, _)| ctx.shared[i])
+            .collect();
+        if ids.is_empty() {
+            continue;
+        }
+        // Eq. 4: E^{t+1} = (A + E^t) / (1 + P)
+        let own = ctx.trainer.get_entity_rows(&ids)?;
+        let mut merged = vec![0.0f32; ids.len() * width];
+        for (j, _) in ids.iter().enumerate() {
+            let p = prio[j] as f32;
+            for w in 0..width {
+                merged[j * width + w] =
+                    (emb[j * width + w] + own[j * width + w]) / (1.0 + p);
+            }
+        }
+        ctx.trainer.set_entity_rows(&ids, &merged)?;
+    }
+    Ok(())
+}
+
+/// FedE-SVD / FedE-SVD+ exchange: rank-k factorized updates both ways
+/// against the client/server-agreed reference state.
+fn svd_round(
+    round: u32,
+    clients: &mut [ClientCtx],
+    server: &mut Server,
+    acct: &Accounting,
+    width: usize,
+    codec: &SvdCodec,
+) -> Result<()> {
+    server.begin_round();
+    for ctx in clients.iter_mut() {
+        if ctx.shared.is_empty() {
+            continue;
+        }
+        let refs = ctx.svd_ref.as_ref().unwrap();
+        let cur = ctx.trainer.get_entity_rows(&ctx.shared)?;
+        let mut updates = Vec::with_capacity(cur.len());
+        for (k, &id) in ctx.shared.iter().enumerate() {
+            updates.extend_from_slice(&crate::linalg::sub(
+                &cur[k * width..(k + 1) * width],
+                refs.row(id as usize),
+            ));
+        }
+        let packed = codec.encode_rows(&updates, width);
+        let msg = Upload::Full { round, client: ctx.id, emb: packed };
+        let frame = msg.encode();
+        acct.record(Direction::Upload, msg.params(), frame.len() as u64);
+        let Upload::Full { emb: packed, client, .. } = Upload::decode(&frame)? else {
+            unreachable!()
+        };
+        // server reconstructs the client's (approximate) state
+        let approx_updates = codec.decode_rows(&packed, width, ctx.shared.len());
+        let mut state = Vec::with_capacity(approx_updates.len());
+        for (k, &id) in ctx.shared.iter().enumerate() {
+            let mut row = refs.row(id as usize).to_vec();
+            crate::linalg::axpy(1.0, &approx_updates[k * width..(k + 1) * width], &mut row);
+            state.extend_from_slice(&row);
+        }
+        server.receive(client, &ctx.shared, &state);
+    }
+    for ctx in clients.iter_mut() {
+        if ctx.shared.is_empty() {
+            continue;
+        }
+        let agg = server.fede_download(ctx.id);
+        let refs = ctx.svd_ref.as_mut().unwrap();
+        let mut deltas = Vec::with_capacity(agg.len());
+        for (k, &id) in ctx.shared.iter().enumerate() {
+            deltas.extend_from_slice(&crate::linalg::sub(
+                &agg[k * width..(k + 1) * width],
+                refs.row(id as usize),
+            ));
+        }
+        let packed = codec.encode_rows(&deltas, width);
+        let msg = Download::Full { round, emb: packed };
+        let frame = msg.encode();
+        acct.record(Direction::Download, msg.params(), frame.len() as u64);
+        let Download::Full { emb: packed, .. } = Download::decode(&frame)? else {
+            unreachable!()
+        };
+        let approx = codec.decode_rows(&packed, width, ctx.shared.len());
+        let mut new_rows = Vec::with_capacity(approx.len());
+        for (k, &id) in ctx.shared.iter().enumerate() {
+            let mut row = refs.row(id as usize).to_vec();
+            crate::linalg::axpy(1.0, &approx[k * width..(k + 1) * width], &mut row);
+            refs.set_row(id as usize, &row);
+            new_rows.extend_from_slice(&row);
+        }
+        ctx.trainer.set_entity_rows(&ctx.shared, &new_rows)?;
+    }
+    Ok(())
+}

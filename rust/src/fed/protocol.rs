@@ -1,0 +1,201 @@
+//! Wire protocol between clients and the server.
+//!
+//! Two message kinds per direction (dense/full vs. sparsified), encoded via
+//! the byte-exact `comm::wire` codec.  Every message also reports its
+//! **paper-parameter count** (§III-F convention: each embedding float, each
+//! sign-vector element and each priority entry counts as one parameter),
+//! which is what Tables I/III/IV meter; the byte size of the encoded frame
+//! is metered separately by the transport/accounting layer.
+
+use anyhow::Result;
+
+use crate::comm::wire::{WireReader, WireWriter};
+
+/// client → server
+#[derive(Clone, Debug, PartialEq)]
+pub enum Upload {
+    /// All shared-entity embeddings (dense FedE round or FedS sync round).
+    Full { round: u32, client: u16, emb: Vec<f32> },
+    /// Entity-wise Top-K: sign bits over the client's shared list (in
+    /// sorted shared-id order) + the selected rows.
+    Sparse {
+        round: u32,
+        client: u16,
+        sign: Vec<bool>,
+        emb: Vec<f32>,
+    },
+}
+
+/// server → client
+#[derive(Clone, Debug, PartialEq)]
+pub enum Download {
+    /// Aggregated embeddings for every shared entity of the client.
+    Full { round: u32, emb: Vec<f32> },
+    /// Personalized Top-K: sign bits + aggregated rows + priority weights
+    /// (|C_{c,e}^t| per selected entity, same order as the rows).
+    Sparse {
+        round: u32,
+        sign: Vec<bool>,
+        emb: Vec<f32>,
+        prio: Vec<u32>,
+    },
+}
+
+const TAG_FULL: u8 = 0;
+const TAG_SPARSE: u8 = 1;
+
+impl Upload {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut w = WireWriter::new();
+        match self {
+            Upload::Full { round, client, emb } => {
+                w.u8(TAG_FULL).u32(*round).u16(*client).f32s(emb);
+            }
+            Upload::Sparse { round, client, sign, emb } => {
+                w.u8(TAG_SPARSE).u32(*round).u16(*client).bits(sign).f32s(emb);
+            }
+        }
+        w.finish()
+    }
+
+    pub fn decode(buf: &[u8]) -> Result<Upload> {
+        let mut r = WireReader::new(buf);
+        let tag = r.u8()?;
+        let round = r.u32()?;
+        let client = r.u16()?;
+        Ok(match tag {
+            TAG_FULL => Upload::Full { round, client, emb: r.f32s()? },
+            TAG_SPARSE => {
+                let sign = r.bits()?;
+                let emb = r.f32s()?;
+                Upload::Sparse { round, client, sign, emb }
+            }
+            t => anyhow::bail!("bad upload tag {t}"),
+        })
+    }
+
+    /// Paper-parameter count (§III-F).
+    pub fn params(&self) -> u64 {
+        match self {
+            Upload::Full { emb, .. } => emb.len() as u64,
+            Upload::Sparse { sign, emb, .. } => sign.len() as u64 + emb.len() as u64,
+        }
+    }
+}
+
+impl Download {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut w = WireWriter::new();
+        match self {
+            Download::Full { round, emb } => {
+                w.u8(TAG_FULL).u32(*round).f32s(emb);
+            }
+            Download::Sparse { round, sign, emb, prio } => {
+                w.u8(TAG_SPARSE).u32(*round).bits(sign).f32s(emb).u32s(prio);
+            }
+        }
+        w.finish()
+    }
+
+    pub fn decode(buf: &[u8]) -> Result<Download> {
+        let mut r = WireReader::new(buf);
+        let tag = r.u8()?;
+        let round = r.u32()?;
+        Ok(match tag {
+            TAG_FULL => Download::Full { round, emb: r.f32s()? },
+            TAG_SPARSE => {
+                let sign = r.bits()?;
+                let emb = r.f32s()?;
+                let prio = r.u32s()?;
+                Download::Sparse { round, sign, emb, prio }
+            }
+            t => anyhow::bail!("bad download tag {t}"),
+        })
+    }
+
+    pub fn params(&self) -> u64 {
+        match self {
+            Download::Full { emb, .. } => emb.len() as u64,
+            Download::Sparse { sign, emb, prio, .. } => {
+                sign.len() as u64 + emb.len() as u64 + prio.len() as u64
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn upload_roundtrip() {
+        let msgs = [
+            Upload::Full { round: 3, client: 1, emb: vec![1.0, -2.0, 0.5] },
+            Upload::Sparse {
+                round: 9,
+                client: 4,
+                sign: vec![true, false, true, true, false],
+                emb: vec![0.25; 8],
+            },
+        ];
+        for m in msgs {
+            assert_eq!(Upload::decode(&m.encode()).unwrap(), m);
+        }
+    }
+
+    #[test]
+    fn download_roundtrip() {
+        let msgs = [
+            Download::Full { round: 1, emb: vec![9.0; 4] },
+            Download::Sparse {
+                round: 2,
+                sign: vec![false, true],
+                emb: vec![1.0, 2.0],
+                prio: vec![3],
+            },
+        ];
+        for m in msgs {
+            assert_eq!(Download::decode(&m.encode()).unwrap(), m);
+        }
+    }
+
+    #[test]
+    fn paper_param_counts() {
+        // sparse upload: K·W emb + N_c sign
+        let up = Upload::Sparse {
+            round: 0,
+            client: 0,
+            sign: vec![true; 100],
+            emb: vec![0.0; 40 * 8],
+        };
+        assert_eq!(up.params(), 100 + 320);
+        // sparse download adds K priorities
+        let down = Download::Sparse {
+            round: 0,
+            sign: vec![true; 100],
+            emb: vec![0.0; 40 * 8],
+            prio: vec![1; 40],
+        };
+        assert_eq!(down.params(), 100 + 320 + 40);
+        // dense counts only embeddings
+        assert_eq!(Upload::Full { round: 0, client: 0, emb: vec![0.0; 64] }.params(), 64);
+    }
+
+    #[test]
+    fn sparse_bytes_smaller_than_params_suggest() {
+        // sign bits are bit-packed on the wire (paper counts them as f32)
+        let up = Upload::Sparse {
+            round: 0,
+            client: 0,
+            sign: vec![false; 800],
+            emb: vec![],
+        };
+        let bytes = up.encode().len();
+        assert!(bytes < 800 / 8 + 32, "bytes {bytes}");
+    }
+
+    #[test]
+    fn bad_tag_errors() {
+        assert!(Upload::decode(&[7, 0, 0, 0, 0, 0, 0]).is_err());
+    }
+}

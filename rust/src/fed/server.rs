@@ -1,0 +1,231 @@
+//! Server-side state: per-round upload accumulation, FedE-style dense
+//! aggregation, and FedS's personalized aggregation (Eq. 3) + priority
+//! computation (§III-D).
+//!
+//! Eq. 3: `A_{c,e}^t = Σ_{i ∈ C_{c,e}^t} E_{i,e}^t` where `C_{c,e}^t` is
+//! the set of clients **other than c** that uploaded entity e this round;
+//! the priority weight `P_{c,e}^t = |C_{c,e}^t|`.
+
+use std::collections::HashMap;
+
+use crate::util::rng::Rng;
+
+use super::topk::select_by_priority;
+
+pub struct Server {
+    pub num_entities: usize,
+    pub width: usize,
+    /// registered shared-entity lists (sorted global ids), per client
+    pub shared: Vec<Vec<u32>>,
+    /// Σ of all uploads this round, per entity (E × W)
+    sum: Vec<f32>,
+    /// number of uploaders this round, per entity
+    count: Vec<u32>,
+    /// this round's per-client uploads: id → row offset in `rows[c]`
+    uploaded: Vec<HashMap<u32, usize>>,
+    rows: Vec<Vec<f32>>,
+}
+
+impl Server {
+    pub fn new(num_entities: usize, width: usize, shared: Vec<Vec<u32>>) -> Self {
+        let n_clients = shared.len();
+        Self {
+            num_entities,
+            width,
+            shared,
+            sum: vec![0.0; num_entities * width],
+            count: vec![0; num_entities],
+            uploaded: vec![HashMap::new(); n_clients],
+            rows: vec![Vec::new(); n_clients],
+        }
+    }
+
+    pub fn n_clients(&self) -> usize {
+        self.shared.len()
+    }
+
+    /// Clear per-round accumulation state.
+    pub fn begin_round(&mut self) {
+        self.sum.iter_mut().for_each(|x| *x = 0.0);
+        self.count.iter_mut().for_each(|x| *x = 0);
+        for m in &mut self.uploaded {
+            m.clear();
+        }
+        for r in &mut self.rows {
+            r.clear();
+        }
+    }
+
+    /// Accept a client's upload: `ids` (global) with concatenated `rows`.
+    pub fn receive(&mut self, client: u16, ids: &[u32], rows: &[f32]) {
+        let w = self.width;
+        assert_eq!(rows.len(), ids.len() * w, "upload size mismatch");
+        let c = client as usize;
+        for (k, &id) in ids.iter().enumerate() {
+            let e = id as usize;
+            let row = &rows[k * w..(k + 1) * w];
+            for (j, &v) in row.iter().enumerate() {
+                self.sum[e * w + j] += v;
+            }
+            self.count[e] += 1;
+            self.uploaded[c].insert(id, self.rows[c].len());
+            self.rows[c].extend_from_slice(row);
+        }
+    }
+
+    /// Dense FedE aggregation for client `c`: the average over ALL
+    /// uploaders of each of c's shared entities (c included).  Entities
+    /// nobody uploaded keep... that cannot happen on dense rounds (every
+    /// owner uploads); they fall back to zero-count guard anyway.
+    pub fn fede_download(&self, c: u16) -> Vec<f32> {
+        let w = self.width;
+        let ids = &self.shared[c as usize];
+        let mut out = vec![0.0f32; ids.len() * w];
+        for (k, &id) in ids.iter().enumerate() {
+            let e = id as usize;
+            let n = self.count[e].max(1) as f32;
+            for j in 0..w {
+                out[k * w + j] = self.sum[e * w + j] / n;
+            }
+        }
+        out
+    }
+
+    /// FedS personalized aggregation + Top-K for client `c` (§III-D).
+    ///
+    /// Returns `(sign, rows, prio)`: `sign[i]` marks the i-th entity of
+    /// c's shared list as selected; `rows` holds the aggregated SUMS
+    /// (Eq. 3, own contribution excluded) of the selected entities in
+    /// shared-list order; `prio[i]` the matching |C_{c,e}|.
+    pub fn feds_download(
+        &self,
+        c: u16,
+        k: usize,
+        rng: &mut Rng,
+    ) -> (Vec<bool>, Vec<f32>, Vec<u32>) {
+        let w = self.width;
+        let ci = c as usize;
+        let ids = &self.shared[ci];
+
+        // personalized priorities: exclude c's own upload
+        let prios: Vec<u32> = ids
+            .iter()
+            .map(|&id| {
+                let own = u32::from(self.uploaded[ci].contains_key(&id));
+                self.count[id as usize] - own
+            })
+            .collect();
+
+        let sel = select_by_priority(&prios, k, rng);
+        let mut selected = vec![false; ids.len()];
+        for &i in &sel {
+            selected[i] = true;
+        }
+
+        let mut rows = Vec::with_capacity(sel.len() * w);
+        let mut prio_out = Vec::with_capacity(sel.len());
+        for (i, &id) in ids.iter().enumerate() {
+            if !selected[i] {
+                continue;
+            }
+            let e = id as usize;
+            let mut row: Vec<f32> = self.sum[e * w..(e + 1) * w].to_vec();
+            if let Some(&off) = self.uploaded[ci].get(&id) {
+                let own = &self.rows[ci][off..off + w];
+                for j in 0..w {
+                    row[j] -= own[j];
+                }
+            }
+            rows.extend_from_slice(&row);
+            prio_out.push(prios[i]);
+        }
+        (selected, rows, prio_out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn server2() -> Server {
+        // 2 clients, entities {0,1,2} shared by both; width 2
+        Server::new(4, 2, vec![vec![0, 1, 2], vec![0, 1, 2]])
+    }
+
+    #[test]
+    fn dense_aggregation_averages() {
+        let mut s = server2();
+        s.begin_round();
+        s.receive(0, &[0, 1, 2], &[1.0, 1.0, 2.0, 2.0, 3.0, 3.0]);
+        s.receive(1, &[0, 1, 2], &[3.0, 3.0, 4.0, 4.0, 5.0, 5.0]);
+        let d = s.fede_download(0);
+        assert_eq!(d, vec![2.0, 2.0, 3.0, 3.0, 4.0, 4.0]);
+    }
+
+    #[test]
+    fn personalized_agg_excludes_own_contribution() {
+        let mut s = server2();
+        s.begin_round();
+        s.receive(0, &[0], &[10.0, 10.0]);
+        s.receive(1, &[0, 1], &[1.0, 2.0, 3.0, 4.0]);
+        let mut rng = Rng::new(1);
+        let (sign, rows, prio) = s.feds_download(0, 3, &mut rng);
+        // entity 0: uploaded by both → A for client 0 excludes its own 10s
+        // entity 1: uploaded by client 1 only
+        // entity 2: nobody → unavailable
+        assert_eq!(sign, vec![true, true, false]);
+        assert_eq!(rows, vec![1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(prio, vec![1, 1]);
+    }
+
+    #[test]
+    fn priority_counts_other_uploaders() {
+        let mut s = Server::new(4, 1, vec![vec![0], vec![0], vec![0]]);
+        s.begin_round();
+        s.receive(0, &[0], &[1.0]);
+        s.receive(1, &[0], &[2.0]);
+        s.receive(2, &[0], &[4.0]);
+        let mut rng = Rng::new(1);
+        let (sign, rows, prio) = s.feds_download(0, 1, &mut rng);
+        assert_eq!(sign, vec![true]);
+        assert_eq!(rows, vec![6.0]); // 2 + 4, own 1 excluded
+        assert_eq!(prio, vec![2]);
+    }
+
+    #[test]
+    fn fewer_available_than_k_sends_all() {
+        let mut s = server2();
+        s.begin_round();
+        s.receive(1, &[2], &[7.0, 8.0]);
+        let mut rng = Rng::new(1);
+        let (sign, rows, prio) = s.feds_download(0, 3, &mut rng);
+        assert_eq!(sign, vec![false, false, true]);
+        assert_eq!(rows, vec![7.0, 8.0]);
+        assert_eq!(prio, vec![1]);
+    }
+
+    #[test]
+    fn begin_round_resets() {
+        let mut s = server2();
+        s.begin_round();
+        s.receive(0, &[0], &[1.0, 1.0]);
+        s.begin_round();
+        let mut rng = Rng::new(1);
+        let (sign, rows, _) = s.feds_download(1, 3, &mut rng);
+        assert!(sign.iter().all(|&b| !b));
+        assert!(rows.is_empty());
+    }
+
+    #[test]
+    fn k_limits_selection_by_priority() {
+        let mut s = Server::new(4, 1, vec![vec![0, 1, 2, 3], vec![0, 1, 2, 3], vec![0, 1]]);
+        s.begin_round();
+        s.receive(1, &[0, 1, 2, 3], &[1.0, 1.0, 1.0, 1.0]);
+        s.receive(2, &[0, 1], &[2.0, 2.0]);
+        let mut rng = Rng::new(3);
+        let (sign, _, prio) = s.feds_download(0, 2, &mut rng);
+        // entities 0,1 have priority 2; entities 2,3 priority 1 → top-2 = {0,1}
+        assert_eq!(sign, vec![true, true, false, false]);
+        assert_eq!(prio, vec![2, 2]);
+    }
+}

@@ -1,0 +1,90 @@
+//! Intermittent Synchronization Mechanism (§III-E).
+//!
+//! Every `interval` rounds since the last synchronization, clients and the
+//! server exchange ALL parameters (a dense FedE-style round), re-aligning
+//! the embeddings of shared entities across clients and bounding the drift
+//! that personalized sparse updates accumulate.
+
+#[derive(Clone, Debug)]
+pub struct SyncSchedule {
+    /// `None` disables synchronization entirely (the FedS/syn ablation).
+    pub interval: Option<usize>,
+    last_sync: usize,
+}
+
+impl SyncSchedule {
+    pub fn new(interval: Option<usize>) -> Self {
+        assert!(interval != Some(0), "sync interval must be >= 1");
+        Self { interval, last_sync: 0 }
+    }
+
+    /// Should round `round` (1-based) be a full synchronization round?
+    /// "clients and server check if the difference between the current
+    /// round and the last synchronization round matches a predefined
+    /// interval" (§III-E).
+    pub fn is_sync(&self, round: usize) -> bool {
+        match self.interval {
+            None => false,
+            Some(s) => round - self.last_sync >= s + 1,
+        }
+    }
+
+    /// Record that a synchronization happened at `round`.
+    pub fn mark(&mut self, round: usize) {
+        self.last_sync = round;
+    }
+
+    /// Convenience: check-and-mark in one step.
+    pub fn step(&mut self, round: usize) -> bool {
+        if self.is_sync(round) {
+            self.mark(round);
+            true
+        } else {
+            false
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn interval_s_means_s_sparse_rounds_between_syncs() {
+        // s = 4 → "there are s communication rounds between two consecutive
+        // synchronization operations (exclusive)" (§III-F)
+        let mut sched = SyncSchedule::new(Some(4));
+        let flags: Vec<bool> = (1..=11).map(|r| sched.step(r)).collect();
+        assert_eq!(
+            flags,
+            vec![false, false, false, false, true, false, false, false, false, true, false]
+        );
+    }
+
+    #[test]
+    fn cycle_length_matches_eq5() {
+        // a cycle = s sparse rounds + 1 sync round = s + 1 rounds (Eq. 5's
+        // denominator)
+        let mut sched = SyncSchedule::new(Some(3));
+        let mut syncs = 0;
+        for r in 1..=40 {
+            if sched.step(r) {
+                syncs += 1;
+            }
+        }
+        assert_eq!(syncs, 10); // 40 / (3 + 1)
+    }
+
+    #[test]
+    fn none_never_syncs() {
+        let mut sched = SyncSchedule::new(None);
+        assert!((1..=100).all(|r| !sched.step(r)));
+    }
+
+    #[test]
+    fn interval_one_alternates() {
+        let mut sched = SyncSchedule::new(Some(1));
+        let flags: Vec<bool> = (1..=6).map(|r| sched.step(r)).collect();
+        assert_eq!(flags, vec![false, true, false, true, false, true]);
+    }
+}

@@ -1,0 +1,157 @@
+//! Entity-Wise Top-K selection — the paper's core mechanism.
+//!
+//! Upstream (§III-C): clients rank their shared entities by embedding
+//! change (Eq. 1, `1 − cos(E^t, E^h)`) and upload the K with the greatest
+//! change, `K = N_c × p` (Eq. 2).
+//!
+//! Downstream (§III-D): the server ranks each client's aggregated entities
+//! by **priority weight** (the number of other clients that uploaded the
+//! entity this round) and sends the Top-K, breaking equal-priority ties
+//! randomly.  Entities nobody uploaded are not available; if fewer than K
+//! are available, all available are sent.
+
+use crate::util::rng::Rng;
+
+/// Eq. 2: K = N_c × p (floor, at least 1 when N_c > 0 and p > 0).
+pub fn top_k_count(n_shared: usize, sparsity: f64) -> usize {
+    if n_shared == 0 || sparsity <= 0.0 {
+        return 0;
+    }
+    ((n_shared as f64 * sparsity) as usize).max(1).min(n_shared)
+}
+
+/// Upstream selection: indices (into the shared list) of the K largest
+/// change scores, descending.  Deterministic: ties broken by lower index.
+pub fn select_by_change(scores: &[f32], k: usize) -> Vec<usize> {
+    let k = k.min(scores.len());
+    let mut idx: Vec<usize> = (0..scores.len()).collect();
+    // partial selection: full sort is fine at N_c ≤ tens of thousands, but
+    // select_nth keeps the hot path O(n)
+    if k < idx.len() {
+        idx.select_nth_unstable_by(k, |&a, &b| {
+            scores[b].partial_cmp(&scores[a]).unwrap_or(std::cmp::Ordering::Equal)
+                .then(a.cmp(&b))
+        });
+        idx.truncate(k);
+    }
+    idx.sort_unstable_by(|&a, &b| {
+        scores[b].partial_cmp(&scores[a]).unwrap_or(std::cmp::Ordering::Equal)
+            .then(a.cmp(&b))
+    });
+    idx
+}
+
+/// Downstream selection: indices of available entities (priority > 0),
+/// ranked by priority descending, equal-priority ties shuffled randomly
+/// (§III-D "a random strategy is employed").  Returns at most `k`.
+pub fn select_by_priority(priorities: &[u32], k: usize, rng: &mut Rng) -> Vec<usize> {
+    let mut avail: Vec<usize> = (0..priorities.len()).filter(|&i| priorities[i] > 0).collect();
+    // shuffle first so that the stable sort's tie order is random
+    if avail.len() > k {
+        rng.shuffle(&mut avail);
+    }
+    avail.sort_by(|&a, &b| priorities[b].cmp(&priorities[a]));
+    avail.truncate(k);
+    avail
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::check;
+
+    #[test]
+    fn k_formula() {
+        assert_eq!(top_k_count(100, 0.4), 40);
+        assert_eq!(top_k_count(99, 0.4), 39);
+        assert_eq!(top_k_count(3, 0.1), 1); // at least one
+        assert_eq!(top_k_count(0, 0.4), 0);
+        assert_eq!(top_k_count(10, 0.0), 0);
+        assert_eq!(top_k_count(10, 1.0), 10);
+    }
+
+    #[test]
+    fn change_selection_picks_largest() {
+        let scores = [0.1, 0.9, 0.3, 0.7, 0.0];
+        assert_eq!(select_by_change(&scores, 2), vec![1, 3]);
+        assert_eq!(select_by_change(&scores, 5), vec![1, 3, 2, 0, 4]);
+        assert_eq!(select_by_change(&scores, 9), vec![1, 3, 2, 0, 4]);
+    }
+
+    #[test]
+    fn change_selection_property() {
+        check("topk_change", 30, |rng| {
+            let n = 1 + rng.usize_below(200);
+            let k = rng.usize_below(n + 4);
+            let scores: Vec<f32> = (0..n).map(|_| rng.uniform(0.0, 2.0)).collect();
+            let sel = select_by_change(&scores, k);
+            assert_eq!(sel.len(), k.min(n));
+            // every selected ≥ every unselected
+            let min_sel = sel.iter().map(|&i| scores[i]).fold(f32::INFINITY, f32::min);
+            for i in 0..n {
+                if !sel.contains(&i) {
+                    assert!(scores[i] <= min_sel + 1e-6);
+                }
+            }
+            // no duplicates
+            let mut s = sel.clone();
+            s.sort_unstable();
+            s.dedup();
+            assert_eq!(s.len(), sel.len());
+        });
+    }
+
+    #[test]
+    fn priority_selection_excludes_unavailable() {
+        let mut rng = Rng::new(1);
+        let prio = [0u32, 3, 0, 1, 2];
+        let sel = select_by_priority(&prio, 10, &mut rng);
+        let mut s = sel.clone();
+        s.sort_unstable();
+        assert_eq!(s, vec![1, 3, 4]); // all available, fewer than k
+    }
+
+    #[test]
+    fn priority_selection_ranks_by_count() {
+        let mut rng = Rng::new(2);
+        let prio = [1u32, 5, 2, 4, 3];
+        let sel = select_by_priority(&prio, 2, &mut rng);
+        assert_eq!(sel, vec![1, 3]);
+    }
+
+    #[test]
+    fn priority_ties_are_random_but_valid() {
+        let prio = vec![2u32; 10];
+        let mut seen = std::collections::HashSet::new();
+        for seed in 0..20 {
+            let mut rng = Rng::new(seed);
+            let sel = select_by_priority(&prio, 3, &mut rng);
+            assert_eq!(sel.len(), 3);
+            seen.insert(sel);
+        }
+        // across seeds the random tie-break must produce variety
+        assert!(seen.len() > 3, "tie-break not random: {} variants", seen.len());
+    }
+
+    #[test]
+    fn priority_property() {
+        check("topk_priority", 30, |rng| {
+            let n = 1 + rng.usize_below(100);
+            let k = rng.usize_below(n + 3);
+            let prio: Vec<u32> = (0..n).map(|_| rng.u32_below(4)).collect();
+            let sel = select_by_priority(&prio, k, rng);
+            assert!(sel.len() <= k);
+            assert!(sel.iter().all(|&i| prio[i] > 0));
+            let avail = prio.iter().filter(|&&p| p > 0).count();
+            assert_eq!(sel.len(), k.min(avail));
+            if !sel.is_empty() {
+                let min_sel = sel.iter().map(|&i| prio[i]).min().unwrap();
+                for i in 0..n {
+                    if prio[i] > 0 && !sel.contains(&i) {
+                        assert!(prio[i] <= min_sel);
+                    }
+                }
+            }
+        });
+    }
+}

@@ -1,0 +1,218 @@
+//! Knowledge-graph embedding methods: shared definitions plus a pure-Rust
+//! reference implementation (`native`).
+//!
+//! The production path executes the AOT-compiled JAX/Pallas artifacts via
+//! `crate::runtime`; the native implementation exists to (a) cross-check the
+//! artifact numerics step-for-step, (b) run artifact-free unit/property
+//! tests of the federated protocols, and (c) host the SVD+ baseline's
+//! low-rank-constrained local training (Appendix VI-B).
+
+pub mod native;
+
+use crate::util::rng::Rng;
+
+/// The three KGE methods from the paper's experiments (§IV-B).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Method {
+    TransE,
+    RotatE,
+    ComplEx,
+}
+
+impl Method {
+    pub const ALL: [Method; 3] = [Method::TransE, Method::RotatE, Method::ComplEx];
+
+    pub fn parse(s: &str) -> anyhow::Result<Method> {
+        match s.to_ascii_lowercase().as_str() {
+            "transe" => Ok(Method::TransE),
+            "rotate" => Ok(Method::RotatE),
+            "complex" => Ok(Method::ComplEx),
+            other => anyhow::bail!("unknown KGE method '{other}' (transe|rotate|complex)"),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Method::TransE => "transe",
+            Method::RotatE => "rotate",
+            Method::ComplEx => "complex",
+        }
+    }
+
+    /// Entity-table row width at base dimension `dim` (complex methods store
+    /// re‖im concatenated).
+    pub fn entity_width(&self, dim: usize) -> usize {
+        match self {
+            Method::TransE => dim,
+            Method::RotatE | Method::ComplEx => 2 * dim,
+        }
+    }
+
+    pub fn relation_width(&self, dim: usize) -> usize {
+        match self {
+            Method::TransE | Method::RotatE => dim,
+            Method::ComplEx => 2 * dim,
+        }
+    }
+
+    /// Distance methods rank lower-is-better; their logits are γ − dist.
+    pub fn is_distance(&self) -> bool {
+        matches!(self, Method::TransE | Method::RotatE)
+    }
+}
+
+/// Hyper-parameters (mirror of `python/compile/config.py`; the runtime
+/// asserts the manifest agrees with these at load time).
+#[derive(Clone, Debug)]
+pub struct Hyper {
+    pub dim: usize,
+    pub gamma: f32,
+    pub epsilon: f32,
+    pub adv_temperature: f32,
+    pub learning_rate: f32,
+    pub adam_beta1: f32,
+    pub adam_beta2: f32,
+    pub adam_eps: f32,
+    pub complex_reg: f32,
+}
+
+impl Default for Hyper {
+    fn default() -> Self {
+        Self {
+            dim: 64,
+            gamma: 8.0,
+            epsilon: 2.0,
+            adv_temperature: 1.0,
+            learning_rate: 1e-3,
+            adam_beta1: 0.9,
+            adam_beta2: 0.999,
+            adam_eps: 1e-8,
+            complex_reg: 1e-5,
+        }
+    }
+}
+
+impl Hyper {
+    pub fn embedding_range(&self) -> f32 {
+        (self.gamma + self.epsilon) / self.dim as f32
+    }
+}
+
+/// A dense row-major embedding table.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Table {
+    pub rows: usize,
+    pub width: usize,
+    pub data: Vec<f32>,
+}
+
+impl Table {
+    pub fn zeros(rows: usize, width: usize) -> Self {
+        Self { rows, width, data: vec![0.0; rows * width] }
+    }
+
+    /// Uniform init in ±(γ+ε)/D, the RotatE-lineage convention used by FedE.
+    pub fn init_uniform(rows: usize, width: usize, range: f32, rng: &mut Rng) -> Self {
+        let data = (0..rows * width).map(|_| rng.uniform(-range, range)).collect();
+        Self { rows, width, data }
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.data[i * self.width..(i + 1) * self.width]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        &mut self.data[i * self.width..(i + 1) * self.width]
+    }
+
+    pub fn set_row(&mut self, i: usize, v: &[f32]) {
+        self.row_mut(i).copy_from_slice(v);
+    }
+}
+
+/// Dense Adam state for one table (torch semantics, matching the artifact).
+#[derive(Clone, Debug)]
+pub struct Adam {
+    pub m: Vec<f32>,
+    pub v: Vec<f32>,
+}
+
+impl Adam {
+    pub fn new(len: usize) -> Self {
+        Self { m: vec![0.0; len], v: vec![0.0; len] }
+    }
+
+    /// One dense update. `step` is 1-based.
+    pub fn update(&mut self, p: &mut [f32], g: &[f32], step: u64, h: &Hyper) {
+        let b1 = h.adam_beta1;
+        let b2 = h.adam_beta2;
+        let bc1 = 1.0 - b1.powi(step as i32);
+        let bc2 = 1.0 - b2.powi(step as i32);
+        for i in 0..p.len() {
+            self.m[i] = b1 * self.m[i] + (1.0 - b1) * g[i];
+            self.v[i] = b2 * self.v[i] + (1.0 - b2) * g[i] * g[i];
+            let mh = self.m[i] / bc1;
+            let vh = self.v[i] / bc2;
+            p[i] -= h.learning_rate * mh / (vh.sqrt() + h.adam_eps);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn widths() {
+        assert_eq!(Method::TransE.entity_width(64), 64);
+        assert_eq!(Method::RotatE.entity_width(64), 128);
+        assert_eq!(Method::RotatE.relation_width(64), 64);
+        assert_eq!(Method::ComplEx.relation_width(64), 128);
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        for m in Method::ALL {
+            assert_eq!(Method::parse(m.name()).unwrap(), m);
+        }
+        assert!(Method::parse("nope").is_err());
+    }
+
+    #[test]
+    fn table_init_in_range() {
+        let mut rng = Rng::new(1);
+        let t = Table::init_uniform(10, 8, 0.5, &mut rng);
+        assert!(t.data.iter().all(|&x| (-0.5..0.5).contains(&x)));
+        assert_eq!(t.row(3).len(), 8);
+    }
+
+    #[test]
+    fn adam_first_step_is_signed_lr() {
+        let h = Hyper::default();
+        let mut a = Adam::new(4);
+        let mut p = vec![0.0f32; 4];
+        let g = vec![0.5f32, -0.5, 2.0, -2.0];
+        a.update(&mut p, &g, 1, &h);
+        for (x, gi) in p.iter().zip(&g) {
+            let want = -h.learning_rate * gi.signum();
+            assert!((x - want).abs() < 1e-4, "{x} vs {want}");
+        }
+    }
+
+    #[test]
+    fn adam_zero_grad_keeps_param_with_zero_moments() {
+        let h = Hyper::default();
+        let mut a = Adam::new(2);
+        let mut p = vec![1.0f32, -1.0];
+        a.update(&mut p, &[0.0, 0.0], 1, &h);
+        assert_eq!(p, vec![1.0, -1.0]);
+    }
+
+    #[test]
+    fn embedding_range_matches_python() {
+        let h = Hyper::default();
+        assert!((h.embedding_range() - 10.0 / 64.0).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,644 @@
+//! Pure-Rust reference implementation of the KGE local-training step and
+//! evaluation scoring — the oracle mirror of `python/compile/model.py`.
+//!
+//! Identical math to the lowered artifact: query composition per method,
+//! self-adversarial negative-sampling loss, dense Adam.  An integration
+//! test (`rust/tests/xla_parity.rs`) checks native-vs-artifact agreement
+//! step-for-step at 1e-3 tolerance.
+
+use crate::data::dataset::{Batch, EvalBatch};
+use crate::util::rng::Rng;
+
+use super::{Adam, Hyper, Method, Table};
+
+const MOD_EPS: f32 = 1e-12;
+
+/// Full native model state for one client (entity + relation tables + Adam).
+#[derive(Clone, Debug)]
+pub struct NativeModel {
+    pub method: Method,
+    pub hyper: Hyper,
+    pub ent: Table,
+    pub rel: Table,
+    pub ent_adam: Adam,
+    pub rel_adam: Adam,
+    pub step: u64,
+    // scratch gradient buffers (dense, reused across steps)
+    g_ent: Vec<f32>,
+    g_rel: Vec<f32>,
+}
+
+impl NativeModel {
+    pub fn new(
+        method: Method,
+        hyper: Hyper,
+        num_entities: usize,
+        num_relations: usize,
+        rng: &mut Rng,
+    ) -> Self {
+        let we = method.entity_width(hyper.dim);
+        let wr = method.relation_width(hyper.dim);
+        let range = hyper.embedding_range();
+        let ent = Table::init_uniform(num_entities, we, range, rng);
+        let rel = Table::init_uniform(num_relations, wr, range, rng);
+        let ent_adam = Adam::new(ent.data.len());
+        let rel_adam = Adam::new(rel.data.len());
+        let g_ent = vec![0.0; ent.data.len()];
+        let g_rel = vec![0.0; rel.data.len()];
+        Self { method, hyper, ent, rel, ent_adam, rel_adam, step: 0, g_ent, g_rel }
+    }
+
+    /// One training step on a padded batch; returns the loss.
+    pub fn train_batch(&mut self, batch: &Batch) -> f32 {
+        self.g_ent.iter_mut().for_each(|g| *g = 0.0);
+        self.g_rel.iter_mut().for_each(|g| *g = 0.0);
+        let loss = self.accumulate_grads(batch);
+        self.step += 1;
+        self.ent_adam
+            .update(&mut self.ent.data, &self.g_ent, self.step, &self.hyper);
+        self.rel_adam
+            .update(&mut self.rel.data, &self.g_rel, self.step, &self.hyper);
+        loss
+    }
+
+    /// Loss + gradient accumulation into the dense scratch buffers.
+    fn accumulate_grads(&mut self, batch: &Batch) -> f32 {
+        let b = batch.batch_size;
+        let n = batch.negatives;
+        let we = self.ent.width;
+        let h = self.hyper.clone();
+        let denom: f32 = batch.mask.iter().sum::<f32>().max(1.0);
+        let mut total = 0.0f32;
+
+        let mut q = vec![0.0f32; we];
+        let mut dq = vec![0.0f32; we];
+        let mut logits = vec![0.0f32; n];
+        let mut dlogits = vec![0.0f32; n];
+
+        for i in 0..b {
+            let (hid, rid, tid) = (
+                batch.pos[i * 3] as usize,
+                batch.pos[i * 3 + 1] as usize,
+                batch.pos[i * 3 + 2] as usize,
+            );
+            let corrupt_head = batch.neg_is_head[i] > 0.5;
+            let weight = batch.mask[i] / denom;
+
+            // ComplEx regularizer includes padded rows (matches the artifact,
+            // which regularises every gathered row unmasked).
+            if self.method == Method::ComplEx {
+                total += self.complex_reg_and_grads(i, batch);
+            }
+            if weight == 0.0 {
+                continue;
+            }
+
+            let src_id = if corrupt_head { tid } else { hid };
+            let true_id = if corrupt_head { hid } else { tid };
+
+            // forward: query
+            compose(
+                self.method,
+                self.ent.row(src_id),
+                self.rel.row(rid),
+                corrupt_head,
+                &h,
+                &mut q,
+            );
+
+            // forward: logits
+            let pos_logit = self.logit(&q, self.ent.row(true_id));
+            for j in 0..n {
+                let cid = batch.neg[i * n + j] as usize;
+                logits[j] = self.logit(&q, self.ent.row(cid));
+            }
+
+            // self-adversarial weights (detached)
+            let mx = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            let mut z = 0.0f32;
+            for j in 0..n {
+                dlogits[j] = ((logits[j] - mx) * h.adv_temperature).exp();
+                z += dlogits[j];
+            }
+            for p in dlogits.iter_mut() {
+                *p /= z; // now holds softmax probs
+            }
+
+            // loss
+            let l_pos = softplus(-pos_logit);
+            let mut l_neg = 0.0f32;
+            for j in 0..n {
+                l_neg += dlogits[j] * softplus(logits[j]);
+            }
+            total += 0.5 * (l_pos + l_neg) * weight;
+
+            // backward through logits:
+            //   dL/dpos = -0.5 σ(-pos) w ; dL/dneg_j = 0.5 p_j σ(neg_j) w
+            let dpos = -0.5 * sigmoid(-pos_logit) * weight;
+            for j in 0..n {
+                dlogits[j] = 0.5 * dlogits[j] * sigmoid(logits[j]) * weight;
+            }
+
+            // backward through scores into q and candidate rows
+            dq.iter_mut().for_each(|x| *x = 0.0);
+            self.backward_candidate(&q, true_id, dpos, &mut dq);
+            for j in 0..n {
+                let cid = batch.neg[i * n + j] as usize;
+                self.backward_candidate(&q, cid, dlogits[j], &mut dq);
+            }
+
+            // backward through compose into src entity + relation rows
+            self.backward_compose(src_id, rid, corrupt_head, &q, &dq);
+        }
+        total
+    }
+
+    /// logit(q, cand) = γ − dist (TransE/RotatE) or dot (ComplEx)
+    fn logit(&self, q: &[f32], cand: &[f32]) -> f32 {
+        match self.method {
+            Method::TransE => {
+                let mut d = 0.0;
+                for k in 0..q.len() {
+                    d += (q[k] - cand[k]).abs();
+                }
+                self.hyper.gamma - d
+            }
+            Method::RotatE => {
+                let dh = q.len() / 2;
+                let mut d = 0.0;
+                for k in 0..dh {
+                    let dre = q[k] - cand[k];
+                    let dim = q[dh + k] - cand[dh + k];
+                    d += (dre * dre + dim * dim + MOD_EPS).sqrt();
+                }
+                self.hyper.gamma - d
+            }
+            Method::ComplEx => crate::linalg::dot(q, cand),
+        }
+    }
+
+    /// d logit/d q and d logit/d cand, scaled by `g`, accumulated into `dq`
+    /// and the candidate's dense gradient row.
+    fn backward_candidate(&mut self, q: &[f32], cand_id: usize, g: f32, dq: &mut [f32]) {
+        let we = self.ent.width;
+        let cand = &self.ent.data[cand_id * we..(cand_id + 1) * we];
+        let gc = &mut self.g_ent[cand_id * we..(cand_id + 1) * we];
+        match self.method {
+            Method::TransE => {
+                // logit = γ − Σ|q−c| → dlogit/dq = −sign(q−c)
+                for k in 0..we {
+                    let s = (q[k] - cand[k]).signum();
+                    dq[k] += -g * s;
+                    gc[k] += g * s;
+                }
+            }
+            Method::RotatE => {
+                let dh = we / 2;
+                for k in 0..dh {
+                    let dre = q[k] - cand[k];
+                    let dim = q[dh + k] - cand[dh + k];
+                    let m = (dre * dre + dim * dim + MOD_EPS).sqrt();
+                    let (ure, uim) = (dre / m, dim / m);
+                    dq[k] += -g * ure;
+                    dq[dh + k] += -g * uim;
+                    gc[k] += g * ure;
+                    gc[dh + k] += g * uim;
+                }
+            }
+            Method::ComplEx => {
+                for k in 0..we {
+                    dq[k] += g * cand[k];
+                    gc[k] += g * q[k];
+                }
+            }
+        }
+    }
+
+    /// Backprop the query gradient into the source-entity and relation rows.
+    fn backward_compose(
+        &mut self,
+        src_id: usize,
+        rel_id: usize,
+        corrupt_head: bool,
+        q: &[f32],
+        dq: &[f32],
+    ) {
+        let we = self.ent.width;
+        let wr = self.rel.width;
+        let src = self.ent.data[src_id * we..(src_id + 1) * we].to_vec();
+        let rel = self.rel.data[rel_id * wr..(rel_id + 1) * wr].to_vec();
+        let emb_range = self.hyper.embedding_range();
+        let gsrc = &mut self.g_ent[src_id * we..(src_id + 1) * we];
+        let grel = &mut self.g_rel[rel_id * wr..(rel_id + 1) * wr];
+        match self.method {
+            Method::TransE => {
+                // q = src ± r
+                let sign = if corrupt_head { -1.0 } else { 1.0 };
+                for k in 0..we {
+                    gsrc[k] += dq[k];
+                    grel[k] += sign * dq[k];
+                }
+            }
+            Method::RotatE => {
+                let dh = we / 2;
+                let scale = std::f32::consts::PI / emb_range;
+                let sign = if corrupt_head { -1.0 } else { 1.0 };
+                for k in 0..dh {
+                    let theta = rel[k] * scale * sign;
+                    let (c, s) = (theta.cos(), theta.sin());
+                    // q_re = sre·c − sim·s ; q_im = sre·s + sim·c
+                    gsrc[k] += dq[k] * c + dq[dh + k] * s;
+                    gsrc[dh + k] += -dq[k] * s + dq[dh + k] * c;
+                    // dq/dθ' = (−q_im, q_re); θ' = sign·θ; θ = raw·π/range
+                    let dtheta = -dq[k] * q[dh + k] + dq[dh + k] * q[k];
+                    grel[k] += dtheta * sign * scale;
+                }
+            }
+            Method::ComplEx => {
+                let dh = we / 2;
+                let (sre, sim) = src.split_at(dh);
+                let (rre, rim) = rel.split_at(dh);
+                if !corrupt_head {
+                    // tail query: q = s∘r
+                    for k in 0..dh {
+                        gsrc[k] += dq[k] * rre[k] + dq[dh + k] * rim[k];
+                        gsrc[dh + k] += -dq[k] * rim[k] + dq[dh + k] * rre[k];
+                        grel[k] += dq[k] * sre[k] + dq[dh + k] * sim[k];
+                        grel[dh + k] += -dq[k] * sim[k] + dq[dh + k] * sre[k];
+                    }
+                } else {
+                    // head query: q_re = rre·sre + rim·sim ; q_im = rre·sim − rim·sre
+                    for k in 0..dh {
+                        gsrc[k] += dq[k] * rre[k] - dq[dh + k] * rim[k];
+                        gsrc[dh + k] += dq[k] * rim[k] + dq[dh + k] * rre[k];
+                        grel[k] += dq[k] * sre[k] + dq[dh + k] * sim[k];
+                        grel[dh + k] += dq[k] * sim[k] - dq[dh + k] * sre[k];
+                    }
+                }
+            }
+        }
+    }
+
+    /// ComplEx L2 regularizer for row i of the batch (matches the artifact:
+    /// mean over each gathered tensor, applied every row incl. padding).
+    fn complex_reg_and_grads(&mut self, i: usize, batch: &Batch) -> f32 {
+        let we = self.ent.width;
+        let wr = self.rel.width;
+        let b = batch.batch_size;
+        let n = batch.negatives;
+        let lam = self.hyper.complex_reg;
+        let mut reg = 0.0f32;
+        // h, t: mean over (B, We); r over (B, Wr); cand over (B, N, We)
+        let ids = [
+            (batch.pos[i * 3] as usize, b * we, true),
+            (batch.pos[i * 3 + 2] as usize, b * we, true),
+        ];
+        for (id, numel, is_ent) in ids {
+            let row = if is_ent { self.ent.row(id) } else { self.rel.row(id) };
+            let ss: f32 = row.iter().map(|x| x * x).sum();
+            reg += lam * ss / numel as f32;
+            let coef = 2.0 * lam / numel as f32;
+            let g = &mut self.g_ent[id * we..(id + 1) * we];
+            for k in 0..we {
+                g[k] += coef * self.ent.data[id * we + k];
+            }
+        }
+        let rid = batch.pos[i * 3 + 1] as usize;
+        let ss: f32 = self.rel.row(rid).iter().map(|x| x * x).sum();
+        reg += lam * ss / (b * wr) as f32;
+        let coef = 2.0 * lam / (b * wr) as f32;
+        for k in 0..wr {
+            self.g_rel[rid * wr + k] += coef * self.rel.data[rid * wr + k];
+        }
+        for j in 0..n {
+            let cid = batch.neg[i * n + j] as usize;
+            let ss: f32 = self.ent.row(cid).iter().map(|x| x * x).sum();
+            reg += lam * ss / (b * n * we) as f32;
+            let coef = 2.0 * lam / (b * n * we) as f32;
+            for k in 0..we {
+                self.g_ent[cid * we + k] += coef * self.ent.data[cid * we + k];
+            }
+        }
+        reg
+    }
+
+    /// Filtered ranks for an eval batch (mirror of the eval artifact).
+    pub fn eval_ranks(&self, eb: &EvalBatch) -> Vec<f32> {
+        let e = self.ent.rows;
+        let we = self.ent.width;
+        let h = &self.hyper;
+        let mut q = vec![0.0f32; we];
+        let mut ranks = Vec::with_capacity(eb.len);
+        for i in 0..eb.len {
+            let src = eb.src[i] as usize;
+            let rid = eb.rel[i] as usize;
+            let truth = eb.truth[i] as usize;
+            let ph = eb.pred_head[i] > 0.5;
+            compose(self.method, self.ent.row(src), self.rel.row(rid), ph, h, &mut q);
+            let true_good = self.logit(&q, self.ent.row(truth));
+            let filt = &eb.filter[i * e..(i + 1) * e];
+            let mut greater = 0u32;
+            let mut equal = 0u32;
+            for c in 0..e {
+                if c == truth || filt[c] > 0.5 {
+                    continue;
+                }
+                let g = self.logit(&q, self.ent.row(c));
+                if g > true_good {
+                    greater += 1;
+                } else if g == true_good {
+                    equal += 1;
+                }
+            }
+            ranks.push(1.0 + greater as f32 + 0.5 * equal as f32);
+        }
+        ranks
+    }
+}
+
+/// Query composition — mirror of `model.compose` in python.
+pub fn compose(
+    method: Method,
+    src: &[f32],
+    rel: &[f32],
+    predict_head: bool,
+    h: &Hyper,
+    out: &mut [f32],
+) {
+    match method {
+        Method::TransE => {
+            let s = if predict_head { -1.0 } else { 1.0 };
+            for k in 0..src.len() {
+                out[k] = src[k] + s * rel[k];
+            }
+        }
+        Method::RotatE => {
+            let dh = src.len() / 2;
+            let scale = std::f32::consts::PI / h.embedding_range();
+            let sign = if predict_head { -1.0 } else { 1.0 };
+            for k in 0..dh {
+                let theta = rel[k] * scale * sign;
+                let (c, s) = (theta.cos(), theta.sin());
+                out[k] = src[k] * c - src[dh + k] * s;
+                out[dh + k] = src[k] * s + src[dh + k] * c;
+            }
+        }
+        Method::ComplEx => {
+            let dh = src.len() / 2;
+            let (sre, sim) = src.split_at(dh);
+            let (rre, rim) = rel.split_at(dh);
+            if !predict_head {
+                for k in 0..dh {
+                    out[k] = sre[k] * rre[k] - sim[k] * rim[k];
+                    out[dh + k] = sre[k] * rim[k] + sim[k] * rre[k];
+                }
+            } else {
+                for k in 0..dh {
+                    out[k] = rre[k] * sre[k] + rim[k] * sim[k];
+                    out[dh + k] = rre[k] * sim[k] - rim[k] * sre[k];
+                }
+            }
+        }
+    }
+}
+
+#[inline]
+fn sigmoid(x: f32) -> f32 {
+    1.0 / (1.0 + (-x).exp())
+}
+
+#[inline]
+fn softplus(x: f32) -> f32 {
+    // stable: log(1 + e^x)
+    if x > 20.0 {
+        x
+    } else if x < -20.0 {
+        x.exp()
+    } else {
+        (1.0 + x.exp()).ln()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::Triple;
+    use crate::data::dataset::BatchIter;
+    use crate::util::prop::check;
+
+    fn toy_batch(b: usize, n: usize, e: usize, r: usize, rng: &mut Rng) -> Batch {
+        let triples: Vec<Triple> = (0..b)
+            .map(|_| {
+                Triple::new(
+                    rng.u32_below(e as u32),
+                    rng.u32_below(r as u32),
+                    rng.u32_below(e as u32),
+                )
+            })
+            .collect();
+        let ents: Vec<u32> = (0..e as u32).collect();
+        BatchIter::new(&triples, &ents, b, n, rng).next().unwrap()
+    }
+
+    fn model(method: Method, rng: &mut Rng) -> NativeModel {
+        let hyper = Hyper { dim: 6, ..Default::default() };
+        NativeModel::new(method, hyper, 32, 4, rng)
+    }
+
+    #[test]
+    fn loss_decreases_all_methods() {
+        for method in Method::ALL {
+            let mut rng = Rng::new(42);
+            let mut m = model(method, &mut rng);
+            let batch = toy_batch(16, 8, 32, 4, &mut rng);
+            let first = m.train_batch(&batch);
+            let mut last = first;
+            for _ in 0..60 {
+                last = m.train_batch(&batch);
+            }
+            assert!(last < first, "{method:?}: {first} → {last}");
+            assert!(last.is_finite());
+        }
+    }
+
+    #[test]
+    fn masked_batch_is_noop_for_distance_methods() {
+        for method in [Method::TransE, Method::RotatE] {
+            let mut rng = Rng::new(3);
+            let mut m = model(method, &mut rng);
+            let mut batch = toy_batch(8, 4, 32, 4, &mut rng);
+            batch.mask.iter_mut().for_each(|x| *x = 0.0);
+            let before = m.ent.data.clone();
+            m.train_batch(&batch);
+            assert_eq!(m.ent.data, before, "{method:?}");
+        }
+    }
+
+    /// Finite-difference gradient check on the full loss, all methods.
+    #[test]
+    fn gradients_match_finite_difference() {
+        for method in Method::ALL {
+            check(&format!("fd_grad_{}", method.name()), 3, |rng| {
+                // adv_temperature = 0 → uniform negative weights, so the
+                // (detached) softmax does not perturb the finite difference.
+                let hyper = Hyper {
+                    dim: 4,
+                    complex_reg: 1e-3,
+                    adv_temperature: 0.0,
+                    ..Default::default()
+                };
+                let mut m = NativeModel::new(method, hyper, 12, 3, rng);
+                let batch = toy_batch(4, 3, 12, 3, rng);
+
+                // analytic grads
+                m.g_ent.iter_mut().for_each(|g| *g = 0.0);
+                m.g_rel.iter_mut().for_each(|g| *g = 0.0);
+                let _ = m.accumulate_grads(&batch);
+                let ga = m.g_ent.clone();
+                let gr = m.g_rel.clone();
+
+                let loss_at = |m: &mut NativeModel| {
+                    m.g_ent.iter_mut().for_each(|g| *g = 0.0);
+                    m.g_rel.iter_mut().for_each(|g| *g = 0.0);
+                    m.accumulate_grads(&batch)
+                };
+
+                let eps = 1e-3f32;
+                // probe a handful of random coordinates in each table
+                for _ in 0..6 {
+                    let i = rng.usize_below(m.ent.data.len());
+                    let orig = m.ent.data[i];
+                    m.ent.data[i] = orig + eps;
+                    let lp = loss_at(&mut m);
+                    m.ent.data[i] = orig - eps;
+                    let lm = loss_at(&mut m);
+                    m.ent.data[i] = orig;
+                    let fd = (lp - lm) / (2.0 * eps);
+                    assert!(
+                        (fd - ga[i]).abs() < 2e-2 * (1.0 + fd.abs()),
+                        "{method:?} ent[{i}]: fd {fd} vs {}",
+                        ga[i]
+                    );
+                }
+                for _ in 0..6 {
+                    let i = rng.usize_below(m.rel.data.len());
+                    let orig = m.rel.data[i];
+                    m.rel.data[i] = orig + eps;
+                    let lp = loss_at(&mut m);
+                    m.rel.data[i] = orig - eps;
+                    let lm = loss_at(&mut m);
+                    m.rel.data[i] = orig;
+                    let fd = (lp - lm) / (2.0 * eps);
+                    assert!(
+                        (fd - gr[i]).abs() < 2e-2 * (1.0 + fd.abs()),
+                        "{method:?} rel[{i}]: fd {fd} vs {}",
+                        gr[i]
+                    );
+                }
+            });
+        }
+    }
+
+    #[test]
+    fn compose_head_tail_score_symmetry() {
+        // score(h,r,t) via tail query vs via head query must agree
+        for method in Method::ALL {
+            let mut rng = Rng::new(9);
+            let m = model(method, &mut rng);
+            let we = m.ent.width;
+            let mut qt = vec![0.0; we];
+            let mut qh = vec![0.0; we];
+            for _ in 0..20 {
+                let h = rng.usize_below(32);
+                let r = rng.usize_below(4);
+                let t = rng.usize_below(32);
+                compose(method, m.ent.row(h), m.rel.row(r), false, &m.hyper, &mut qt);
+                compose(method, m.ent.row(t), m.rel.row(r), true, &m.hyper, &mut qh);
+                let st = m.logit(&qt, m.ent.row(t));
+                let sh = m.logit(&qh, m.ent.row(h));
+                assert!((st - sh).abs() < 1e-3, "{method:?} {st} vs {sh}");
+            }
+        }
+    }
+
+    #[test]
+    fn eval_rank_perfect_answer_is_one() {
+        for method in Method::ALL {
+            let mut rng = Rng::new(5);
+            let mut m = model(method, &mut rng);
+            // plant: entity 0's embedding = query composition of (src=1, r=0)
+            let we = m.ent.width;
+            let mut q = vec![0.0; we];
+            compose(method, m.ent.row(1), m.rel.row(0), false, &m.hyper, &mut q);
+            if method == Method::ComplEx {
+                crate::linalg::scale(&mut q, 100.0);
+            }
+            m.ent.set_row(0, &q);
+            let eb = EvalBatch {
+                src: vec![1],
+                rel: vec![0],
+                truth: vec![0],
+                pred_head: vec![0.0],
+                filter: vec![0.0; 32],
+                len: 1,
+                eval_batch: 1,
+            };
+            let ranks = m.eval_ranks(&eb);
+            assert!(ranks[0] <= 1.5, "{method:?}: rank {}", ranks[0]);
+        }
+    }
+
+    #[test]
+    fn eval_filter_forces_rank_one() {
+        let mut rng = Rng::new(6);
+        let m = model(Method::TransE, &mut rng);
+        let mut filter = vec![1.0f32; 32];
+        filter[7] = 0.0;
+        let eb = EvalBatch {
+            src: vec![3],
+            rel: vec![1],
+            truth: vec![7],
+            pred_head: vec![1.0],
+            filter,
+            len: 1,
+            eval_batch: 1,
+        };
+        assert_eq!(m.eval_ranks(&eb), vec![1.0]);
+    }
+
+    #[test]
+    fn training_improves_planted_structure() {
+        // tiny closed-world: relation 0 maps i → i+8; training should push
+        // the true tail's rank toward the top.
+        let mut rng = Rng::new(11);
+        let hyper = Hyper { dim: 8, learning_rate: 3e-3, ..Default::default() };
+        let mut m = NativeModel::new(Method::TransE, hyper, 16, 1, &mut rng);
+        let triples: Vec<Triple> = (0..8).map(|i| Triple::new(i, 0, i + 8)).collect();
+        let ents: Vec<u32> = (0..16).collect();
+        let before = mean_rank(&m, &triples);
+        for _ in 0..150 {
+            let mut r2 = rng.fork(1);
+            for batch in BatchIter::new(&triples, &ents, 8, 8, &mut r2) {
+                m.train_batch(&batch);
+            }
+        }
+        let after = mean_rank(&m, &triples);
+        assert!(after < before, "mean rank {before} → {after}");
+        assert!(after < 3.0, "after {after}");
+    }
+
+    fn mean_rank(m: &NativeModel, triples: &[Triple]) -> f32 {
+        let e = m.ent.rows;
+        let eb = EvalBatch {
+            src: triples.iter().map(|t| t.h as i32).collect(),
+            rel: triples.iter().map(|t| t.r as i32).collect(),
+            truth: triples.iter().map(|t| t.t as i32).collect(),
+            pred_head: vec![0.0; triples.len()],
+            filter: vec![0.0; triples.len() * e],
+            len: triples.len(),
+            eval_batch: triples.len(),
+        };
+        let ranks = m.eval_ranks(&eb);
+        ranks.iter().sum::<f32>() / ranks.len() as f32
+    }
+}

@@ -1,0 +1,35 @@
+//! # feds — Communication-Efficient Federated Knowledge Graph Embedding
+//!
+//! A production-shaped reproduction of *"Communication-Efficient Federated
+//! Knowledge Graph Embedding with Entity-Wise Top-K Sparsification"*
+//! (Zhang et al., 2024) as a three-layer Rust + JAX + Pallas stack:
+//!
+//! * **L3 (this crate)** — the federated coordinator: FedS's Entity-Wise
+//!   Top-K sparsification (upstream and downstream), the Intermittent
+//!   Synchronization Mechanism, personalized aggregation, baselines
+//!   (FedE/FedEP/FedEPL/Single, KD/SVD/SVD+), the metered wire protocol,
+//!   and the experiment harness reproducing every table/figure.
+//! * **L2/L1 (build-time Python)** — the KGE compute graph and Pallas
+//!   scoring kernels, AOT-lowered to HLO text in `artifacts/` and executed
+//!   here via PJRT (`runtime`).  Python is never on the training path.
+//!
+//! See DESIGN.md for the full system inventory and EXPERIMENTS.md for
+//! paper-vs-measured results.
+
+pub mod comm;
+pub mod data;
+pub mod exp;
+pub mod fed;
+pub mod kge;
+pub mod linalg;
+pub mod metrics;
+pub mod runtime;
+pub mod trainer;
+pub mod util;
+
+pub use kge::{Hyper, Method};
+
+/// Crate version (matches Cargo.toml).
+pub fn version() -> &'static str {
+    env!("CARGO_PKG_VERSION")
+}

@@ -1,0 +1,123 @@
+//! Small dense linear algebra used by the coordinator: rowwise vector ops for
+//! the Top-K change scores and a one-sided Jacobi SVD for the FedE-SVD/SVD+
+//! compression baselines (Table I).
+
+pub mod svd;
+
+pub use svd::{svd, Svd};
+
+/// Dot product.
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut s = 0.0f32;
+    for i in 0..a.len() {
+        s += a[i] * b[i];
+    }
+    s
+}
+
+/// Euclidean norm.
+#[inline]
+pub fn norm(a: &[f32]) -> f32 {
+    dot(a, a).sqrt()
+}
+
+/// Cosine similarity, guarded for zero rows (returns 0 like the L1 kernel).
+#[inline]
+pub fn cosine(a: &[f32], b: &[f32]) -> f32 {
+    let den = (dot(a, a) as f64 * dot(b, b) as f64).sqrt();
+    if den < 1e-12 {
+        return 0.0;
+    }
+    (dot(a, b) as f64 / den) as f32
+}
+
+/// Eq. 1 change score: `1 - cos(cur, hist)` — mirrors the L1 Pallas kernel.
+#[inline]
+pub fn change_score(cur: &[f32], hist: &[f32]) -> f32 {
+    1.0 - cosine(cur, hist)
+}
+
+/// `y += alpha * x`
+#[inline]
+pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    for i in 0..x.len() {
+        y[i] += alpha * x[i];
+    }
+}
+
+/// `y = x`
+#[inline]
+pub fn copy(x: &[f32], y: &mut [f32]) {
+    y.copy_from_slice(x);
+}
+
+/// `a - b` elementwise into a fresh vec.
+pub fn sub(a: &[f32], b: &[f32]) -> Vec<f32> {
+    debug_assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(x, y)| x - y).collect()
+}
+
+/// Scale in place.
+#[inline]
+pub fn scale(a: &mut [f32], s: f32) {
+    for v in a.iter_mut() {
+        *v *= s;
+    }
+}
+
+/// Frobenius norm of the difference of two equal-length buffers.
+pub fn frob_diff(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut s = 0.0f64;
+    for i in 0..a.len() {
+        let d = (a[i] - b[i]) as f64;
+        s += d * d;
+    }
+    (s as f32).sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dot_and_norm() {
+        assert_eq!(dot(&[1.0, 2.0], &[3.0, 4.0]), 11.0);
+        assert!((norm(&[3.0, 4.0]) - 5.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn cosine_basics() {
+        assert!((cosine(&[1.0, 0.0], &[1.0, 0.0]) - 1.0).abs() < 1e-6);
+        assert!((cosine(&[1.0, 0.0], &[0.0, 1.0])).abs() < 1e-6);
+        assert!((cosine(&[1.0, 0.0], &[-1.0, 0.0]) + 1.0).abs() < 1e-6);
+        assert_eq!(cosine(&[0.0, 0.0], &[1.0, 1.0]), 0.0);
+    }
+
+    #[test]
+    fn change_score_range() {
+        let mut rng = crate::util::rng::Rng::new(1);
+        for _ in 0..100 {
+            let a: Vec<f32> = (0..8).map(|_| rng.uniform(-1.0, 1.0)).collect();
+            let b: Vec<f32> = (0..8).map(|_| rng.uniform(-1.0, 1.0)).collect();
+            let c = change_score(&a, &b);
+            assert!((0.0..=2.0 + 1e-5).contains(&c), "{c}");
+        }
+        let a = vec![1.0, 2.0, 3.0];
+        assert!(change_score(&a, &a).abs() < 1e-6);
+    }
+
+    #[test]
+    fn axpy_sub_scale() {
+        let x = vec![1.0, 2.0];
+        let mut y = vec![10.0, 20.0];
+        axpy(2.0, &x, &mut y);
+        assert_eq!(y, vec![12.0, 24.0]);
+        assert_eq!(sub(&y, &x), vec![11.0, 22.0]);
+        scale(&mut y, 0.5);
+        assert_eq!(y, vec![6.0, 12.0]);
+    }
+}

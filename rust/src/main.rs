@@ -1,0 +1,195 @@
+//! `feds` — CLI launcher for the FedS reproduction.
+//!
+//! Subcommands:
+//!   info                     runtime + manifest summary
+//!   train [opts]             run one federated training configuration
+//!   exp <table|all> [opts]   regenerate a paper table/figure
+//!   ratio [opts]             Eq. 5 analytic vs measured communication ratio
+//!
+//! Run `feds <cmd> --help` for per-command options.
+
+use anyhow::Result;
+
+use feds::data::generator::generate;
+use feds::data::partition::partition;
+use feds::exp::{self, Ctx};
+use feds::fed::{comm_ratio, run_federated, Algo, FedRunConfig};
+use feds::kge::Method;
+use feds::util::cli::Cli;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if args.is_empty() {
+        print_usage();
+        std::process::exit(2);
+    }
+    let cmd = args[0].as_str();
+    let rest = &args[1..];
+    let result = match cmd {
+        "info" => cmd_info(),
+        "train" => cmd_train(rest),
+        "exp" => cmd_exp(rest),
+        "ratio" => cmd_ratio(rest),
+        "--help" | "-h" | "help" => {
+            print_usage();
+            Ok(())
+        }
+        other => {
+            eprintln!("unknown command '{other}'\n");
+            print_usage();
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn print_usage() {
+    eprintln!(
+        "feds {} — Communication-Efficient Federated KG Embedding (FedS)\n\n\
+         USAGE: feds <command> [options]\n\n\
+         COMMANDS:\n\
+           info     show PJRT runtime and artifact manifest\n\
+           train    run one federated configuration and print the history\n\
+           exp      regenerate paper tables/figures: table1 table23 table4\n\
+                    table5 table6 fig2 all\n\
+           ratio    Eq. 5 analytic communication ratio vs sparsity\n",
+        feds::version()
+    );
+}
+
+fn cmd_info() -> Result<()> {
+    let rt = exp::xla_runtime()?;
+    let m = &rt.manifest;
+    println!("artifacts dir : {}", m.dir.display());
+    println!("entities      : {}", m.num_entities);
+    println!("relations     : {}", m.num_relations);
+    println!("dim           : {} (FedEPL {}, KD {})", m.hyper.dim, m.fedepl_dim, m.kd_dim);
+    println!("batch         : {} × {} negatives", m.batch, m.negatives);
+    println!("eval batch    : {}", m.eval_batch);
+    println!("sparsity p    : {}", m.sparsity);
+    println!("sync interval : {}", m.sync_interval);
+    println!("artifacts ({}):", m.artifacts.len());
+    for a in &m.artifacts {
+        println!("  {:<24} {:?} {:<8} dim {}", a.name, a.role, a.method.name(), a.dim);
+    }
+    Ok(())
+}
+
+fn train_cli() -> Cli {
+    Cli::new("feds train", "run one federated training configuration")
+        .opt("algo", "feds", "single|fedep|fedepl|feds|feds-nosync|fedkd|fedsvd|fedsvd+")
+        .opt("method", "transe", "transe|rotate|complex")
+        .opt("clients", "3", "number of clients (relation partition)")
+        .opt("rounds", "60", "max communication rounds")
+        .opt("local-epochs", "3", "local epochs per round")
+        .opt("eval-every", "5", "evaluate every N rounds")
+        .opt("sparsity", "0.4", "FedS sparsity ratio p")
+        .opt("sync-interval", "4", "FedS synchronization interval s")
+        .opt("eval-cap", "384", "max eval queries per client per split (0=all)")
+        .opt("seed", "64501", "experiment seed")
+        .opt("backend", "xla", "xla|native")
+        .opt("triples", "0", "override #triples (0 = backend default)")
+}
+
+fn cmd_train(args: &[String]) -> Result<()> {
+    let m = train_cli().parse(args).map_err(|u| anyhow::anyhow!("{u}"))?;
+    let ctx = Ctx::from_options(m.get("backend"), false, m.u64("seed"))?;
+    let mut gen = ctx.gen_config();
+    if m.usize("triples") > 0 {
+        gen.num_triples = m.usize("triples");
+    }
+    let kg = generate(&gen);
+    let data = partition(&kg, m.usize("clients"), m.u64("seed"));
+    let cfg = FedRunConfig {
+        algo: Algo::parse(m.get("algo"))?,
+        method: Method::parse(m.get("method"))?,
+        max_rounds: m.usize("rounds"),
+        local_epochs: m.usize("local-epochs"),
+        eval_every: m.usize("eval-every"),
+        patience: 3,
+        sparsity: m.f64("sparsity"),
+        sync_interval: m.usize("sync-interval"),
+        eval_cap: m.usize("eval-cap"),
+        seed: m.u64("seed"),
+        svd_cols: 8,
+    };
+    let out = run_federated(&data, &cfg, &ctx.backend)?;
+    println!("\n=== {} ===", out.history.label);
+    println!("{:>6} {:>12} {:>10} {:>10} {:>10}", "round", "params", "loss", "validMRR", "testMRR");
+    for r in &out.history.records {
+        println!(
+            "{:>6} {:>12} {:>10.4} {:>10.4} {:>10.4}",
+            r.round, r.params_cum, r.mean_loss, r.valid.mrr, r.test.mrr
+        );
+    }
+    println!(
+        "\nconverged: round {} MRR {:.4} Hits@10 {:.4}",
+        out.history.rounds_cg(),
+        out.history.mrr_cg(),
+        out.history.hits10_cg()
+    );
+    println!(
+        "transmitted: {} params, {} bytes ({} messages)",
+        out.acct.params(),
+        out.acct.bytes(),
+        out.acct.messages()
+    );
+    if let Some(r) = out.eq5_ratio {
+        println!("Eq.5 worst-case ratio vs dense: {r:.4}");
+    }
+    Ok(())
+}
+
+fn exp_cli() -> Cli {
+    Cli::new("feds exp", "regenerate a paper table/figure")
+        .opt("backend", "xla", "xla|native")
+        .opt("seed", "64501", "experiment seed")
+        .flag("fast", "CI smoke mode: fewer rounds, smaller eval cap")
+}
+
+fn cmd_exp(args: &[String]) -> Result<()> {
+    let which = args.first().cloned().unwrap_or_else(|| "all".to_string());
+    let m = exp_cli()
+        .parse(&args[1.min(args.len())..])
+        .map_err(|u| anyhow::anyhow!("{u}"))?;
+    let ctx = Ctx::from_options(m.get("backend"), m.flag("fast"), m.u64("seed"))?;
+    let dir = exp::reports_dir();
+    let run_one = |name: &str| -> Result<()> {
+        let rep = match name {
+            "table1" => exp::table1::run(&ctx)?,
+            "table23" => exp::table23::run(&ctx)?,
+            "table4" => exp::table4::run(&ctx)?,
+            "table5" => exp::table5::run(&ctx)?,
+            "table6" => exp::table6::run(&ctx)?,
+            "fig2" => exp::fig2::run(&ctx)?,
+            other => anyhow::bail!("unknown experiment '{other}'"),
+        };
+        rep.save(&dir)
+    };
+    if which == "all" {
+        for name in ["table23", "table1", "table4", "fig2", "table5", "table6"] {
+            println!("\n################ {name} ################\n");
+            run_one(name)?;
+        }
+        Ok(())
+    } else {
+        run_one(&which)
+    }
+}
+
+fn cmd_ratio(args: &[String]) -> Result<()> {
+    let cli = Cli::new("feds ratio", "Eq. 5 analytic communication ratio")
+        .opt("dim", "64", "embedding width D")
+        .opt("sync-interval", "4", "synchronization interval s");
+    let m = cli.parse(args).map_err(|u| anyhow::anyhow!("{u}"))?;
+    let d = m.usize("dim");
+    let s = m.usize("sync-interval");
+    println!("Eq. 5 ratio R_c^p for D={d}, s={s}:");
+    for p in [0.1, 0.2, 0.3, 0.4, 0.5, 0.6, 0.7, 0.8, 0.9] {
+        println!("  p={p:.1} → {:.4}", comm_ratio(p, s, d));
+    }
+    Ok(())
+}

@@ -1,0 +1,79 @@
+//! Early stopping on validation MRR, as in the paper (§IV-B): "training
+//! ceases after three consecutive declines in MRR of the validation set".
+//! The convergence point (CG) is the round with the best validation MRR.
+
+#[derive(Clone, Debug)]
+pub struct EarlyStop {
+    pub patience: usize,
+    best: f64,
+    best_index: usize,
+    declines: usize,
+    n_seen: usize,
+}
+
+impl EarlyStop {
+    pub fn new(patience: usize) -> Self {
+        Self { patience, best: f64::NEG_INFINITY, best_index: 0, declines: 0, n_seen: 0 }
+    }
+
+    /// Record a new validation score; returns `true` if training should stop.
+    pub fn update(&mut self, score: f64) -> bool {
+        if score > self.best {
+            self.best = score;
+            self.best_index = self.n_seen;
+            self.declines = 0;
+        } else {
+            self.declines += 1;
+        }
+        self.n_seen += 1;
+        self.declines >= self.patience
+    }
+
+    pub fn best(&self) -> f64 {
+        self.best
+    }
+
+    /// Index (in update order) of the best score — the convergence point.
+    pub fn best_index(&self) -> usize {
+        self.best_index
+    }
+
+    pub fn evaluations(&self) -> usize {
+        self.n_seen
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stops_after_patience_declines() {
+        let mut es = EarlyStop::new(3);
+        assert!(!es.update(0.5));
+        assert!(!es.update(0.4));
+        assert!(!es.update(0.45));
+        assert!(es.update(0.3));
+        assert_eq!(es.best(), 0.5);
+        assert_eq!(es.best_index(), 0);
+    }
+
+    #[test]
+    fn improvement_resets_counter() {
+        let mut es = EarlyStop::new(2);
+        assert!(!es.update(0.1));
+        assert!(!es.update(0.05)); // decline 1
+        assert!(!es.update(0.2));  // improvement resets
+        assert!(!es.update(0.15)); // decline 1
+        assert!(es.update(0.1));   // decline 2 → stop
+        assert_eq!(es.best_index(), 2);
+    }
+
+    #[test]
+    fn equal_score_counts_as_decline() {
+        let mut es = EarlyStop::new(2);
+        es.update(0.3);
+        assert!(!es.update(0.3));
+        assert!(es.update(0.3));
+    }
+}

@@ -1,0 +1,128 @@
+//! Link-prediction metrics and the paper's communication-efficiency metrics.
+//!
+//! §IV-B of the paper defines: MRR and Hits@10 at convergence (weighted
+//! across clients by test-triple share), **P@CG** (total transmitted
+//! parameters at convergence), **P@99 / P@98** (transmitted parameters when
+//! first reaching 99%/98% of the *baseline's* converged MRR, as a ratio to
+//! the baseline), and **R@CG** (communication rounds at convergence).
+
+pub mod early_stop;
+pub mod tracker;
+
+pub use early_stop::EarlyStop;
+pub use tracker::{RoundRecord, RunHistory};
+
+/// Ranking metrics accumulated from filtered ranks.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct RankMetrics {
+    pub n: usize,
+    pub mrr: f64,
+    pub hits1: f64,
+    pub hits3: f64,
+    pub hits10: f64,
+}
+
+impl RankMetrics {
+    pub fn from_ranks(ranks: &[f32]) -> Self {
+        let mut m = RankMetrics { n: ranks.len(), ..Default::default() };
+        if ranks.is_empty() {
+            return m;
+        }
+        for &r in ranks {
+            let r = r as f64;
+            m.mrr += 1.0 / r;
+            if r <= 1.0 {
+                m.hits1 += 1.0;
+            }
+            if r <= 3.0 {
+                m.hits3 += 1.0;
+            }
+            if r <= 10.0 {
+                m.hits10 += 1.0;
+            }
+        }
+        let n = ranks.len() as f64;
+        m.mrr /= n;
+        m.hits1 /= n;
+        m.hits3 /= n;
+        m.hits10 /= n;
+        m
+    }
+
+    pub fn merge(metrics: &[RankMetrics]) -> Self {
+        let total: usize = metrics.iter().map(|m| m.n).sum();
+        if total == 0 {
+            return RankMetrics::default();
+        }
+        let mut out = RankMetrics { n: total, ..Default::default() };
+        for m in metrics {
+            let w = m.n as f64 / total as f64;
+            out.mrr += w * m.mrr;
+            out.hits1 += w * m.hits1;
+            out.hits3 += w * m.hits3;
+            out.hits10 += w * m.hits10;
+        }
+        out
+    }
+
+    /// Paper's aggregation: weighted average over clients with weights
+    /// proportional to triple counts.
+    pub fn weighted(per_client: &[RankMetrics], weights: &[f64]) -> Self {
+        assert_eq!(per_client.len(), weights.len());
+        let mut out = RankMetrics::default();
+        for (m, &w) in per_client.iter().zip(weights) {
+            out.n += m.n;
+            out.mrr += w * m.mrr;
+            out.hits1 += w * m.hits1;
+            out.hits3 += w * m.hits3;
+            out.hits10 += w * m.hits10;
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn from_ranks_basics() {
+        let m = RankMetrics::from_ranks(&[1.0, 2.0, 10.0, 100.0]);
+        assert!((m.mrr - (1.0 + 0.5 + 0.1 + 0.01) / 4.0).abs() < 1e-9);
+        assert!((m.hits1 - 0.25).abs() < 1e-9);
+        assert!((m.hits10 - 0.75).abs() < 1e-9);
+        assert_eq!(m.n, 4);
+    }
+
+    #[test]
+    fn empty_ranks() {
+        let m = RankMetrics::from_ranks(&[]);
+        assert_eq!(m.n, 0);
+        assert_eq!(m.mrr, 0.0);
+    }
+
+    #[test]
+    fn merge_weighted_by_counts() {
+        let a = RankMetrics::from_ranks(&[1.0, 1.0]); // mrr 1.0, n 2
+        let b = RankMetrics::from_ranks(&[2.0]);      // mrr 0.5, n 1
+        let m = RankMetrics::merge(&[a, b]);
+        assert!((m.mrr - (2.0 * 1.0 + 1.0 * 0.5) / 3.0).abs() < 1e-9);
+        assert_eq!(m.n, 3);
+    }
+
+    #[test]
+    fn weighted_uses_given_weights() {
+        let a = RankMetrics::from_ranks(&[1.0]);
+        let b = RankMetrics::from_ranks(&[4.0]);
+        let m = RankMetrics::weighted(&[a, b], &[0.75, 0.25]);
+        assert!((m.mrr - (0.75 * 1.0 + 0.25 * 0.25)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn perfect_ranks() {
+        let m = RankMetrics::from_ranks(&[1.0; 10]);
+        assert_eq!(m.mrr, 1.0);
+        assert_eq!(m.hits1, 1.0);
+        assert_eq!(m.hits10, 1.0);
+    }
+}

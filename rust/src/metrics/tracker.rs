@@ -1,0 +1,194 @@
+//! Run history + the paper's communication-efficiency metrics
+//! (P@CG, P@99, P@98, R@CG), computed exactly as defined in §IV-B.
+
+use super::RankMetrics;
+
+/// One evaluated communication round.
+#[derive(Clone, Debug)]
+pub struct RoundRecord {
+    pub round: usize,
+    /// cumulative transmitted parameters (both directions, all clients)
+    pub params_cum: u64,
+    /// cumulative transmitted bytes on the simulated wire
+    pub bytes_cum: u64,
+    pub valid: RankMetrics,
+    pub test: RankMetrics,
+    pub mean_loss: f64,
+}
+
+/// Full history of one federated run.
+#[derive(Clone, Debug, Default)]
+pub struct RunHistory {
+    pub records: Vec<RoundRecord>,
+    /// index into `records` of the convergence point (best valid MRR)
+    pub converged_idx: Option<usize>,
+    pub label: String,
+}
+
+impl RunHistory {
+    pub fn new(label: &str) -> Self {
+        Self { label: label.to_string(), ..Default::default() }
+    }
+
+    pub fn push(&mut self, rec: RoundRecord) {
+        self.records.push(rec);
+    }
+
+    pub fn mark_converged(&mut self, idx: usize) {
+        self.converged_idx = Some(idx);
+    }
+
+    pub fn converged(&self) -> &RoundRecord {
+        let idx = self.converged_idx.unwrap_or(self.records.len().saturating_sub(1));
+        &self.records[idx]
+    }
+
+    /// MRR at convergence (test set) — the table's "MRR".
+    pub fn mrr_cg(&self) -> f64 {
+        self.converged().test.mrr
+    }
+
+    pub fn hits10_cg(&self) -> f64 {
+        self.converged().test.hits10
+    }
+
+    /// R@CG: communication rounds at convergence.
+    pub fn rounds_cg(&self) -> usize {
+        self.converged().round
+    }
+
+    /// P@CG: total transmitted parameters at convergence.
+    pub fn params_cg(&self) -> u64 {
+        self.converged().params_cum
+    }
+
+    /// Cumulative transmitted parameters when first reaching `target` test
+    /// MRR (None if never reached) — the building block of P@99/P@98.
+    pub fn params_at_mrr(&self, target: f64) -> Option<u64> {
+        self.records
+            .iter()
+            .find(|r| r.test.mrr >= target)
+            .map(|r| r.params_cum)
+    }
+
+    pub fn rounds_at_mrr(&self, target: f64) -> Option<usize> {
+        self.records
+            .iter()
+            .find(|r| r.test.mrr >= target)
+            .map(|r| r.round)
+    }
+}
+
+/// The paper's scaled metrics of a model run against a baseline run
+/// (baseline = FedEP in Tables I/III): every value is `model / baseline`.
+#[derive(Clone, Debug)]
+pub struct EfficiencyReport {
+    pub p_cg: f64,
+    pub p99: Option<f64>,
+    pub p98: Option<f64>,
+    pub r_cg: usize,
+    pub mrr: f64,
+    pub hits10: f64,
+}
+
+pub fn efficiency(model: &RunHistory, baseline: &RunHistory) -> EfficiencyReport {
+    let base_mrr = baseline.mrr_cg();
+    let base_p_cg = baseline.params_cg().max(1) as f64;
+    let p99 = match (
+        model.params_at_mrr(0.99 * base_mrr),
+        baseline.params_at_mrr(0.99 * base_mrr),
+    ) {
+        (Some(m), Some(b)) => Some(m as f64 / b.max(1) as f64),
+        _ => None,
+    };
+    let p98 = match (
+        model.params_at_mrr(0.98 * base_mrr),
+        baseline.params_at_mrr(0.98 * base_mrr),
+    ) {
+        (Some(m), Some(b)) => Some(m as f64 / b.max(1) as f64),
+        _ => None,
+    };
+    EfficiencyReport {
+        p_cg: model.params_cg() as f64 / base_p_cg,
+        p99,
+        p98,
+        r_cg: model.rounds_cg(),
+        mrr: model.mrr_cg(),
+        hits10: model.hits10_cg(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(round: usize, params: u64, mrr: f64) -> RoundRecord {
+        let m = RankMetrics { n: 1, mrr, hits1: 0.0, hits3: 0.0, hits10: mrr + 0.2 };
+        RoundRecord {
+            round,
+            params_cum: params,
+            bytes_cum: params * 4,
+            valid: m,
+            test: m,
+            mean_loss: 0.0,
+        }
+    }
+
+    fn history(label: &str, recs: Vec<RoundRecord>, cg: usize) -> RunHistory {
+        let mut h = RunHistory::new(label);
+        for r in recs {
+            h.push(r);
+        }
+        h.mark_converged(cg);
+        h
+    }
+
+    #[test]
+    fn params_at_mrr_finds_first_crossing() {
+        let h = history(
+            "m",
+            vec![rec(5, 100, 0.1), rec(10, 200, 0.3), rec(15, 300, 0.35)],
+            2,
+        );
+        assert_eq!(h.params_at_mrr(0.25), Some(200));
+        assert_eq!(h.params_at_mrr(0.5), None);
+        assert_eq!(h.rounds_at_mrr(0.25), Some(10));
+    }
+
+    #[test]
+    fn converged_metrics() {
+        let h = history("m", vec![rec(5, 100, 0.1), rec(10, 200, 0.4), rec(15, 300, 0.38)], 1);
+        assert_eq!(h.mrr_cg(), 0.4);
+        assert_eq!(h.rounds_cg(), 10);
+        assert_eq!(h.params_cg(), 200);
+    }
+
+    #[test]
+    fn efficiency_ratios() {
+        let base = history(
+            "fedep",
+            vec![rec(5, 1000, 0.2), rec(10, 2000, 0.39), rec(15, 3000, 0.4)],
+            2,
+        );
+        let model = history(
+            "feds",
+            vec![rec(5, 400, 0.2), rec(10, 800, 0.396), rec(15, 1200, 0.41)],
+            2,
+        );
+        let e = efficiency(&model, &base);
+        assert!((e.p_cg - 1200.0 / 3000.0).abs() < 1e-9);
+        // 99% of 0.4 = 0.396: model at 800, base at 3000
+        assert!((e.p99.unwrap() - 800.0 / 3000.0).abs() < 1e-9);
+        // 98% of 0.4 = 0.392: model at 800, base at 2000 (0.39 < 0.392 → round 15? no: 0.39 < 0.392, so base first reaches at 0.4 → 3000)
+        assert!((e.p98.unwrap() - 800.0 / 3000.0).abs() < 1e-9);
+        assert_eq!(e.r_cg, 15);
+    }
+
+    #[test]
+    fn default_converged_is_last() {
+        let mut h = RunHistory::new("x");
+        h.push(rec(1, 10, 0.5));
+        h.push(rec(2, 20, 0.6));
+        assert_eq!(h.rounds_cg(), 2);
+    }
+}

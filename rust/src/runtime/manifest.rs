@@ -1,0 +1,249 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and the
+//! Rust runtime.  Loaded from `artifacts/manifest.json`; every executable's
+//! I/O signature is validated against it before compilation so shape drift
+//! between the two layers fails fast with a useful error.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::kge::{Hyper, Method};
+use crate::util::json::Json;
+
+/// Roles an artifact can play (mirrors aot.py).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Role {
+    Train,
+    TrainEpoch,
+    Eval,
+    Change,
+    TrainKd,
+    TrainKdEpoch,
+}
+
+impl Role {
+    fn parse(s: &str) -> Result<Role> {
+        Ok(match s {
+            "train" => Role::Train,
+            "train_epoch" => Role::TrainEpoch,
+            "eval" => Role::Eval,
+            "change" => Role::Change,
+            "train_kd" => Role::TrainKd,
+            "train_kd_epoch" => Role::TrainKdEpoch,
+            other => bail!("unknown artifact role '{other}'"),
+        })
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub file: String,
+    pub role: Role,
+    pub method: Method,
+    pub dim: usize,
+    pub entity_width: usize,
+    pub relation_width: usize,
+    pub num_entities: usize,
+    pub num_relations: usize,
+    pub batch: usize,
+    pub negatives: usize,
+    pub eval_batch: usize,
+    pub n_outputs: usize,
+    /// input signature: (shape, dtype)
+    pub inputs: Vec<(Vec<usize>, String)>,
+    /// KD artifacts: the low (transport) dimension
+    pub kd_dim: Option<usize>,
+    pub kd_entity_width: Option<usize>,
+    pub kd_relation_width: Option<usize>,
+    /// epoch artifacts: scan iterations fused per call
+    pub scan_steps: Option<usize>,
+}
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub artifacts: Vec<ArtifactMeta>,
+    pub hyper: Hyper,
+    pub num_entities: usize,
+    pub num_relations: usize,
+    pub batch: usize,
+    pub negatives: usize,
+    pub eval_batch: usize,
+    pub sparsity: f64,
+    pub sync_interval: usize,
+    pub fedepl_dim: usize,
+    pub kd_dim: usize,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        let j = Json::parse(&text).context("parsing manifest.json")?;
+        let cfg = j.req("config")?;
+        let num = |k: &str| -> Result<f64> {
+            cfg.req(k)?
+                .as_f64()
+                .ok_or_else(|| anyhow::anyhow!("config.{k} is not a number"))
+        };
+        let hyper = Hyper {
+            dim: num("dim")? as usize,
+            gamma: num("gamma")? as f32,
+            epsilon: num("epsilon")? as f32,
+            adv_temperature: num("adv_temperature")? as f32,
+            learning_rate: num("learning_rate")? as f32,
+            adam_beta1: num("adam_beta1")? as f32,
+            adam_beta2: num("adam_beta2")? as f32,
+            adam_eps: num("adam_eps")? as f32,
+            complex_reg: num("complex_reg")? as f32,
+        };
+
+        let mut artifacts = Vec::new();
+        for a in j.req("artifacts")?.as_arr().unwrap_or(&[]) {
+            let s = |k: &str| -> Result<String> {
+                Ok(a.req(k)?
+                    .as_str()
+                    .ok_or_else(|| anyhow::anyhow!("artifact.{k} not a string"))?
+                    .to_string())
+            };
+            let n = |k: &str| -> Result<usize> {
+                a.req(k)?
+                    .as_usize()
+                    .ok_or_else(|| anyhow::anyhow!("artifact.{k} not a number"))
+            };
+            let mut inputs = Vec::new();
+            for spec in a.req("inputs")?.as_arr().unwrap_or(&[]) {
+                let pair = spec.as_arr().context("input spec not a pair")?;
+                let shape: Vec<usize> = pair[0]
+                    .as_arr()
+                    .context("input shape not an array")?
+                    .iter()
+                    .filter_map(|d| d.as_usize())
+                    .collect();
+                let dtype = pair[1].as_str().unwrap_or("float32").to_string();
+                inputs.push((shape, dtype));
+            }
+            artifacts.push(ArtifactMeta {
+                name: s("name")?,
+                file: s("file")?,
+                role: Role::parse(&s("role")?)?,
+                method: Method::parse(&s("method")?)?,
+                dim: n("dim")?,
+                entity_width: n("entity_width")?,
+                relation_width: n("relation_width")?,
+                num_entities: n("num_entities")?,
+                num_relations: n("num_relations")?,
+                batch: n("batch")?,
+                negatives: n("negatives")?,
+                eval_batch: n("eval_batch")?,
+                n_outputs: n("n_outputs")?,
+                inputs,
+                kd_dim: a.get("kd_dim").and_then(|v| v.as_usize()),
+                kd_entity_width: a.get("kd_entity_width").and_then(|v| v.as_usize()),
+                kd_relation_width: a.get("kd_relation_width").and_then(|v| v.as_usize()),
+                scan_steps: a.get("scan_steps").and_then(|v| v.as_usize()),
+            });
+        }
+
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            artifacts,
+            hyper,
+            num_entities: num("num_entities")? as usize,
+            num_relations: num("num_relations")? as usize,
+            batch: num("batch")? as usize,
+            negatives: num("negatives")? as usize,
+            eval_batch: num("eval_batch")? as usize,
+            sparsity: num("sparsity")?,
+            sync_interval: num("sync_interval")? as usize,
+            fedepl_dim: j.req("fedepl_dim")?.as_usize().unwrap_or(0),
+            kd_dim: j.req("kd_dim")?.as_usize().unwrap_or(0),
+        })
+    }
+
+    /// Find the artifact for (role, method, dim).
+    pub fn find(&self, role: Role, method: Method, dim: usize) -> Result<&ArtifactMeta> {
+        self.artifacts
+            .iter()
+            .find(|a| a.role == role && a.method == method && a.dim == dim)
+            .ok_or_else(|| {
+                anyhow::anyhow!(
+                    "no artifact for role={role:?} method={} dim={dim}; \
+                     rebuild with `make artifacts` (have: {})",
+                    method.name(),
+                    self.artifacts
+                        .iter()
+                        .map(|a| a.name.as_str())
+                        .collect::<Vec<_>>()
+                        .join(", ")
+                )
+            })
+    }
+
+    pub fn hlo_path(&self, meta: &ArtifactMeta) -> PathBuf {
+        self.dir.join(&meta.file)
+    }
+
+    /// Hyper-parameters at a non-base dimension (FedEPL / KD variants).
+    pub fn hyper_at_dim(&self, dim: usize) -> Hyper {
+        Hyper { dim, ..self.hyper.clone() }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> PathBuf {
+        PathBuf::from(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts"))
+    }
+
+    #[test]
+    fn loads_real_manifest_when_present() {
+        let dir = artifacts_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let m = Manifest::load(&dir).unwrap();
+        assert!(m.artifacts.len() >= 9);
+        assert_eq!(m.hyper.dim, 64);
+        // base-dim train/eval/change for all three methods
+        for method in Method::ALL {
+            for role in [Role::Train, Role::Eval, Role::Change] {
+                let a = m.find(role, method, m.hyper.dim).unwrap();
+                assert_eq!(a.num_entities, m.num_entities);
+                assert!(dir.join(&a.file).exists(), "{} missing", a.file);
+            }
+            // fedepl variants for train/eval
+            m.find(Role::Train, method, m.fedepl_dim).unwrap();
+            m.find(Role::Eval, method, m.fedepl_dim).unwrap();
+        }
+        // KD for transe & rotate only
+        assert!(m.find(Role::TrainKd, Method::TransE, m.hyper.dim).is_ok());
+        assert!(m.find(Role::TrainKd, Method::ComplEx, m.hyper.dim).is_err());
+    }
+
+    #[test]
+    fn missing_dir_is_helpful_error() {
+        let err = Manifest::load(Path::new("/nonexistent")).unwrap_err();
+        assert!(format!("{err:#}").contains("make artifacts"));
+    }
+
+    #[test]
+    fn train_signature_shape() {
+        let dir = artifacts_dir();
+        if !dir.join("manifest.json").exists() {
+            return;
+        }
+        let m = Manifest::load(&dir).unwrap();
+        let a = m.find(Role::Train, Method::TransE, 64).unwrap();
+        assert_eq!(a.inputs.len(), 11);
+        assert_eq!(a.inputs[0].0, vec![m.num_entities, 64]);
+        assert_eq!(a.inputs[7].0, vec![m.batch, 3]);
+        assert_eq!(a.inputs[7].1, "int32");
+        assert_eq!(a.n_outputs, 7);
+    }
+}

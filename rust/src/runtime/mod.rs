@@ -1,0 +1,10 @@
+//! PJRT runtime: manifest loading, artifact compilation, typed execution.
+//! See `/opt/xla-example/load_hlo` for the reference wiring this follows.
+
+pub mod manifest;
+pub mod pjrt;
+
+pub use manifest::{ArtifactMeta, Manifest, Role};
+pub use pjrt::{
+    lit_f32, lit_i32, lit_scalar_f32, read_f32_into, scalar_f32, to_vec_f32, write_f32, Runtime,
+};

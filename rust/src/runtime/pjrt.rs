@@ -1,0 +1,161 @@
+//! PJRT runtime: load AOT artifacts (HLO text), compile once per process,
+//! execute from the L3 hot path.
+//!
+//! Pattern adapted from /opt/xla-example/load_hlo: `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `client.compile` → `execute`.
+//! Executables are cached by artifact name; outputs (a single tuple buffer,
+//! PJRT does not untuple) are decomposed into per-output `Literal`s which
+//! can be fed straight back as the next step's inputs — table state never
+//! needs a host detour except where the federated protocol reads it.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::Path;
+use std::rc::Rc;
+
+use anyhow::{Context, Result};
+
+use super::manifest::{ArtifactMeta, Manifest};
+
+pub struct Runtime {
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+    cache: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client and load the manifest from `dir`.
+    pub fn load(dir: &Path) -> Result<Rc<Runtime>> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        crate::info!(
+            "runtime: platform={} devices={} artifacts={}",
+            client.platform_name(),
+            client.device_count(),
+            manifest.artifacts.len()
+        );
+        Ok(Rc::new(Runtime {
+            client,
+            manifest,
+            cache: RefCell::new(HashMap::new()),
+        }))
+    }
+
+    /// Default artifact directory: `$FEDS_ARTIFACTS` or `./artifacts`.
+    pub fn load_default() -> Result<Rc<Runtime>> {
+        let dir = std::env::var("FEDS_ARTIFACTS").unwrap_or_else(|_| "artifacts".to_string());
+        Self::load(Path::new(&dir))
+    }
+
+    /// Compile (or fetch the cached) executable for an artifact.
+    pub fn executable(&self, meta: &ArtifactMeta) -> Result<Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(e) = self.cache.borrow().get(&meta.name) {
+            return Ok(e.clone());
+        }
+        let path = self.manifest.hlo_path(meta);
+        let t0 = std::time::Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 artifact path")?,
+        )
+        .with_context(|| format!("parsing HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = Rc::new(
+            self.client
+                .compile(&comp)
+                .with_context(|| format!("compiling artifact {}", meta.name))?,
+        );
+        crate::debug!("compiled {} in {:.2}s", meta.name, t0.elapsed().as_secs_f64());
+        self.cache.borrow_mut().insert(meta.name.clone(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Execute an artifact with `Literal` inputs; returns the decomposed
+    /// output tuple (n_outputs literals).
+    pub fn execute(&self, meta: &ArtifactMeta, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        self.execute_impl(meta, inputs)
+    }
+
+    /// Like `execute`, but borrowing the inputs (avoids moving state
+    /// literals on the training hot path).
+    pub fn execute_refs(
+        &self,
+        meta: &ArtifactMeta,
+        inputs: &[&xla::Literal],
+    ) -> Result<Vec<xla::Literal>> {
+        self.execute_impl(meta, inputs)
+    }
+
+    fn execute_impl<L: std::borrow::Borrow<xla::Literal>>(
+        &self,
+        meta: &ArtifactMeta,
+        inputs: &[L],
+    ) -> Result<Vec<xla::Literal>> {
+        anyhow::ensure!(
+            inputs.len() == meta.inputs.len(),
+            "artifact {} expects {} inputs, got {}",
+            meta.name,
+            meta.inputs.len(),
+            inputs.len()
+        );
+        let exe = self.executable(meta)?;
+        let out = exe
+            .execute::<L>(inputs)
+            .with_context(|| format!("executing {}", meta.name))?;
+        let tuple = out[0][0]
+            .to_literal_sync()
+            .context("fetching output tuple")?;
+        let parts = tuple.to_tuple().context("decomposing output tuple")?;
+        anyhow::ensure!(
+            parts.len() == meta.n_outputs,
+            "artifact {} produced {} outputs, manifest says {}",
+            meta.name,
+            parts.len(),
+            meta.n_outputs
+        );
+        Ok(parts)
+    }
+}
+
+// --- Literal helpers ---------------------------------------------------------
+
+/// f32 literal with the given dims.
+pub fn lit_f32(data: &[f32], dims: &[i64]) -> Result<xla::Literal> {
+    let n: i64 = dims.iter().product();
+    anyhow::ensure!(n as usize == data.len(), "lit_f32: {dims:?} vs len {}", data.len());
+    Ok(xla::Literal::vec1(data).reshape(dims)?)
+}
+
+/// i32 literal with the given dims.
+pub fn lit_i32(data: &[i32], dims: &[i64]) -> Result<xla::Literal> {
+    let n: i64 = dims.iter().product();
+    anyhow::ensure!(n as usize == data.len(), "lit_i32: {dims:?} vs len {}", data.len());
+    Ok(xla::Literal::vec1(data).reshape(dims)?)
+}
+
+pub fn lit_scalar_f32(v: f32) -> xla::Literal {
+    xla::Literal::scalar(v)
+}
+
+/// Read a literal's f32 payload.
+pub fn to_vec_f32(lit: &xla::Literal) -> Result<Vec<f32>> {
+    Ok(lit.to_vec::<f32>()?)
+}
+
+/// Read a scalar f32 literal.
+pub fn scalar_f32(lit: &xla::Literal) -> Result<f32> {
+    Ok(lit.get_first_element::<f32>()?)
+}
+
+/// Overwrite a literal's f32 payload in place (shape unchanged).
+pub fn write_f32(lit: &mut xla::Literal, data: &[f32]) -> Result<()> {
+    anyhow::ensure!(lit.element_count() == data.len(), "write_f32 size mismatch");
+    lit.copy_raw_from(data)?;
+    Ok(())
+}
+
+/// Read a literal's f32 payload into an existing buffer.
+pub fn read_f32_into(lit: &xla::Literal, out: &mut [f32]) -> Result<()> {
+    anyhow::ensure!(lit.element_count() == out.len(), "read_f32 size mismatch");
+    lit.copy_raw_to(out)?;
+    Ok(())
+}

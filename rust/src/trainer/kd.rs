@@ -1,0 +1,251 @@
+//! `LocalTrainer` for the FedE-KD baseline (paper Appendix VI-A): each
+//! client co-trains a high-dimensional model (kept local, used for
+//! evaluation) and a low-dimensional model (the transport representation)
+//! with mutual distillation, via the `train_kd_*` artifact.
+//!
+//! The trait's entity-row accessors operate on the **low** table — that is
+//! what FedE-KD uploads/downloads — so the dense federated loop works
+//! unchanged and the parameter accounting automatically reflects the
+//! reduced transport width.
+
+use std::rc::Rc;
+
+use anyhow::Result;
+
+use crate::data::dataset::{Batch, EvalBatch};
+use crate::kge::{Method, Table};
+use crate::runtime::{
+    lit_f32, lit_i32, lit_scalar_f32, read_f32_into, scalar_f32, to_vec_f32, write_f32,
+    ArtifactMeta, Role, Runtime,
+};
+use crate::util::rng::Rng;
+
+use super::LocalTrainer;
+
+pub struct KdXlaTrainer {
+    rt: Rc<Runtime>,
+    method: Method,
+    train_meta: ArtifactMeta,
+    epoch_meta: Option<ArtifactMeta>,
+    eval_meta: ArtifactMeta,
+    /// [ent_h, rel_h, ent_h_m, ent_h_v, rel_h_m, rel_h_v,
+    ///  ent_l, rel_l, ent_l_m, ent_l_v, rel_l_m, rel_l_v]
+    state: Vec<xla::Literal>,
+    step: u64,
+    num_entities: usize,
+    lo_width: usize,
+    host_lo: Vec<f32>,
+    host_valid: bool,
+    host_dirty: bool,
+}
+
+impl KdXlaTrainer {
+    pub fn new(rt: Rc<Runtime>, method: Method, rng: &mut Rng) -> Result<Self> {
+        let m = &rt.manifest;
+        let train_meta = m.find(Role::TrainKd, method, m.hyper.dim)?.clone();
+        let epoch_meta = m.find(Role::TrainKdEpoch, method, m.hyper.dim).ok().cloned();
+        let eval_meta = m.find(Role::Eval, method, m.hyper.dim)?.clone();
+        let kd_dim = train_meta
+            .kd_dim
+            .ok_or_else(|| anyhow::anyhow!("KD artifact missing kd_dim"))?;
+        let we_h = train_meta.entity_width;
+        let wr_h = train_meta.relation_width;
+        let we_l = train_meta
+            .kd_entity_width
+            .unwrap_or_else(|| method.entity_width(kd_dim));
+        let wr_l = train_meta
+            .kd_relation_width
+            .unwrap_or_else(|| method.relation_width(kd_dim));
+        let (e, r) = (m.num_entities, m.num_relations);
+        let hyper_h = m.hyper.clone();
+        let hyper_l = m.hyper_at_dim(kd_dim);
+
+        let ent_h = Table::init_uniform(e, we_h, hyper_h.embedding_range(), rng);
+        let rel_h = Table::init_uniform(r, wr_h, hyper_h.embedding_range(), rng);
+        let ent_l = Table::init_uniform(e, we_l, hyper_l.embedding_range(), rng);
+        let rel_l = Table::init_uniform(r, wr_l, hyper_l.embedding_range(), rng);
+
+        let z = |rows: usize, w: usize| lit_f32(&vec![0.0; rows * w], &[rows as i64, w as i64]);
+        let state = vec![
+            lit_f32(&ent_h.data, &[e as i64, we_h as i64])?,
+            lit_f32(&rel_h.data, &[r as i64, wr_h as i64])?,
+            z(e, we_h)?,
+            z(e, we_h)?,
+            z(r, wr_h)?,
+            z(r, wr_h)?,
+            lit_f32(&ent_l.data, &[e as i64, we_l as i64])?,
+            lit_f32(&rel_l.data, &[r as i64, wr_l as i64])?,
+            z(e, we_l)?,
+            z(e, we_l)?,
+            z(r, wr_l)?,
+            z(r, wr_l)?,
+        ];
+        Ok(Self {
+            rt,
+            method,
+            train_meta,
+            epoch_meta,
+            eval_meta,
+            state,
+            step: 0,
+            num_entities: e,
+            lo_width: we_l,
+            host_lo: vec![0.0; e * we_l],
+            host_valid: false,
+            host_dirty: false,
+        })
+    }
+
+    fn flush_host(&mut self) -> Result<()> {
+        if self.host_dirty {
+            write_f32(&mut self.state[6], &self.host_lo)?;
+            self.host_dirty = false;
+        }
+        Ok(())
+    }
+
+    fn ensure_host(&mut self) -> Result<()> {
+        if !self.host_valid {
+            read_f32_into(&self.state[6], &mut self.host_lo)?;
+            self.host_valid = true;
+        }
+        Ok(())
+    }
+}
+
+impl LocalTrainer for KdXlaTrainer {
+    fn method(&self) -> Method {
+        self.method
+    }
+
+    /// Transport width: the low-dimensional table's row width.
+    fn entity_width(&self) -> usize {
+        self.lo_width
+    }
+
+    fn num_entities(&self) -> usize {
+        self.num_entities
+    }
+
+    fn eval_batch_size(&self) -> usize {
+        self.eval_meta.eval_batch
+    }
+
+    fn train_batch(&mut self, batch: &Batch) -> Result<f32> {
+        self.flush_host()?;
+        self.step += 1;
+        let b = batch.batch_size as i64;
+        let n = batch.negatives as i64;
+        let step_lit = lit_scalar_f32(self.step as f32);
+        let pos = lit_i32(&batch.pos, &[b, 3])?;
+        let neg = lit_i32(&batch.neg, &[b, n])?;
+        let nih = lit_f32(&batch.neg_is_head, &[b])?;
+        let mask = lit_f32(&batch.mask, &[b])?;
+        let mut inputs: Vec<&xla::Literal> = self.state.iter().collect();
+        inputs.extend([&step_lit, &pos, &neg, &nih, &mask]);
+        let mut out = self.rt.execute_refs(&self.train_meta, &inputs)?;
+        let loss = scalar_f32(&out[12])?;
+        out.truncate(12);
+        self.state = out;
+        self.host_valid = false;
+        Ok(loss)
+    }
+
+    /// Scan-fused KD local training (see `XlaTrainer::train_batches`).
+    fn train_batches(&mut self, batches: &[Batch]) -> Result<f32> {
+        let Some(meta) = self.epoch_meta.clone() else {
+            let mut total = 0.0;
+            for b in batches {
+                total += self.train_batch(b)?;
+            }
+            return Ok(if batches.is_empty() { 0.0 } else { total / batches.len() as f32 });
+        };
+        if batches.is_empty() {
+            return Ok(0.0);
+        }
+        let s = meta.scan_steps.unwrap_or(1);
+        let b = meta.batch;
+        let n = meta.negatives;
+        self.flush_host()?;
+        let mut loss_sum = 0.0f64;
+        let mut chunks = 0usize;
+        for chunk in batches.chunks(s) {
+            let mut pos = vec![0i32; s * b * 3];
+            let mut neg = vec![0i32; s * b * n];
+            let mut nih = vec![0f32; s * b];
+            let mut mask = vec![0f32; s * b];
+            for (i, batch) in chunk.iter().enumerate() {
+                anyhow::ensure!(
+                    batch.batch_size == b && batch.negatives == n,
+                    "batch shape mismatch vs KD epoch artifact"
+                );
+                pos[i * b * 3..(i + 1) * b * 3].copy_from_slice(&batch.pos);
+                neg[i * b * n..(i + 1) * b * n].copy_from_slice(&batch.neg);
+                nih[i * b..(i + 1) * b].copy_from_slice(&batch.neg_is_head);
+                mask[i * b..(i + 1) * b].copy_from_slice(&batch.mask);
+            }
+            let (si, bi, ni) = (s as i64, b as i64, n as i64);
+            let step_lit = lit_scalar_f32(self.step as f32);
+            let pos_l = lit_i32(&pos, &[si, bi, 3])?;
+            let neg_l = lit_i32(&neg, &[si, bi, ni])?;
+            let nih_l = lit_f32(&nih, &[si, bi])?;
+            let mask_l = lit_f32(&mask, &[si, bi])?;
+            let mut inputs: Vec<&xla::Literal> = self.state.iter().collect();
+            inputs.extend([&step_lit, &pos_l, &neg_l, &nih_l, &mask_l]);
+            let mut out = self.rt.execute_refs(&meta, &inputs)?;
+            let steps_done = scalar_f32(&out[13])?;
+            loss_sum += scalar_f32(&out[12])? as f64;
+            chunks += 1;
+            out.truncate(12);
+            self.state = out;
+            self.step += steps_done as u64;
+        }
+        self.host_valid = false;
+        Ok((loss_sum / chunks as f64) as f32)
+    }
+
+    /// Evaluation uses the HIGH-dimensional model (the client's best local
+    /// predictor), matching Appendix VI-A.
+    fn eval_ranks(&mut self, eb: &EvalBatch) -> Result<Vec<f32>> {
+        let q = eb.eval_batch as i64;
+        let e = self.num_entities as i64;
+        let inputs = [
+            &self.state[0],
+            &self.state[1],
+            &lit_i32(&eb.src, &[q])?,
+            &lit_i32(&eb.rel, &[q])?,
+            &lit_i32(&eb.truth, &[q])?,
+            &lit_f32(&eb.pred_head, &[q])?,
+            &lit_f32(&eb.filter, &[q, e])?,
+        ];
+        let out = self.rt.execute_refs(&self.eval_meta, &inputs)?;
+        to_vec_f32(&out[0])
+    }
+
+    fn get_entity_rows(&mut self, ids: &[u32]) -> Result<Vec<f32>> {
+        self.ensure_host()?;
+        let w = self.lo_width;
+        let mut out = Vec::with_capacity(ids.len() * w);
+        for &id in ids {
+            let i = id as usize;
+            out.extend_from_slice(&self.host_lo[i * w..(i + 1) * w]);
+        }
+        Ok(out)
+    }
+
+    fn set_entity_rows(&mut self, ids: &[u32], rows: &[f32]) -> Result<()> {
+        let w = self.lo_width;
+        anyhow::ensure!(rows.len() == ids.len() * w, "row data size mismatch");
+        self.ensure_host()?;
+        for (k, &id) in ids.iter().enumerate() {
+            let i = id as usize;
+            self.host_lo[i * w..(i + 1) * w].copy_from_slice(&rows[k * w..(k + 1) * w]);
+        }
+        self.host_dirty = true;
+        Ok(())
+    }
+
+    fn change_scores(&mut self, _ids: &[u32], _hist: &Table) -> Result<Vec<f32>> {
+        anyhow::bail!("FedE-KD does not sparsify; change scores are undefined")
+    }
+}

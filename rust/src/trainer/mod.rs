@@ -1,0 +1,115 @@
+//! Local-training abstraction: the federated layer drives a `LocalTrainer`
+//! without knowing whether steps run on the PJRT runtime (production path,
+//! `XlaTrainer`) or the pure-Rust oracle (`NativeTrainer`, used for
+//! artifact-free tests and numerics cross-checks).
+
+pub mod kd;
+pub mod native;
+pub mod xla;
+
+use anyhow::Result;
+
+use crate::data::dataset::{Batch, EvalBatch, EvalSet, FilterIndex};
+use crate::kge::{Method, Table};
+use crate::metrics::RankMetrics;
+
+pub use kd::KdXlaTrainer;
+pub use native::NativeTrainer;
+pub use xla::XlaTrainer;
+
+pub trait LocalTrainer {
+    fn method(&self) -> Method;
+    fn entity_width(&self) -> usize;
+    fn num_entities(&self) -> usize;
+    /// Required eval-batch row count (XLA artifacts have a fixed shape).
+    fn eval_batch_size(&self) -> usize;
+
+    /// One SGD step on a padded batch; returns the loss.
+    fn train_batch(&mut self, batch: &Batch) -> Result<f32>;
+
+    /// A whole local-training phase.  Default: loop over `train_batch`.
+    /// The XLA trainers override this with the scan-fused `train_epoch`
+    /// artifact (one PJRT call per `scan_steps` batches — the §Perf
+    /// optimization), with bit-identical semantics.
+    fn train_batches(&mut self, batches: &[Batch]) -> Result<f32> {
+        let mut total = 0.0;
+        for b in batches {
+            total += self.train_batch(b)?;
+        }
+        Ok(if batches.is_empty() { 0.0 } else { total / batches.len() as f32 })
+    }
+
+    /// Filtered ranks for a padded eval batch (only the first `eb.len`
+    /// entries are meaningful).
+    fn eval_ranks(&mut self, eb: &EvalBatch) -> Result<Vec<f32>>;
+
+    /// Gather entity rows (concatenated) for the given global ids.
+    fn get_entity_rows(&mut self, ids: &[u32]) -> Result<Vec<f32>>;
+
+    /// Overwrite entity rows for the given global ids.
+    fn set_entity_rows(&mut self, ids: &[u32], rows: &[f32]) -> Result<()>;
+
+    /// Eq. 1 change scores (1 − cosine vs. the history table) for `ids`.
+    fn change_scores(&mut self, ids: &[u32], hist: &Table) -> Result<Vec<f32>>;
+}
+
+/// Evaluate a trainer over a full query set; returns filtered-rank metrics.
+pub fn evaluate(
+    trainer: &mut dyn LocalTrainer,
+    eval_set: &EvalSet,
+    filters: &FilterIndex,
+) -> Result<RankMetrics> {
+    let mut all_ranks = Vec::with_capacity(eval_set.len());
+    for eb in eval_set.batches(trainer.eval_batch_size(), filters) {
+        let ranks = trainer.eval_ranks(&eb)?;
+        all_ranks.extend_from_slice(&ranks[..eb.len.min(ranks.len())]);
+    }
+    Ok(RankMetrics::from_ranks(&all_ranks))
+}
+
+/// Train one epoch (all batches); returns the mean loss.
+pub fn train_epoch(
+    trainer: &mut dyn LocalTrainer,
+    batches: impl Iterator<Item = Batch>,
+) -> Result<f32> {
+    let mut total = 0.0;
+    let mut n = 0;
+    for batch in batches {
+        total += trainer.train_batch(&batch)?;
+        n += 1;
+    }
+    Ok(if n == 0 { 0.0 } else { total / n as f32 })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::dataset::BatchIter;
+    use crate::data::Triple;
+    use crate::kge::Hyper;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn evaluate_and_train_epoch_with_native() {
+        let mut rng = Rng::new(3);
+        let hyper = Hyper { dim: 8, ..Default::default() };
+        let mut t = NativeTrainer::new(Method::TransE, hyper, 64, 4, 16, &mut rng);
+        let triples: Vec<Triple> = (0..32)
+            .map(|i| Triple::new(i % 60, (i % 4) as u32, (i + 1) % 60))
+            .collect();
+        let ents: Vec<u32> = (0..64).collect();
+        let mut r2 = rng.fork(1);
+        let loss = train_epoch(
+            &mut t,
+            BatchIter::new(&triples, &ents, 8, 4, &mut r2),
+        )
+        .unwrap();
+        assert!(loss.is_finite() && loss > 0.0);
+
+        let filters = FilterIndex::build(triples.iter());
+        let es = EvalSet::new(&triples, 64);
+        let m = evaluate(&mut t, &es, &filters).unwrap();
+        assert_eq!(m.n, 64); // 32 triples × 2 directions
+        assert!(m.mrr > 0.0 && m.mrr <= 1.0);
+    }
+}

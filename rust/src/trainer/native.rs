@@ -1,0 +1,157 @@
+//! `LocalTrainer` over the pure-Rust oracle (`kge::native::NativeModel`).
+//! Used for artifact-free protocol tests, numerics cross-checks, and the
+//! SVD+ baseline's constrained local training.
+
+use anyhow::Result;
+
+use crate::data::dataset::{Batch, EvalBatch};
+use crate::kge::native::NativeModel;
+use crate::kge::{Hyper, Method, Table};
+use crate::util::rng::Rng;
+
+use super::LocalTrainer;
+
+pub struct NativeTrainer {
+    pub model: NativeModel,
+    eval_batch: usize,
+}
+
+impl NativeTrainer {
+    pub fn new(
+        method: Method,
+        hyper: Hyper,
+        num_entities: usize,
+        num_relations: usize,
+        eval_batch: usize,
+        rng: &mut Rng,
+    ) -> Self {
+        Self {
+            model: NativeModel::new(method, hyper, num_entities, num_relations, rng),
+            eval_batch,
+        }
+    }
+}
+
+impl LocalTrainer for NativeTrainer {
+    fn method(&self) -> Method {
+        self.model.method
+    }
+
+    fn entity_width(&self) -> usize {
+        self.model.ent.width
+    }
+
+    fn num_entities(&self) -> usize {
+        self.model.ent.rows
+    }
+
+    fn eval_batch_size(&self) -> usize {
+        self.eval_batch
+    }
+
+    fn train_batch(&mut self, batch: &Batch) -> Result<f32> {
+        Ok(self.model.train_batch(batch))
+    }
+
+    fn eval_ranks(&mut self, eb: &EvalBatch) -> Result<Vec<f32>> {
+        Ok(self.model.eval_ranks(eb))
+    }
+
+    fn get_entity_rows(&mut self, ids: &[u32]) -> Result<Vec<f32>> {
+        let w = self.model.ent.width;
+        let mut out = Vec::with_capacity(ids.len() * w);
+        for &id in ids {
+            out.extend_from_slice(self.model.ent.row(id as usize));
+        }
+        Ok(out)
+    }
+
+    fn set_entity_rows(&mut self, ids: &[u32], rows: &[f32]) -> Result<()> {
+        let w = self.model.ent.width;
+        anyhow::ensure!(rows.len() == ids.len() * w, "row data size mismatch");
+        for (i, &id) in ids.iter().enumerate() {
+            self.model.ent.set_row(id as usize, &rows[i * w..(i + 1) * w]);
+        }
+        Ok(())
+    }
+
+    fn change_scores(&mut self, ids: &[u32], hist: &Table) -> Result<Vec<f32>> {
+        anyhow::ensure!(hist.width == self.model.ent.width, "hist width mismatch");
+        Ok(ids
+            .iter()
+            .map(|&id| {
+                crate::linalg::change_score(
+                    self.model.ent.row(id as usize),
+                    hist.row(id as usize),
+                )
+            })
+            .collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn trainer() -> NativeTrainer {
+        let mut rng = Rng::new(1);
+        NativeTrainer::new(
+            Method::RotatE,
+            Hyper { dim: 4, ..Default::default() },
+            16,
+            2,
+            8,
+            &mut rng,
+        )
+    }
+
+    #[test]
+    fn get_set_roundtrip() {
+        let mut t = trainer();
+        let ids = vec![3u32, 7, 11];
+        let rows: Vec<f32> = (0..ids.len() * t.entity_width())
+            .map(|i| i as f32)
+            .collect();
+        t.set_entity_rows(&ids, &rows).unwrap();
+        assert_eq!(t.get_entity_rows(&ids).unwrap(), rows);
+        // untouched row unchanged
+        let other = t.get_entity_rows(&[0]).unwrap();
+        assert_ne!(other[..4], rows[..4]);
+    }
+
+    #[test]
+    fn change_scores_zero_for_identical() {
+        let mut t = trainer();
+        let hist = Table {
+            rows: 16,
+            width: t.entity_width(),
+            data: t.model.ent.data.clone(),
+        };
+        let scores = t.change_scores(&[0, 5, 9], &hist).unwrap();
+        for s in scores {
+            assert!(s.abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn change_scores_positive_after_modification() {
+        let mut t = trainer();
+        let hist = Table {
+            rows: 16,
+            width: t.entity_width(),
+            data: t.model.ent.data.clone(),
+        };
+        let w = t.entity_width();
+        let newrow: Vec<f32> = (0..w).map(|i| (i as f32) - 3.0).collect();
+        t.set_entity_rows(&[5], &newrow).unwrap();
+        let scores = t.change_scores(&[0, 5], &hist).unwrap();
+        assert!(scores[0].abs() < 1e-6);
+        assert!(scores[1] > 1e-4);
+    }
+
+    #[test]
+    fn size_mismatch_errors() {
+        let mut t = trainer();
+        assert!(t.set_entity_rows(&[1, 2], &[0.0; 3]).is_err());
+    }
+}

@@ -1,0 +1,296 @@
+//! `LocalTrainer` over the PJRT runtime — the production path.
+//!
+//! Model state (entity/relation tables + Adam moments) lives as XLA
+//! `Literal`s that round-trip directly between executions; the decomposed
+//! output tuple of step *t* becomes the input of step *t+1* with no host
+//! copy.  A lazily synchronized host mirror of the entity table serves the
+//! federated layer's row reads/writes (once per communication round).
+
+use std::rc::Rc;
+
+use anyhow::Result;
+
+use crate::data::dataset::{Batch, EvalBatch};
+use crate::kge::{Hyper, Method, Table};
+use crate::runtime::{
+    lit_f32, lit_i32, lit_scalar_f32, read_f32_into, scalar_f32, to_vec_f32, write_f32,
+    ArtifactMeta, Role, Runtime,
+};
+use crate::util::rng::Rng;
+
+use super::LocalTrainer;
+
+pub struct XlaTrainer {
+    rt: Rc<Runtime>,
+    method: Method,
+    pub hyper: Hyper,
+    train_meta: ArtifactMeta,
+    epoch_meta: Option<ArtifactMeta>,
+    eval_meta: ArtifactMeta,
+    change_meta: Option<ArtifactMeta>,
+    /// [ent, rel, ent_m, ent_v, rel_m, rel_v]
+    state: Vec<xla::Literal>,
+    step: u64,
+    num_entities: usize,
+    entity_width: usize,
+    /// lazily synced host mirror of the entity table
+    host_ent: Vec<f32>,
+    host_valid: bool,
+    host_dirty: bool,
+}
+
+impl XlaTrainer {
+    /// Build a trainer at the given dimension (base dim for FedE/FedS,
+    /// `manifest.fedepl_dim` for the FedEPL baseline).
+    pub fn new(rt: Rc<Runtime>, method: Method, dim: usize, rng: &mut Rng) -> Result<Self> {
+        let m = &rt.manifest;
+        let train_meta = m.find(Role::Train, method, dim)?.clone();
+        let epoch_meta = m.find(Role::TrainEpoch, method, dim).ok().cloned();
+        let eval_meta = m.find(Role::Eval, method, dim)?.clone();
+        let change_meta = m.find(Role::Change, method, dim).ok().cloned();
+        let hyper = m.hyper_at_dim(dim);
+        let (e, r) = (m.num_entities, m.num_relations);
+        let we = train_meta.entity_width;
+        let wr = train_meta.relation_width;
+        let range = hyper.embedding_range();
+
+        // same init path as NativeModel (Table::init_uniform with the same
+        // rng stream) so a shared seed gives bit-identical starting tables
+        let ent = Table::init_uniform(e, we, range, rng);
+        let rel = Table::init_uniform(r, wr, range, rng);
+
+        let state = vec![
+            lit_f32(&ent.data, &[e as i64, we as i64])?,
+            lit_f32(&rel.data, &[r as i64, wr as i64])?,
+            lit_f32(&vec![0.0; e * we], &[e as i64, we as i64])?,
+            lit_f32(&vec![0.0; e * we], &[e as i64, we as i64])?,
+            lit_f32(&vec![0.0; r * wr], &[r as i64, wr as i64])?,
+            lit_f32(&vec![0.0; r * wr], &[r as i64, wr as i64])?,
+        ];
+        Ok(Self {
+            rt,
+            method,
+            hyper,
+            train_meta,
+            epoch_meta,
+            eval_meta,
+            change_meta,
+            state,
+            step: 0,
+            num_entities: e,
+            entity_width: we,
+            host_ent: vec![0.0; e * we],
+            host_valid: false,
+            host_dirty: false,
+        })
+    }
+
+    pub fn batch_size(&self) -> usize {
+        self.train_meta.batch
+    }
+
+    pub fn negatives(&self) -> usize {
+        self.train_meta.negatives
+    }
+
+    /// Push pending host-side entity edits back into device state.
+    fn flush_host(&mut self) -> Result<()> {
+        if self.host_dirty {
+            write_f32(&mut self.state[0], &self.host_ent)?;
+            self.host_dirty = false;
+        }
+        Ok(())
+    }
+
+    /// Make the host mirror current.
+    fn ensure_host(&mut self) -> Result<()> {
+        if !self.host_valid {
+            read_f32_into(&self.state[0], &mut self.host_ent)?;
+            self.host_valid = true;
+        }
+        Ok(())
+    }
+}
+
+impl LocalTrainer for XlaTrainer {
+    fn method(&self) -> Method {
+        self.method
+    }
+
+    fn entity_width(&self) -> usize {
+        self.entity_width
+    }
+
+    fn num_entities(&self) -> usize {
+        self.num_entities
+    }
+
+    fn eval_batch_size(&self) -> usize {
+        self.eval_meta.eval_batch
+    }
+
+    fn train_batch(&mut self, batch: &Batch) -> Result<f32> {
+        anyhow::ensure!(
+            batch.batch_size == self.train_meta.batch
+                && batch.negatives == self.train_meta.negatives,
+            "batch shape ({}, {}) does not match artifact ({}, {})",
+            batch.batch_size,
+            batch.negatives,
+            self.train_meta.batch,
+            self.train_meta.negatives
+        );
+        self.flush_host()?;
+        self.step += 1;
+        let b = batch.batch_size as i64;
+        let n = batch.negatives as i64;
+        let inputs = [
+            &self.state[0],
+            &self.state[1],
+            &self.state[2],
+            &self.state[3],
+            &self.state[4],
+            &self.state[5],
+            &lit_scalar_f32(self.step as f32),
+            &lit_i32(&batch.pos, &[b, 3])?,
+            &lit_i32(&batch.neg, &[b, n])?,
+            &lit_f32(&batch.neg_is_head, &[b])?,
+            &lit_f32(&batch.mask, &[b])?,
+        ];
+        let mut out = self.rt.execute_refs(&self.train_meta, &inputs)?;
+        let loss = scalar_f32(&out[6])?;
+        out.truncate(6);
+        self.state = out;
+        self.host_valid = false;
+        Ok(loss)
+    }
+
+    /// Scan-fused local training: batches are stacked into (S, B, …) inputs
+    /// and executed `ceil(n/S)` times, with fully-masked padding steps that
+    /// the artifact skips exactly (tables + Adam step pass through).  State
+    /// tables cross the PJRT boundary once per call instead of once per
+    /// batch — the §Perf hot-path optimization.
+    fn train_batches(&mut self, batches: &[Batch]) -> Result<f32> {
+        let Some(meta) = self.epoch_meta.clone() else {
+            // no epoch artifact at this dim — fall back to single steps
+            let mut total = 0.0;
+            for b in batches {
+                total += self.train_batch(b)?;
+            }
+            return Ok(if batches.is_empty() { 0.0 } else { total / batches.len() as f32 });
+        };
+        if batches.is_empty() {
+            return Ok(0.0);
+        }
+        let s = meta.scan_steps.unwrap_or(1);
+        let b = meta.batch;
+        let n = meta.negatives;
+        self.flush_host()?;
+
+        let mut loss_sum = 0.0f64;
+        let mut loss_chunks = 0usize;
+        for chunk in batches.chunks(s) {
+            for batch in chunk {
+                anyhow::ensure!(
+                    batch.batch_size == b && batch.negatives == n,
+                    "batch shape mismatch vs epoch artifact"
+                );
+            }
+            let mut pos = vec![0i32; s * b * 3];
+            let mut neg = vec![0i32; s * b * n];
+            let mut nih = vec![0f32; s * b];
+            let mut mask = vec![0f32; s * b];
+            for (i, batch) in chunk.iter().enumerate() {
+                pos[i * b * 3..(i + 1) * b * 3].copy_from_slice(&batch.pos);
+                neg[i * b * n..(i + 1) * b * n].copy_from_slice(&batch.neg);
+                nih[i * b..(i + 1) * b].copy_from_slice(&batch.neg_is_head);
+                mask[i * b..(i + 1) * b].copy_from_slice(&batch.mask);
+            }
+            let (si, bi, ni) = (s as i64, b as i64, n as i64);
+            let inputs = [
+                &self.state[0],
+                &self.state[1],
+                &self.state[2],
+                &self.state[3],
+                &self.state[4],
+                &self.state[5],
+                &lit_scalar_f32(self.step as f32),
+                &lit_i32(&pos, &[si, bi, 3])?,
+                &lit_i32(&neg, &[si, bi, ni])?,
+                &lit_f32(&nih, &[si, bi])?,
+                &lit_f32(&mask, &[si, bi])?,
+            ];
+            let mut out = self.rt.execute_refs(&meta, &inputs)?;
+            let steps_done = scalar_f32(&out[7])?;
+            loss_sum += scalar_f32(&out[6])? as f64;
+            loss_chunks += 1;
+            out.truncate(6);
+            self.state = out;
+            self.step += steps_done as u64;
+        }
+        self.host_valid = false;
+        Ok((loss_sum / loss_chunks as f64) as f32)
+    }
+
+    fn eval_ranks(&mut self, eb: &EvalBatch) -> Result<Vec<f32>> {
+        anyhow::ensure!(
+            eb.eval_batch == self.eval_meta.eval_batch,
+            "eval batch {} does not match artifact {}",
+            eb.eval_batch,
+            self.eval_meta.eval_batch
+        );
+        self.flush_host()?;
+        let q = eb.eval_batch as i64;
+        let e = self.num_entities as i64;
+        let inputs = [
+            &self.state[0],
+            &self.state[1],
+            &lit_i32(&eb.src, &[q])?,
+            &lit_i32(&eb.rel, &[q])?,
+            &lit_i32(&eb.truth, &[q])?,
+            &lit_f32(&eb.pred_head, &[q])?,
+            &lit_f32(&eb.filter, &[q, e])?,
+        ];
+        let out = self.rt.execute_refs(&self.eval_meta, &inputs)?;
+        to_vec_f32(&out[0])
+    }
+
+    fn get_entity_rows(&mut self, ids: &[u32]) -> Result<Vec<f32>> {
+        self.ensure_host()?;
+        let w = self.entity_width;
+        let mut out = Vec::with_capacity(ids.len() * w);
+        for &id in ids {
+            let i = id as usize;
+            out.extend_from_slice(&self.host_ent[i * w..(i + 1) * w]);
+        }
+        Ok(out)
+    }
+
+    fn set_entity_rows(&mut self, ids: &[u32], rows: &[f32]) -> Result<()> {
+        let w = self.entity_width;
+        anyhow::ensure!(rows.len() == ids.len() * w, "row data size mismatch");
+        self.ensure_host()?;
+        for (k, &id) in ids.iter().enumerate() {
+            let i = id as usize;
+            self.host_ent[i * w..(i + 1) * w].copy_from_slice(&rows[k * w..(k + 1) * w]);
+        }
+        self.host_dirty = true;
+        Ok(())
+    }
+
+    fn change_scores(&mut self, ids: &[u32], hist: &Table) -> Result<Vec<f32>> {
+        let meta = self
+            .change_meta
+            .as_ref()
+            .ok_or_else(|| anyhow::anyhow!("no change artifact at dim {}", self.hyper.dim))?
+            .clone();
+        anyhow::ensure!(hist.width == self.entity_width, "hist width mismatch");
+        self.flush_host()?;
+        let e = self.num_entities as i64;
+        let w = self.entity_width as i64;
+        let hist_lit = lit_f32(&hist.data, &[e, w])?;
+        let inputs = [&self.state[0], &hist_lit];
+        let out = self.rt.execute_refs(&meta, &inputs)?;
+        let all = to_vec_f32(&out[0])?;
+        Ok(ids.iter().map(|&id| all[id as usize]).collect())
+    }
+}

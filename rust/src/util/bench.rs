@@ -1,0 +1,165 @@
+//! Micro-benchmark harness (criterion is unavailable offline; DESIGN.md §5).
+//!
+//! Usage in a `[[bench]] harness = false` target:
+//! ```ignore
+//! let mut b = Bench::from_env("micro");
+//! b.bench("topk/4096", || topk(&scores, 1024));
+//! b.finish();
+//! ```
+//! Prints criterion-style lines (`name  time: [p10 mean p90]`) and writes a
+//! JSON report under `reports/bench/` for EXPERIMENTS.md §Perf.
+
+use std::hint::black_box;
+use std::time::{Duration, Instant};
+
+use super::json::Json;
+
+pub use std::hint::black_box as bb;
+
+#[derive(Clone, Debug)]
+pub struct Stats {
+    pub iters: u64,
+    pub mean_ns: f64,
+    pub p10_ns: f64,
+    pub p50_ns: f64,
+    pub p90_ns: f64,
+}
+
+pub struct Bench {
+    suite: String,
+    results: Vec<(String, Stats)>,
+    /// Target time per benchmark (seconds).
+    pub target_time: f64,
+    pub warmup_time: f64,
+}
+
+impl Bench {
+    pub fn new(suite: &str) -> Self {
+        Self {
+            suite: suite.to_string(),
+            results: Vec::new(),
+            target_time: 1.0,
+            warmup_time: 0.3,
+        }
+    }
+
+    /// Honors FEDS_BENCH_FAST=1 for CI smoke runs.
+    pub fn from_env(suite: &str) -> Self {
+        let mut b = Self::new(suite);
+        if std::env::var("FEDS_BENCH_FAST").as_deref() == Ok("1") {
+            b.target_time = 0.15;
+            b.warmup_time = 0.05;
+        }
+        b
+    }
+
+    pub fn bench<T, F: FnMut() -> T>(&mut self, name: &str, mut f: F) -> Stats {
+        // warmup + calibration
+        let start = Instant::now();
+        let mut calib_iters = 0u64;
+        while start.elapsed() < Duration::from_secs_f64(self.warmup_time) {
+            black_box(f());
+            calib_iters += 1;
+        }
+        let per_iter = self.warmup_time / calib_iters.max(1) as f64;
+        let batch = ((0.01 / per_iter) as u64).clamp(1, 1_000_000);
+        let samples_target = ((self.target_time / (per_iter * batch as f64)) as usize).clamp(10, 500);
+
+        let mut samples = Vec::with_capacity(samples_target);
+        for _ in 0..samples_target {
+            let t = Instant::now();
+            for _ in 0..batch {
+                black_box(f());
+            }
+            samples.push(t.elapsed().as_nanos() as f64 / batch as f64);
+        }
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+        let pick = |q: f64| samples[((samples.len() - 1) as f64 * q) as usize];
+        let stats = Stats {
+            iters: batch * samples.len() as u64,
+            mean_ns: mean,
+            p10_ns: pick(0.1),
+            p50_ns: pick(0.5),
+            p90_ns: pick(0.9),
+        };
+        println!(
+            "{:<48} time: [{} {} {}]  ({} iters)",
+            format!("{}/{}", self.suite, name),
+            fmt_ns(stats.p10_ns),
+            fmt_ns(stats.mean_ns),
+            fmt_ns(stats.p90_ns),
+            stats.iters
+        );
+        self.results.push((name.to_string(), stats.clone()));
+        stats
+    }
+
+    /// Throughput-style report line for end-to-end benches.
+    pub fn report_value(&mut self, name: &str, value: f64, unit: &str) {
+        println!("{:<48} {:>12.3} {}", format!("{}/{}", self.suite, name), value, unit);
+        self.results.push((
+            name.to_string(),
+            Stats { iters: 1, mean_ns: value, p10_ns: value, p50_ns: value, p90_ns: value },
+        ));
+    }
+
+    pub fn finish(self) {
+        let dir = std::path::Path::new("reports/bench");
+        if std::fs::create_dir_all(dir).is_err() {
+            return;
+        }
+        let entries: Vec<Json> = self
+            .results
+            .iter()
+            .map(|(name, s)| {
+                Json::obj()
+                    .set("name", name.as_str())
+                    .set("mean_ns", s.mean_ns)
+                    .set("p10_ns", s.p10_ns)
+                    .set("p50_ns", s.p50_ns)
+                    .set("p90_ns", s.p90_ns)
+                    .set("iters", s.iters)
+            })
+            .collect();
+        let j = Json::obj()
+            .set("suite", self.suite.as_str())
+            .set("results", Json::Arr(entries));
+        let _ = std::fs::write(dir.join(format!("{}.json", self.suite)), j.to_string_pretty());
+    }
+}
+
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.1} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.2} s", ns / 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let mut b = Bench::new("test");
+        b.target_time = 0.05;
+        b.warmup_time = 0.01;
+        let s = b.bench("noop_sum", || (0..100u64).sum::<u64>());
+        assert!(s.mean_ns > 0.0);
+        assert!(s.iters > 0);
+    }
+
+    #[test]
+    fn fmt_ns_scales() {
+        assert!(fmt_ns(12.0).contains("ns"));
+        assert!(fmt_ns(12_000.0).contains("µs"));
+        assert!(fmt_ns(12_000_000.0).contains("ms"));
+        assert!(fmt_ns(2_000_000_000.0).contains(" s"));
+    }
+}

@@ -1,0 +1,200 @@
+//! Tiny declarative CLI parser (clap is unavailable offline; DESIGN.md §5).
+//!
+//! Supports `--key value`, `--key=value`, boolean `--flag`, positional args
+//! and auto-generated `--help`.
+
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug)]
+pub struct ArgSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub default: Option<String>,
+    pub is_flag: bool,
+}
+
+#[derive(Default)]
+pub struct Cli {
+    pub name: String,
+    pub about: String,
+    specs: Vec<ArgSpec>,
+}
+
+#[derive(Debug, Clone)]
+pub struct Matches {
+    values: BTreeMap<String, String>,
+    flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Cli {
+    pub fn new(name: &str, about: &str) -> Self {
+        Self { name: name.into(), about: about.into(), specs: Vec::new() }
+    }
+
+    pub fn opt(mut self, name: &'static str, default: &str, help: &'static str) -> Self {
+        self.specs.push(ArgSpec {
+            name,
+            help,
+            default: Some(default.to_string()),
+            is_flag: false,
+        });
+        self
+    }
+
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.specs.push(ArgSpec { name, help, default: None, is_flag: true });
+        self
+    }
+
+    pub fn usage(&self) -> String {
+        let mut s = format!("{} — {}\n\nOptions:\n", self.name, self.about);
+        for spec in &self.specs {
+            let tail = if spec.is_flag {
+                String::new()
+            } else {
+                format!(" <val>  (default: {})", spec.default.as_deref().unwrap_or(""))
+            };
+            s.push_str(&format!("  --{}{}\n      {}\n", spec.name, tail, spec.help));
+        }
+        s
+    }
+
+    pub fn parse(&self, args: &[String]) -> Result<Matches, String> {
+        let mut m = Matches {
+            values: BTreeMap::new(),
+            flags: Vec::new(),
+            positional: Vec::new(),
+        };
+        for spec in &self.specs {
+            if let Some(d) = &spec.default {
+                m.values.insert(spec.name.to_string(), d.clone());
+            }
+        }
+        let mut i = 0;
+        while i < args.len() {
+            let a = &args[i];
+            if a == "--help" || a == "-h" {
+                return Err(self.usage());
+            }
+            if let Some(stripped) = a.strip_prefix("--") {
+                let (key, inline) = match stripped.split_once('=') {
+                    Some((k, v)) => (k.to_string(), Some(v.to_string())),
+                    None => (stripped.to_string(), None),
+                };
+                let spec = self
+                    .specs
+                    .iter()
+                    .find(|s| s.name == key)
+                    .ok_or_else(|| format!("unknown option --{key}\n\n{}", self.usage()))?;
+                if spec.is_flag {
+                    if inline.is_some() {
+                        return Err(format!("--{key} is a flag and takes no value"));
+                    }
+                    m.flags.push(key);
+                } else {
+                    let v = match inline {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            args.get(i)
+                                .cloned()
+                                .ok_or_else(|| format!("--{key} requires a value"))?
+                        }
+                    };
+                    m.values.insert(key, v);
+                }
+            } else {
+                m.positional.push(a.clone());
+            }
+            i += 1;
+        }
+        Ok(m)
+    }
+}
+
+impl Matches {
+    pub fn get(&self, key: &str) -> &str {
+        self.values
+            .get(key)
+            .map(|s| s.as_str())
+            .unwrap_or_else(|| panic!("option --{key} was not declared"))
+    }
+
+    pub fn usize(&self, key: &str) -> usize {
+        self.get(key)
+            .parse()
+            .unwrap_or_else(|_| panic!("--{key} expects an integer, got '{}'", self.get(key)))
+    }
+
+    pub fn u64(&self, key: &str) -> u64 {
+        self.get(key)
+            .parse()
+            .unwrap_or_else(|_| panic!("--{key} expects an integer, got '{}'", self.get(key)))
+    }
+
+    pub fn f64(&self, key: &str) -> f64 {
+        self.get(key)
+            .parse()
+            .unwrap_or_else(|_| panic!("--{key} expects a number, got '{}'", self.get(key)))
+    }
+
+    pub fn f32(&self, key: &str) -> f32 {
+        self.f64(key) as f32
+    }
+
+    pub fn flag(&self, key: &str) -> bool {
+        self.flags.iter().any(|f| f == key)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cli() -> Cli {
+        Cli::new("t", "test")
+            .opt("rounds", "100", "rounds")
+            .opt("method", "transe", "kge method")
+            .flag("verbose", "verbose output")
+    }
+
+    fn args(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let m = cli().parse(&args(&[])).unwrap();
+        assert_eq!(m.usize("rounds"), 100);
+        assert_eq!(m.get("method"), "transe");
+        assert!(!m.flag("verbose"));
+    }
+
+    #[test]
+    fn overrides_and_flags() {
+        let m = cli()
+            .parse(&args(&["--rounds", "5", "--verbose", "--method=rotate", "pos1"]))
+            .unwrap();
+        assert_eq!(m.usize("rounds"), 5);
+        assert_eq!(m.get("method"), "rotate");
+        assert!(m.flag("verbose"));
+        assert_eq!(m.positional, vec!["pos1"]);
+    }
+
+    #[test]
+    fn unknown_option_errors() {
+        assert!(cli().parse(&args(&["--nope", "1"])).is_err());
+    }
+
+    #[test]
+    fn missing_value_errors() {
+        assert!(cli().parse(&args(&["--rounds"])).is_err());
+    }
+
+    #[test]
+    fn help_returns_usage() {
+        let err = cli().parse(&args(&["--help"])).unwrap_err();
+        assert!(err.contains("--rounds"));
+    }
+}

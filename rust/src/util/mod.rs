@@ -1,0 +1,10 @@
+//! Shared infrastructure: deterministic RNG, JSON, CLI parsing, logging,
+//! micro-bench harness and property-test helper.  All hand-rolled because the
+//! offline registry lacks rand/serde/clap/criterion/proptest (DESIGN.md §5).
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod logging;
+pub mod prop;
+pub mod rng;

@@ -1,0 +1,75 @@
+//! Property-test helper (proptest is unavailable offline; DESIGN.md §5).
+//!
+//! `check(name, cases, |rng| ...)` runs the closure over `cases` random
+//! seeds; on failure it panics with the failing seed so the case can be
+//! replayed with `FEDS_PROP_SEED=<seed>`.  Setting `FEDS_PROP_CASES`
+//! scales iteration counts globally.
+
+use super::rng::Rng;
+
+pub fn cases(default: usize) -> usize {
+    std::env::var("FEDS_PROP_CASES")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(default)
+}
+
+/// Run `f` for `n` random cases. `f` should panic (assert) on failure.
+pub fn check<F: FnMut(&mut Rng)>(name: &str, n: usize, mut f: F) {
+    if let Ok(s) = std::env::var("FEDS_PROP_SEED") {
+        let seed: u64 = s.parse().expect("FEDS_PROP_SEED must be u64");
+        let mut rng = Rng::new(seed);
+        f(&mut rng);
+        return;
+    }
+    let base = 0xFED5_0000_0000_0000u64 ^ fnv(name);
+    for i in 0..cases(n) {
+        let seed = base.wrapping_add(i as u64);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let mut rng = Rng::new(seed);
+            f(&mut rng);
+        }));
+        if let Err(e) = result {
+            eprintln!(
+                "property '{name}' failed at case {i} (replay with FEDS_PROP_SEED={seed})"
+            );
+            std::panic::resume_unwind(e);
+        }
+    }
+}
+
+fn fnv(s: &str) -> u64 {
+    let mut h = 0xcbf29ce484222325u64;
+    for b in s.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn check_passes_for_true_property() {
+        check("sum_commutes", 20, |rng| {
+            let a = rng.f64();
+            let b = rng.f64();
+            assert_eq!(a + b, b + a);
+        });
+    }
+
+    #[test]
+    #[should_panic]
+    fn check_fails_for_false_property() {
+        check("always_false", 20, |rng| {
+            assert!(rng.f64() < 0.0);
+        });
+    }
+
+    #[test]
+    fn fnv_distinguishes_names() {
+        assert_ne!(fnv("a"), fnv("b"));
+    }
+}

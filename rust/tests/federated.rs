@@ -1,0 +1,206 @@
+//! End-to-end federated runs on the native backend (artifact-free):
+//! protocol correctness, communication accounting, and the paper's headline
+//! qualitative claims at miniature scale.
+
+use feds::data::generator::{generate, GeneratorConfig};
+use feds::data::partition::partition;
+use feds::fed::{comm_ratio, run_federated, Algo, Backend, FedRunConfig};
+use feds::kge::{Hyper, Method};
+
+fn tiny_data(clients: usize, seed: u64) -> feds::data::partition::FedDataset {
+    let kg = generate(&GeneratorConfig {
+        num_entities: 192,
+        num_relations: 12,
+        num_triples: 2400,
+        num_clusters: 4,
+        seed,
+        ..Default::default()
+    });
+    partition(&kg, clients, seed)
+}
+
+fn native_backend(dim: usize) -> Backend {
+    Backend::Native {
+        hyper: Hyper { dim, learning_rate: 5e-3, ..Default::default() },
+        batch: 64,
+        negatives: 16,
+        eval_batch: 32,
+    }
+}
+
+fn base_cfg(algo: Algo, rounds: usize) -> FedRunConfig {
+    FedRunConfig {
+        algo,
+        method: Method::TransE,
+        max_rounds: rounds,
+        local_epochs: 1,
+        eval_every: 2,
+        patience: 3,
+        sparsity: 0.4,
+        sync_interval: 4,
+        eval_cap: 64,
+        seed: 7,
+        svd_cols: 8,
+    }
+}
+
+#[test]
+fn fedep_learns_and_meters() {
+    let data = tiny_data(3, 1);
+    let mut cfg = base_cfg(Algo::FedEP, 24);
+    cfg.eval_every = 4;
+    let out = run_federated(&data, &cfg, &native_backend(16)).unwrap();
+    let h = &out.history;
+    assert!(!h.records.is_empty());
+    // learning happened: clearly above the ~0.028 chance MRR of 192 entities
+    assert!(h.mrr_cg() > 0.05, "MRR {}", h.mrr_cg());
+    // dense accounting: every comm round moves 2 × Σ_c N_c × W params
+    let total_shared: usize = (0..3)
+        .map(|c| data.shared_entities_of(c as u16).len())
+        .sum();
+    let per_round = 2 * total_shared * 16;
+    let comm_rounds = h.records.last().unwrap().round - 1; // comm happens after eval
+    let expect_lo = (comm_rounds.saturating_sub(1)) as u64 * per_round as u64;
+    let got = h.records.last().unwrap().params_cum;
+    assert!(
+        got >= expect_lo && got <= (comm_rounds as u64 + 1) * per_round as u64,
+        "params {got}, per round {per_round}, rounds {comm_rounds}"
+    );
+}
+
+#[test]
+fn feds_transmits_fewer_params_than_fedep() {
+    let data = tiny_data(4, 2);
+    let fedep = run_federated(&data, &base_cfg(Algo::FedEP, 6), &native_backend(16)).unwrap();
+    let feds = run_federated(
+        &data,
+        &base_cfg(Algo::FedS { sync: true }, 6),
+        &native_backend(16),
+    )
+    .unwrap();
+    let p_ep = fedep.history.records.last().unwrap().params_cum;
+    let p_s = feds.history.records.last().unwrap().params_cum;
+    assert!(p_s < p_ep, "FedS {p_s} vs FedEP {p_ep}");
+    // and the measured ratio must not exceed the analytic worst case (Eq. 5)
+    // by more than sign-vector rounding slack
+    let ratio = p_s as f64 / p_ep as f64;
+    let eq5 = feds.eq5_ratio.unwrap();
+    assert!(
+        ratio <= eq5 * 1.10 + 0.02,
+        "measured {ratio:.4} vs Eq.5 worst case {eq5:.4}"
+    );
+}
+
+#[test]
+fn feds_nosync_transmits_even_fewer() {
+    let data = tiny_data(3, 3);
+    let with = run_federated(
+        &data,
+        &base_cfg(Algo::FedS { sync: true }, 6),
+        &native_backend(16),
+    )
+    .unwrap();
+    let without = run_federated(
+        &data,
+        &base_cfg(Algo::FedS { sync: false }, 6),
+        &native_backend(16),
+    )
+    .unwrap();
+    assert!(
+        without.history.records.last().unwrap().params_cum
+            < with.history.records.last().unwrap().params_cum
+    );
+}
+
+#[test]
+fn single_never_communicates() {
+    let data = tiny_data(3, 4);
+    let out = run_federated(&data, &base_cfg(Algo::Single, 4), &native_backend(16)).unwrap();
+    assert_eq!(out.acct.params(), 0);
+    assert_eq!(out.acct.bytes(), 0);
+}
+
+#[test]
+fn fedepl_runs_at_reduced_dim() {
+    let data = tiny_data(3, 5);
+    let out = run_federated(&data, &base_cfg(Algo::FedEPL, 4), &native_backend(16)).unwrap();
+    assert!(out.history.mrr_cg() > 0.0);
+    // reduced dim → dense rounds cheaper than FedEP's
+    let fedep = run_federated(&data, &base_cfg(Algo::FedEP, 4), &native_backend(16)).unwrap();
+    assert!(
+        out.acct.params() < fedep.acct.params(),
+        "FedEPL {} vs FedEP {}",
+        out.acct.params(),
+        fedep.acct.params()
+    );
+}
+
+#[test]
+fn svd_baselines_compress_per_round_but_run() {
+    let data = tiny_data(3, 6);
+    for constrained in [false, true] {
+        let out = run_federated(
+            &data,
+            &base_cfg(Algo::FedSvd { constrained }, 4),
+            &native_backend(16),
+        )
+        .unwrap();
+        let fedep =
+            run_federated(&data, &base_cfg(Algo::FedEP, 4), &native_backend(16)).unwrap();
+        assert!(out.history.mrr_cg().is_finite());
+        assert!(
+            out.acct.params() < fedep.acct.params(),
+            "constrained={constrained}: svd {} vs dense {}",
+            out.acct.params(),
+            fedep.acct.params()
+        );
+    }
+}
+
+#[test]
+fn deterministic_given_seed() {
+    let data = tiny_data(3, 7);
+    let cfg = base_cfg(Algo::FedS { sync: true }, 4);
+    let a = run_federated(&data, &cfg, &native_backend(16)).unwrap();
+    let b = run_federated(&data, &cfg, &native_backend(16)).unwrap();
+    assert_eq!(a.acct.params(), b.acct.params());
+    let (ra, rb) = (&a.history.records, &b.history.records);
+    assert_eq!(ra.len(), rb.len());
+    for (x, y) in ra.iter().zip(rb.iter()) {
+        assert_eq!(x.test.mrr, y.test.mrr);
+    }
+}
+
+#[test]
+fn federation_beats_single_on_shared_structure() {
+    // the reason FKGE exists: shared entities benefit from other clients'
+    // training signal. At miniature scale we only require a consistent win.
+    let data = tiny_data(3, 8);
+    let mut cfg = base_cfg(Algo::FedEP, 60);
+    cfg.eval_every = 5;
+    cfg.patience = 5;
+    let fed = run_federated(&data, &cfg, &native_backend(16)).unwrap();
+    cfg.algo = Algo::Single;
+    let single = run_federated(&data, &cfg, &native_backend(16)).unwrap();
+    assert!(
+        fed.history.mrr_cg() > 0.9 * single.history.mrr_cg(),
+        "FedEP {:.4} vs Single {:.4}",
+        fed.history.mrr_cg(),
+        single.history.mrr_cg()
+    );
+}
+
+#[test]
+fn eq5_ratio_reported_for_feds_only() {
+    let data = tiny_data(3, 9);
+    let feds = run_federated(
+        &data,
+        &base_cfg(Algo::FedS { sync: true }, 2),
+        &native_backend(16),
+    )
+    .unwrap();
+    assert!(feds.eq5_ratio.is_some());
+    assert!((feds.eq5_ratio.unwrap() - comm_ratio(0.4, 4, 16)).abs() < 1e-9);
+    let fedep = run_federated(&data, &base_cfg(Algo::FedEP, 2), &native_backend(16)).unwrap();
+    assert!(fedep.eq5_ratio.is_none());
+}

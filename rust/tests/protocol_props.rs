@@ -1,0 +1,236 @@
+//! Property tests of the FedS protocol pieces in combination: server
+//! aggregation conservation, sign/row consistency, Eq. 4 merge algebra,
+//! sync cycle structure, and failure injection on the wire.
+
+use feds::comm::accounting::Accounting;
+use feds::comm::transport::duplex;
+use feds::fed::protocol::{Download, Upload};
+use feds::fed::topk::{select_by_change, select_by_priority, top_k_count};
+use feds::fed::{Server, SyncSchedule};
+use feds::util::prop::check;
+use feds::util::rng::Rng;
+
+/// Random federation: n clients, e entities, random shared lists + uploads.
+fn random_round(
+    rng: &mut Rng,
+) -> (Server, Vec<Vec<u32>>, Vec<Vec<(u32, Vec<f32>)>>, usize) {
+    let e = 8 + rng.usize_below(40);
+    let w = 1 + rng.usize_below(6);
+    let n_clients = 2 + rng.usize_below(4);
+    let shared: Vec<Vec<u32>> = (0..n_clients)
+        .map(|_| (0..e as u32).filter(|_| rng.bool(0.7)).collect())
+        .collect();
+    let mut server = Server::new(e, w, shared.clone());
+    server.begin_round();
+    let mut uploads = Vec::new();
+    for (c, ids) in shared.iter().enumerate() {
+        let mut these = Vec::new();
+        for &id in ids {
+            if rng.bool(0.5) {
+                let row: Vec<f32> = (0..w).map(|_| rng.uniform(-1.0, 1.0)).collect();
+                these.push((id, row));
+            }
+        }
+        let flat_ids: Vec<u32> = these.iter().map(|(i, _)| *i).collect();
+        let flat_rows: Vec<f32> = these.iter().flat_map(|(_, r)| r.clone()).collect();
+        server.receive(c as u16, &flat_ids, &flat_rows);
+        uploads.push(these);
+    }
+    (server, shared, uploads, w)
+}
+
+#[test]
+fn personalized_aggregation_is_sum_of_others() {
+    check("agg_conservation", 40, |rng| {
+        let (server, shared, uploads, w) = random_round(rng);
+        let n_clients = shared.len();
+        let c = rng.usize_below(n_clients);
+        let (sign, rows, prio) = server.feds_download(c as u16, usize::MAX, rng);
+        assert_eq!(sign.len(), shared[c].len());
+        let mut row_idx = 0;
+        for (i, &id) in shared[c].iter().enumerate() {
+            if !sign[i] {
+                continue;
+            }
+            // reference: sum over all *other* clients that uploaded id
+            let mut want = vec![0.0f32; w];
+            let mut count = 0u32;
+            for (cc, these) in uploads.iter().enumerate() {
+                if cc == c {
+                    continue;
+                }
+                if let Some((_, r)) = these.iter().find(|(i2, _)| *i2 == id) {
+                    for j in 0..w {
+                        want[j] += r[j];
+                    }
+                    count += 1;
+                }
+            }
+            assert!(count > 0, "selected entity must have a contributor");
+            assert_eq!(prio[row_idx], count);
+            for j in 0..w {
+                let got = rows[row_idx * w + j];
+                assert!(
+                    (got - want[j]).abs() < 1e-5,
+                    "agg mismatch at entity {id} dim {j}: {got} vs {}",
+                    want[j]
+                );
+            }
+            row_idx += 1;
+        }
+        assert_eq!(rows.len(), row_idx * w);
+    });
+}
+
+#[test]
+fn downstream_never_selects_uncontributed_entities() {
+    check("no_phantom_entities", 40, |rng| {
+        let (server, shared, uploads, _) = random_round(rng);
+        let c = rng.usize_below(shared.len());
+        let k = 1 + rng.usize_below(8);
+        let (sign, _, _) = server.feds_download(c as u16, k, rng);
+        for (i, &id) in shared[c].iter().enumerate() {
+            if sign[i] {
+                let others_uploaded = uploads
+                    .iter()
+                    .enumerate()
+                    .any(|(cc, these)| cc != c && these.iter().any(|(i2, _)| *i2 == id));
+                assert!(others_uploaded, "entity {id} selected without contributors");
+            }
+        }
+        let n_sel = sign.iter().filter(|&&s| s).count();
+        assert!(n_sel <= k);
+    });
+}
+
+#[test]
+fn eq4_merge_is_inclusive_average() {
+    // (A + E)/(1 + P) where A sums P other clients == average over P+1 values
+    check("eq4_average", 30, |rng| {
+        let w = 1 + rng.usize_below(8);
+        let p = 1 + rng.usize_below(5);
+        let own: Vec<f32> = (0..w).map(|_| rng.uniform(-1.0, 1.0)).collect();
+        let others: Vec<Vec<f32>> = (0..p)
+            .map(|_| (0..w).map(|_| rng.uniform(-1.0, 1.0)).collect())
+            .collect();
+        let mut a = vec![0.0f32; w];
+        for o in &others {
+            for j in 0..w {
+                a[j] += o[j];
+            }
+        }
+        for j in 0..w {
+            let merged = (a[j] + own[j]) / (1.0 + p as f32);
+            let mut avg = own[j];
+            for o in &others {
+                avg += o[j];
+            }
+            avg /= (p + 1) as f32;
+            assert!((merged - avg).abs() < 1e-5);
+        }
+    });
+}
+
+#[test]
+fn upstream_selection_consistent_with_k_formula() {
+    check("upstream_k", 40, |rng| {
+        let n = 1 + rng.usize_below(300);
+        let p = rng.f64();
+        let k = top_k_count(n, p);
+        let scores: Vec<f32> = (0..n).map(|_| rng.uniform(0.0, 2.0)).collect();
+        let sel = select_by_change(&scores, k);
+        assert_eq!(sel.len(), k);
+        assert!(k <= n);
+        if p > 0.0 {
+            assert!(k >= 1);
+        }
+    });
+}
+
+#[test]
+fn priority_selection_total_order_property() {
+    check("priority_order", 40, |rng| {
+        let n = 1 + rng.usize_below(100);
+        let prios: Vec<u32> = (0..n).map(|_| rng.u32_below(5)).collect();
+        let k = rng.usize_below(n + 1);
+        let sel = select_by_priority(&prios, k, rng);
+        // sorted by priority descending in the output order
+        for w in sel.windows(2) {
+            assert!(prios[w[0]] >= prios[w[1]]);
+        }
+    });
+}
+
+#[test]
+fn sync_cycles_are_regular_for_any_interval() {
+    check("sync_cycles", 20, |rng| {
+        let s = 1 + rng.usize_below(10);
+        let mut sched = SyncSchedule::new(Some(s));
+        let mut last = 0usize;
+        let mut gaps = Vec::new();
+        for round in 1..=200 {
+            if sched.step(round) {
+                gaps.push(round - last);
+                last = round;
+            }
+        }
+        assert!(!gaps.is_empty());
+        // every gap is exactly s+1 rounds (s sparse + 1 sync)
+        assert!(gaps.iter().all(|&g| g == s + 1), "{gaps:?} for s={s}");
+    });
+}
+
+#[test]
+fn wire_corruption_fails_loudly_not_silently() {
+    check("wire_corruption", 30, |rng| {
+        let up = Upload::Sparse {
+            round: rng.next_u64() as u32,
+            client: 3,
+            sign: (0..40).map(|_| rng.bool(0.5)).collect(),
+            emb: (0..64).map(|_| rng.uniform(-1.0, 1.0)).collect(),
+        };
+        let mut frame = up.encode();
+        // truncation must error
+        let cut = rng.usize_below(frame.len().saturating_sub(1));
+        assert!(Upload::decode(&frame[..cut]).is_err() || cut >= frame.len() - 5);
+        // tag corruption must error
+        frame[0] = 77;
+        assert!(Upload::decode(&frame).is_err());
+    });
+}
+
+#[test]
+fn download_decode_rejects_truncation() {
+    let d = Download::Sparse {
+        round: 1,
+        sign: vec![true; 16],
+        emb: vec![1.0; 32],
+        prio: vec![2; 8],
+    };
+    let frame = d.encode();
+    for cut in [1usize, 5, frame.len() / 2] {
+        assert!(Download::decode(&frame[..cut]).is_err());
+    }
+}
+
+#[test]
+fn transport_metering_matches_frames() {
+    let acct = Accounting::new();
+    let (client, server) = duplex(acct.clone());
+    let mut total_bytes = 0u64;
+    let mut rng = Rng::new(4);
+    for round in 0..10u32 {
+        let up = Upload::Full {
+            round,
+            client: 0,
+            emb: (0..rng.usize_below(100)).map(|_| 1.0f32).collect(),
+        };
+        let frame = up.encode();
+        total_bytes += frame.len() as u64;
+        client.send(frame, up.params()).unwrap();
+        let got = Upload::decode(&server.recv().unwrap()).unwrap();
+        assert_eq!(got, up);
+    }
+    assert_eq!(acct.bytes(), total_bytes);
+    assert_eq!(acct.messages(), 10);
+}

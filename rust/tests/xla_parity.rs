@@ -1,0 +1,295 @@
+//! Integration: the PJRT-executed artifacts must agree with the pure-Rust
+//! oracle step-for-step.  This is the strongest end-to-end correctness
+//! signal in the repo: it exercises the Pallas kernels (L1), the JAX graph
+//! + AOT lowering (L2), the HLO-text interchange, the PJRT runtime, and the
+//! native implementation, and requires them all to produce the same numbers.
+//!
+//! Requires `make artifacts`; tests self-skip when artifacts are missing.
+
+use std::path::Path;
+use std::rc::Rc;
+
+use feds::data::dataset::{BatchIter, EvalSet, FilterIndex};
+use feds::data::generator::{generate, GeneratorConfig};
+use feds::kge::Method;
+use feds::runtime::Runtime;
+use feds::trainer::{evaluate, LocalTrainer, NativeTrainer, XlaTrainer};
+use feds::util::rng::Rng;
+
+fn runtime() -> Option<Rc<Runtime>> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: run `make artifacts` first");
+        return None;
+    }
+    Some(Runtime::load(&dir).expect("runtime load"))
+}
+
+fn max_abs_diff(a: &[f32], b: &[f32]) -> f32 {
+    a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0, f32::max)
+}
+
+fn parity_for(method: Method) {
+    let Some(rt) = runtime() else { return };
+    let m = &rt.manifest;
+    let kg = generate(&GeneratorConfig {
+        num_entities: m.num_entities,
+        num_relations: m.num_relations,
+        num_triples: 4000,
+        seed: 11,
+        ..Default::default()
+    });
+
+    // identical init: both trainers consume the same rng stream
+    let mut rng_x = Rng::new(1234);
+    let mut rng_n = Rng::new(1234);
+    let mut xla_t = XlaTrainer::new(rt.clone(), method, m.hyper.dim, &mut rng_x).unwrap();
+    let mut nat_t = NativeTrainer::new(
+        method,
+        m.hyper.clone(),
+        m.num_entities,
+        m.num_relations,
+        m.eval_batch,
+        &mut rng_n,
+    );
+
+    // run 3 identical training steps
+    let ents: Vec<u32> = (0..m.num_entities as u32).collect();
+    let mut brng_x = Rng::new(777);
+    let mut brng_n = Rng::new(777);
+    let batches_x: Vec<_> = BatchIter::new(&kg.triples[..m.batch * 3], &ents, m.batch, m.negatives, &mut brng_x).collect();
+    let batches_n: Vec<_> = BatchIter::new(&kg.triples[..m.batch * 3], &ents, m.batch, m.negatives, &mut brng_n).collect();
+
+    for (bx, bn) in batches_x.iter().zip(&batches_n) {
+        let lx = xla_t.train_batch(bx).unwrap();
+        let ln = nat_t.train_batch(bn).unwrap();
+        assert!(
+            (lx - ln).abs() < 2e-3 * (1.0 + ln.abs()),
+            "{method:?} loss diverged: xla {lx} vs native {ln}"
+        );
+    }
+
+    // table parity after training
+    let ids: Vec<u32> = (0..64).collect();
+    let rx = xla_t.get_entity_rows(&ids).unwrap();
+    let rn = nat_t.get_entity_rows(&ids).unwrap();
+    let d = max_abs_diff(&rx, &rn);
+    assert!(d < 5e-4, "{method:?} entity tables diverged: max abs diff {d}");
+
+    // eval parity on a subset of test queries
+    let filters = FilterIndex::build(kg.triples.iter());
+    let es = EvalSet::new(&kg.triples[..m.eval_batch], m.num_entities);
+    let mx = evaluate(&mut xla_t, &es, &filters).unwrap();
+    let mn = evaluate(&mut nat_t, &es, &filters).unwrap();
+    assert!(
+        (mx.mrr - mn.mrr).abs() < 0.02 * (1.0 + mn.mrr),
+        "{method:?} eval MRR diverged: xla {} vs native {}",
+        mx.mrr,
+        mn.mrr
+    );
+}
+
+#[test]
+fn parity_transe() {
+    parity_for(Method::TransE);
+}
+
+#[test]
+fn parity_rotate() {
+    parity_for(Method::RotatE);
+}
+
+#[test]
+fn parity_complex() {
+    parity_for(Method::ComplEx);
+}
+
+#[test]
+fn change_scores_parity() {
+    let Some(rt) = runtime() else { return };
+    let m = &rt.manifest;
+    let mut rng = Rng::new(5);
+    let mut xla_t = XlaTrainer::new(rt.clone(), Method::TransE, m.hyper.dim, &mut rng).unwrap();
+
+    // history = perturbed copy of the current table
+    let ids: Vec<u32> = (0..m.num_entities as u32).collect();
+    let cur = xla_t.get_entity_rows(&ids).unwrap();
+    let we = xla_t.entity_width();
+    let mut hist = feds::kge::Table {
+        rows: m.num_entities,
+        width: we,
+        data: cur.clone(),
+    };
+    let mut prng = Rng::new(6);
+    for v in hist.data.iter_mut() {
+        *v += prng.uniform(-0.01, 0.01);
+    }
+
+    let probe: Vec<u32> = (0..200).map(|i| i * 7 % m.num_entities as u32).collect();
+    let got = xla_t.change_scores(&probe, &hist).unwrap();
+    for (k, &id) in probe.iter().enumerate() {
+        let want = feds::linalg::change_score(
+            &cur[id as usize * we..(id as usize + 1) * we],
+            hist.row(id as usize),
+        );
+        assert!(
+            (got[k] - want).abs() < 1e-4,
+            "change score mismatch at {id}: {} vs {want}",
+            got[k]
+        );
+    }
+}
+
+#[test]
+fn xla_set_rows_roundtrip_through_device() {
+    let Some(rt) = runtime() else { return };
+    let m = &rt.manifest;
+    let mut rng = Rng::new(9);
+    let mut t = XlaTrainer::new(rt.clone(), Method::TransE, m.hyper.dim, &mut rng).unwrap();
+    let we = t.entity_width();
+    let ids = vec![10u32, 500, 2000];
+    let rows: Vec<f32> = (0..ids.len() * we).map(|i| i as f32 * 0.01).collect();
+    t.set_entity_rows(&ids, &rows).unwrap();
+
+    // force a device round-trip via a training step, then read back: the
+    // written rows must have gone through the artifact (values will have
+    // moved by at most the Adam step size)
+    let kg = generate(&GeneratorConfig {
+        num_entities: m.num_entities,
+        num_relations: m.num_relations,
+        num_triples: 2000,
+        seed: 2,
+        ..Default::default()
+    });
+    let ents: Vec<u32> = (0..m.num_entities as u32).collect();
+    let mut brng = Rng::new(1);
+    let batch = BatchIter::new(&kg.triples, &ents, m.batch, m.negatives, &mut brng)
+        .next()
+        .unwrap();
+    t.train_batch(&batch).unwrap();
+    let back = t.get_entity_rows(&ids).unwrap();
+    let lr = rt.manifest.hyper.learning_rate;
+    for (a, b) in rows.iter().zip(&back) {
+        assert!((a - b).abs() <= 2.0 * lr + 1e-6, "{a} vs {b}");
+    }
+}
+
+#[test]
+fn epoch_artifact_matches_single_steps() {
+    // the scan-fused train_epoch artifact must be bit-compatible (to f32
+    // tolerance) with the same batches through the single-step artifact,
+    // including the padded-step passthrough.
+    let Some(rt) = runtime() else { return };
+    let m = &rt.manifest;
+    let kg = generate(&GeneratorConfig {
+        num_entities: m.num_entities,
+        num_relations: m.num_relations,
+        num_triples: 3000,
+        seed: 21,
+        ..Default::default()
+    });
+    let ents: Vec<u32> = (0..m.num_entities as u32).collect();
+    for method in [Method::TransE, Method::ComplEx] {
+        let mut rng_a = Rng::new(99);
+        let mut rng_b = Rng::new(99);
+        let mut a = XlaTrainer::new(rt.clone(), method, m.hyper.dim, &mut rng_a).unwrap();
+        let mut b = XlaTrainer::new(rt.clone(), method, m.hyper.dim, &mut rng_b).unwrap();
+
+        let mut brng1 = Rng::new(5);
+        let mut brng2 = Rng::new(5);
+        // 5 batches: not a multiple of scan_steps → exercises padding
+        let batches1: Vec<_> =
+            BatchIter::new(&kg.triples[..m.batch * 5], &ents, m.batch, m.negatives, &mut brng1)
+                .collect();
+        let batches2: Vec<_> =
+            BatchIter::new(&kg.triples[..m.batch * 5], &ents, m.batch, m.negatives, &mut brng2)
+                .collect();
+
+        let loss_fused = a.train_batches(&batches1).unwrap();
+        let mut loss_single = 0.0;
+        for batch in &batches2 {
+            loss_single += b.train_batch(batch).unwrap();
+        }
+        loss_single /= batches2.len() as f32;
+        assert!(
+            (loss_fused - loss_single).abs() < 1e-4 * (1.0 + loss_single.abs()),
+            "{method:?} loss: fused {loss_fused} vs single {loss_single}"
+        );
+
+        let ids: Vec<u32> = (0..256).collect();
+        let ra = a.get_entity_rows(&ids).unwrap();
+        let rb = b.get_entity_rows(&ids).unwrap();
+        let d = max_abs_diff(&ra, &rb);
+        assert!(d < 1e-5, "{method:?} tables diverged: {d}");
+    }
+}
+
+#[test]
+fn kd_trainer_trains_and_evaluates() {
+    // FedE-KD path: dual-dimension co-distillation artifact — loss must be
+    // finite and decreasing, transport rows live at the low width, and the
+    // hi model answers eval queries.
+    let Some(rt) = runtime() else { return };
+    let m = &rt.manifest;
+    let mut rng = Rng::new(77);
+    let mut t = feds::trainer::KdXlaTrainer::new(rt.clone(), Method::TransE, &mut rng).unwrap();
+    assert_eq!(
+        t.entity_width(),
+        Method::TransE.entity_width(m.kd_dim),
+        "transport width must be the KD low dim"
+    );
+    let kg = generate(&GeneratorConfig {
+        num_entities: m.num_entities,
+        num_relations: m.num_relations,
+        num_triples: 4000,
+        seed: 31,
+        ..Default::default()
+    });
+    let ents: Vec<u32> = (0..m.num_entities as u32).collect();
+    let mut brng = Rng::new(8);
+    let batches: Vec<_> =
+        BatchIter::new(&kg.triples, &ents, m.batch, m.negatives, &mut brng)
+            .take(6)
+            .collect();
+    let l1 = t.train_batches(&batches[..3]).unwrap();
+    let l2 = t.train_batches(&batches[3..]).unwrap();
+    assert!(l1.is_finite() && l2.is_finite());
+
+    // row roundtrip on the lo table
+    let ids = vec![1u32, 99, 1500];
+    let rows: Vec<f32> = (0..ids.len() * t.entity_width()).map(|i| i as f32 * 1e-3).collect();
+    t.set_entity_rows(&ids, &rows).unwrap();
+    assert_eq!(t.get_entity_rows(&ids).unwrap(), rows);
+
+    // eval answers come from the hi model
+    let filters = FilterIndex::build(kg.triples.iter());
+    let es = EvalSet::new(&kg.triples[..32], m.num_entities);
+    let metrics = evaluate(&mut t, &es, &filters).unwrap();
+    assert!(metrics.mrr > 0.0 && metrics.mrr <= 1.0);
+}
+
+#[test]
+fn fedepl_dim_artifacts_load() {
+    let Some(rt) = runtime() else { return };
+    let m = &rt.manifest;
+    let mut rng = Rng::new(3);
+    for method in Method::ALL {
+        let mut t = XlaTrainer::new(rt.clone(), method, m.fedepl_dim, &mut rng).unwrap();
+        assert_eq!(t.entity_width(), method.entity_width(m.fedepl_dim));
+        // one smoke step
+        let ents: Vec<u32> = (0..m.num_entities as u32).collect();
+        let kg = generate(&GeneratorConfig {
+            num_entities: m.num_entities,
+            num_relations: m.num_relations,
+            num_triples: 1000,
+            seed: 4,
+            ..Default::default()
+        });
+        let mut brng = Rng::new(2);
+        let batch = BatchIter::new(&kg.triples, &ents, m.batch, m.negatives, &mut brng)
+            .next()
+            .unwrap();
+        let loss = t.train_batch(&batch).unwrap();
+        assert!(loss.is_finite(), "{method:?}");
+    }
+}
