@@ -1,0 +1,65 @@
+//! Sequential vs threaded federated execution on the native backend:
+//! wall-clock per mode and the threaded speedup with an 8-client fleet,
+//! plus a hard check that accounting is independent of the execution
+//! mode.  `cargo bench --bench exec_modes`.
+
+use feds::data::generator::{generate, GeneratorConfig};
+use feds::data::partition::partition;
+use feds::fed::{run_federated, Algo, Backend, ExecMode, FedRunConfig};
+use feds::kge::{Hyper, Method};
+use feds::util::bench::Bench;
+
+fn main() {
+    let mut b = Bench::from_env("exec_modes");
+    std::env::set_var("FEDS_LOG", "warn");
+
+    let kg = generate(&GeneratorConfig {
+        num_entities: 768,
+        num_relations: 24,
+        num_triples: 12_000,
+        num_clusters: 8,
+        seed: 11,
+        ..Default::default()
+    });
+    let data = partition(&kg, 8, 11);
+    let backend = Backend::Native {
+        hyper: Hyper { dim: 32, learning_rate: 3e-3, ..Default::default() },
+        batch: 128,
+        negatives: 32,
+        eval_batch: 64,
+    };
+
+    for algo in [Algo::FedEP, Algo::FedS { sync: true }] {
+        let mut cfg = FedRunConfig {
+            algo,
+            method: Method::TransE,
+            max_rounds: 6,
+            local_epochs: 2,
+            eval_every: 3,
+            eval_cap: 128,
+            seed: 42,
+            ..Default::default()
+        };
+        let name = algo.label();
+
+        let t0 = std::time::Instant::now();
+        let seq = run_federated(&data, &cfg, &backend).expect("sequential run");
+        let seq_s = t0.elapsed().as_secs_f64();
+
+        cfg.exec = ExecMode::Threaded;
+        let t0 = std::time::Instant::now();
+        let thr = run_federated(&data, &cfg, &backend).expect("threaded run");
+        let thr_s = t0.elapsed().as_secs_f64();
+
+        assert_eq!(
+            (seq.acct.params(), seq.acct.bytes()),
+            (thr.acct.params(), thr.acct.bytes()),
+            "accounting must not depend on the execution mode"
+        );
+
+        b.report_value(&format!("seq_8c/{name}/wall_s"), seq_s, "s");
+        b.report_value(&format!("threaded_8c/{name}/wall_s"), thr_s, "s");
+        b.report_value(&format!("threaded_8c/{name}/speedup"), seq_s / thr_s, "x");
+    }
+    b.finish();
+}

@@ -2,9 +2,10 @@
 //!
 //! Each `Endpoint` pair models one client↔server connection: sending a
 //! frame records its byte size (and caller-supplied parameter count) into
-//! the shared `Accounting`.  Used by the threaded orchestrator; the
-//! sequential orchestrator calls the same `record` hooks directly so both
-//! paths meter identically.
+//! the shared `Accounting`.  Both orchestrator execution modes
+//! (`fed::ExecMode`) route every exchanged frame through these links —
+//! they are the single metering path, so the communication totals are
+//! what a distributed deployment would transmit.
 
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::sync::Arc;

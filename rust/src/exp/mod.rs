@@ -20,7 +20,7 @@ use anyhow::Result;
 
 use crate::data::generator::{generate, GeneratorConfig};
 use crate::data::partition::{partition, FedDataset};
-use crate::fed::{Algo, Backend, FedRunConfig, RunOutcome};
+use crate::fed::{Algo, Backend, ExecMode, FedRunConfig, RunOutcome};
 use crate::kge::{Hyper, Method};
 use crate::runtime::Runtime;
 
@@ -32,13 +32,20 @@ pub struct Ctx {
     pub seed: u64,
     pub max_rounds: usize,
     pub eval_cap: usize,
+    /// client execution mode (threaded applies to native-backend runs)
+    pub exec: ExecMode,
 }
 
 impl Ctx {
     pub fn new(backend: Backend, fast: bool, seed: u64) -> Self {
         // budgets sized for the single-core CPU testbed; see EXPERIMENTS.md
         let (max_rounds, eval_cap) = if fast { (24, 128) } else { (50, 256) };
-        Self { backend, fast, seed, max_rounds, eval_cap }
+        Self { backend, fast, seed, max_rounds, eval_cap, exec: ExecMode::Sequential }
+    }
+
+    pub fn with_exec(mut self, exec: ExecMode) -> Self {
+        self.exec = exec;
+        self
     }
 
     /// Build from CLI-ish options: `backend` ∈ {"xla", "native"}.
@@ -96,6 +103,7 @@ impl Ctx {
             eval_cap: self.eval_cap,
             seed: self.seed ^ 0xA11CE,
             svd_cols: 8,
+            exec: self.exec,
         }
     }
 

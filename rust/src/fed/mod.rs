@@ -8,8 +8,16 @@
 //! * `server`       — personalized aggregation (Eq. 3) + dense aggregation
 //! * `protocol`     — wire messages with paper-parameter accounting (§III-F)
 //! * `compression`  — SVD/SVD+ transport codec (Appendix VI-B)
-//! * `orchestrator` — the round loop for FedS, FedEP, FedEPL, Single,
-//!                    FedE-KD, FedE-SVD, FedE-SVD+
+//! * `orchestrator` — the message-driven round loop for FedS, FedEP,
+//!                    FedEPL, Single, FedE-KD, FedE-SVD, FedE-SVD+:
+//!   * `orchestrator::exchange` — per-algorithm `Exchange` strategies
+//!     (`DenseExchange`, `FedSExchange`, `SvdExchange`), each with a
+//!     client half and a server half
+//!   * `orchestrator::client`   — `ClientRunner`s that own their local
+//!     state and exchange only framed `Upload`/`Download` messages over
+//!     metered `comm::transport` links
+//!   * sequential and per-client-thread execution drivers (`ExecMode`),
+//!     byte- and bit-identical to each other
 
 pub mod compression;
 pub mod orchestrator;
@@ -18,7 +26,7 @@ pub mod server;
 pub mod sync;
 pub mod topk;
 
-pub use orchestrator::{run_federated, Algo, Backend, FedRunConfig, RunOutcome};
+pub use orchestrator::{run_federated, Algo, Backend, ExecMode, FedRunConfig, RunOutcome};
 pub use server::Server;
 pub use sync::SyncSchedule;
 

@@ -1,0 +1,241 @@
+//! Client-side execution: a `ClientRunner` owns its `ClientCtx` (trainer +
+//! local tables + eval sets) and speaks to the server **only** through
+//! framed `Upload`/`Download` messages on a metered
+//! `comm::transport::Endpoint` — the single path on which every exchanged
+//! parameter and byte is accounted.  Round results (loss, eval metrics)
+//! and the continue/stop verdict travel on a separate unmetered control
+//! plane, mirroring a deployment's control/data-plane split.
+
+use std::sync::mpsc::{Receiver, Sender};
+
+use anyhow::Result;
+
+use crate::comm::transport::Endpoint;
+use crate::data::dataset::{BatchIter, EvalSet, FilterIndex};
+use crate::data::partition::FedDataset;
+use crate::data::Triple;
+use crate::fed::compression::SvdCodec;
+use crate::fed::protocol::Download;
+use crate::kge::Table;
+use crate::metrics::RankMetrics;
+use crate::trainer::{evaluate, LocalTrainer};
+use crate::util::rng::Rng;
+
+use super::exchange::{self, Exchange};
+use super::{Algo, FedRunConfig};
+
+/// Per-client local state, owned by exactly one `ClientRunner`.
+pub struct ClientCtx {
+    pub id: u16,
+    pub trainer: Box<dyn LocalTrainer>,
+    /// shared entities (sorted global ids) — the communicated set N_c
+    pub shared: Vec<u32>,
+    /// FedS history table E^h (full-size; only shared rows meaningful)
+    pub hist: Option<Table>,
+    /// SVD variants: the client's copy of the agreed reference state
+    pub svd_ref: Option<Table>,
+    pub filters: FilterIndex,
+    pub valid_set: EvalSet,
+    pub test_set: EvalSet,
+    pub rng: Rng,
+}
+
+/// One round's client-side result, reported over the control plane.
+pub struct Report {
+    pub loss: f32,
+    pub batches: usize,
+    pub eval: Option<(RankMetrics, RankMetrics)>,
+}
+
+/// Snapshot `trainer`'s rows for `shared` into a full-size table (the
+/// initial E^h / SVD reference state).
+pub(crate) fn initial_table(
+    trainer: &mut dyn LocalTrainer,
+    shared: &[u32],
+    num_entities: usize,
+    width: usize,
+) -> Result<Table> {
+    let mut t = Table::zeros(num_entities, width);
+    let rows = trainer.get_entity_rows(shared)?;
+    for (k, &id) in shared.iter().enumerate() {
+        t.set_row(id as usize, &rows[k * width..(k + 1) * width]);
+    }
+    Ok(t)
+}
+
+/// Drives one client: local training, evaluation, and the client half of
+/// the exchange strategy.  Usable from the sequential driver (methods
+/// called in order on one thread) or as a free-running loop on its own OS
+/// thread (`run`), with identical numerics either way.
+pub struct ClientRunner<'d> {
+    ctx: ClientCtx,
+    exchange: Option<Box<dyn Exchange>>,
+    link: Endpoint,
+    cfg: FedRunConfig,
+    train: &'d [Triple],
+    local_ents: &'d [u32],
+    batch_size: usize,
+    negatives: usize,
+    /// SVD+ only: the low-rank projection applied after local training
+    svd_plus: Option<SvdCodec>,
+}
+
+impl<'d> ClientRunner<'d> {
+    #[allow(clippy::too_many_arguments)]
+    pub fn build(
+        data: &'d FedDataset,
+        id: u16,
+        cfg: &FedRunConfig,
+        mut trainer: Box<dyn LocalTrainer>,
+        link: Endpoint,
+        batch_size: usize,
+        negatives: usize,
+    ) -> Result<Self> {
+        let c = &data.clients[id as usize];
+        let shared = data.shared_entities_of(id);
+        let mut rng = Rng::new(cfg.seed ^ (0xC11E57 + id as u64));
+        let filters = c.filter_index();
+        let mut valid_set = EvalSet::new(&c.valid, data.num_entities);
+        let mut test_set = EvalSet::new(&c.test, data.num_entities);
+        valid_set.subsample(cfg.eval_cap, &mut rng);
+        test_set.subsample(cfg.eval_cap, &mut rng);
+
+        let width = trainer.entity_width();
+        let mut hist = None;
+        let mut svd_ref = None;
+        if matches!(cfg.algo, Algo::FedS { .. }) {
+            hist = Some(initial_table(trainer.as_mut(), &shared, data.num_entities, width)?);
+        } else if matches!(cfg.algo, Algo::FedSvd { .. }) {
+            svd_ref = Some(initial_table(trainer.as_mut(), &shared, data.num_entities, width)?);
+        }
+        let exchange = exchange::client_half(cfg, width);
+        let svd_plus = (cfg.algo == (Algo::FedSvd { constrained: true }))
+            .then(|| SvdCodec::for_width(width, cfg.svd_cols.min(width)));
+
+        Ok(Self {
+            ctx: ClientCtx {
+                id,
+                trainer,
+                shared,
+                hist,
+                svd_ref,
+                filters,
+                valid_set,
+                test_set,
+                rng,
+            },
+            exchange,
+            link,
+            cfg: cfg.clone(),
+            train: &c.train,
+            local_ents: &c.entities,
+            batch_size,
+            negatives,
+            svd_plus,
+        })
+    }
+
+    pub fn width(&self) -> usize {
+        self.ctx.trainer.entity_width()
+    }
+
+    /// A copy of the SVD reference state (the server seeds its mirror
+    /// from this in sequential mode).
+    pub fn reference_table(&self) -> Option<Table> {
+        self.ctx.svd_ref.clone()
+    }
+
+    /// One round of local work: `local_epochs` of training (plus the SVD+
+    /// low-rank projection) and, on eval rounds, both eval splits.
+    pub fn local_round(&mut self, round: usize, eval: bool) -> Result<Report> {
+        // all epochs' batches gathered so the XLA trainers can fuse the
+        // whole phase into scan-stepped executions
+        let mut batches = Vec::new();
+        for _ in 0..self.cfg.local_epochs {
+            let mut brng = self.ctx.rng.fork(round as u64);
+            batches.extend(BatchIter::new(
+                self.train,
+                self.local_ents,
+                self.batch_size,
+                self.negatives,
+                &mut brng,
+            ));
+        }
+        let n = batches.len();
+        let loss = self.ctx.trainer.train_batches(&batches)?;
+
+        // SVD+ low-rank constraint: project this round's local update
+        if let Some(codec) = &self.svd_plus {
+            let width = self.ctx.trainer.entity_width();
+            let refs = self.ctx.svd_ref.as_ref().unwrap();
+            let cur = self.ctx.trainer.get_entity_rows(&self.ctx.shared)?;
+            let mut projected = Vec::with_capacity(cur.len());
+            for (k, &id) in self.ctx.shared.iter().enumerate() {
+                let row = &cur[k * width..(k + 1) * width];
+                let upd = crate::linalg::sub(row, refs.row(id as usize));
+                let proj = codec.project_row(&upd);
+                let mut out = refs.row(id as usize).to_vec();
+                crate::linalg::axpy(1.0, &proj, &mut out);
+                projected.extend_from_slice(&out);
+            }
+            self.ctx.trainer.set_entity_rows(&self.ctx.shared, &projected)?;
+        }
+
+        let eval_metrics = if eval { Some(self.eval_both()?) } else { None };
+        Ok(Report { loss, batches: n, eval: eval_metrics })
+    }
+
+    fn eval_both(&mut self) -> Result<(RankMetrics, RankMetrics)> {
+        let valid = evaluate(self.ctx.trainer.as_mut(), &self.ctx.valid_set, &self.ctx.filters)?;
+        let test = evaluate(self.ctx.trainer.as_mut(), &self.ctx.test_set, &self.ctx.filters)?;
+        Ok((valid, test))
+    }
+
+    /// Client half of the upload phase: frame this round's upload and put
+    /// it on the metered link.
+    pub fn send_upload(&mut self, round: u32) -> Result<()> {
+        let Some(ex) = self.exchange.as_mut() else { return Ok(()) };
+        ex.begin_round(round);
+        if self.ctx.shared.is_empty() {
+            return Ok(());
+        }
+        let msg = ex.make_upload(round, &mut self.ctx)?;
+        let params = msg.params();
+        self.link.send(msg.encode(), params)
+    }
+
+    /// Client half of the download phase: block for the server's reply
+    /// frame and fold it into local state.
+    pub fn recv_download(&mut self) -> Result<()> {
+        let Some(ex) = self.exchange.as_mut() else { return Ok(()) };
+        if self.ctx.shared.is_empty() {
+            return Ok(());
+        }
+        let msg = Download::decode(&self.link.recv()?)?;
+        ex.apply_download(&mut self.ctx, msg)
+    }
+
+    /// Threaded-mode loop: train → report → (await verdict on eval
+    /// rounds) → exchange, every round, mirroring the server driver's
+    /// schedule exactly.
+    pub fn run(mut self, reports: Sender<Report>, verdicts: Receiver<bool>) -> Result<()> {
+        for round in 1..=self.cfg.max_rounds {
+            let eval_round = round % self.cfg.eval_every == 0;
+            let report = self.local_round(round, eval_round)?;
+            reports
+                .send(report)
+                .map_err(|_| anyhow::anyhow!("server hung up mid-round"))?;
+            if eval_round {
+                let stop = verdicts
+                    .recv()
+                    .map_err(|_| anyhow::anyhow!("server hung up before the verdict"))?;
+                if stop {
+                    break;
+                }
+            }
+            self.send_upload(round as u32)?;
+            self.recv_download()?;
+        }
+        Ok(())
+    }
+}

@@ -1,0 +1,332 @@
+//! Per-algorithm `Exchange` strategies.
+//!
+//! Each strategy encapsulates both halves of one communication pattern:
+//! how a client turns local state into an `Upload` and folds a `Download`
+//! back in, and how the server folds decoded uploads into its round
+//! aggregate and builds each client's personalized reply.  Client and
+//! server instantiate *separate* copies (exactly as two processes would);
+//! state both sides must agree on — the FedS synchronization schedule, the
+//! SVD codec and reference tables — is advanced deterministically on each
+//! side from the transmitted frames alone, never shared through memory.
+
+use anyhow::Result;
+
+use crate::fed::compression::SvdCodec;
+use crate::fed::protocol::{Download, Upload};
+use crate::fed::server::Server;
+use crate::fed::sync::SyncSchedule;
+use crate::fed::topk::{select_by_change, top_k_count};
+use crate::kge::Table;
+use crate::util::rng::Rng;
+
+use super::client::ClientCtx;
+use super::{Algo, FedRunConfig};
+
+/// One algorithm family's communication pattern.  The orchestrator drives
+/// the client methods on the client side of an `Endpoint` and the server
+/// methods on the other; every embedding that crosses between them does so
+/// as an encoded frame on the metered link.
+pub trait Exchange {
+    /// Called once per communication round on each side, before any
+    /// message work: advances per-round shared state (e.g. the FedS
+    /// synchronization schedule).
+    fn begin_round(&mut self, _round: u32) {}
+
+    /// Client: build this round's upload from local state.
+    fn make_upload(&mut self, round: u32, ctx: &mut ClientCtx) -> Result<Upload>;
+
+    /// Client: integrate the server's decoded reply into local state.
+    fn apply_download(&mut self, ctx: &mut ClientCtx, msg: Download) -> Result<()>;
+
+    /// Server: fold one client's decoded upload into the round aggregate.
+    fn server_receive(&mut self, server: &mut Server, client: u16, msg: Upload) -> Result<()>;
+
+    /// Server: build the personalized reply for `client`.
+    fn server_download(&mut self, round: u32, server: &mut Server, client: u16)
+        -> Result<Download>;
+}
+
+/// The client-side strategy instance for `cfg` (`None`: no communication).
+pub fn client_half(cfg: &FedRunConfig, width: usize) -> Option<Box<dyn Exchange>> {
+    build_half(cfg, width, None)
+}
+
+/// The server-side strategy instance.  `refs` carries the per-client
+/// initial reference tables the SVD transport needs (empty for all other
+/// algorithms).
+pub fn server_half(
+    cfg: &FedRunConfig,
+    width: usize,
+    refs: Vec<Table>,
+) -> Option<Box<dyn Exchange>> {
+    build_half(cfg, width, Some(refs))
+}
+
+fn build_half(
+    cfg: &FedRunConfig,
+    width: usize,
+    server_refs: Option<Vec<Table>>,
+) -> Option<Box<dyn Exchange>> {
+    match cfg.algo {
+        Algo::Single => None,
+        Algo::FedEP | Algo::FedEPL | Algo::FedKd => Some(Box::new(DenseExchange)),
+        Algo::FedS { sync } => {
+            let schedule = SyncSchedule::new(sync.then_some(cfg.sync_interval));
+            let rng = server_refs.is_some().then(|| Rng::new(cfg.seed ^ 0x5E4E4));
+            Some(Box::new(FedSExchange { sparsity: cfg.sparsity, schedule, sync_now: false, rng }))
+        }
+        Algo::FedSvd { .. } => Some(Box::new(SvdExchange {
+            codec: SvdCodec::for_width(width, cfg.svd_cols.min(width)),
+            width,
+            refs: server_refs.unwrap_or_default(),
+        })),
+    }
+}
+
+/// Dense FedE-style exchange (FedEP, FedEPL, FedE-KD): every shared-entity
+/// row upstream, the FedE average back down.
+pub struct DenseExchange;
+
+impl Exchange for DenseExchange {
+    fn make_upload(&mut self, round: u32, ctx: &mut ClientCtx) -> Result<Upload> {
+        let emb = ctx.trainer.get_entity_rows(&ctx.shared)?;
+        Ok(Upload::Full { round, client: ctx.id, emb })
+    }
+
+    fn apply_download(&mut self, ctx: &mut ClientCtx, msg: Download) -> Result<()> {
+        let Download::Full { emb, .. } = msg else {
+            anyhow::bail!("dense exchange expects a full download");
+        };
+        debug_assert_eq!(emb.len(), ctx.shared.len() * ctx.trainer.entity_width());
+        ctx.trainer.set_entity_rows(&ctx.shared, &emb)
+    }
+
+    fn server_receive(&mut self, server: &mut Server, client: u16, msg: Upload) -> Result<()> {
+        let Upload::Full { emb, .. } = msg else {
+            anyhow::bail!("dense exchange expects a full upload");
+        };
+        server.receive_all_shared(client, &emb);
+        Ok(())
+    }
+
+    fn server_download(
+        &mut self,
+        round: u32,
+        server: &mut Server,
+        client: u16,
+    ) -> Result<Download> {
+        Ok(Download::Full { round, emb: server.fede_download(client) })
+    }
+}
+
+/// FedS (§III): Entity-Wise Top-K sparsification both ways with the
+/// Intermittent Synchronization Mechanism.  Sync rounds are dense
+/// exchanges that reset the client's history table E^h; sparse rounds
+/// send Top-K-by-change upstream (Eq. 1/2) and personalized-aggregation
+/// priority Top-K downstream (Eq. 3, merged by Eq. 4).
+pub struct FedSExchange {
+    sparsity: f64,
+    schedule: SyncSchedule,
+    sync_now: bool,
+    /// server side only: the §III-D priority tie-break stream
+    rng: Option<Rng>,
+}
+
+impl Exchange for FedSExchange {
+    fn begin_round(&mut self, round: u32) {
+        self.sync_now = self.schedule.step(round as usize);
+    }
+
+    fn make_upload(&mut self, round: u32, ctx: &mut ClientCtx) -> Result<Upload> {
+        let width = ctx.trainer.entity_width();
+        if self.sync_now {
+            let rows = ctx.trainer.get_entity_rows(&ctx.shared)?;
+            // E^h := what was sent (all shared entities on sync rounds)
+            let hist = ctx.hist.as_mut().unwrap();
+            for (k, &id) in ctx.shared.iter().enumerate() {
+                hist.set_row(id as usize, &rows[k * width..(k + 1) * width]);
+            }
+            return Ok(Upload::Full { round, client: ctx.id, emb: rows });
+        }
+        let hist = ctx.hist.as_ref().unwrap();
+        let scores = ctx.trainer.change_scores(&ctx.shared, hist)?;
+        let k = top_k_count(ctx.shared.len(), self.sparsity);
+        let sel = select_by_change(&scores, k);
+        let ids: Vec<u32> = sel.iter().map(|&i| ctx.shared[i]).collect();
+        let rows = ctx.trainer.get_entity_rows(&ids)?;
+        let hist = ctx.hist.as_mut().unwrap();
+        for (k2, &id) in ids.iter().enumerate() {
+            hist.set_row(id as usize, &rows[k2 * width..(k2 + 1) * width]);
+        }
+        let mut sign = vec![false; ctx.shared.len()];
+        for &i in &sel {
+            sign[i] = true;
+        }
+        Ok(Upload::Sparse { round, client: ctx.id, sign, emb: rows })
+    }
+
+    fn apply_download(&mut self, ctx: &mut ClientCtx, msg: Download) -> Result<()> {
+        let width = ctx.trainer.entity_width();
+        match msg {
+            Download::Full { emb, .. } => {
+                anyhow::ensure!(self.sync_now, "dense download outside a sync round");
+                ctx.trainer.set_entity_rows(&ctx.shared, &emb)
+            }
+            Download::Sparse { sign, emb, prio, .. } => {
+                anyhow::ensure!(!self.sync_now, "sparse download on a sync round");
+                let ids: Vec<u32> = sign
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, &s)| s)
+                    .map(|(i, _)| ctx.shared[i])
+                    .collect();
+                if ids.is_empty() {
+                    return Ok(());
+                }
+                // Eq. 4: E^{t+1} = (A + E^t) / (1 + P)
+                let own = ctx.trainer.get_entity_rows(&ids)?;
+                let mut merged = vec![0.0f32; ids.len() * width];
+                for j in 0..ids.len() {
+                    let p = prio[j] as f32;
+                    for w in 0..width {
+                        merged[j * width + w] =
+                            (emb[j * width + w] + own[j * width + w]) / (1.0 + p);
+                    }
+                }
+                ctx.trainer.set_entity_rows(&ids, &merged)
+            }
+        }
+    }
+
+    fn server_receive(&mut self, server: &mut Server, client: u16, msg: Upload) -> Result<()> {
+        match msg {
+            Upload::Full { emb, .. } => {
+                anyhow::ensure!(self.sync_now, "dense upload outside a sync round");
+                server.receive_all_shared(client, &emb);
+            }
+            Upload::Sparse { sign, emb, .. } => {
+                anyhow::ensure!(!self.sync_now, "sparse upload on a sync round");
+                let ids: Vec<u32> = {
+                    let shared = &server.shared[client as usize];
+                    sign.iter()
+                        .enumerate()
+                        .filter(|(_, &s)| s)
+                        .map(|(i, _)| shared[i])
+                        .collect()
+                };
+                server.receive(client, &ids, &emb);
+            }
+        }
+        Ok(())
+    }
+
+    fn server_download(
+        &mut self,
+        round: u32,
+        server: &mut Server,
+        client: u16,
+    ) -> Result<Download> {
+        if self.sync_now {
+            return Ok(Download::Full { round, emb: server.fede_download(client) });
+        }
+        let k = top_k_count(server.shared[client as usize].len(), self.sparsity);
+        let rng = self.rng.as_mut().expect("server-side FedS exchange carries the priority rng");
+        let (sign, emb, prio) = server.feds_download(client, k, rng);
+        Ok(Download::Sparse { round, sign, emb, prio })
+    }
+}
+
+/// FedE-SVD / FedE-SVD+ (Appendix VI-B): rank-k factorized *updates*
+/// against a client/server-agreed reference state, in both directions.
+/// Each side owns its copy of the reference tables and advances it from
+/// the transmitted (lossy) factors alone, so the copies stay bit-identical
+/// without any extra synchronization traffic.
+pub struct SvdExchange {
+    codec: SvdCodec,
+    width: usize,
+    /// server side: per-client reference mirrors (client side: empty —
+    /// the client's reference lives in `ClientCtx::svd_ref`)
+    refs: Vec<Table>,
+}
+
+impl Exchange for SvdExchange {
+    fn make_upload(&mut self, round: u32, ctx: &mut ClientCtx) -> Result<Upload> {
+        let width = self.width;
+        let refs = ctx.svd_ref.as_ref().unwrap();
+        let cur = ctx.trainer.get_entity_rows(&ctx.shared)?;
+        let mut updates = Vec::with_capacity(cur.len());
+        for (k, &id) in ctx.shared.iter().enumerate() {
+            updates.extend_from_slice(&crate::linalg::sub(
+                &cur[k * width..(k + 1) * width],
+                refs.row(id as usize),
+            ));
+        }
+        let packed = self.codec.encode_rows(&updates, width);
+        Ok(Upload::Full { round, client: ctx.id, emb: packed })
+    }
+
+    fn apply_download(&mut self, ctx: &mut ClientCtx, msg: Download) -> Result<()> {
+        let Download::Full { emb: packed, .. } = msg else {
+            anyhow::bail!("SVD exchange expects a full (packed) download");
+        };
+        let width = self.width;
+        let approx = self.codec.decode_rows(&packed, width, ctx.shared.len());
+        let refs = ctx.svd_ref.as_mut().unwrap();
+        let mut new_rows = Vec::with_capacity(approx.len());
+        for (k, &id) in ctx.shared.iter().enumerate() {
+            let mut row = refs.row(id as usize).to_vec();
+            crate::linalg::axpy(1.0, &approx[k * width..(k + 1) * width], &mut row);
+            refs.set_row(id as usize, &row);
+            new_rows.extend_from_slice(&row);
+        }
+        ctx.trainer.set_entity_rows(&ctx.shared, &new_rows)
+    }
+
+    fn server_receive(&mut self, server: &mut Server, client: u16, msg: Upload) -> Result<()> {
+        let Upload::Full { emb: packed, .. } = msg else {
+            anyhow::bail!("SVD exchange expects a full (packed) upload");
+        };
+        let width = self.width;
+        let refs = &self.refs[client as usize];
+        let shared_len = server.shared[client as usize].len();
+        // reconstruct the client's (approximate) state against the mirror
+        let approx = self.codec.decode_rows(&packed, width, shared_len);
+        let mut state = Vec::with_capacity(approx.len());
+        for (k, &id) in server.shared[client as usize].iter().enumerate() {
+            let mut row = refs.row(id as usize).to_vec();
+            crate::linalg::axpy(1.0, &approx[k * width..(k + 1) * width], &mut row);
+            state.extend_from_slice(&row);
+        }
+        server.receive_all_shared(client, &state);
+        Ok(())
+    }
+
+    fn server_download(
+        &mut self,
+        round: u32,
+        server: &mut Server,
+        client: u16,
+    ) -> Result<Download> {
+        let width = self.width;
+        let agg = server.fede_download(client);
+        let refs = &mut self.refs[client as usize];
+        let shared = &server.shared[client as usize];
+        let mut deltas = Vec::with_capacity(agg.len());
+        for (k, &id) in shared.iter().enumerate() {
+            deltas.extend_from_slice(&crate::linalg::sub(
+                &agg[k * width..(k + 1) * width],
+                refs.row(id as usize),
+            ));
+        }
+        let packed = self.codec.encode_rows(&deltas, width);
+        // advance the mirror by the same lossy update the client will
+        // decode, keeping both reference copies bit-identical
+        let approx = self.codec.decode_rows(&packed, width, shared.len());
+        for (k, &id) in shared.iter().enumerate() {
+            let mut row = refs.row(id as usize).to_vec();
+            crate::linalg::axpy(1.0, &approx[k * width..(k + 1) * width], &mut row);
+            refs.set_row(id as usize, &row);
+        }
+        Ok(Download::Full { round, emb: packed })
+    }
+}

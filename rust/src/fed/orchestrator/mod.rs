@@ -1,0 +1,626 @@
+//! The federated round loop: local training → evaluation/early-stop →
+//! communication, for every algorithm in the paper's evaluation.
+//!
+//! Algorithms (§IV-B, Appendix VI):
+//! * `Single`  — local training only, no communication.
+//! * `FedEP`   — dense FedE with personalized evaluation (the baseline all
+//!               efficiency metrics are scaled against).
+//! * `FedEPL`  — FedEP at the reduced dimension of Appendix VI-C.
+//! * `FedS`    — Entity-Wise Top-K sparsification both ways + Intermittent
+//!               Synchronization; `sync: false` is the FedS/syn ablation.
+//! * `FedKd`   — dual-dimension co-distillation transport (Table I).
+//! * `FedSvd`  — SVD-compressed update transport; `constrained` adds the
+//!               SVD+ low-rank training constraint (Table I).
+//!
+//! Architecture: the orchestrator is message-driven.  Each algorithm
+//! family is an [`exchange::Exchange`] strategy with a client half and a
+//! server half; each client is a [`client::ClientRunner`] that owns its
+//! state and talks to the server **only** via framed `Upload`/`Download`
+//! messages over a `comm::transport::Endpoint` pair — the single path on
+//! which parameters and bytes are metered, identical to what a
+//! distributed deployment would transmit.  Two execution modes share the
+//! same server-side driver ([`ExecMode`]): `Sequential` steps clients in
+//! order on the calling thread (required for the non-`Send` PJRT-backed
+//! trainers), `Threaded` runs each native-backend client's training and
+//! evaluation on its own OS thread.  Both modes produce byte-identical
+//! accounting and bit-identical metrics: uploads are folded and replies
+//! built in client-id order regardless of thread arrival order.
+
+pub mod client;
+pub mod exchange;
+
+use std::rc::Rc;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::comm::accounting::Accounting;
+use crate::comm::transport::{duplex, Endpoint};
+use crate::data::partition::FedDataset;
+use crate::kge::{Hyper, Method, Table};
+use crate::metrics::tracker::{RoundRecord, RunHistory};
+use crate::metrics::{EarlyStop, RankMetrics};
+use crate::runtime::Runtime;
+use crate::trainer::{KdXlaTrainer, LocalTrainer, NativeTrainer, XlaTrainer};
+use crate::util::rng::Rng;
+
+use super::protocol::Upload;
+use super::server::Server;
+use super::{comm_ratio, fedepl_dim};
+
+use client::{initial_table, ClientRunner, Report};
+
+/// Which algorithm drives the communication phase.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Algo {
+    Single,
+    FedEP,
+    FedEPL,
+    FedS { sync: bool },
+    FedKd,
+    FedSvd { constrained: bool },
+}
+
+impl Algo {
+    pub fn label(&self) -> &'static str {
+        match self {
+            Algo::Single => "Single",
+            Algo::FedEP => "FedEP",
+            Algo::FedEPL => "FedEPL",
+            Algo::FedS { sync: true } => "FedS",
+            Algo::FedS { sync: false } => "FedS/syn",
+            Algo::FedKd => "FedE-KD",
+            Algo::FedSvd { constrained: false } => "FedE-SVD",
+            Algo::FedSvd { constrained: true } => "FedE-SVD+",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Algo> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "single" => Algo::Single,
+            "fedep" | "fede" => Algo::FedEP,
+            "fedepl" => Algo::FedEPL,
+            "feds" => Algo::FedS { sync: true },
+            "feds-nosync" | "feds/syn" => Algo::FedS { sync: false },
+            "fedkd" | "fede-kd" => Algo::FedKd,
+            "fedsvd" | "fede-svd" => Algo::FedSvd { constrained: false },
+            "fedsvd+" | "fede-svd+" => Algo::FedSvd { constrained: true },
+            other => anyhow::bail!(
+                "unknown algorithm '{other}' \
+                 (single|fedep|fedepl|feds|feds-nosync|fedkd|fedsvd|fedsvd+)"
+            ),
+        })
+    }
+}
+
+/// Where local training executes.
+#[derive(Clone)]
+pub enum Backend {
+    /// AOT artifacts via PJRT — the production path.
+    Xla(Rc<Runtime>),
+    /// Pure-Rust oracle — artifact-free tests and the SVD+ native path.
+    Native {
+        hyper: Hyper,
+        batch: usize,
+        negatives: usize,
+        eval_batch: usize,
+    },
+}
+
+impl Backend {
+    fn batch_shape(&self) -> (usize, usize) {
+        match self {
+            Backend::Xla(rt) => (rt.manifest.batch, rt.manifest.negatives),
+            Backend::Native { batch, negatives, .. } => (*batch, *negatives),
+        }
+    }
+
+    fn make_trainer(
+        &self,
+        cfg: &FedRunConfig,
+        num_entities: usize,
+        num_relations: usize,
+    ) -> Result<Box<dyn LocalTrainer>> {
+        let mut rng = Rng::new(cfg.seed);
+        match self {
+            Backend::Xla(rt) => match cfg.algo {
+                Algo::FedKd => Ok(Box::new(KdXlaTrainer::new(rt.clone(), cfg.method, &mut rng)?)),
+                Algo::FedEPL => {
+                    let dim = rt.manifest.fedepl_dim;
+                    Ok(Box::new(XlaTrainer::new(rt.clone(), cfg.method, dim, &mut rng)?))
+                }
+                _ => Ok(Box::new(XlaTrainer::new(
+                    rt.clone(),
+                    cfg.method,
+                    rt.manifest.hyper.dim,
+                    &mut rng,
+                )?)),
+            },
+            Backend::Native { hyper, eval_batch, .. } => Ok(Box::new(native_trainer(
+                hyper,
+                *eval_batch,
+                cfg,
+                num_entities,
+                num_relations,
+                &mut rng,
+            )?)),
+        }
+    }
+}
+
+/// Build one client's pure-Rust trainer.  FedEPL's reduced dimension
+/// (Appendix VI-C) is derived from the **configured** sparsity and sync
+/// interval, so the FedEPL/FedS comparison stays volume-matched for any
+/// `FedRunConfig`, not just the paper defaults.
+fn native_trainer(
+    hyper: &Hyper,
+    eval_batch: usize,
+    cfg: &FedRunConfig,
+    num_entities: usize,
+    num_relations: usize,
+    rng: &mut Rng,
+) -> Result<NativeTrainer> {
+    anyhow::ensure!(
+        cfg.algo != Algo::FedKd,
+        "FedE-KD requires the XLA backend (co-distillation artifact)"
+    );
+    let hyper = if cfg.algo == Algo::FedEPL {
+        Hyper {
+            dim: fedepl_dim(hyper.dim, cfg.sparsity, cfg.sync_interval),
+            ..hyper.clone()
+        }
+    } else {
+        hyper.clone()
+    };
+    Ok(NativeTrainer::new(cfg.method, hyper, num_entities, num_relations, eval_batch, rng))
+}
+
+/// How client-side work executes within a round.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum ExecMode {
+    /// All clients stepped in order on the calling thread (any backend).
+    #[default]
+    Sequential,
+    /// One OS thread per client for local training + evaluation (native
+    /// backend only — the PJRT client is not `Send`).  Byte-identical
+    /// accounting and bit-identical metrics to `Sequential`.
+    Threaded,
+}
+
+impl ExecMode {
+    pub fn parse(s: &str) -> Result<ExecMode> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "seq" | "sequential" => ExecMode::Sequential,
+            "threaded" | "threads" | "thread" => ExecMode::Threaded,
+            other => anyhow::bail!("unknown exec mode '{other}' (seq|threaded)"),
+        })
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            ExecMode::Sequential => "seq",
+            ExecMode::Threaded => "threaded",
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct FedRunConfig {
+    pub algo: Algo,
+    pub method: Method,
+    /// hard cap on communication rounds
+    pub max_rounds: usize,
+    /// local epochs per round (paper default 3)
+    pub local_epochs: usize,
+    /// evaluate every N rounds (paper: every 5)
+    pub eval_every: usize,
+    /// early-stop patience in evaluations (paper: 3)
+    pub patience: usize,
+    /// FedS sparsity ratio p (paper: 0.4, 0.7 for one config)
+    pub sparsity: f64,
+    /// FedS synchronization interval s (paper: 4)
+    pub sync_interval: usize,
+    /// cap on eval queries per client per split (0 = all)
+    pub eval_cap: usize,
+    pub seed: u64,
+    /// columns of the SVD reshape (paper: 8)
+    pub svd_cols: usize,
+    /// client execution mode (sequential or one OS thread per client)
+    pub exec: ExecMode,
+}
+
+impl Default for FedRunConfig {
+    fn default() -> Self {
+        Self {
+            algo: Algo::FedS { sync: true },
+            method: Method::TransE,
+            max_rounds: 200,
+            local_epochs: 3,
+            eval_every: 5,
+            patience: 3,
+            sparsity: 0.4,
+            sync_interval: 4,
+            eval_cap: 0,
+            seed: 0xFED5,
+            svd_cols: 8,
+            exec: ExecMode::Sequential,
+        }
+    }
+}
+
+/// Outcome of a federated run: history plus final accounting.
+pub struct RunOutcome {
+    pub history: RunHistory,
+    pub acct: Arc<Accounting>,
+    /// analytic Eq. 5 ratio for this configuration (FedS only)
+    pub eq5_ratio: Option<f64>,
+}
+
+/// Run one federated training experiment.
+pub fn run_federated(
+    data: &FedDataset,
+    cfg: &FedRunConfig,
+    backend: &Backend,
+) -> Result<RunOutcome> {
+    let acct = Accounting::new();
+    let exec = match (cfg.exec, backend) {
+        (ExecMode::Threaded, Backend::Xla(_)) => {
+            crate::warn_!(
+                "threaded execution needs Send trainers and the PJRT client is not Send; \
+                 falling back to sequential"
+            );
+            ExecMode::Sequential
+        }
+        (e, _) => e,
+    };
+    let (history, width) = match exec {
+        ExecMode::Sequential => run_sequential(data, cfg, backend, &acct)?,
+        ExecMode::Threaded => run_threaded(data, cfg, backend, &acct)?,
+    };
+    let eq5 = matches!(cfg.algo, Algo::FedS { .. })
+        .then(|| comm_ratio(cfg.sparsity, cfg.sync_interval, width));
+    Ok(RunOutcome { history, acct, eq5_ratio: eq5 })
+}
+
+/// The server side of a run: aggregation state, the strategy's server
+/// half, eval weights, and the metric history.
+struct ServerSide {
+    server: Server,
+    exchange: Option<Box<dyn exchange::Exchange>>,
+    weights: Vec<f64>,
+    history: RunHistory,
+}
+
+fn server_side(
+    data: &FedDataset,
+    cfg: &FedRunConfig,
+    width: usize,
+    refs: Vec<Table>,
+) -> ServerSide {
+    let shared: Vec<Vec<u32>> =
+        data.clients.iter().map(|c| data.shared_entities_of(c.id)).collect();
+    let server = Server::new(data.num_entities, width, shared);
+    let exchange = exchange::server_half(cfg, width, refs);
+    let history = RunHistory::new(&format!(
+        "{}-{}-{}c",
+        cfg.algo.label(),
+        cfg.method.name(),
+        data.clients.len()
+    ));
+    crate::info!(
+        "run {}: {} clients, {} shared entities, width {}, p={}, s={}, exec {}",
+        history.label,
+        data.clients.len(),
+        data.shared.len(),
+        width,
+        cfg.sparsity,
+        cfg.sync_interval,
+        cfg.exec.label()
+    );
+    ServerSide { server, exchange, weights: data.test_weights(), history }
+}
+
+/// The driver's view of the client fleet.  The server-side round loop is
+/// identical in both execution modes; only how client work is triggered
+/// differs — stepped inline (sequential) or free-running threads that the
+/// control plane paces (threaded).
+trait ClientPool {
+    /// One round of local work from every client, in client-id order.
+    fn collect_reports(&mut self, round: usize, eval: bool) -> Result<Vec<Report>>;
+    /// Deliver the continue/stop verdict after an evaluation.
+    fn broadcast_verdict(&mut self, stop: bool) -> Result<()>;
+    /// Client half of the upload phase (no-op when clients push on their
+    /// own threads).
+    fn send_uploads(&mut self, round: u32) -> Result<()>;
+    /// Client half of the download phase.
+    fn recv_downloads(&mut self) -> Result<()>;
+}
+
+/// Shared server-side round loop: pace the fleet, meter every frame over
+/// the duplex links, aggregate in client-id order for bit-stable results.
+fn drive(
+    pool: &mut dyn ClientPool,
+    side: &mut ServerSide,
+    links: &[Endpoint],
+    cfg: &FedRunConfig,
+    acct: &Accounting,
+) -> Result<()> {
+    let mut es = EarlyStop::new(cfg.patience);
+    for round in 1..=cfg.max_rounds {
+        // --- 1. local training (+ eval) on every client --------------------
+        let eval_round = round % cfg.eval_every == 0;
+        let reports = pool.collect_reports(round, eval_round)?;
+        let mut loss_sum = 0.0f64;
+        let mut loss_n = 0usize;
+        let mut valid_pc = Vec::new();
+        let mut test_pc = Vec::new();
+        for rep in &reports {
+            loss_sum += rep.loss as f64 * rep.batches as f64;
+            loss_n += rep.batches;
+            if let Some((v, t)) = rep.eval {
+                valid_pc.push(v);
+                test_pc.push(t);
+            }
+        }
+
+        // --- 2. evaluation + early stopping --------------------------------
+        if eval_round {
+            let valid = RankMetrics::weighted(&valid_pc, &side.weights);
+            let test = RankMetrics::weighted(&test_pc, &side.weights);
+            let mean_loss = if loss_n > 0 { loss_sum / loss_n as f64 } else { 0.0 };
+            side.history.push(RoundRecord {
+                round,
+                params_cum: acct.params(),
+                bytes_cum: acct.bytes(),
+                valid,
+                test,
+                mean_loss,
+            });
+            crate::info!(
+                "{} round {round}: loss {mean_loss:.4} valid MRR {:.4} test MRR {:.4} \
+                 params {:.2}M",
+                side.history.label,
+                valid.mrr,
+                test.mrr,
+                acct.params() as f64 / 1e6
+            );
+            let stop = es.update(valid.mrr);
+            pool.broadcast_verdict(stop)?;
+            if stop {
+                side.history.mark_converged(es.best_index());
+                break;
+            }
+        }
+
+        // --- 3. communication ----------------------------------------------
+        if let Some(ex) = side.exchange.as_mut() {
+            ex.begin_round(round as u32);
+            side.server.begin_round();
+            pool.send_uploads(round as u32)?;
+            for (c, link) in links.iter().enumerate() {
+                if side.server.shared[c].is_empty() {
+                    continue;
+                }
+                let msg = Upload::decode(&link.recv()?)?;
+                ex.server_receive(&mut side.server, c as u16, msg)?;
+            }
+            for (c, link) in links.iter().enumerate() {
+                if side.server.shared[c].is_empty() {
+                    continue;
+                }
+                let msg = ex.server_download(round as u32, &mut side.server, c as u16)?;
+                let params = msg.params();
+                link.send(msg.encode(), params)?;
+            }
+            pool.recv_downloads()?;
+        }
+    }
+
+    if side.history.converged_idx.is_none() && !side.history.records.is_empty() {
+        let idx = es.best_index().min(side.history.records.len() - 1);
+        side.history.mark_converged(idx);
+    }
+    Ok(())
+}
+
+/// Sequential mode: runners stepped in order on this thread.  The frames
+/// still round-trip through the duplex links, so metering is exactly the
+/// threaded path's.
+struct SeqPool<'r, 'd> {
+    runners: &'r mut [ClientRunner<'d>],
+}
+
+impl ClientPool for SeqPool<'_, '_> {
+    fn collect_reports(&mut self, round: usize, eval: bool) -> Result<Vec<Report>> {
+        self.runners.iter_mut().map(|r| r.local_round(round, eval)).collect()
+    }
+
+    fn broadcast_verdict(&mut self, _stop: bool) -> Result<()> {
+        Ok(()) // inert runners stop when the driver stops stepping them
+    }
+
+    fn send_uploads(&mut self, round: u32) -> Result<()> {
+        for r in self.runners.iter_mut() {
+            r.send_upload(round)?;
+        }
+        Ok(())
+    }
+
+    fn recv_downloads(&mut self) -> Result<()> {
+        for r in self.runners.iter_mut() {
+            r.recv_download()?;
+        }
+        Ok(())
+    }
+}
+
+/// Threaded mode: each client loops on its own OS thread; the pool only
+/// relays control-plane traffic, in client-id order.
+struct ThreadedPool {
+    reports: Vec<Receiver<Report>>,
+    verdicts: Vec<Sender<bool>>,
+}
+
+impl ClientPool for ThreadedPool {
+    fn collect_reports(&mut self, _round: usize, _eval: bool) -> Result<Vec<Report>> {
+        self.reports
+            .iter()
+            .enumerate()
+            .map(|(c, rx)| {
+                rx.recv().map_err(|_| anyhow::anyhow!("client {c} disconnected before reporting"))
+            })
+            .collect()
+    }
+
+    fn broadcast_verdict(&mut self, stop: bool) -> Result<()> {
+        for (c, tx) in self.verdicts.iter().enumerate() {
+            tx.send(stop)
+                .map_err(|_| anyhow::anyhow!("client {c} disconnected before the verdict"))?;
+        }
+        Ok(())
+    }
+
+    fn send_uploads(&mut self, _round: u32) -> Result<()> {
+        Ok(())
+    }
+
+    fn recv_downloads(&mut self) -> Result<()> {
+        Ok(())
+    }
+}
+
+fn run_sequential(
+    data: &FedDataset,
+    cfg: &FedRunConfig,
+    backend: &Backend,
+    acct: &Arc<Accounting>,
+) -> Result<(RunHistory, usize)> {
+    let (batch_size, negatives) = backend.batch_shape();
+    let mut runners = Vec::with_capacity(data.clients.len());
+    let mut links = Vec::with_capacity(data.clients.len());
+    for c in &data.clients {
+        let (client_end, server_end) = duplex(acct.clone());
+        let trainer = backend.make_trainer(cfg, data.num_entities, data.num_relations)?;
+        runners.push(ClientRunner::build(
+            data, c.id, cfg, trainer, client_end, batch_size, negatives,
+        )?);
+        links.push(server_end);
+    }
+    let width = runners[0].width();
+    let refs: Vec<Table> = if matches!(cfg.algo, Algo::FedSvd { .. }) {
+        runners
+            .iter()
+            .map(|r| r.reference_table().expect("SVD runner carries a reference table"))
+            .collect()
+    } else {
+        Vec::new()
+    };
+    let mut side = server_side(data, cfg, width, refs);
+    let mut pool = SeqPool { runners: &mut runners };
+    drive(&mut pool, &mut side, &links, cfg, acct)?;
+    Ok((side.history, width))
+}
+
+fn run_threaded(
+    data: &FedDataset,
+    cfg: &FedRunConfig,
+    backend: &Backend,
+    acct: &Arc<Accounting>,
+) -> Result<(RunHistory, usize)> {
+    let Backend::Native { hyper, batch, negatives, eval_batch } = backend else {
+        anyhow::bail!("threaded execution is native-backend only");
+    };
+    let dim = if cfg.algo == Algo::FedEPL {
+        fedepl_dim(hyper.dim, cfg.sparsity, cfg.sync_interval)
+    } else {
+        hyper.dim
+    };
+    let width = cfg.method.entity_width(dim);
+    let refs: Vec<Table> = if matches!(cfg.algo, Algo::FedSvd { .. }) {
+        // Probe trainer: every client initializes from the same `cfg.seed`
+        // stream, so one throwaway trainer yields the agreed initial SVD
+        // reference state without touching any client's RNG.
+        let mut probe_rng = Rng::new(cfg.seed);
+        let mut probe = native_trainer(
+            hyper,
+            *eval_batch,
+            cfg,
+            data.num_entities,
+            data.num_relations,
+            &mut probe_rng,
+        )?;
+        debug_assert_eq!(probe.entity_width(), width);
+        data.clients
+            .iter()
+            .map(|c| {
+                let shared = data.shared_entities_of(c.id);
+                initial_table(&mut probe, &shared, data.num_entities, width)
+            })
+            .collect::<Result<_>>()?
+    } else {
+        Vec::new()
+    };
+    let mut side = server_side(data, cfg, width, refs);
+
+    std::thread::scope(|s| -> Result<()> {
+        let n = data.clients.len();
+        let mut links = Vec::with_capacity(n);
+        let mut reports = Vec::with_capacity(n);
+        let mut verdicts = Vec::with_capacity(n);
+        let mut handles = Vec::with_capacity(n);
+        for c in &data.clients {
+            let (client_end, server_end) = duplex(acct.clone());
+            let (rep_tx, rep_rx) = channel();
+            let (ver_tx, ver_rx) = channel();
+            let id = c.id;
+            let cfg = cfg.clone();
+            let hyper = hyper.clone();
+            let (eval_batch, batch_size, negatives) = (*eval_batch, *batch, *negatives);
+            handles.push(s.spawn(move || -> Result<()> {
+                let mut rng = Rng::new(cfg.seed);
+                let trainer = native_trainer(
+                    &hyper,
+                    eval_batch,
+                    &cfg,
+                    data.num_entities,
+                    data.num_relations,
+                    &mut rng,
+                )?;
+                let runner = ClientRunner::build(
+                    data,
+                    id,
+                    &cfg,
+                    Box::new(trainer),
+                    client_end,
+                    batch_size,
+                    negatives,
+                )?;
+                runner.run(rep_tx, ver_rx)
+            }));
+            links.push(server_end);
+            reports.push(rep_rx);
+            verdicts.push(ver_tx);
+        }
+        let mut pool = ThreadedPool { reports, verdicts };
+        let driven = drive(&mut pool, &mut side, &links, cfg, acct);
+        // Unblock any client still waiting on a verdict or a reply frame
+        // before joining, so a server-side error can't deadlock the fleet.
+        drop(pool);
+        drop(links);
+        let mut clients_res = Ok(());
+        for (i, h) in handles.into_iter().enumerate() {
+            match h.join() {
+                Ok(Ok(())) => {}
+                Ok(Err(e)) => {
+                    if clients_res.is_ok() {
+                        clients_res = Err(e.context(format!("client {i} failed")));
+                    }
+                }
+                Err(panic) => std::panic::resume_unwind(panic),
+            }
+        }
+        driven.and(clients_res)
+    })?;
+    Ok((side.history, width))
+}

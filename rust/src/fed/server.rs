@@ -73,6 +73,15 @@ impl Server {
         }
     }
 
+    /// Accept a dense upload covering every registered shared entity of
+    /// `client`, in shared-list order (dense and sync rounds, and the SVD
+    /// transport's reconstructed states).
+    pub fn receive_all_shared(&mut self, client: u16, rows: &[f32]) {
+        let ids = std::mem::take(&mut self.shared[client as usize]);
+        self.receive(client, &ids, rows);
+        self.shared[client as usize] = ids;
+    }
+
     /// Dense FedE aggregation for client `c`: the average over ALL
     /// uploaders of each of c's shared entities (c included).  Entities
     /// nobody uploaded keep... that cannot happen on dense rounds (every
@@ -202,6 +211,16 @@ mod tests {
         assert_eq!(sign, vec![false, false, true]);
         assert_eq!(rows, vec![7.0, 8.0]);
         assert_eq!(prio, vec![1]);
+    }
+
+    #[test]
+    fn receive_all_shared_covers_the_registered_list() {
+        let mut s = server2();
+        s.begin_round();
+        s.receive_all_shared(0, &[1.0, 1.0, 2.0, 2.0, 3.0, 3.0]);
+        s.receive_all_shared(1, &[3.0, 3.0, 4.0, 4.0, 5.0, 5.0]);
+        assert_eq!(s.shared[0], vec![0, 1, 2], "shared list must survive");
+        assert_eq!(s.fede_download(0), vec![2.0, 2.0, 3.0, 3.0, 4.0, 4.0]);
     }
 
     #[test]

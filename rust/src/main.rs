@@ -13,7 +13,7 @@ use anyhow::Result;
 use feds::data::generator::generate;
 use feds::data::partition::partition;
 use feds::exp::{self, Ctx};
-use feds::fed::{comm_ratio, run_federated, Algo, FedRunConfig};
+use feds::fed::{comm_ratio, run_federated, Algo, ExecMode, FedRunConfig};
 use feds::kge::Method;
 use feds::util::cli::Cli;
 
@@ -91,6 +91,7 @@ fn train_cli() -> Cli {
         .opt("eval-cap", "384", "max eval queries per client per split (0=all)")
         .opt("seed", "64501", "experiment seed")
         .opt("backend", "xla", "xla|native")
+        .opt("exec", "seq", "client execution: seq|threaded (threaded is native-only)")
         .opt("triples", "0", "override #triples (0 = backend default)")
 }
 
@@ -115,6 +116,7 @@ fn cmd_train(args: &[String]) -> Result<()> {
         eval_cap: m.usize("eval-cap"),
         seed: m.u64("seed"),
         svd_cols: 8,
+        exec: ExecMode::parse(m.get("exec"))?,
     };
     let out = run_federated(&data, &cfg, &ctx.backend)?;
     println!("\n=== {} ===", out.history.label);
@@ -147,6 +149,7 @@ fn exp_cli() -> Cli {
     Cli::new("feds exp", "regenerate a paper table/figure")
         .opt("backend", "xla", "xla|native")
         .opt("seed", "64501", "experiment seed")
+        .opt("exec", "seq", "client execution: seq|threaded (threaded is native-only)")
         .flag("fast", "CI smoke mode: fewer rounds, smaller eval cap")
 }
 
@@ -155,7 +158,8 @@ fn cmd_exp(args: &[String]) -> Result<()> {
     let m = exp_cli()
         .parse(&args[1.min(args.len())..])
         .map_err(|u| anyhow::anyhow!("{u}"))?;
-    let ctx = Ctx::from_options(m.get("backend"), m.flag("fast"), m.u64("seed"))?;
+    let ctx = Ctx::from_options(m.get("backend"), m.flag("fast"), m.u64("seed"))?
+        .with_exec(ExecMode::parse(m.get("exec"))?);
     let dir = exp::reports_dir();
     let run_one = |name: &str| -> Result<()> {
         let rep = match name {

@@ -2,6 +2,11 @@
 //! without knowing whether steps run on the PJRT runtime (production path,
 //! `XlaTrainer`) or the pure-Rust oracle (`NativeTrainer`, used for
 //! artifact-free tests and numerics cross-checks).
+//!
+//! Thread-safety: `NativeTrainer` is plain owned data and therefore
+//! `Send`, which is what lets `fed::ExecMode::Threaded` run one client
+//! per OS thread.  The XLA trainers hold an `Rc<Runtime>` (the PJRT
+//! client is not `Send`), so XLA-backed runs stay sequential.
 
 pub mod kd;
 pub mod native;

@@ -154,4 +154,12 @@ mod tests {
         let mut t = trainer();
         assert!(t.set_entity_rows(&[1, 2], &[0.0; 3]).is_err());
     }
+
+    #[test]
+    fn native_trainer_is_send() {
+        // the threaded orchestrator moves one trainer per client onto an
+        // OS thread; this must never regress
+        fn assert_send<T: Send>() {}
+        assert_send::<NativeTrainer>();
+    }
 }

@@ -2,9 +2,11 @@
 //! protocol correctness, communication accounting, and the paper's headline
 //! qualitative claims at miniature scale.
 
+use feds::comm::accounting::Direction;
 use feds::data::generator::{generate, GeneratorConfig};
 use feds::data::partition::partition;
-use feds::fed::{comm_ratio, run_federated, Algo, Backend, FedRunConfig};
+use feds::fed::protocol::{Download, Upload};
+use feds::fed::{comm_ratio, run_federated, Algo, Backend, ExecMode, FedRunConfig};
 use feds::kge::{Hyper, Method};
 
 fn tiny_data(clients: usize, seed: u64) -> feds::data::partition::FedDataset {
@@ -41,6 +43,7 @@ fn base_cfg(algo: Algo, rounds: usize) -> FedRunConfig {
         eval_cap: 64,
         seed: 7,
         svd_cols: 8,
+        exec: ExecMode::Sequential,
     }
 }
 
@@ -203,4 +206,91 @@ fn eq5_ratio_reported_for_feds_only() {
     assert!((feds.eq5_ratio.unwrap() - comm_ratio(0.4, 4, 16)).abs() < 1e-9);
     let fedep = run_federated(&data, &base_cfg(Algo::FedEP, 2), &native_backend(16)).unwrap();
     assert!(fedep.eq5_ratio.is_none());
+}
+
+// --- refactor seams: exchange strategies over real transport -------------
+
+/// Every algorithm must produce byte-identical accounting and bit-identical
+/// metrics whether clients run inline or on their own OS threads.
+#[test]
+fn threaded_matches_sequential_bitwise() {
+    let data = tiny_data(4, 11);
+    for algo in [
+        Algo::FedEP,
+        Algo::FedEPL,
+        Algo::FedS { sync: true },
+        Algo::FedS { sync: false },
+        Algo::FedSvd { constrained: false },
+        Algo::FedSvd { constrained: true },
+    ] {
+        let mut cfg = base_cfg(algo, 8);
+        let seq = run_federated(&data, &cfg, &native_backend(16)).unwrap();
+        cfg.exec = ExecMode::Threaded;
+        let thr = run_federated(&data, &cfg, &native_backend(16)).unwrap();
+        for dir in [Direction::Upload, Direction::Download] {
+            assert_eq!(
+                seq.acct.params_dir(dir),
+                thr.acct.params_dir(dir),
+                "{algo:?} params {dir:?}"
+            );
+            assert_eq!(
+                seq.acct.bytes_dir(dir),
+                thr.acct.bytes_dir(dir),
+                "{algo:?} bytes {dir:?}"
+            );
+        }
+        let (a, b) = (&seq.history.records, &thr.history.records);
+        assert_eq!(a.len(), b.len(), "{algo:?} record count");
+        assert_eq!(seq.history.converged_idx, thr.history.converged_idx, "{algo:?}");
+        for (x, y) in a.iter().zip(b.iter()) {
+            assert_eq!(x.round, y.round, "{algo:?}");
+            assert_eq!(x.params_cum, y.params_cum, "{algo:?}");
+            assert_eq!(x.bytes_cum, y.bytes_cum, "{algo:?}");
+            assert_eq!(x.mean_loss.to_bits(), y.mean_loss.to_bits(), "{algo:?} loss");
+            assert_eq!(x.valid.mrr.to_bits(), y.valid.mrr.to_bits(), "{algo:?} valid MRR");
+            assert_eq!(x.test.mrr.to_bits(), y.test.mrr.to_bits(), "{algo:?} test MRR");
+            assert_eq!(x.test.hits10.to_bits(), y.test.hits10.to_bits(), "{algo:?} hits@10");
+        }
+    }
+}
+
+/// The dense exchange's accounting must equal a message-level replay: the
+/// strategies meter exactly what the protocol frames encode, nothing more.
+#[test]
+fn dense_accounting_matches_message_frames_exactly() {
+    let data = tiny_data(3, 12);
+    let mut cfg = base_cfg(Algo::FedEP, 3);
+    cfg.eval_every = 100; // no evals → no early stop → exactly 3 comm rounds
+    let width = 16usize;
+    let out = run_federated(&data, &cfg, &native_backend(width)).unwrap();
+    let mut params = 0u64;
+    let mut bytes = 0u64;
+    for round in 1..=3u32 {
+        for c in 0..3u16 {
+            let n = data.shared_entities_of(c).len();
+            if n == 0 {
+                continue;
+            }
+            let up = Upload::Full { round, client: c, emb: vec![0.0; n * width] };
+            params += up.params();
+            bytes += up.encode().len() as u64;
+            let down = Download::Full { round, emb: vec![0.0; n * width] };
+            params += down.params();
+            bytes += down.encode().len() as u64;
+        }
+    }
+    assert_eq!(out.acct.params(), params);
+    assert_eq!(out.acct.bytes(), bytes);
+    assert_eq!(out.acct.params_dir(Direction::Upload), params / 2);
+}
+
+#[test]
+fn single_threaded_mode_never_communicates() {
+    let data = tiny_data(3, 13);
+    let mut cfg = base_cfg(Algo::Single, 4);
+    cfg.exec = ExecMode::Threaded;
+    let out = run_federated(&data, &cfg, &native_backend(16)).unwrap();
+    assert_eq!(out.acct.params(), 0);
+    assert_eq!(out.acct.bytes(), 0);
+    assert!(out.history.mrr_cg() > 0.0);
 }

@@ -234,3 +234,67 @@ fn transport_metering_matches_frames() {
     assert_eq!(acct.bytes(), total_bytes);
     assert_eq!(acct.messages(), 10);
 }
+
+/// Property: `Upload::Sparse`/`Download::Sparse` survive the wire for any
+/// sign/emb/prio shape, the bit-packed `bits` codec included, and the
+/// frame layout is exactly what the codec promises.
+#[test]
+fn sparse_messages_roundtrip_the_wire() {
+    check("sparse_wire_roundtrip", 60, |rng| {
+        let n = 1 + rng.usize_below(256);
+        let w = 1 + rng.usize_below(12);
+        let sign: Vec<bool> = (0..n).map(|_| rng.bool(0.4)).collect();
+        let k = sign.iter().filter(|&&s| s).count();
+        let emb: Vec<f32> = (0..k * w).map(|_| rng.uniform(-2.0, 2.0)).collect();
+        let round = rng.next_u64() as u32;
+        let client = rng.u32_below(u16::MAX as u32 + 1) as u16;
+
+        let up = Upload::Sparse { round, client, sign: sign.clone(), emb: emb.clone() };
+        let frame = up.encode();
+        assert_eq!(Upload::decode(&frame).unwrap(), up);
+        // tag(1) + round(4) + client(2) + bits(4 + ⌈n/8⌉) + f32s(4 + 4kw)
+        assert_eq!(frame.len(), 15 + n.div_ceil(8) + 4 * emb.len(), "n={n} k={k} w={w}");
+        // paper-parameter count stays the dense-typed one (§III-F)
+        assert_eq!(up.params(), (n + k * w) as u64);
+
+        let prio: Vec<u32> = (0..k).map(|_| rng.u32_below(64)).collect();
+        let down = Download::Sparse { round, sign, emb, prio: prio.clone() };
+        let frame = down.encode();
+        assert_eq!(Download::decode(&frame).unwrap(), down);
+        // tag(1) + round(4) + bits(4 + ⌈n/8⌉) + f32s(4 + 4kw) + u32s(4 + 4k)
+        assert_eq!(frame.len(), 17 + n.div_ceil(8) + 4 * (k * w) + 4 * k);
+        assert_eq!(down.params(), (n + k * w + k) as u64);
+
+        // truncation must error, never panic
+        assert!(Download::decode(&frame[..frame.len() - 1]).is_err());
+    });
+}
+
+/// Property: sparse frames over a metered duplex link record exactly the
+/// paper-parameter count and the bit-packed byte size, in both directions.
+#[test]
+fn endpoint_meters_sparse_frames_exactly() {
+    use feds::comm::accounting::Direction;
+    check("sparse_endpoint_metering", 30, |rng| {
+        let n = 1 + rng.usize_below(128);
+        let w = 1 + rng.usize_below(8);
+        let sign: Vec<bool> = (0..n).map(|_| rng.bool(0.5)).collect();
+        let k = sign.iter().filter(|&&s| s).count();
+        let emb: Vec<f32> = (0..k * w).map(|_| rng.uniform(-1.0, 1.0)).collect();
+        let prio: Vec<u32> = (0..k).map(|_| rng.u32_below(8)).collect();
+
+        let acct = Accounting::new();
+        let (client, server) = duplex(acct.clone());
+        let up = Upload::Sparse { round: 1, client: 0, sign: sign.clone(), emb: emb.clone() };
+        client.send(up.encode(), up.params()).unwrap();
+        assert_eq!(Upload::decode(&server.recv().unwrap()).unwrap(), up);
+        let down = Download::Sparse { round: 1, sign, emb, prio };
+        server.send(down.encode(), down.params()).unwrap();
+        assert_eq!(Download::decode(&client.recv().unwrap()).unwrap(), down);
+
+        assert_eq!(acct.params_dir(Direction::Upload), up.params());
+        assert_eq!(acct.params_dir(Direction::Download), down.params());
+        assert_eq!(acct.bytes_dir(Direction::Upload), up.encode().len() as u64);
+        assert_eq!(acct.bytes_dir(Direction::Download), down.encode().len() as u64);
+    });
+}
