@@ -1,0 +1,134 @@
+//! Sparse training engine vs the dense oracle at realistic scale, plus the
+//! chunked parallel eval scan — the acceptance benchmark for the sparse
+//! hot-path rework.  `cargo bench --bench train_hot_path`
+//! (`FEDS_BENCH_FAST=1` for the CI smoke run).
+//!
+//! Scenario: E = 50 000 global entities, dim 128, batch 512, 64 negatives,
+//! with positives and negatives drawn from one client's local entity set
+//! (the FedE convention — a client never samples entities it does not
+//! own), so a step gathers a few thousand distinct rows out of 50 000.
+//! The dense baseline still zeroes and Adam-updates all E×W parameters
+//! every step; the sparse engine only visits the gathered rows.
+//!
+//! Besides the criterion-style report (`reports/bench/train_hot_path.json`),
+//! this writes a single `BENCH_train.json` trajectory point with the
+//! measured per-step times and speedups, which CI uploads as an artifact.
+
+use feds::data::dataset::{BatchIter, EvalBatch};
+use feds::data::Triple;
+use feds::kge::native::{DenseOracle, NativeModel};
+use feds::kge::{Hyper, Method};
+use feds::util::bench::{bb, Bench};
+use feds::util::json::Json;
+use feds::util::rng::Rng;
+
+const NUM_ENTITIES: usize = 50_000;
+const DIM: usize = 128;
+const BATCH: usize = 512;
+const NEGATIVES: usize = 64;
+const NUM_RELATIONS: usize = 64;
+/// One client's local entity count (cross-silo partition of 50k entities).
+const LOCAL_ENTITIES: usize = 2_048;
+
+fn main() {
+    let mut b = Bench::from_env("train_hot_path");
+
+    // --- data: one padded batch with client-local sampling ----------------
+    let mut rng = Rng::new(42);
+    let pool: Vec<u32> = (0..LOCAL_ENTITIES as u32).collect();
+    let triples: Vec<Triple> = (0..BATCH)
+        .map(|_| {
+            Triple::new(
+                rng.u32_below(LOCAL_ENTITIES as u32),
+                rng.u32_below(NUM_RELATIONS as u32),
+                rng.u32_below(LOCAL_ENTITIES as u32),
+            )
+        })
+        .collect();
+    let mut brng = rng.fork(1);
+    let batch = BatchIter::new(&triples, &pool, BATCH, NEGATIVES, &mut brng)
+        .next()
+        .expect("one full batch");
+
+    // --- models: identical init, two engines ------------------------------
+    let hyper = Hyper { dim: DIM, ..Default::default() };
+    let mut sparse = NativeModel::new(
+        Method::TransE,
+        hyper.clone(),
+        NUM_ENTITIES,
+        NUM_RELATIONS,
+        &mut rng,
+    );
+    let mut dense = DenseOracle::new(sparse.clone());
+
+    // engines agree before any timing (gap-free first step is bit-exact)
+    {
+        let mut s = sparse.clone();
+        let mut d = DenseOracle::new(s.clone());
+        let (ls, ld) = (s.train_batch(&batch), d.train_batch(&batch));
+        assert!(
+            (ls - ld).abs() <= 1e-5 * (1.0 + ld.abs()),
+            "engines disagree on step 1: sparse {ls} vs dense {ld}"
+        );
+    }
+
+    let label = format!("E{}k_d{DIM}_b{BATCH}_n{NEGATIVES}", NUM_ENTITIES / 1000);
+    let name_sparse = format!("train_step/sparse_{label}");
+    let name_dense = format!("train_step/dense_{label}");
+    let s_sparse = b.bench(&name_sparse, || bb(sparse.train_batch(&batch)));
+    let s_dense = b.bench(&name_dense, || bb(dense.train_batch(&batch)));
+    let train_speedup = s_dense.mean_ns / s_sparse.mean_ns;
+    b.report_value("train_step/speedup", train_speedup, "x");
+
+    // --- eval: candidate scan, sequential vs chunked across threads -------
+    // queries × candidates must clear PAR_EVAL_MIN_WORK (1 << 18) or the
+    // auto budget stays sequential and the comparison measures nothing
+    let eval_len = 8usize;
+    assert!(eval_len * NUM_ENTITIES >= 1 << 18, "eval workload below the parallel threshold");
+    let eb = EvalBatch {
+        src: (0..eval_len as i32).collect(),
+        rel: (0..eval_len as i32).map(|i| i % NUM_RELATIONS as i32).collect(),
+        truth: (0..eval_len as i32).map(|i| i + 1000).collect(),
+        pred_head: (0..eval_len).map(|i| (i % 2) as f32).collect(),
+        filter: vec![0.0; eval_len * NUM_ENTITIES],
+        len: eval_len,
+        eval_batch: eval_len,
+    };
+    let name_eval_seq = format!("eval_ranks/seq_q{eval_len}_{label}");
+    let name_eval_par = format!("eval_ranks/par_q{eval_len}_{label}");
+    sparse.eval_threads = 1;
+    let s_eval_seq = b.bench(&name_eval_seq, || bb(sparse.eval_ranks(&eb)));
+    sparse.eval_threads = 0; // auto
+    let s_eval_par = b.bench(&name_eval_par, || bb(sparse.eval_ranks(&eb)));
+    let eval_speedup = s_eval_seq.mean_ns / s_eval_par.mean_ns;
+    b.report_value("eval_ranks/speedup", eval_speedup, "x");
+
+    // --- the BENCH_train.json trajectory point ----------------------------
+    let hw_threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let point = Json::obj()
+        .set("suite", "train_hot_path")
+        .set("entities", NUM_ENTITIES)
+        .set("dim", DIM)
+        .set("batch", BATCH)
+        .set("negatives", NEGATIVES)
+        .set("local_entities", LOCAL_ENTITIES)
+        .set("dense_step_ms", s_dense.mean_ns / 1e6)
+        .set("sparse_step_ms", s_sparse.mean_ns / 1e6)
+        .set("train_speedup", train_speedup)
+        .set("eval_seq_ms", s_eval_seq.mean_ns / 1e6)
+        .set("eval_par_ms", s_eval_par.mean_ns / 1e6)
+        .set("eval_speedup", eval_speedup)
+        .set("threads", hw_threads);
+    std::fs::write("BENCH_train.json", point.to_string_pretty()).expect("write BENCH_train.json");
+    println!(
+        "train_hot_path: sparse {:.2} ms/step vs dense {:.2} ms/step → {:.1}x; \
+         eval {:.2} ms → {:.2} ms → {:.1}x (BENCH_train.json written)",
+        s_sparse.mean_ns / 1e6,
+        s_dense.mean_ns / 1e6,
+        train_speedup,
+        s_eval_seq.mean_ns / 1e6,
+        s_eval_par.mean_ns / 1e6,
+        eval_speedup
+    );
+    b.finish();
+}

@@ -150,7 +150,8 @@ impl<'d> ClientRunner<'d> {
     pub fn local_round(&mut self, round: usize, eval: bool) -> Result<Report> {
         // all epochs' batches gathered so the XLA trainers can fuse the
         // whole phase into scan-stepped executions
-        let mut batches = Vec::new();
+        let per_epoch = self.train.len().div_ceil(self.batch_size.max(1));
+        let mut batches = Vec::with_capacity(self.cfg.local_epochs * per_epoch);
         for _ in 0..self.cfg.local_epochs {
             let mut brng = self.ctx.rng.fork(round as u64);
             batches.extend(BatchIter::new(

@@ -152,15 +152,25 @@ impl Exchange for FedSExchange {
         let scores = ctx.trainer.change_scores(&ctx.shared, hist)?;
         let k = top_k_count(ctx.shared.len(), self.sparsity);
         let sel = select_by_change(&scores, k);
-        let ids: Vec<u32> = sel.iter().map(|&i| ctx.shared[i]).collect();
+        let mut sign = vec![false; ctx.shared.len()];
+        for &i in &sel {
+            sign[i] = true;
+        }
+        // rows must travel in ascending shared-index order — exactly the
+        // order `server_receive` reconstructs from the sign vector.  (The
+        // score-ranked `sel` order previously leaked into the frame here,
+        // misaligning rows with entities whenever a higher change score
+        // sat at a higher shared index.)
+        let ids: Vec<u32> = sign
+            .iter()
+            .enumerate()
+            .filter(|(_, &s)| s)
+            .map(|(i, _)| ctx.shared[i])
+            .collect();
         let rows = ctx.trainer.get_entity_rows(&ids)?;
         let hist = ctx.hist.as_mut().unwrap();
         for (k2, &id) in ids.iter().enumerate() {
             hist.set_row(id as usize, &rows[k2 * width..(k2 + 1) * width]);
-        }
-        let mut sign = vec![false; ctx.shared.len()];
-        for &i in &sel {
-            sign[i] = true;
         }
         Ok(Upload::Sparse { round, client: ctx.id, sign, emb: rows })
     }
@@ -183,14 +193,15 @@ impl Exchange for FedSExchange {
                 if ids.is_empty() {
                     return Ok(());
                 }
-                // Eq. 4: E^{t+1} = (A + E^t) / (1 + P)
+                // Eq. 4: E^{t+1} = (A + E^t) / (1 + P), merged row-slice-wise
                 let own = ctx.trainer.get_entity_rows(&ids)?;
                 let mut merged = vec![0.0f32; ids.len() * width];
-                for j in 0..ids.len() {
-                    let p = prio[j] as f32;
-                    for w in 0..width {
-                        merged[j * width + w] =
-                            (emb[j * width + w] + own[j * width + w]) / (1.0 + p);
+                for (j, out) in merged.chunks_exact_mut(width).enumerate() {
+                    let denom = 1.0 + prio[j] as f32;
+                    let agg = &emb[j * width..(j + 1) * width];
+                    let mine = &own[j * width..(j + 1) * width];
+                    for ((o, &a), &m) in out.iter_mut().zip(agg).zip(mine) {
+                        *o = (a + m) / denom;
                     }
                 }
                 ctx.trainer.set_entity_rows(&ids, &merged)
@@ -328,5 +339,82 @@ impl Exchange for SvdExchange {
             refs.set_row(id as usize, &row);
         }
         Ok(Download::Full { round, emb: packed })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::Triple;
+    use crate::data::dataset::{EvalSet, FilterIndex};
+    use crate::kge::Hyper;
+    use crate::trainer::{LocalTrainer, NativeTrainer};
+
+    fn empty_ctx_parts(e: usize) -> (FilterIndex, EvalSet, EvalSet) {
+        let none: Vec<Triple> = Vec::new();
+        (FilterIndex::build(none.iter()), EvalSet::new(&none, e), EvalSet::new(&none, e))
+    }
+
+    /// Regression: FedS sparse-upload rows must travel in ascending
+    /// shared-index order — the order `server_receive` reconstructs from
+    /// the sign vector — not in change-score rank order.  Change scores
+    /// are planted strictly increasing over the shared list, so a
+    /// rank-ordered frame would arrive exactly reversed.
+    #[test]
+    fn sparse_upload_rows_align_with_server_reconstruction() {
+        let e = 6usize;
+        let mut rng = Rng::new(3);
+        let hyper = Hyper { dim: 2, ..Default::default() }; // TransE → width 2
+        let mut trainer = NativeTrainer::new(crate::kge::Method::TransE, hyper, e, 2, 4, &mut rng);
+        let shared: Vec<u32> = vec![1, 3, 5];
+        let width = trainer.entity_width();
+        trainer.set_entity_rows(&shared, &[1.0, 0.0, 0.0, 2.0, 3.0, 3.0]).unwrap();
+        // history: cos(cur, hist) = 1, 0.707, 0 → change scores 0 < 0.3 < 1
+        let mut hist = Table::zeros(e, width);
+        hist.set_row(1, &[1.0, 0.0]);
+        hist.set_row(3, &[2.0, 2.0]);
+        hist.set_row(5, &[-3.0, 3.0]);
+
+        let schedule = SyncSchedule::new(None);
+        let mut ex = FedSExchange { sparsity: 0.7, schedule, sync_now: false, rng: None };
+        ex.begin_round(2);
+        let (filters, valid_set, test_set) = empty_ctx_parts(e);
+        let mut ctx = ClientCtx {
+            id: 0,
+            trainer: Box::new(trainer),
+            shared: shared.clone(),
+            hist: Some(hist),
+            svd_ref: None,
+            filters,
+            valid_set,
+            test_set,
+            rng: Rng::new(9),
+        };
+        let up = ex.make_upload(2, &mut ctx).unwrap();
+        let Upload::Sparse { sign, emb, .. } = up.clone() else {
+            panic!("expected a sparse upload");
+        };
+        // K = ⌊3·0.7⌋ = 2 → the two largest changes: entities 3 and 5
+        assert_eq!(sign, vec![false, true, true]);
+        let r3 = ctx.trainer.get_entity_rows(&[3]).unwrap();
+        let r5 = ctx.trainer.get_entity_rows(&[5]).unwrap();
+        assert_eq!(&emb[..width], &r3[..], "first row must be entity 3");
+        assert_eq!(&emb[width..], &r5[..], "second row must be entity 5");
+
+        // fold through a server strategy: rows land on the right entities
+        let mut server = Server::new(e, width, vec![shared.clone()]);
+        let mut sx = FedSExchange {
+            sparsity: 0.7,
+            schedule: SyncSchedule::new(None),
+            sync_now: false,
+            rng: Some(Rng::new(1)),
+        };
+        sx.begin_round(2);
+        server.begin_round();
+        sx.server_receive(&mut server, 0, up).unwrap();
+        let down = server.fede_download(0);
+        assert_eq!(&down[..width], &[0.0, 0.0], "entity 1 was not uploaded");
+        assert_eq!(&down[width..2 * width], &r3[..]);
+        assert_eq!(&down[2 * width..], &r5[..]);
     }
 }

@@ -180,6 +180,9 @@ fn native_trainer(
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub enum ExecMode {
     /// All clients stepped in order on the calling thread (any backend).
+    /// Native-backend evaluation still uses the full machine: each
+    /// `eval_ranks` call chunks its candidate scan across cores
+    /// (bit-identical to a single-threaded scan).
     #[default]
     Sequential,
     /// One OS thread per client for local training + evaluation (native
@@ -579,7 +582,7 @@ fn run_threaded(
             let (eval_batch, batch_size, negatives) = (*eval_batch, *batch, *negatives);
             handles.push(s.spawn(move || -> Result<()> {
                 let mut rng = Rng::new(cfg.seed);
-                let trainer = native_trainer(
+                let mut trainer = native_trainer(
                     &hyper,
                     eval_batch,
                     &cfg,
@@ -587,6 +590,10 @@ fn run_threaded(
                     data.num_relations,
                     &mut rng,
                 )?;
+                // one OS thread per client already saturates the machine;
+                // pin the per-trainer eval fan-out to avoid oversubscribing
+                // (ranks are bit-identical for any thread count)
+                trainer.set_eval_threads(1);
                 let runner = ClientRunner::build(
                     data,
                     id,

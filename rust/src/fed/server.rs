@@ -17,11 +17,16 @@ pub struct Server {
     pub width: usize,
     /// registered shared-entity lists (sorted global ids), per client
     pub shared: Vec<Vec<u32>>,
-    /// Σ of all uploads this round, per entity (E × W)
+    /// Σ of all uploads this round, per entity (E × W).  Invariant:
+    /// entities not in `dirty` have an all-zero sum row and a zero count,
+    /// so per-round reset work scales with what was uploaded, not E.
     sum: Vec<f32>,
     /// number of uploaders this round, per entity
     count: Vec<u32>,
+    /// entities with ≥1 upload this round, in first-upload order
+    dirty: Vec<u32>,
     /// this round's per-client uploads: id → row offset in `rows[c]`
+    /// (maps and row buffers are cleared, never reallocated, per round)
     uploaded: Vec<HashMap<u32, usize>>,
     rows: Vec<Vec<f32>>,
 }
@@ -35,6 +40,7 @@ impl Server {
             shared,
             sum: vec![0.0; num_entities * width],
             count: vec![0; num_entities],
+            dirty: Vec::new(),
             uploaded: vec![HashMap::new(); n_clients],
             rows: vec![Vec::new(); n_clients],
         }
@@ -44,10 +50,21 @@ impl Server {
         self.shared.len()
     }
 
-    /// Clear per-round accumulation state.
+    /// Entities uploaded at least once this round.
+    pub fn dirty_len(&self) -> usize {
+        self.dirty.len()
+    }
+
+    /// Clear per-round accumulation state.  O(dirty·width + uploads) —
+    /// only the rows the previous round actually touched are re-zeroed.
     pub fn begin_round(&mut self) {
-        self.sum.iter_mut().for_each(|x| *x = 0.0);
-        self.count.iter_mut().for_each(|x| *x = 0);
+        let w = self.width;
+        for &id in &self.dirty {
+            let e = id as usize;
+            self.sum[e * w..(e + 1) * w].fill(0.0);
+            self.count[e] = 0;
+        }
+        self.dirty.clear();
         for m in &mut self.uploaded {
             m.clear();
         }
@@ -57,6 +74,8 @@ impl Server {
     }
 
     /// Accept a client's upload: `ids` (global) with concatenated `rows`.
+    /// Accumulation is slice-wise per row; first touch of an entity this
+    /// round registers it in the dirty list.
     pub fn receive(&mut self, client: u16, ids: &[u32], rows: &[f32]) {
         let w = self.width;
         assert_eq!(rows.len(), ids.len() * w, "upload size mismatch");
@@ -64,10 +83,14 @@ impl Server {
         for (k, &id) in ids.iter().enumerate() {
             let e = id as usize;
             let row = &rows[k * w..(k + 1) * w];
-            for (j, &v) in row.iter().enumerate() {
-                self.sum[e * w + j] += v;
+            if self.count[e] == 0 {
+                self.dirty.push(id);
             }
             self.count[e] += 1;
+            let dst = &mut self.sum[e * w..(e + 1) * w];
+            for (d, &v) in dst.iter_mut().zip(row) {
+                *d += v;
+            }
             self.uploaded[c].insert(id, self.rows[c].len());
             self.rows[c].extend_from_slice(row);
         }
@@ -233,6 +256,30 @@ mod tests {
         let (sign, rows, _) = s.feds_download(1, 3, &mut rng);
         assert!(sign.iter().all(|&b| !b));
         assert!(rows.is_empty());
+    }
+
+    #[test]
+    fn dirty_tracking_resets_only_touched_rows() {
+        let mut s = server2();
+        s.begin_round();
+        s.receive(0, &[0, 2], &[1.0, 1.0, 3.0, 3.0]);
+        assert_eq!(s.dirty_len(), 2);
+        s.begin_round();
+        assert_eq!(s.dirty_len(), 0);
+        // a fresh round over different entities sees clean accumulators
+        s.receive(1, &[1], &[5.0, 6.0]);
+        assert_eq!(s.dirty_len(), 1);
+        assert_eq!(s.fede_download(0), vec![0.0, 0.0, 5.0, 6.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn duplicate_entity_across_clients_is_dirty_once() {
+        let mut s = server2();
+        s.begin_round();
+        s.receive(0, &[1], &[1.0, 2.0]);
+        s.receive(1, &[1], &[3.0, 4.0]);
+        assert_eq!(s.dirty_len(), 1);
+        assert_eq!(s.fede_download(0)[2..4], [2.0, 3.0]);
     }
 
     #[test]

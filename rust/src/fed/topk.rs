@@ -44,14 +44,21 @@ pub fn select_by_change(scores: &[f32], k: usize) -> Vec<usize> {
 /// Downstream selection: indices of available entities (priority > 0),
 /// ranked by priority descending, equal-priority ties shuffled randomly
 /// (§III-D "a random strategy is employed").  Returns at most `k`.
+///
+/// O(n + k log k): a random permutation makes the threshold tie-break
+/// uniform, `select_nth_unstable` partitions the top-k without sorting
+/// the tail (mirroring `select_by_change`), and only the k winners are
+/// sorted for the caller.
 pub fn select_by_priority(priorities: &[u32], k: usize, rng: &mut Rng) -> Vec<usize> {
     let mut avail: Vec<usize> = (0..priorities.len()).filter(|&i| priorities[i] > 0).collect();
-    // shuffle first so that the stable sort's tie order is random
     if avail.len() > k {
+        // shuffle first so the partial selection's equal-priority
+        // tie-break at the threshold is random
         rng.shuffle(&mut avail);
+        avail.select_nth_unstable_by(k, |&a, &b| priorities[b].cmp(&priorities[a]));
+        avail.truncate(k);
     }
     avail.sort_by(|&a, &b| priorities[b].cmp(&priorities[a]));
-    avail.truncate(k);
     avail
 }
 
@@ -131,6 +138,24 @@ mod tests {
         }
         // across seeds the random tie-break must produce variety
         assert!(seen.len() > 3, "tie-break not random: {} variants", seen.len());
+    }
+
+    /// The partial selection must pick exactly the priorities a full
+    /// descending sort would (the tie-break may pick different *indices*,
+    /// but the selected priority multiset is determined).
+    #[test]
+    fn priority_partial_selection_matches_full_sort_multiset() {
+        check("topk_priority_partial", 30, |rng| {
+            let n = 1 + rng.usize_below(300);
+            let k = rng.usize_below(n + 3);
+            let prio: Vec<u32> = (0..n).map(|_| rng.u32_below(6)).collect();
+            let sel = select_by_priority(&prio, k, rng);
+            let mut want: Vec<u32> = prio.iter().copied().filter(|&p| p > 0).collect();
+            want.sort_unstable_by(|a, b| b.cmp(a));
+            want.truncate(k);
+            let got: Vec<u32> = sel.iter().map(|&i| prio[i]).collect();
+            assert_eq!(got, want, "selected priorities must match a full sort");
+        });
     }
 
     #[test]

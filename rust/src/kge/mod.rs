@@ -133,6 +133,11 @@ impl Table {
 }
 
 /// Dense Adam state for one table (torch semantics, matching the artifact).
+///
+/// Retained as the **test oracle** for the sparse engine: `NativeModel`
+/// trains with [`LazyAdam`], and `kge::native::DenseOracle` replays the
+/// same gradients through this full-table update to cross-check them
+/// (`sparse_engine_matches_dense_oracle`).
 #[derive(Clone, Debug)]
 pub struct Adam {
     pub m: Vec<f32>,
@@ -157,6 +162,99 @@ impl Adam {
             let vh = self.v[i] / bc2;
             p[i] -= h.learning_rate * mh / (vh.sqrt() + h.adam_eps);
         }
+    }
+}
+
+/// `b^n` for a u64 exponent (clamped; underflows to 0 for huge gaps, which
+/// is the mathematically correct limit of the decay).
+#[inline]
+fn powu(b: f32, n: u64) -> f32 {
+    b.powi(n.min(i32::MAX as u64) as i32)
+}
+
+/// Lazy **row-wise** Adam for one embedding table.
+///
+/// Per-row `last_step` timestamps let a step update only the rows whose
+/// gradient is non-empty: when a row is next touched after `gap` skipped
+/// steps, the β₁/β₂ moment decay those zero-gradient steps would have
+/// applied is caught up in closed form (`m ·= β₁^gap`, `v ·= β₂^gap`)
+/// instead of being walked step by step.  Untouched rows are never
+/// visited, so a training step costs O(touched·width) rather than
+/// O(rows·width).
+///
+/// Semantics are those of sparse Adam (torch's `SparseAdam` with moment
+/// decay): a skipped step decays a row's moments but does **not** move its
+/// parameters, whereas dense [`Adam`] also applies the residual
+/// `-lr·m̂/(√v̂+ε)` drift on zero-gradient steps.  For rows touched on
+/// every step the two are bit-identical (the gap-free path evaluates
+/// exactly the dense update expression); the moment catch-up itself is
+/// checked against repeated dense zero-grad updates in
+/// `lazy_adam_catch_up_matches_dense_zero_grad_steps`.
+#[derive(Clone, Debug)]
+pub struct LazyAdam {
+    pub m: Vec<f32>,
+    pub v: Vec<f32>,
+    /// 1-based step at which each row's moments were last advanced
+    /// (0 = never touched).
+    pub last_step: Vec<u64>,
+    width: usize,
+}
+
+impl LazyAdam {
+    pub fn new(rows: usize, width: usize) -> Self {
+        Self {
+            m: vec![0.0; rows * width],
+            v: vec![0.0; rows * width],
+            last_step: vec![0; rows],
+            width,
+        }
+    }
+
+    pub fn width(&self) -> usize {
+        self.width
+    }
+
+    /// Closed-form geometric catch-up: advance `row`'s moments to `step`
+    /// as if every step since `last_step[row]` had zero gradient.
+    pub fn catch_up_row(&mut self, row: usize, step: u64, h: &Hyper) {
+        let last = self.last_step[row];
+        if step <= last {
+            return;
+        }
+        let gap = step - last;
+        let d1 = powu(h.adam_beta1, gap);
+        let d2 = powu(h.adam_beta2, gap);
+        let off = row * self.width;
+        for k in off..off + self.width {
+            self.m[k] *= d1;
+            self.v[k] *= d2;
+        }
+        self.last_step[row] = step;
+    }
+
+    /// One touched-row update at global `step` (1-based): catch up the
+    /// skipped decay, then apply the standard Adam step to `p` with
+    /// gradient `g`.  Bias corrections use the global step count, exactly
+    /// like the dense oracle.
+    pub fn update_row(&mut self, p: &mut [f32], g: &[f32], row: usize, step: u64, h: &Hyper) {
+        debug_assert_eq!(p.len(), self.width);
+        debug_assert_eq!(g.len(), self.width);
+        self.catch_up_row(row, step - 1, h);
+        let b1 = h.adam_beta1;
+        let b2 = h.adam_beta2;
+        let bc1 = 1.0 - b1.powi(step as i32);
+        let bc2 = 1.0 - b2.powi(step as i32);
+        let off = row * self.width;
+        for k in 0..self.width {
+            let m = b1 * self.m[off + k] + (1.0 - b1) * g[k];
+            let v = b2 * self.v[off + k] + (1.0 - b2) * g[k] * g[k];
+            self.m[off + k] = m;
+            self.v[off + k] = v;
+            let mh = m / bc1;
+            let vh = v / bc2;
+            p[k] -= h.learning_rate * mh / (vh.sqrt() + h.adam_eps);
+        }
+        self.last_step[row] = step;
     }
 }
 
@@ -214,5 +312,83 @@ mod tests {
     fn embedding_range_matches_python() {
         let h = Hyper::default();
         assert!((h.embedding_range() - 10.0 / 64.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn lazy_adam_gap_free_path_matches_dense_bitwise() {
+        // a row touched on every step must follow the dense oracle exactly
+        let h = Hyper::default();
+        let w = 4;
+        let mut lazy = LazyAdam::new(1, w);
+        let mut dense = Adam::new(w);
+        let mut p_l = vec![0.3f32, -0.7, 1.5, 0.0];
+        let mut p_d = p_l.clone();
+        let mut rng = Rng::new(5);
+        for step in 1..=50u64 {
+            let g: Vec<f32> = (0..w).map(|_| rng.uniform(-1.0, 1.0)).collect();
+            lazy.update_row(&mut p_l, &g, 0, step, &h);
+            dense.update(&mut p_d, &g, step, &h);
+        }
+        assert_eq!(p_l, p_d);
+        assert_eq!(lazy.m, dense.m);
+        assert_eq!(lazy.v, dense.v);
+    }
+
+    /// A row untouched for T steps catches up its moment decay exactly
+    /// like T dense zero-grad updates (the satellite regression test).
+    #[test]
+    fn lazy_adam_catch_up_matches_dense_zero_grad_steps() {
+        let h = Hyper::default();
+        let w = 6;
+        let rows = 3;
+        let mut lazy = LazyAdam::new(rows, w);
+        let mut dense = Adam::new(rows * w);
+        let mut p_l = vec![0.5f32; rows * w];
+        let mut p_d = p_l.clone();
+        // step 1: a real gradient through both engines
+        let g: Vec<f32> = (0..rows * w).map(|i| 0.07 + 0.013 * i as f32).collect();
+        for r in 0..rows {
+            lazy.update_row(&mut p_l[r * w..(r + 1) * w], &g[r * w..(r + 1) * w], r, 1, &h);
+        }
+        dense.update(&mut p_d, &g, 1, &h);
+        // steps 2..=1+T: dense sees T explicit zero-grad updates; the lazy
+        // rows stay untouched and then catch up in one closed-form jump
+        let t = 57u64;
+        let zeros = vec![0.0f32; rows * w];
+        for s in 2..=(1 + t) {
+            dense.update(&mut p_d, &zeros, s, &h);
+        }
+        for r in 0..rows {
+            lazy.catch_up_row(r, 1 + t, &h);
+            assert_eq!(lazy.last_step[r], 1 + t);
+        }
+        for i in 0..rows * w {
+            let rel = |a: f32, b: f32| (a - b).abs() / (1e-12 + b.abs().max(a.abs()));
+            assert!(
+                rel(lazy.m[i], dense.m[i]) < 1e-5,
+                "m[{i}]: lazy {} vs dense {}",
+                lazy.m[i],
+                dense.m[i]
+            );
+            assert!(
+                rel(lazy.v[i], dense.v[i]) < 1e-5,
+                "v[{i}]: lazy {} vs dense {}",
+                lazy.v[i],
+                dense.v[i]
+            );
+        }
+        // documented semantic difference: dense drifts parameters on
+        // zero-grad steps (m ≠ 0), lazy leaves untouched rows in place
+        assert_ne!(p_l, p_d);
+    }
+
+    #[test]
+    fn lazy_adam_never_touched_row_is_inert() {
+        let h = Hyper::default();
+        let mut lazy = LazyAdam::new(2, 3);
+        lazy.catch_up_row(1, 1000, &h);
+        assert!(lazy.m.iter().all(|&x| x == 0.0));
+        assert!(lazy.v.iter().all(|&x| x == 0.0));
+        assert_eq!(lazy.last_step, vec![0, 1000]);
     }
 }

@@ -1,31 +1,129 @@
 //! Pure-Rust reference implementation of the KGE local-training step and
 //! evaluation scoring — the oracle mirror of `python/compile/model.py`.
 //!
-//! Identical math to the lowered artifact: query composition per method,
-//! self-adversarial negative-sampling loss, dense Adam.  An integration
-//! test (`rust/tests/xla_parity.rs`) checks native-vs-artifact agreement
-//! step-for-step at 1e-3 tolerance.
+//! Same forward/backward math as the lowered artifact: query composition
+//! per method, self-adversarial negative-sampling loss.  The optimizer is
+//! lazy row-wise Adam, which matches the artifact's dense Adam exactly on
+//! every *touched* row but does not apply the dense zero-grad drift to
+//! rows a batch never gathers (see [`LazyAdam`](super::LazyAdam)); a
+//! sparse-aware XLA optimizer artifact is ROADMAP follow-on work.  The
+//! integration test (`rust/tests/xla_parity.rs`) checks native-vs-artifact
+//! agreement over a short, near-full-coverage run at 1e-3 tolerance.
+//!
+//! The training hot path is **sparse**: gradients accumulate into
+//! [`SparseGrad`] (an index map over the ≤ `3·batch + batch·negatives`
+//! rows a batch actually gathers) and the optimizer is the lazy row-wise
+//! [`LazyAdam`](super::LazyAdam), so a step costs O(touched·width) instead
+//! of O(rows·width).  The pre-sparse full-table engine survives as
+//! [`DenseOracle`] for parity tests and as the `train_hot_path` bench
+//! baseline.  `eval_ranks` chunks its O(rows) candidate scan across OS
+//! threads with bit-identical results for any thread count.
 
 use crate::data::dataset::{Batch, EvalBatch};
 use crate::util::rng::Rng;
 
-use super::{Adam, Hyper, Method, Table};
+use super::{Adam, Hyper, LazyAdam, Method, Table};
 
 const MOD_EPS: f32 = 1e-12;
 
-/// Full native model state for one client (entity + relation tables + Adam).
+/// Below this many candidate·query scores, `eval_ranks` stays on the
+/// calling thread (thread spawn would dominate the scan).
+const PAR_EVAL_MIN_WORK: usize = 1 << 18;
+
+const UNTOUCHED: u32 = u32::MAX;
+
+/// Touched-row gradient accumulator for one table: a per-batch index map
+/// from row id to a slot in a compact `touched × width` buffer.  Clearing
+/// costs O(touched), not O(rows); slot storage is reused across steps.
+#[derive(Clone, Debug)]
+pub struct SparseGrad {
+    width: usize,
+    /// row id → slot index, `UNTOUCHED` when the row has no gradient
+    slot: Vec<u32>,
+    /// touched row ids, in first-touch order
+    touched: Vec<u32>,
+    /// compact gradient rows, `touched.len() × width`
+    data: Vec<f32>,
+}
+
+impl SparseGrad {
+    pub fn new(rows: usize, width: usize) -> Self {
+        Self { width, slot: vec![UNTOUCHED; rows], touched: Vec::new(), data: Vec::new() }
+    }
+
+    /// Number of rows with a gradient this step.
+    pub fn len(&self) -> usize {
+        self.touched.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.touched.is_empty()
+    }
+
+    /// Reset for the next step in O(touched).
+    pub fn clear(&mut self) {
+        for &r in &self.touched {
+            self.slot[r as usize] = UNTOUCHED;
+        }
+        self.touched.clear();
+        self.data.clear();
+    }
+
+    /// The (zero-initialized on first touch) gradient row for `row`.
+    pub fn row_mut(&mut self, row: usize) -> &mut [f32] {
+        let w = self.width;
+        let mut s = self.slot[row];
+        if s == UNTOUCHED {
+            s = self.touched.len() as u32;
+            self.slot[row] = s;
+            self.touched.push(row as u32);
+            self.data.resize(self.data.len() + w, 0.0);
+        }
+        let off = s as usize * w;
+        &mut self.data[off..off + w]
+    }
+
+    /// Touched rows in first-touch order.
+    pub fn iter(&self) -> impl Iterator<Item = (u32, &[f32])> + '_ {
+        let w = self.width;
+        self.touched.iter().enumerate().map(move |(s, &r)| (r, &self.data[s * w..(s + 1) * w]))
+    }
+
+    /// Scatter into a dense `rows × width` buffer (oracle/test path; the
+    /// buffer must already be zeroed).
+    pub fn scatter_into(&self, dense: &mut [f32]) {
+        let w = self.width;
+        for (r, row) in self.iter() {
+            let off = r as usize * w;
+            dense[off..off + w].copy_from_slice(row);
+        }
+    }
+
+    /// Dense copy of the accumulated gradients (test convenience).
+    pub fn to_dense(&self, rows: usize) -> Vec<f32> {
+        let mut d = vec![0.0; rows * self.width];
+        self.scatter_into(&mut d);
+        d
+    }
+}
+
+/// Full native model state for one client (entity + relation tables +
+/// lazy row-wise Adam).
 #[derive(Clone, Debug)]
 pub struct NativeModel {
     pub method: Method,
     pub hyper: Hyper,
     pub ent: Table,
     pub rel: Table,
-    pub ent_adam: Adam,
-    pub rel_adam: Adam,
+    pub ent_adam: LazyAdam,
+    pub rel_adam: LazyAdam,
     pub step: u64,
-    // scratch gradient buffers (dense, reused across steps)
-    g_ent: Vec<f32>,
-    g_rel: Vec<f32>,
+    /// OS-thread cap for `eval_ranks` candidate chunking (0 = auto from
+    /// `available_parallelism`).  Results are bit-identical for any value.
+    pub eval_threads: usize,
+    // touched-row gradient accumulators (reused across steps)
+    g_ent: SparseGrad,
+    g_rel: SparseGrad,
 }
 
 impl NativeModel {
@@ -41,23 +139,33 @@ impl NativeModel {
         let range = hyper.embedding_range();
         let ent = Table::init_uniform(num_entities, we, range, rng);
         let rel = Table::init_uniform(num_relations, wr, range, rng);
-        let ent_adam = Adam::new(ent.data.len());
-        let rel_adam = Adam::new(rel.data.len());
-        let g_ent = vec![0.0; ent.data.len()];
-        let g_rel = vec![0.0; rel.data.len()];
-        Self { method, hyper, ent, rel, ent_adam, rel_adam, step: 0, g_ent, g_rel }
+        let ent_adam = LazyAdam::new(num_entities, we);
+        let rel_adam = LazyAdam::new(num_relations, wr);
+        let g_ent = SparseGrad::new(num_entities, we);
+        let g_rel = SparseGrad::new(num_relations, wr);
+        Self { method, hyper, ent, rel, ent_adam, rel_adam, step: 0, eval_threads: 0, g_ent, g_rel }
     }
 
-    /// One training step on a padded batch; returns the loss.
+    /// One training step on a padded batch; returns the loss.  Work is
+    /// O(touched·width): only rows gathered by the batch are visited, by
+    /// the gradient pass and by the optimizer alike.
     pub fn train_batch(&mut self, batch: &Batch) -> f32 {
-        self.g_ent.iter_mut().for_each(|g| *g = 0.0);
-        self.g_rel.iter_mut().for_each(|g| *g = 0.0);
+        self.g_ent.clear();
+        self.g_rel.clear();
         let loss = self.accumulate_grads(batch);
         self.step += 1;
-        self.ent_adam
-            .update(&mut self.ent.data, &self.g_ent, self.step, &self.hyper);
-        self.rel_adam
-            .update(&mut self.rel.data, &self.g_rel, self.step, &self.hyper);
+        let we = self.ent.width;
+        for (r, g) in self.g_ent.iter() {
+            let r = r as usize;
+            let p = &mut self.ent.data[r * we..(r + 1) * we];
+            self.ent_adam.update_row(p, g, r, self.step, &self.hyper);
+        }
+        let wr = self.rel.width;
+        for (r, g) in self.g_rel.iter() {
+            let r = r as usize;
+            let p = &mut self.rel.data[r * wr..(r + 1) * wr];
+            self.rel_adam.update_row(p, g, r, self.step, &self.hyper);
+        }
         loss
     }
 
@@ -178,11 +286,11 @@ impl NativeModel {
     }
 
     /// d logit/d q and d logit/d cand, scaled by `g`, accumulated into `dq`
-    /// and the candidate's dense gradient row.
+    /// and the candidate's touched gradient row.
     fn backward_candidate(&mut self, q: &[f32], cand_id: usize, g: f32, dq: &mut [f32]) {
         let we = self.ent.width;
         let cand = &self.ent.data[cand_id * we..(cand_id + 1) * we];
-        let gc = &mut self.g_ent[cand_id * we..(cand_id + 1) * we];
+        let gc = self.g_ent.row_mut(cand_id);
         match self.method {
             Method::TransE => {
                 // logit = γ − Σ|q−c| → dlogit/dq = −sign(q−c)
@@ -228,8 +336,8 @@ impl NativeModel {
         let src = self.ent.data[src_id * we..(src_id + 1) * we].to_vec();
         let rel = self.rel.data[rel_id * wr..(rel_id + 1) * wr].to_vec();
         let emb_range = self.hyper.embedding_range();
-        let gsrc = &mut self.g_ent[src_id * we..(src_id + 1) * we];
-        let grel = &mut self.g_rel[rel_id * wr..(rel_id + 1) * wr];
+        let gsrc = self.g_ent.row_mut(src_id);
+        let grel = self.g_rel.row_mut(rel_id);
         match self.method {
             Method::TransE => {
                 // q = src ± r
@@ -298,7 +406,7 @@ impl NativeModel {
             let ss: f32 = row.iter().map(|x| x * x).sum();
             reg += lam * ss / numel as f32;
             let coef = 2.0 * lam / numel as f32;
-            let g = &mut self.g_ent[id * we..(id + 1) * we];
+            let g = self.g_ent.row_mut(id);
             for k in 0..we {
                 g[k] += coef * self.ent.data[id * we + k];
             }
@@ -307,28 +415,66 @@ impl NativeModel {
         let ss: f32 = self.rel.row(rid).iter().map(|x| x * x).sum();
         reg += lam * ss / (b * wr) as f32;
         let coef = 2.0 * lam / (b * wr) as f32;
+        let gr = self.g_rel.row_mut(rid);
         for k in 0..wr {
-            self.g_rel[rid * wr + k] += coef * self.rel.data[rid * wr + k];
+            gr[k] += coef * self.rel.data[rid * wr + k];
         }
         for j in 0..n {
             let cid = batch.neg[i * n + j] as usize;
             let ss: f32 = self.ent.row(cid).iter().map(|x| x * x).sum();
             reg += lam * ss / (b * n * we) as f32;
             let coef = 2.0 * lam / (b * n * we) as f32;
+            let gc = self.g_ent.row_mut(cid);
             for k in 0..we {
-                self.g_ent[cid * we + k] += coef * self.ent.data[cid * we + k];
+                gc[k] += coef * self.ent.data[cid * we + k];
             }
         }
         reg
     }
 
     /// Filtered ranks for an eval batch (mirror of the eval artifact).
+    ///
+    /// The O(rows) candidate scan per query is chunked across OS threads
+    /// when the batch is large enough to amortize the spawns.  Each chunk
+    /// produces integer (greater, equal) counts, so the merged ranks are
+    /// **bit-identical** for every thread count — safe to auto-tune even
+    /// under the federated drivers' determinism guarantees.
     pub fn eval_ranks(&self, eb: &EvalBatch) -> Vec<f32> {
+        let e = self.ent.rows;
+        let threads = self.eval_thread_budget(eb.len, e);
+        let counts = if threads <= 1 {
+            self.eval_counts(eb, 0, e)
+        } else {
+            let chunk = e.div_ceil(threads);
+            let mut merged = vec![(0u32, 0u32); eb.len];
+            std::thread::scope(|s| {
+                let mut handles = Vec::with_capacity(threads);
+                let mut lo = 0usize;
+                while lo < e {
+                    let hi = (lo + chunk).min(e);
+                    handles.push(s.spawn(move || self.eval_counts(eb, lo, hi)));
+                    lo = hi;
+                }
+                for h in handles {
+                    let part = h.join().expect("eval worker panicked");
+                    for (acc, p) in merged.iter_mut().zip(part) {
+                        acc.0 += p.0;
+                        acc.1 += p.1;
+                    }
+                }
+            });
+            merged
+        };
+        counts.iter().map(|&(greater, equal)| 1.0 + greater as f32 + 0.5 * equal as f32).collect()
+    }
+
+    /// Per-query (greater, equal) counts against candidates `lo..hi`.
+    fn eval_counts(&self, eb: &EvalBatch, lo: usize, hi: usize) -> Vec<(u32, u32)> {
         let e = self.ent.rows;
         let we = self.ent.width;
         let h = &self.hyper;
         let mut q = vec![0.0f32; we];
-        let mut ranks = Vec::with_capacity(eb.len);
+        let mut out = Vec::with_capacity(eb.len);
         for i in 0..eb.len {
             let src = eb.src[i] as usize;
             let rid = eb.rel[i] as usize;
@@ -339,7 +485,7 @@ impl NativeModel {
             let filt = &eb.filter[i * e..(i + 1) * e];
             let mut greater = 0u32;
             let mut equal = 0u32;
-            for c in 0..e {
+            for c in lo..hi {
                 if c == truth || filt[c] > 0.5 {
                     continue;
                 }
@@ -350,9 +496,67 @@ impl NativeModel {
                     equal += 1;
                 }
             }
-            ranks.push(1.0 + greater as f32 + 0.5 * equal as f32);
+            out.push((greater, equal));
         }
-        ranks
+        out
+    }
+
+    /// How many OS threads `eval_ranks` should fan out across.
+    fn eval_thread_budget(&self, queries: usize, candidates: usize) -> usize {
+        if queries.saturating_mul(candidates) < PAR_EVAL_MIN_WORK {
+            return 1;
+        }
+        let hw = match self.eval_threads {
+            0 => std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
+            n => n,
+        };
+        hw.min(candidates).max(1)
+    }
+}
+
+/// The pre-sparse reference engine: identical gradient math, but gradients
+/// scattered to dense scratch and applied by the retained full-table
+/// [`Adam::update`] — O(rows·width) per step, zero-grad drift included.
+/// Kept as the parity-test oracle and the `train_hot_path` bench baseline.
+pub struct DenseOracle {
+    pub model: NativeModel,
+    ent_adam: Adam,
+    rel_adam: Adam,
+    g_ent: Vec<f32>,
+    g_rel: Vec<f32>,
+    step: u64,
+}
+
+impl DenseOracle {
+    /// Wrap a freshly-initialized model (its `LazyAdam`/step state is
+    /// ignored; the oracle owns dense optimizer state instead — do not mix
+    /// `model.train_batch` calls with oracle steps).
+    pub fn new(model: NativeModel) -> Self {
+        let g_ent = vec![0.0; model.ent.data.len()];
+        let g_rel = vec![0.0; model.rel.data.len()];
+        let ent_adam = Adam::new(model.ent.data.len());
+        let rel_adam = Adam::new(model.rel.data.len());
+        Self { model, ent_adam, rel_adam, g_ent, g_rel, step: 0 }
+    }
+
+    /// One dense training step: the historical O(rows·width) path —
+    /// zero the full scratch buffers, accumulate, full-table Adam.
+    pub fn train_batch(&mut self, batch: &Batch) -> f32 {
+        self.model.g_ent.clear();
+        self.model.g_rel.clear();
+        let loss = self.model.accumulate_grads(batch);
+        self.g_ent.iter_mut().for_each(|g| *g = 0.0);
+        self.g_rel.iter_mut().for_each(|g| *g = 0.0);
+        self.model.g_ent.scatter_into(&mut self.g_ent);
+        self.model.g_rel.scatter_into(&mut self.g_rel);
+        self.step += 1;
+        self.ent_adam.update(&mut self.model.ent.data, &self.g_ent, self.step, &self.model.hyper);
+        self.rel_adam.update(&mut self.model.rel.data, &self.g_rel, self.step, &self.model.hyper);
+        loss
+    }
+
+    pub fn eval_ranks(&self, eb: &EvalBatch) -> Vec<f32> {
+        self.model.eval_ranks(eb)
     }
 }
 
@@ -490,16 +694,16 @@ mod tests {
                 let mut m = NativeModel::new(method, hyper, 12, 3, rng);
                 let batch = toy_batch(4, 3, 12, 3, rng);
 
-                // analytic grads
-                m.g_ent.iter_mut().for_each(|g| *g = 0.0);
-                m.g_rel.iter_mut().for_each(|g| *g = 0.0);
+                // analytic grads (scattered dense for coordinate probing)
+                m.g_ent.clear();
+                m.g_rel.clear();
                 let _ = m.accumulate_grads(&batch);
-                let ga = m.g_ent.clone();
-                let gr = m.g_rel.clone();
+                let ga = m.g_ent.to_dense(m.ent.rows);
+                let gr = m.g_rel.to_dense(m.rel.rows);
 
                 let loss_at = |m: &mut NativeModel| {
-                    m.g_ent.iter_mut().for_each(|g| *g = 0.0);
-                    m.g_rel.iter_mut().for_each(|g| *g = 0.0);
+                    m.g_ent.clear();
+                    m.g_rel.clear();
                     m.accumulate_grads(&batch)
                 };
 
@@ -625,6 +829,107 @@ mod tests {
         let after = mean_rank(&m, &triples);
         assert!(after < before, "mean rank {before} → {after}");
         assert!(after < 3.0, "after {after}");
+    }
+
+    #[test]
+    fn sparse_grad_indexes_and_clears() {
+        let mut g = SparseGrad::new(10, 3);
+        assert!(g.is_empty());
+        g.row_mut(7)[0] += 1.0;
+        g.row_mut(2)[2] += 2.0;
+        g.row_mut(7)[1] += 3.0; // second touch reuses the slot
+        assert_eq!(g.len(), 2);
+        let dense = g.to_dense(10);
+        assert_eq!(dense[7 * 3], 1.0);
+        assert_eq!(dense[7 * 3 + 1], 3.0);
+        assert_eq!(dense[2 * 3 + 2], 2.0);
+        assert_eq!(dense.iter().filter(|&&x| x != 0.0).count(), 3);
+        // first-touch iteration order
+        let order: Vec<u32> = g.iter().map(|(r, _)| r).collect();
+        assert_eq!(order, vec![7, 2]);
+        g.clear();
+        assert!(g.is_empty());
+        assert!(g.row_mut(7).iter().all(|&x| x == 0.0), "slot must reset");
+    }
+
+    #[test]
+    fn train_touches_at_most_gathered_rows() {
+        let mut rng = Rng::new(21);
+        let mut m = model(Method::TransE, &mut rng);
+        let (b, n) = (8, 4);
+        let batch = toy_batch(b, n, 32, 4, &mut rng);
+        m.train_batch(&batch);
+        assert!(m.g_ent.len() <= 3 * b + b * n, "{} ent rows", m.g_ent.len());
+        assert!(m.g_rel.len() <= b, "{} rel rows", m.g_rel.len());
+    }
+
+    /// A batch whose gathers cover every entity and relation row each
+    /// step, so the lazy engine's gap-free path and the dense oracle must
+    /// stay in lockstep (no zero-grad drift exists to diverge them).
+    fn full_coverage_batch(b: usize, n: usize, e: usize, r: usize, rng: &mut Rng) -> Batch {
+        assert!(b * n >= e && b >= r);
+        let mut batch = toy_batch(b, n, e, r, rng);
+        for i in 0..b {
+            batch.pos[i * 3 + 1] = (i % r) as i32;
+            for j in 0..n {
+                batch.neg[i * n + j] = ((i * n + j) % e) as i32;
+            }
+        }
+        batch
+    }
+
+    /// Satellite: sparse-vs-dense parity over 200+ steps for every method.
+    #[test]
+    fn sparse_engine_matches_dense_oracle() {
+        for method in Method::ALL {
+            let mut rng = Rng::new(77);
+            let hyper = Hyper { dim: 6, ..Default::default() };
+            let mut sparse = NativeModel::new(method, hyper, 24, 4, &mut rng);
+            let mut dense = DenseOracle::new(sparse.clone());
+            let mut brng = rng.fork(9);
+            for step in 0..220 {
+                let batch = full_coverage_batch(8, 8, 24, 4, &mut brng);
+                let ls = sparse.train_batch(&batch);
+                let ld = dense.train_batch(&batch);
+                assert!(
+                    (ls - ld).abs() <= 1e-5 * (1.0 + ld.abs()),
+                    "{method:?} step {step}: loss {ls} vs {ld}"
+                );
+            }
+            for (i, (a, b)) in sparse.ent.data.iter().zip(&dense.model.ent.data).enumerate() {
+                assert!((a - b).abs() < 1e-4, "{method:?} ent[{i}]: {a} vs {b}");
+            }
+            for (i, (a, b)) in sparse.rel.data.iter().zip(&dense.model.rel.data).enumerate() {
+                assert!((a - b).abs() < 1e-4, "{method:?} rel[{i}]: {a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn eval_ranks_parallel_matches_sequential_bitwise() {
+        // large enough that queries·candidates crosses PAR_EVAL_MIN_WORK
+        let e = 40_000;
+        let mut rng = Rng::new(31);
+        let hyper = Hyper { dim: 4, ..Default::default() };
+        let mut m = NativeModel::new(Method::TransE, hyper, e, 3, &mut rng);
+        let len = 8;
+        let eb = EvalBatch {
+            src: (0..len as i32).collect(),
+            rel: (0..len as i32).map(|i| i % 3).collect(),
+            truth: (0..len as i32).map(|i| i + 100).collect(),
+            pred_head: (0..len).map(|i| (i % 2) as f32).collect(),
+            filter: vec![0.0; len * e],
+            len,
+            eval_batch: len,
+        };
+        m.eval_threads = 1;
+        let seq = m.eval_ranks(&eb);
+        for threads in [2, 3, 7] {
+            m.eval_threads = threads;
+            assert_eq!(m.eval_ranks(&eb), seq, "threads={threads}");
+        }
+        m.eval_threads = 0; // auto
+        assert_eq!(m.eval_ranks(&eb), seq);
     }
 
     fn mean_rank(m: &NativeModel, triples: &[Triple]) -> f32 {

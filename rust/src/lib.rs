@@ -13,7 +13,33 @@
 //!   scoring kernels, AOT-lowered to HLO text in `artifacts/` and executed
 //!   here via PJRT (`runtime`).  Python is never on the training path.
 //!
-//! See DESIGN.md for the full system inventory and EXPERIMENTS.md for
+//! ## Module map
+//!
+//! * [`kge`] — method/table/optimizer definitions and the pure-Rust
+//!   reference engine (`kge::native`).  The training hot path is sparse:
+//!   touched-row gradients (`SparseGrad`) + lazy row-wise Adam
+//!   (`LazyAdam`) make a step O(touched·width); the pre-sparse engine is
+//!   retained as `DenseOracle` for parity tests and benches, and
+//!   `eval_ranks` chunks its candidate scan across OS threads with
+//!   bit-identical results (see PERF.md).
+//! * [`trainer`] — the `LocalTrainer` seam the federated layer drives:
+//!   native oracle, PJRT-backed XLA trainers, and the KD transport.
+//! * [`fed`] — the federated layer: Entity-Wise Top-K (`fed::topk`,
+//!   partial selection both directions), dirty-entity-tracked server
+//!   aggregation (`fed::server`), wire protocol (`fed::protocol`), and
+//!   the message-driven orchestrator (`fed::orchestrator`) with its
+//!   per-algorithm `Exchange` strategies and sequential/threaded drivers.
+//! * [`comm`] — framed transport, byte/parameter accounting, bandwidth
+//!   models.
+//! * [`data`] — KG generation, federated partitioning, batch/eval sets.
+//! * [`metrics`], [`exp`] — rank metrics, early stopping, and the
+//!   experiment harness reproducing the paper's tables/figures.
+//! * [`runtime`], [`linalg`], [`util`] — PJRT loader, small dense linear
+//!   algebra (incl. the SVD codec's kernel), RNG/JSON/bench/prop-test
+//!   support.
+//!
+//! See DESIGN.md for the full system inventory, PERF.md for hot-path
+//! complexity and the `train_hot_path` benchmark, and EXPERIMENTS.md for
 //! paper-vs-measured results.
 
 pub mod comm;

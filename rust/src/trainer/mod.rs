@@ -48,6 +48,14 @@ pub trait LocalTrainer {
     /// entries are meaningful).
     fn eval_ranks(&mut self, eb: &EvalBatch) -> Result<Vec<f32>>;
 
+    /// Cap the OS threads `eval_ranks` may fan its candidate scan across
+    /// (0 = auto).  Ranks are bit-identical for any value — this only
+    /// tunes wall-clock, so drivers may set it freely (the threaded
+    /// orchestrator pins it to 1 to avoid oversubscribing one thread per
+    /// client × one per chunk).  Default: no-op for backends without a
+    /// native candidate scan.
+    fn set_eval_threads(&mut self, _threads: usize) {}
+
     /// Gather entity rows (concatenated) for the given global ids.
     fn get_entity_rows(&mut self, ids: &[u32]) -> Result<Vec<f32>>;
 

@@ -57,6 +57,10 @@ impl LocalTrainer for NativeTrainer {
         Ok(self.model.eval_ranks(eb))
     }
 
+    fn set_eval_threads(&mut self, threads: usize) {
+        self.model.eval_threads = threads;
+    }
+
     fn get_entity_rows(&mut self, ids: &[u32]) -> Result<Vec<f32>> {
         let w = self.model.ent.width;
         let mut out = Vec::with_capacity(ids.len() * w);

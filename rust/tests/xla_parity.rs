@@ -5,6 +5,15 @@
 //! native implementation, and requires them all to produce the same numbers.
 //!
 //! Requires `make artifacts`; tests self-skip when artifacts are missing.
+//!
+//! Optimizer-semantics caveat (PR 3): the native engine uses lazy row-wise
+//! Adam, which matches the artifact's dense Adam exactly on rows a batch
+//! gathers but skips the dense zero-grad drift on untouched rows.  Over
+//! the short runs here, with batches sampling the full entity set, the
+//! residual divergence stays well inside the tolerances; if a row goes
+//! ungathered for several steps on a new artifact config, it drifts by
+//! ~lr per skipped step on the XLA side only — revisit tolerances (or land
+//! the ROADMAP sparse-aware XLA optimizer) before tightening this suite.
 
 use std::path::Path;
 use std::rc::Rc;
