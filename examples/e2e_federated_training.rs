@@ -1,4 +1,5 @@
-//! End-to-end validation driver (the EXPERIMENTS.md §E2E run).
+//! End-to-end validation driver (the EXPERIMENTS.md §E2E run), on the
+//! declarative experiment API.
 //!
 //! Exercises the full production stack on a real small workload:
 //!
@@ -7,8 +8,9 @@
 //!
 //! Trains both FedEP and FedS with TransE on the R3 analogue of the
 //! synthetic FB15k-237 benchmark (2048 entities, ~31k triples, ~1.6M model
-//! parameters per client), logs the per-round loss/MRR curves, and reports
-//! the communication savings + simulated wall-clock on an edge link.
+//! parameters per client) via `Session`-built specs, streams every run
+//! event to a JSONL sink under `reports/`, and reports the communication
+//! savings + simulated wall-clock on an edge link.
 //!
 //! ```bash
 //! make artifacts && cargo run --release --example e2e_federated_training
@@ -17,36 +19,62 @@
 use std::fmt::Write as _;
 
 use feds::comm::BandwidthModel;
-use feds::data::generator::generate;
-use feds::data::partition::partition;
-use feds::exp::{self, Ctx};
-use feds::fed::{run_federated, Algo, FedRunConfig};
+use feds::exp;
+use feds::fed::ExecMode;
 use feds::kge::Method;
+use feds::metrics::observe::JsonlSink;
+use feds::spec::{AlgoSpec, BackendSpec, BudgetSpec, DataSpec, ExperimentSpec, Session};
 
 fn main() -> anyhow::Result<()> {
-    let ctx = Ctx::from_options("xla", false, 64501)?;
-    let gen = ctx.gen_config();
-    let kg = generate(&gen);
-    let data = partition(&kg, 3, 64501);
-    println!(
-        "== e2e driver: {} entities / {} relations / {} triples, 3 clients ==\n",
-        gen.num_entities, gen.num_relations, data.total_triples()
-    );
+    // shape the data spec from the artifact manifest, then hand the loaded
+    // runtime to the session so every build reuses it
+    let rt = exp::xla_runtime()?;
+    let mut spec = ExperimentSpec {
+        name: "e2e".into(),
+        method: Method::TransE,
+        algo: AlgoSpec::FedEP,
+        data: DataSpec {
+            entities: rt.manifest.num_entities,
+            relations: rt.manifest.num_relations,
+            triples: rt.manifest.num_entities * 15,
+            clusters: 8,
+            clients: 3,
+            seed: 64501,
+        },
+        backend: BackendSpec::Xla,
+        budget: BudgetSpec {
+            max_rounds: 40,
+            local_epochs: 3,
+            eval_every: 5,
+            patience: 3,
+            eval_cap: 384,
+        },
+        seed: 64501,
+        exec: ExecMode::Sequential,
+    };
+    let mut session = Session::with_runtime(rt);
+
+    std::fs::create_dir_all(exp::reports_dir())?;
+    let jsonl_path = exp::reports_dir().join("e2e_events.jsonl");
+    // one JSONL stream shared by both runs: run_start lines delimit them
+    let mut sink = JsonlSink::create(&jsonl_path)?;
 
     let mut md = String::from("# E2E run: FedEP vs FedS (TransE, R3 analogue, XLA backend)\n\n");
     let mut outcomes = Vec::new();
-    for algo in [Algo::FedEP, Algo::FedS { sync: true }] {
-        let cfg = FedRunConfig {
-            algo,
-            method: Method::TransE,
-            max_rounds: 40,
-            eval_every: 5,
-            eval_cap: 384,
-            seed: 64501,
-            ..Default::default()
-        };
+    for algo in [AlgoSpec::FedEP, AlgoSpec::FedS { sparsity: 0.4, sync_interval: 4, sync: true }] {
+        spec.algo = algo;
+        let mut run = session.build(&spec)?;
+        if outcomes.is_empty() {
+            let data = run.data();
+            println!(
+                "== e2e driver: {} entities / {} relations / {} triples, 3 clients ==\n",
+                data.num_entities,
+                data.num_relations,
+                data.total_triples()
+            );
+        }
         let t0 = std::time::Instant::now();
-        let out = run_federated(&data, &cfg, &ctx.backend)?;
+        let out = run.execute_with(&mut [&mut sink])?;
         let secs = t0.elapsed().as_secs_f64();
 
         println!("--- {} ({secs:.1}s wall) ---", out.history.label);
@@ -111,9 +139,8 @@ fn main() -> anyhow::Result<()> {
         feds.history.mrr_cg() - fedep.history.mrr_cg()
     )?;
 
-    std::fs::create_dir_all(exp::reports_dir())?;
     let path = exp::reports_dir().join("e2e_run.md");
     std::fs::write(&path, md)?;
-    println!("\n(report saved to {})", path.display());
+    println!("\n(report saved to {}; events streamed to {})", path.display(), jsonl_path.display());
     Ok(())
 }

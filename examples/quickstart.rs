@@ -1,8 +1,9 @@
-//! Quickstart: 60 seconds to FedS.
+//! Quickstart: 60 seconds to FedS, on the declarative experiment API.
 //!
-//! Generates a small federated KG (3 clients, relation-partitioned), trains
-//! FedEP (dense baseline) and FedS (Entity-Wise Top-K sparsification) on
-//! the pure-Rust backend, and prints accuracy + communication savings.
+//! Describes two runs as [`ExperimentSpec`]s (the dense FedEP baseline and
+//! FedS Entity-Wise Top-K sparsification), executes them through one
+//! [`Session`], watches progress with a custom [`RunObserver`], and prints
+//! accuracy + communication savings.
 //!
 //! ```bash
 //! cargo run --release --example quickstart
@@ -10,53 +11,83 @@
 //! No artifacts needed — for the production AOT/PJRT path see
 //! `examples/e2e_federated_training.rs`.
 
-use feds::data::generator::{generate, GeneratorConfig};
-use feds::data::partition::partition;
-use feds::fed::{run_federated, Algo, Backend, FedRunConfig};
-use feds::kge::{Hyper, Method};
+use feds::fed::ExecMode;
+use feds::kge::Method;
+use feds::metrics::observe::{RunEvent, RunObserver};
+use feds::spec::{AlgoSpec, BackendSpec, BudgetSpec, DataSpec, ExperimentSpec, Session};
+
+/// Observers receive typed events from the round loop — no stdout
+/// scraping.  This one prints a one-line progress ticker per evaluation.
+struct Ticker;
+
+impl RunObserver for Ticker {
+    fn on_event(&mut self, ev: &RunEvent) {
+        if let RunEvent::Evaluated { record } = ev {
+            println!(
+                "  round {:>3}: loss {:.4} valid MRR {:.4} ({} params so far)",
+                record.round, record.mean_loss, record.valid.mrr, record.params_cum
+            );
+        }
+    }
+}
 
 fn main() -> anyhow::Result<()> {
-    // 1. a synthetic FB15k-237-like KG, split into 3 clients by relation
-    let kg = generate(&GeneratorConfig {
-        num_entities: 512,
-        num_relations: 24,
-        num_triples: 8_000,
-        seed: 42,
-        ..Default::default()
-    });
-    let data = partition(&kg, 3, 42);
-    println!(
-        "federated KG: {} entities ({} shared), {} relations, {} triples, {} clients\n",
-        data.num_entities,
-        data.shared.len(),
-        data.num_relations,
-        data.total_triples(),
-        data.clients.len()
-    );
-
-    // 2. a local-training backend (pure Rust here; Backend::Xla for PJRT)
-    let backend = Backend::Native {
-        hyper: Hyper { dim: 32, learning_rate: 3e-3, ..Default::default() },
-        batch: 128,
-        negatives: 32,
-        eval_batch: 64,
-    };
-
-    // 3. run the dense baseline and FedS
-    let mut results = Vec::new();
-    for algo in [Algo::FedEP, Algo::FedS { sync: true }] {
-        let cfg = FedRunConfig {
-            algo,
-            method: Method::TransE,
+    // 1. one declarative description of the experiment: data, backend,
+    //    budget, and the algorithm with only its own knobs
+    let mut spec = ExperimentSpec {
+        name: "quickstart".into(),
+        method: Method::TransE,
+        algo: AlgoSpec::FedEP,
+        data: DataSpec {
+            entities: 512,
+            relations: 24,
+            triples: 8_000,
+            clusters: 8,
+            clients: 3,
+            seed: 42,
+        },
+        backend: BackendSpec::Native {
+            dim: 32,
+            learning_rate: 3e-3,
+            batch: 128,
+            negatives: 32,
+            eval_batch: 64,
+        },
+        budget: BudgetSpec {
             max_rounds: 40,
+            local_epochs: 3,
             eval_every: 5,
+            patience: 3,
             eval_cap: 256,
-            seed: 7,
-            ..Default::default()
-        };
-        let out = run_federated(&data, &cfg, &backend)?;
+        },
+        seed: 7,
+        exec: ExecMode::Sequential,
+    };
+    // every spec is JSON-serializable: println!("{}", spec.to_json()) is a
+    // ready-made `feds run --spec` file
+
+    // 2. a session builds runs (and caches the PJRT runtime when used)
+    let mut session = Session::new();
+    let mut results = Vec::new();
+    for algo in [AlgoSpec::FedEP, AlgoSpec::FedS { sparsity: 0.4, sync_interval: 4, sync: true }] {
+        spec.algo = algo;
+        let mut run = session.build(&spec)?;
+        if results.is_empty() {
+            let data = run.data();
+            println!(
+                "federated KG: {} entities ({} shared), {} relations, {} triples, {} clients\n",
+                data.num_entities,
+                data.shared.len(),
+                data.num_relations,
+                data.total_triples(),
+                data.clients.len()
+            );
+        }
+        println!("{} …", run.spec().algo.label());
+        run.quiet().observe(Box::new(Ticker));
+        let out = run.execute()?;
         println!(
-            "{:<8} converged @ round {:>3}: MRR {:.4}  Hits@10 {:.4}  transmitted {:>11} params",
+            "{:<8} converged @ round {:>3}: MRR {:.4}  Hits@10 {:.4}  transmitted {:>11} params\n",
             out.history.label,
             out.history.rounds_cg(),
             out.history.mrr_cg(),
@@ -66,10 +97,10 @@ fn main() -> anyhow::Result<()> {
         results.push(out);
     }
 
-    // 4. the headline: accuracy parity at a fraction of the traffic
+    // 3. the headline: accuracy parity at a fraction of the traffic
     let (fedep, feds) = (&results[0], &results[1]);
     println!(
-        "\nFedS transmitted {:.1}% of FedEP's parameters at convergence \
+        "FedS transmitted {:.1}% of FedEP's parameters at convergence \
          (Eq.5 worst-case bound: {:.1}%)",
         100.0 * feds.history.params_cg() as f64 / fedep.history.params_cg() as f64,
         100.0 * feds.eq5_ratio.unwrap()

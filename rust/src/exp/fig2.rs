@@ -4,30 +4,46 @@
 //! accuracy-vs-round curves.  Paper shape: FedS/syn may converge in fewer
 //! rounds but FedS consistently reaches higher accuracy, and its curve
 //! dominates as rounds grow.
+//!
+//! Declared as a sweep grid (method × clients × sync-ablation) and executed
+//! by the generic runner; the full per-round curves come from each cell's
+//! observer-assembled history.
 
 use anyhow::Result;
 
-use crate::fed::Algo;
 use crate::kge::Method;
 use crate::util::json::Json;
 
 use super::report::{fmt4, MdTable, Report};
 use super::Ctx;
 
+const CLIENTS: [usize; 2] = [5, 3];
+
 pub fn run(ctx: &Ctx) -> Result<Report> {
-    let datasets = ctx.datasets(&[5, 3]);
+    let methods = [Method::TransE, Method::RotatE];
+    let sweep = ctx
+        .sweep("fig2")
+        .axis(
+            "method",
+            methods.iter().map(|m| Json::from(m.name())).collect(),
+        )
+        .axis("data.clients", CLIENTS.iter().map(|&n| Json::from(n)).collect())
+        .axis("algo", vec![Json::from("feds"), Json::from("feds-nosync")]);
+    let grid = ctx.run_sweep(&sweep)?;
+
     let mut summary = MdTable::new(&[
         "KGE", "Dataset", "Setting", "MRR@CG", "R@CG",
     ]);
     let mut curves_md = MdTable::new(&["KGE", "Dataset", "round", "FedS MRR", "FedS/syn MRR"]);
     let mut raw = Vec::new();
 
-    for method in [Method::TransE, Method::RotatE] {
-        for (dname, data) in &datasets {
-            let with = ctx.run(data, &ctx.run_cfg(Algo::FedS { sync: true }, method))?;
-            let without = ctx.run(data, &ctx.run_cfg(Algo::FedS { sync: false }, method))?;
+    for (im, method) in methods.iter().enumerate() {
+        for (id, &n) in CLIENTS.iter().enumerate() {
+            let dname = format!("R{n}");
+            let with = &grid.at(&[im, id, 0]).outcome;
+            let without = &grid.at(&[im, id, 1]).outcome;
 
-            for (label, out) in [("FedS", &with), ("FedS/syn", &without)] {
+            for (label, out) in [("FedS", with), ("FedS/syn", without)] {
                 summary.row(vec![
                     method.name().into(),
                     dname.clone(),
@@ -38,8 +54,8 @@ pub fn run(ctx: &Ctx) -> Result<Report> {
             }
 
             // aligned curve rows (the "figure" as a series)
-            let n = with.history.records.len().max(without.history.records.len());
-            for i in 0..n {
+            let n_rows = with.history.records.len().max(without.history.records.len());
+            for i in 0..n_rows {
                 let r_with = with.history.records.get(i);
                 let r_without = without.history.records.get(i);
                 let round = r_with

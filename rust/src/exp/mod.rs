@@ -8,6 +8,7 @@
 
 pub mod fig2;
 pub mod report;
+pub mod sweep;
 pub mod table1;
 pub mod table23;
 pub mod table4;
@@ -23,6 +24,9 @@ use crate::data::partition::{partition, FedDataset};
 use crate::fed::{Algo, Backend, ExecMode, FedRunConfig, RunOutcome};
 use crate::kge::{Hyper, Method};
 use crate::runtime::Runtime;
+use crate::spec::{AlgoSpec, BackendSpec, BudgetSpec, DataSpec, ExperimentSpec, Session};
+
+use self::sweep::{SweepGrid, SweepSpec};
 
 /// Shared experiment context.
 pub struct Ctx {
@@ -109,6 +113,57 @@ impl Ctx {
 
     pub fn run(&self, data: &FedDataset, cfg: &FedRunConfig) -> Result<RunOutcome> {
         crate::fed::run_federated(data, cfg, &self.backend)
+    }
+
+    /// The serializable description of this context's backend.
+    pub fn backend_spec(&self) -> BackendSpec {
+        BackendSpec::of(&self.backend)
+    }
+
+    /// The base [`ExperimentSpec`] every table sweep derives from: this
+    /// context's data shape, backend and budget with the paper-default
+    /// algorithm knobs — field-for-field what [`Ctx::run_cfg`] resolves
+    /// to, so sweep cells and legacy `ctx.run(...)` calls are the same
+    /// run.
+    pub fn base_spec(&self) -> ExperimentSpec {
+        let gen = self.gen_config();
+        ExperimentSpec {
+            name: String::new(),
+            method: Method::TransE,
+            algo: AlgoSpec::FedEP,
+            data: DataSpec {
+                entities: gen.num_entities,
+                relations: gen.num_relations,
+                triples: gen.num_triples,
+                clusters: gen.num_clusters,
+                clients: 3,
+                seed: self.seed,
+            },
+            backend: self.backend_spec(),
+            budget: BudgetSpec {
+                max_rounds: self.max_rounds,
+                local_epochs: 3,
+                eval_every: if self.fast { 3 } else { 5 },
+                patience: 3,
+                eval_cap: self.eval_cap,
+            },
+            seed: self.seed ^ 0xA11CE,
+            exec: self.exec,
+        }
+    }
+
+    /// Start a sweep declaration off this context's base spec.
+    pub fn sweep(&self, name: &str) -> SweepSpec {
+        SweepSpec::new(name, self.base_spec())
+    }
+
+    /// Execute a sweep grid, reusing this context's runtime when XLA.
+    pub fn run_sweep(&self, sweep: &SweepSpec) -> Result<SweepGrid> {
+        let mut session = match &self.backend {
+            Backend::Xla(rt) => Session::with_runtime(rt.clone()),
+            _ => Session::new(),
+        };
+        crate::exp::sweep::run_sweep(&mut session, sweep, &mut [])
     }
 }
 

@@ -1,0 +1,369 @@
+//! Declarative sweep grids: one base [`ExperimentSpec`] × override axes,
+//! executed by one generic runner.
+//!
+//! A [`SweepSpec`] is fully JSON-(de)serializable (`feds sweep --spec
+//! file.json`); every paper table/figure driver in this crate is now a
+//! sweep declaration plus a small report-shaping function over the
+//! resulting [`SweepGrid`].  Axes use the same dotted override keys as
+//! CLI flags ([`ExperimentSpec::apply`]), so `{"key": "algo", "values":
+//! ["fedep", "feds"]}` and `--algo feds` are the same mechanism.
+//!
+//! Cells are materialized in row-major order (last axis fastest) and each
+//! cell is an independent deterministic run, so grid results are
+//! identical to driving the legacy per-table loops by hand.
+
+use anyhow::{ensure, Result};
+
+use crate::fed::RunOutcome;
+use crate::metrics::observe::RunObserver;
+use crate::spec::{ExperimentSpec, Session};
+use crate::util::json::Json;
+
+use super::report::{fmt4, MdTable, Report};
+
+/// One sweep axis: a dotted override key and the values it takes.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SweepAxis {
+    pub key: String,
+    pub values: Vec<Json>,
+}
+
+/// A declarative experiment grid: base spec × axes.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SweepSpec {
+    pub name: String,
+    pub base: ExperimentSpec,
+    pub axes: Vec<SweepAxis>,
+}
+
+impl SweepSpec {
+    pub fn new(name: &str, base: ExperimentSpec) -> Self {
+        Self { name: name.to_string(), base, axes: Vec::new() }
+    }
+
+    /// Append an axis (builder-style).
+    pub fn axis(mut self, key: &str, values: Vec<Json>) -> Self {
+        self.axes.push(SweepAxis { key: key.to_string(), values });
+        self
+    }
+
+    /// Number of cells in the grid (1 when there are no axes).
+    pub fn len(&self) -> usize {
+        self.axes.iter().map(|a| a.values.len()).product()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Materialize every cell: the applied overrides plus the resolved,
+    /// validated spec, in row-major order (last axis fastest).
+    pub fn cells(&self) -> Result<Vec<(Vec<(String, Json)>, ExperimentSpec)>> {
+        let dims: Vec<usize> = self.axes.iter().map(|a| a.values.len()).collect();
+        for (axis, &d) in self.axes.iter().zip(&dims) {
+            ensure!(d > 0, "sweep axis '{}' has no values", axis.key);
+        }
+        let total: usize = dims.iter().product();
+        let mut out = Vec::with_capacity(total);
+        let mut idx = vec![0usize; self.axes.len()];
+        for _ in 0..total {
+            let mut spec = self.base.clone();
+            let mut overrides = Vec::with_capacity(idx.len());
+            for (i, axis) in self.axes.iter().enumerate() {
+                let v = &axis.values[idx[i]];
+                spec.apply(&axis.key, v)
+                    .map_err(|e| anyhow::anyhow!("sweep axis '{}' value {v}: {e}", axis.key))?;
+                overrides.push((axis.key.clone(), v.clone()));
+            }
+            spec.validate()?;
+            out.push((overrides, spec));
+            for i in (0..idx.len()).rev() {
+                idx[i] += 1;
+                if idx[i] < dims[i] {
+                    break;
+                }
+                idx[i] = 0;
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("name", self.name.as_str())
+            .set("base", self.base.to_json())
+            .set(
+                "axes",
+                Json::Arr(
+                    self.axes
+                        .iter()
+                        .map(|a| {
+                            Json::obj()
+                                .set("key", a.key.as_str())
+                                .set("values", Json::Arr(a.values.clone()))
+                        })
+                        .collect(),
+                ),
+            )
+    }
+
+    pub fn from_json(v: &Json) -> Result<SweepSpec> {
+        let name = v
+            .get("name")
+            .and_then(Json::as_str)
+            .unwrap_or("sweep")
+            .to_string();
+        let base = ExperimentSpec::from_json(v.req("base")?)?;
+        let mut axes = Vec::new();
+        if let Some(list) = v.get("axes") {
+            let list = list
+                .as_arr()
+                .ok_or_else(|| anyhow::anyhow!("axes must be an array"))?;
+            for a in list {
+                let key = a
+                    .req("key")?
+                    .as_str()
+                    .ok_or_else(|| anyhow::anyhow!("axis key must be a string"))?
+                    .to_string();
+                let values = a
+                    .req("values")?
+                    .as_arr()
+                    .ok_or_else(|| anyhow::anyhow!("axis '{key}' values must be an array"))?
+                    .to_vec();
+                axes.push(SweepAxis { key, values });
+            }
+        }
+        let sweep = SweepSpec { name, base, axes };
+        // surface bad keys/values at load time, not mid-sweep
+        sweep.cells()?;
+        Ok(sweep)
+    }
+
+    pub fn parse(text: &str) -> Result<SweepSpec> {
+        Self::from_json(&Json::parse(text)?)
+    }
+
+    pub fn load(path: &std::path::Path) -> Result<SweepSpec> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("reading sweep spec {}: {e}", path.display()))?;
+        Self::parse(&text).map_err(|e| anyhow::anyhow!("sweep spec {}: {e}", path.display()))
+    }
+}
+
+/// One executed grid cell.
+pub struct SweepCell {
+    /// the (key, value) overrides this cell applied to the base spec
+    pub overrides: Vec<(String, Json)>,
+    pub spec: ExperimentSpec,
+    pub outcome: RunOutcome,
+}
+
+/// All executed cells of a sweep, in row-major axis order.
+pub struct SweepGrid {
+    pub name: String,
+    pub axis_keys: Vec<String>,
+    pub dims: Vec<usize>,
+    pub cells: Vec<SweepCell>,
+}
+
+impl SweepGrid {
+    /// The cell at one multi-dimensional axis index (row-major).
+    pub fn at(&self, idx: &[usize]) -> &SweepCell {
+        assert_eq!(idx.len(), self.dims.len(), "sweep index arity");
+        let mut flat = 0usize;
+        for (i, &x) in idx.iter().enumerate() {
+            assert!(x < self.dims[i], "axis {i} index {x} out of range (dim {})", self.dims[i]);
+            flat = flat * self.dims[i] + x;
+        }
+        &self.cells[flat]
+    }
+
+    /// First cell whose overrides contain every given (key, value) pair.
+    pub fn find(&self, want: &[(&str, &Json)]) -> Option<&SweepCell> {
+        self.cells.iter().find(|c| {
+            want.iter().all(|(k, v)| {
+                c.overrides.iter().any(|(ck, cv)| ck == k && cv == *v)
+            })
+        })
+    }
+}
+
+/// Execute every cell of `sweep` through one [`Session`] (the PJRT
+/// runtime, when used, loads once).  `extra` observers are shared across
+/// all runs — a JSONL sink here yields one stream with `run_start` lines
+/// delimiting the cells.
+pub fn run_sweep(
+    session: &mut Session,
+    sweep: &SweepSpec,
+    extra: &mut [&mut dyn RunObserver],
+) -> Result<SweepGrid> {
+    let cells_in = sweep.cells()?;
+    let total = cells_in.len();
+    let mut cells = Vec::with_capacity(total);
+    for (i, (overrides, spec)) in cells_in.into_iter().enumerate() {
+        crate::info!(
+            "sweep {}: cell {}/{} [{}]",
+            sweep.name,
+            i + 1,
+            total,
+            describe(&overrides)
+        );
+        let mut run = session.build(&spec)?;
+        let outcome = run.execute_with(extra)?;
+        cells.push(SweepCell { overrides, spec, outcome });
+    }
+    Ok(SweepGrid {
+        name: sweep.name.clone(),
+        axis_keys: sweep.axes.iter().map(|a| a.key.clone()).collect(),
+        dims: sweep.axes.iter().map(|a| a.values.len()).collect(),
+        cells,
+    })
+}
+
+/// Render a Json override value without string quotes.
+pub fn fmt_value(v: &Json) -> String {
+    match v {
+        Json::Str(s) => s.clone(),
+        other => other.to_string(),
+    }
+}
+
+fn describe(overrides: &[(String, Json)]) -> String {
+    overrides
+        .iter()
+        .map(|(k, v)| format!("{k}={}", fmt_value(v)))
+        .collect::<Vec<_>>()
+        .join(", ")
+}
+
+/// The generic sweep report (`feds sweep --spec`): one row per cell with
+/// the axis values and the headline metrics.
+pub fn grid_report(grid: &SweepGrid) -> Report {
+    let mut header: Vec<&str> = grid.axis_keys.iter().map(|s| s.as_str()).collect();
+    header.extend(["MRR", "Hits@10", "R@CG", "params@CG", "bytes@CG"]);
+    let mut t = MdTable::new(&header);
+    let mut raw = Vec::new();
+    for cell in &grid.cells {
+        let h = &cell.outcome.history;
+        let mut row: Vec<String> =
+            cell.overrides.iter().map(|(_, v)| fmt_value(v)).collect();
+        row.extend([
+            fmt4(h.mrr_cg()),
+            fmt4(h.hits10_cg()),
+            h.rounds_cg().to_string(),
+            h.params_cg().to_string(),
+            h.converged().bytes_cum.to_string(),
+        ]);
+        t.row(row);
+        let mut over = Json::obj();
+        for (k, v) in &cell.overrides {
+            over = over.set(k, v.clone());
+        }
+        raw.push(
+            Json::obj()
+                .set("overrides", over)
+                .set("mrr", h.mrr_cg())
+                .set("hits10", h.hits10_cg())
+                .set("rounds_cg", h.rounds_cg())
+                .set("params_cg", h.params_cg())
+                .set("params_total", cell.outcome.acct.params())
+                .set("bytes_total", cell.outcome.acct.bytes())
+                .set("messages", cell.outcome.acct.messages()),
+        );
+    }
+    let mut rep = Report::new(&grid.name, &format!("Sweep {} — {} cells", grid.name, grid.cells.len()));
+    rep.table("Grid", t);
+    rep.raw = Json::obj().set("cells", Json::Arr(raw));
+    rep
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fed::ExecMode;
+    use crate::kge::Method;
+    use crate::spec::{AlgoSpec, BackendSpec, BudgetSpec, DataSpec};
+
+    fn base() -> ExperimentSpec {
+        ExperimentSpec {
+            name: "t".into(),
+            method: Method::TransE,
+            algo: AlgoSpec::FedEP,
+            data: DataSpec {
+                entities: 192,
+                relations: 12,
+                triples: 2400,
+                clusters: 4,
+                clients: 3,
+                seed: 7,
+            },
+            backend: BackendSpec::Native {
+                dim: 16,
+                learning_rate: 5e-3,
+                batch: 64,
+                negatives: 16,
+                eval_batch: 32,
+            },
+            budget: BudgetSpec {
+                max_rounds: 4,
+                local_epochs: 1,
+                eval_every: 2,
+                patience: 3,
+                eval_cap: 32,
+            },
+            seed: 7,
+            exec: ExecMode::Sequential,
+        }
+    }
+
+    #[test]
+    fn cells_enumerate_row_major_last_axis_fastest() {
+        let sweep = SweepSpec::new("s", base())
+            .axis("data.clients", vec![Json::from(3usize), Json::from(4usize)])
+            .axis("algo", vec![Json::from("fedep"), Json::from("feds")]);
+        let cells = sweep.cells().unwrap();
+        assert_eq!(cells.len(), 4);
+        assert_eq!(cells[0].1.data.clients, 3);
+        assert_eq!(cells[0].1.algo, AlgoSpec::FedEP);
+        assert_eq!(cells[1].1.data.clients, 3);
+        assert_eq!(cells[1].1.algo, AlgoSpec::feds());
+        assert_eq!(cells[2].1.data.clients, 4);
+        assert_eq!(cells[2].1.algo, AlgoSpec::FedEP);
+        assert_eq!(cells[3].1.data.clients, 4);
+        assert_eq!(cells[3].1.algo, AlgoSpec::feds());
+    }
+
+    #[test]
+    fn no_axes_yields_the_base_cell() {
+        let sweep = SweepSpec::new("s", base());
+        let cells = sweep.cells().unwrap();
+        assert_eq!(cells.len(), 1);
+        assert_eq!(cells[0].1, base());
+    }
+
+    #[test]
+    fn json_round_trip() {
+        let sweep = SweepSpec::new("rt", base())
+            .axis("method", vec![Json::from("transe"), Json::from("rotate")])
+            .axis("algo.sparsity", vec![Json::Num(0.2), Json::Num(0.4)]);
+        // algo.sparsity on a fedep base is invalid — swap the base algo
+        let mut sweep = sweep;
+        sweep.base.algo = AlgoSpec::feds();
+        let rt = SweepSpec::parse(&sweep.to_json().to_string_pretty()).unwrap();
+        assert_eq!(sweep, rt);
+    }
+
+    #[test]
+    fn bad_axis_key_rejected_at_parse() {
+        let sweep = SweepSpec::new("bad", base()).axis("nope", vec![Json::Num(1.0)]);
+        let text = sweep.to_json().to_string();
+        assert!(SweepSpec::parse(&text).is_err());
+    }
+
+    #[test]
+    fn scoped_axis_on_wrong_family_rejected() {
+        // base algo is fedep: a sparsity axis must fail loudly
+        let sweep = SweepSpec::new("bad", base()).axis("algo.sparsity", vec![Json::Num(0.3)]);
+        assert!(sweep.cells().is_err());
+    }
+}

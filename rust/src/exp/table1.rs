@@ -5,37 +5,54 @@
 //! converged MRR.  The paper's finding: all three *inflate* total traffic
 //! (1.3×–2.5×) despite compressing every round, because they reduce
 //! embedding precision for all entities and slow convergence.
+//!
+//! Declared as a sweep grid (method × clients × model) and executed by the
+//! generic runner; KD joins the model axis only on the XLA backend.
 
 use anyhow::Result;
 
-use crate::fed::{Algo, Backend};
+use crate::fed::Backend;
 use crate::kge::Method;
 use crate::util::json::Json;
 
 use super::report::{MdTable, Report};
 use super::Ctx;
 
+const CLIENTS: [usize; 3] = [10, 5, 3];
+
 pub fn run(ctx: &Ctx) -> Result<Report> {
-    let datasets = ctx.datasets(&[10, 5, 3]);
     let methods = [Method::TransE, Method::RotatE];
     let kd_available = matches!(ctx.backend, Backend::Xla(_));
+
+    let mut models: Vec<(&str, &str)> = vec![
+        ("fedsvd", "FedE-SVD"),
+        ("fedsvd+", "FedE-SVD+"),
+    ];
+    if kd_available {
+        models.insert(0, ("fedkd", "FedE-KD"));
+    }
+    let mut algo_values = vec![Json::from("fedep")];
+    algo_values.extend(models.iter().map(|(a, _)| Json::from(*a)));
+
+    let sweep = ctx
+        .sweep("table1")
+        .axis(
+            "method",
+            methods.iter().map(|m| Json::from(m.name())).collect(),
+        )
+        .axis("data.clients", CLIENTS.iter().map(|&n| Json::from(n)).collect())
+        .axis("algo", algo_values);
+    let grid = ctx.run_sweep(&sweep)?;
 
     let mut t = MdTable::new(&["KGE", "Model", "Dataset", "P@98 (scaled by FedE)"]);
     let mut raw = Vec::new();
 
-    for method in methods {
-        for (dname, data) in &datasets {
-            let fede = ctx.run(data, &ctx.run_cfg(Algo::FedEP, method))?;
+    for (im, method) in methods.iter().enumerate() {
+        for (id, &n) in CLIENTS.iter().enumerate() {
+            let dname = format!("R{n}");
+            let fede = &grid.at(&[im, id, 0]).outcome;
             let target = 0.98 * fede.history.mrr_cg();
             let base_params = fede.history.params_at_mrr(target);
-
-            let mut variants: Vec<(&str, Algo)> = vec![
-                ("FedE-SVD", Algo::FedSvd { constrained: false }),
-                ("FedE-SVD+", Algo::FedSvd { constrained: true }),
-            ];
-            if kd_available {
-                variants.insert(0, ("FedE-KD", Algo::FedKd));
-            }
 
             t.row(vec![
                 method.name().into(),
@@ -43,8 +60,8 @@ pub fn run(ctx: &Ctx) -> Result<Report> {
                 dname.clone(),
                 "1.00x".into(),
             ]);
-            for (label, algo) in variants {
-                let out = ctx.run(data, &ctx.run_cfg(algo, method))?;
+            for (iv, (_, label)) in models.iter().enumerate() {
+                let out = &grid.at(&[im, id, iv + 1]).outcome;
                 let reached = out.history.params_at_mrr(target);
                 let cell = match (reached, base_params) {
                     (Some(m), Some(b)) => format!("{:.2}x", m as f64 / b.max(1) as f64),
@@ -56,11 +73,11 @@ pub fn run(ctx: &Ctx) -> Result<Report> {
                     ),
                     _ => "-".into(),
                 };
-                t.row(vec![method.name().into(), label.into(), dname.clone(), cell.clone()]);
+                t.row(vec![method.name().into(), (*label).into(), dname.clone(), cell.clone()]);
                 raw.push(
                     Json::obj()
                         .set("method", method.name())
-                        .set("model", label)
+                        .set("model", *label)
                         .set("dataset", dname.as_str())
                         .set("ratio", cell)
                         .set("model_mrr", out.history.mrr_cg())

@@ -4,10 +4,12 @@
 //! R10/R5/R3 × {TransE, RotatE, ComplEx}.
 //! Table III: communication overhead of FedS scaled by FedEP — P@CG, P@99,
 //! P@98 (§IV-B metric definitions).
+//!
+//! Declared as a sweep grid (method × clients × setting) and executed by
+//! the generic runner; this function only shapes the two tables.
 
 use anyhow::Result;
 
-use crate::fed::Algo;
 use crate::kge::Method;
 use crate::metrics::tracker::efficiency;
 use crate::util::json::Json;
@@ -16,7 +18,7 @@ use super::report::{fmt4, fmt_ratio, MdTable, Report};
 use super::Ctx;
 
 /// Optional env filters for budgeted runs:
-/// `FEDS_EXP_METHODS=transe,rotate` / `FEDS_EXP_CLIENTS=10,3`.
+/// `FEDS_EXP_METHODS=transe,rotate` / `FEDS_EXP_DATASETS=R10,R3`.
 fn env_filter<T: Clone>(var: &str, all: Vec<(String, T)>) -> Vec<(String, T)> {
     match std::env::var(var) {
         Err(_) => all,
@@ -32,24 +34,40 @@ fn env_filter<T: Clone>(var: &str, all: Vec<(String, T)>) -> Vec<(String, T)> {
 pub fn run(ctx: &Ctx) -> Result<Report> {
     let datasets = env_filter(
         "FEDS_EXP_DATASETS",
-        ctx.datasets(&[10, 5, 3]),
+        [10usize, 5, 3].iter().map(|&n| (format!("R{n}"), n)).collect(),
     );
     let methods = env_filter(
         "FEDS_EXP_METHODS",
         Method::ALL.iter().map(|m| (m.name().to_string(), *m)).collect(),
     );
+
+    let sweep = ctx
+        .sweep("table23")
+        .axis(
+            "method",
+            methods.iter().map(|(_, m)| Json::from(m.name())).collect(),
+        )
+        .axis(
+            "data.clients",
+            datasets.iter().map(|(_, n)| Json::from(*n)).collect(),
+        )
+        .axis(
+            "algo",
+            vec![Json::from("single"), Json::from("fedep"), Json::from("feds")],
+        );
+    let grid = ctx.run_sweep(&sweep)?;
+
     let mut t2 = MdTable::new(&["KGE", "Setting", "Dataset", "MRR", "Hits@10"]);
     let mut t3 = MdTable::new(&["KGE", "Dataset", "P@CG", "P@99", "P@98", "Eq.5 bound"]);
     let mut raw = Vec::new();
 
-    for (_, method) in methods.iter().map(|(n, m)| (n.clone(), *m)).collect::<Vec<_>>() {
-        for (dname, data) in &datasets {
-            eprintln!("[table23] {} on {dname}…", method.name());
-            let single = ctx.run(data, &ctx.run_cfg(Algo::Single, method))?;
-            let fedep = ctx.run(data, &ctx.run_cfg(Algo::FedEP, method))?;
-            let feds = ctx.run(data, &ctx.run_cfg(Algo::FedS { sync: true }, method))?;
+    for (im, (_, method)) in methods.iter().enumerate() {
+        for (id, (dname, _)) in datasets.iter().enumerate() {
+            let single = &grid.at(&[im, id, 0]).outcome;
+            let fedep = &grid.at(&[im, id, 1]).outcome;
+            let feds = &grid.at(&[im, id, 2]).outcome;
 
-            for (label, out) in [("Single", &single), ("FedEP", &fedep), ("FedS", &feds)] {
+            for (label, out) in [("Single", single), ("FedEP", fedep), ("FedS", feds)] {
                 t2.row(vec![
                     method.name().into(),
                     label.into(),

@@ -4,32 +4,46 @@
 //! costs the same per cycle as FedS (Appendix VI-C).  The paper's shape:
 //! FedS reaches higher MRR in fewer rounds; FedEPL often cannot reach
 //! 98%/99% of FedEP's converged accuracy at all.
+//!
+//! Declared as a sweep grid (method × clients × algorithm) and executed by
+//! the generic runner; this function only shapes the report.
 
 use anyhow::Result;
 
-use crate::fed::Algo;
 use crate::kge::Method;
 use crate::util::json::Json;
 
 use super::report::{fmt4, MdTable, Report};
 use super::Ctx;
 
+const CLIENTS: [usize; 3] = [10, 5, 3];
+
 pub fn run(ctx: &Ctx) -> Result<Report> {
-    let datasets = ctx.datasets(&[10, 5, 3]);
+    let sweep = ctx
+        .sweep("table4")
+        .axis(
+            "method",
+            Method::ALL.iter().map(|m| Json::from(m.name())).collect(),
+        )
+        .axis("data.clients", CLIENTS.iter().map(|&n| Json::from(n)).collect())
+        .axis(
+            "algo",
+            vec![Json::from("fedep"), Json::from("fedepl"), Json::from("feds")],
+        );
+    let grid = ctx.run_sweep(&sweep)?;
+
     let mut t = MdTable::new(&[
         "KGE", "Dataset", "Setting", "MRR", "R@CG", "params@CG", "reaches 98% of FedEP?",
     ]);
     let mut raw = Vec::new();
 
-    for method in Method::ALL {
-        for (dname, data) in &datasets {
-            let fedep = ctx.run(data, &ctx.run_cfg(Algo::FedEP, method))?;
+    for (im, method) in Method::ALL.iter().enumerate() {
+        for (id, &n) in CLIENTS.iter().enumerate() {
+            let dname = format!("R{n}");
+            let fedep = &grid.at(&[im, id, 0]).outcome;
             let target98 = 0.98 * fedep.history.mrr_cg();
-            for (label, algo) in [
-                ("FedEPL", Algo::FedEPL),
-                ("FedS", Algo::FedS { sync: true }),
-            ] {
-                let out = ctx.run(data, &ctx.run_cfg(algo, method))?;
+            for (ia, label) in [(1usize, "FedEPL"), (2, "FedS")] {
+                let out = &grid.at(&[im, id, ia]).outcome;
                 let reaches = out.history.params_at_mrr(target98).is_some();
                 t.row(vec![
                     method.name().into(),

@@ -1,11 +1,12 @@
 //! Table V — sensitivity to the number of local epochs (2/3/4/5), FedEP vs
 //! FedS, TransE on the R10 analogue.  Paper shape: FedS maintains FedEP-level
 //! accuracy with markedly lower P@CG/P@99/P@98 at every local-epoch setting.
+//!
+//! Declared as a sweep grid (local-epochs × setting) on the R10 base and
+//! executed by the generic runner.
 
 use anyhow::Result;
 
-use crate::fed::Algo;
-use crate::kge::Method;
 use crate::metrics::tracker::efficiency;
 use crate::util::json::Json;
 
@@ -13,23 +14,25 @@ use super::report::{fmt4, fmt_ratio, MdTable, Report};
 use super::Ctx;
 
 pub fn run(ctx: &Ctx) -> Result<Report> {
-    let datasets = ctx.datasets(&[10]);
-    let (_, data) = &datasets[0];
+    let epochs: &[usize] = if ctx.fast { &[2, 3] } else { &[2, 3, 4, 5] };
+    let mut base = ctx.base_spec();
+    base.data.clients = 10;
+    let sweep = crate::exp::sweep::SweepSpec::new("table5", base)
+        .axis(
+            "budget.local_epochs",
+            epochs.iter().map(|&e| Json::from(e)).collect(),
+        )
+        .axis("algo", vec![Json::from("fedep"), Json::from("feds")]);
+    let grid = ctx.run_sweep(&sweep)?;
+
     let mut t = MdTable::new(&[
         "Local epochs", "Setting", "MRR", "Hits@10", "P@CG", "P@99", "P@98",
     ]);
     let mut raw = Vec::new();
 
-    let epochs: &[usize] = if ctx.fast { &[2, 3] } else { &[2, 3, 4, 5] };
-    for &le in epochs {
-        let mut cfg_ep = ctx.run_cfg(Algo::FedEP, Method::TransE);
-        cfg_ep.local_epochs = le;
-        let fedep = ctx.run(data, &cfg_ep)?;
-
-        let mut cfg_s = ctx.run_cfg(Algo::FedS { sync: true }, Method::TransE);
-        cfg_s.local_epochs = le;
-        let feds = ctx.run(data, &cfg_s)?;
-
+    for (ie, &le) in epochs.iter().enumerate() {
+        let fedep = &grid.at(&[ie, 0]).outcome;
+        let feds = &grid.at(&[ie, 1]).outcome;
         let eff = efficiency(&feds.history, &fedep.history);
         t.row(vec![
             le.to_string(),

@@ -4,39 +4,42 @@
 //! Batch size is baked into the AOT artifact shapes, so this sweep always
 //! runs on the native backend (identical math; DESIGN.md §5) — the knob
 //! under study is a training hyper-parameter, not a runtime property.
+//!
+//! Declared as a sweep grid (backend.batch × setting) over a native-backend
+//! base and executed by the generic runner.
 
 use anyhow::Result;
 
-use crate::fed::{Algo, Backend};
-use crate::kge::{Hyper, Method};
 use crate::metrics::tracker::efficiency;
+use crate::spec::BackendSpec;
 use crate::util::json::Json;
 
 use super::report::{fmt4, fmt_ratio, MdTable, Report};
 use super::Ctx;
 
 pub fn run(ctx: &Ctx) -> Result<Report> {
-    let datasets = ctx.datasets(&[10]);
-    let (_, data) = &datasets[0];
+    let batches: &[usize] = if ctx.fast { &[128, 256] } else { &[128, 256, 512] };
+    let mut base = ctx.base_spec();
+    base.data.clients = 10;
+    // the batch-size knob lives on the native backend regardless of the
+    // context's backend (legacy behaviour: ctx data shape, native training)
+    base.backend = BackendSpec::native_default();
+    let sweep = crate::exp::sweep::SweepSpec::new("table6", base)
+        .axis(
+            "backend.batch",
+            batches.iter().map(|&b| Json::from(b)).collect(),
+        )
+        .axis("algo", vec![Json::from("fedep"), Json::from("feds")]);
+    let grid = ctx.run_sweep(&sweep)?;
+
     let mut t = MdTable::new(&[
         "Batch size", "Setting", "MRR", "Hits@10", "P@CG", "P@99", "P@98",
     ]);
     let mut raw = Vec::new();
 
-    let batches: &[usize] = if ctx.fast { &[128, 256] } else { &[128, 256, 512] };
-    for &bs in batches {
-        let backend = Backend::Native {
-            hyper: Hyper { dim: 32, learning_rate: 3e-3, ..Default::default() },
-            batch: bs,
-            negatives: 32,
-            eval_batch: 64,
-        };
-        let run = |algo: Algo| -> Result<_> {
-            let cfg = ctx.run_cfg(algo, Method::TransE);
-            crate::fed::run_federated(data, &cfg, &backend)
-        };
-        let fedep = run(Algo::FedEP)?;
-        let feds = run(Algo::FedS { sync: true })?;
+    for (ib, &bs) in batches.iter().enumerate() {
+        let fedep = &grid.at(&[ib, 0]).outcome;
+        let feds = &grid.at(&[ib, 1]).outcome;
         let eff = efficiency(&feds.history, &fedep.history);
         t.row(vec![
             bs.to_string(),

@@ -18,6 +18,15 @@
 //!     metered `comm::transport` links
 //!   * sequential and per-client-thread execution drivers (`ExecMode`),
 //!     byte- and bit-identical to each other
+//!   * the round loop reports through typed `RunEvent`s to registered
+//!     `RunObserver`s (`crate::metrics::observe`); history, console
+//!     progress and JSONL metric streams are observers, not hard-wired
+//!
+//! Entry points: describe runs with [`crate::spec::ExperimentSpec`] and
+//! execute them through [`crate::spec::Session`].  [`run_federated`] with
+//! the flat [`FedRunConfig`] survives as a deprecated shim over the same
+//! engine ([`run_with_observers`]), with byte-identical accounting and
+//! bit-identical metrics between the two paths.
 
 pub mod compression;
 pub mod orchestrator;
@@ -26,7 +35,9 @@ pub mod server;
 pub mod sync;
 pub mod topk;
 
-pub use orchestrator::{run_federated, Algo, Backend, ExecMode, FedRunConfig, RunOutcome};
+pub use orchestrator::{
+    run_federated, run_with_observers, Algo, Backend, ExecMode, FedRunConfig, RunOutcome,
+};
 pub use server::Server;
 pub use sync::SyncSchedule;
 

@@ -39,6 +39,7 @@ use crate::comm::accounting::Accounting;
 use crate::comm::transport::{duplex, Endpoint};
 use crate::data::partition::FedDataset;
 use crate::kge::{Hyper, Method, Table};
+use crate::metrics::observe::{emit, ConsoleObserver, HistoryObserver, RunEvent, RunObserver};
 use crate::metrics::tracker::{RoundRecord, RunHistory};
 use crate::metrics::{EarlyStop, RankMetrics};
 use crate::runtime::Runtime;
@@ -208,6 +209,16 @@ impl ExecMode {
     }
 }
 
+/// The deprecated flat run configuration.
+///
+/// Every algorithm's knobs live side by side here whether or not the
+/// selected algorithm reads them (`sparsity`/`sync_interval` are FedS's,
+/// `svd_cols` is the SVD transport's).  New code should describe runs
+/// with [`crate::spec::ExperimentSpec`] — whose `AlgoSpec` carries only
+/// the selected algorithm's knobs — and execute them through
+/// [`crate::spec::Session`]; this struct survives as the conversion
+/// target ([`crate::spec::ExperimentSpec::run_config`]) the orchestrator
+/// internals still consume.
 #[derive(Clone, Debug)]
 pub struct FedRunConfig {
     pub algo: Algo,
@@ -260,11 +271,30 @@ pub struct RunOutcome {
     pub eq5_ratio: Option<f64>,
 }
 
-/// Run one federated training experiment.
+/// Run one federated training experiment from the deprecated flat config.
+///
+/// Legacy shim: prefer building a [`crate::spec::ExperimentSpec`] and
+/// executing it through [`crate::spec::Session`] — both paths drive this
+/// same engine, so accounting is byte-identical and metric history
+/// bit-identical between them.  This wrapper just registers the default
+/// console-progress observer and delegates.
 pub fn run_federated(
     data: &FedDataset,
     cfg: &FedRunConfig,
     backend: &Backend,
+) -> Result<RunOutcome> {
+    let mut console = ConsoleObserver::new();
+    run_with_observers(data, cfg, backend, &mut [&mut console])
+}
+
+/// The engine entry point: run the round loop, streaming [`RunEvent`]s to
+/// `extra` observers (plus the internal [`HistoryObserver`] that assembles
+/// the outcome's history).
+pub fn run_with_observers(
+    data: &FedDataset,
+    cfg: &FedRunConfig,
+    backend: &Backend,
+    extra: &mut [&mut dyn RunObserver],
 ) -> Result<RunOutcome> {
     let acct = Accounting::new();
     let exec = match (cfg.exec, backend) {
@@ -277,22 +307,40 @@ pub fn run_federated(
         }
         (e, _) => e,
     };
-    let (history, width) = match exec {
-        ExecMode::Sequential => run_sequential(data, cfg, backend, &acct)?,
-        ExecMode::Threaded => run_threaded(data, cfg, backend, &acct)?,
-    };
+    let mut hist = HistoryObserver::new();
+    let width;
+    {
+        let mut observers: Vec<&mut dyn RunObserver> = Vec::with_capacity(1 + extra.len());
+        observers.push(&mut hist);
+        for o in extra.iter_mut() {
+            observers.push(&mut **o);
+        }
+        width = match exec {
+            ExecMode::Sequential => run_sequential(data, cfg, backend, &acct, &mut observers)?,
+            ExecMode::Threaded => run_threaded(data, cfg, backend, &acct, &mut observers)?,
+        };
+        emit(
+            &mut observers,
+            &RunEvent::RunEnd {
+                params: acct.params(),
+                bytes: acct.bytes(),
+                messages: acct.messages(),
+            },
+        );
+    }
     let eq5 = matches!(cfg.algo, Algo::FedS { .. })
         .then(|| comm_ratio(cfg.sparsity, cfg.sync_interval, width));
-    Ok(RunOutcome { history, acct, eq5_ratio: eq5 })
+    Ok(RunOutcome { history: hist.take(), acct, eq5_ratio: eq5 })
 }
 
 /// The server side of a run: aggregation state, the strategy's server
-/// half, eval weights, and the metric history.
+/// half, eval weights, and the run label (history itself is assembled by
+/// the observer pipeline).
 struct ServerSide {
     server: Server,
     exchange: Option<Box<dyn exchange::Exchange>>,
     weights: Vec<f64>,
-    history: RunHistory,
+    label: String,
 }
 
 fn server_side(
@@ -305,15 +353,15 @@ fn server_side(
         data.clients.iter().map(|c| data.shared_entities_of(c.id)).collect();
     let server = Server::new(data.num_entities, width, shared);
     let exchange = exchange::server_half(cfg, width, refs);
-    let history = RunHistory::new(&format!(
+    let label = format!(
         "{}-{}-{}c",
         cfg.algo.label(),
         cfg.method.name(),
         data.clients.len()
-    ));
+    );
     crate::info!(
         "run {}: {} clients, {} shared entities, width {}, p={}, s={}, exec {}",
-        history.label,
+        label,
         data.clients.len(),
         data.shared.len(),
         width,
@@ -321,7 +369,7 @@ fn server_side(
         cfg.sync_interval,
         cfg.exec.label()
     );
-    ServerSide { server, exchange, weights: data.test_weights(), history }
+    ServerSide { server, exchange, weights: data.test_weights(), label }
 }
 
 /// The driver's view of the client fleet.  The server-side round loop is
@@ -342,15 +390,24 @@ trait ClientPool {
 
 /// Shared server-side round loop: pace the fleet, meter every frame over
 /// the duplex links, aggregate in client-id order for bit-stable results.
+///
+/// The loop emits typed [`RunEvent`]s instead of assembling history or
+/// printing inline; the [`HistoryObserver`] registered by
+/// [`run_with_observers`] reconstructs exactly the legacy history
+/// (bit-identical records, same convergence index).
 fn drive(
     pool: &mut dyn ClientPool,
     side: &mut ServerSide,
     links: &[Endpoint],
     cfg: &FedRunConfig,
     acct: &Accounting,
+    observers: &mut [&mut dyn RunObserver],
 ) -> Result<()> {
     let mut es = EarlyStop::new(cfg.patience);
+    let mut n_records = 0usize;
+    let mut converged_emitted = false;
     for round in 1..=cfg.max_rounds {
+        emit(observers, &RunEvent::RoundStart { round });
         // --- 1. local training (+ eval) on every client --------------------
         let eval_round = round % cfg.eval_every == 0;
         let reports = pool.collect_reports(round, eval_round)?;
@@ -372,26 +429,21 @@ fn drive(
             let valid = RankMetrics::weighted(&valid_pc, &side.weights);
             let test = RankMetrics::weighted(&test_pc, &side.weights);
             let mean_loss = if loss_n > 0 { loss_sum / loss_n as f64 } else { 0.0 };
-            side.history.push(RoundRecord {
+            let record = RoundRecord {
                 round,
                 params_cum: acct.params(),
                 bytes_cum: acct.bytes(),
                 valid,
                 test,
                 mean_loss,
-            });
-            crate::info!(
-                "{} round {round}: loss {mean_loss:.4} valid MRR {:.4} test MRR {:.4} \
-                 params {:.2}M",
-                side.history.label,
-                valid.mrr,
-                test.mrr,
-                acct.params() as f64 / 1e6
-            );
+            };
+            n_records += 1;
+            emit(observers, &RunEvent::Evaluated { record });
             let stop = es.update(valid.mrr);
             pool.broadcast_verdict(stop)?;
             if stop {
-                side.history.mark_converged(es.best_index());
+                emit(observers, &RunEvent::Converged { record_index: es.best_index() });
+                converged_emitted = true;
                 break;
             }
         }
@@ -408,6 +460,15 @@ fn drive(
                 let msg = Upload::decode(&link.recv()?)?;
                 ex.server_receive(&mut side.server, c as u16, msg)?;
             }
+            emit(
+                observers,
+                &RunEvent::UploadAccounted {
+                    round,
+                    params_cum: acct.params(),
+                    bytes_cum: acct.bytes(),
+                    messages: acct.messages(),
+                },
+            );
             for (c, link) in links.iter().enumerate() {
                 if side.server.shared[c].is_empty() {
                     continue;
@@ -417,12 +478,20 @@ fn drive(
                 link.send(msg.encode(), params)?;
             }
             pool.recv_downloads()?;
+            emit(
+                observers,
+                &RunEvent::Synced {
+                    round,
+                    params_cum: acct.params(),
+                    bytes_cum: acct.bytes(),
+                },
+            );
         }
     }
 
-    if side.history.converged_idx.is_none() && !side.history.records.is_empty() {
-        let idx = es.best_index().min(side.history.records.len() - 1);
-        side.history.mark_converged(idx);
+    if !converged_emitted && n_records > 0 {
+        let idx = es.best_index().min(n_records - 1);
+        emit(observers, &RunEvent::Converged { record_index: idx });
     }
     Ok(())
 }
@@ -498,7 +567,8 @@ fn run_sequential(
     cfg: &FedRunConfig,
     backend: &Backend,
     acct: &Arc<Accounting>,
-) -> Result<(RunHistory, usize)> {
+    observers: &mut [&mut dyn RunObserver],
+) -> Result<usize> {
     let (batch_size, negatives) = backend.batch_shape();
     let mut runners = Vec::with_capacity(data.clients.len());
     let mut links = Vec::with_capacity(data.clients.len());
@@ -520,9 +590,17 @@ fn run_sequential(
         Vec::new()
     };
     let mut side = server_side(data, cfg, width, refs);
+    emit(
+        observers,
+        &RunEvent::RunStart {
+            label: side.label.clone(),
+            clients: data.clients.len(),
+            width,
+        },
+    );
     let mut pool = SeqPool { runners: &mut runners };
-    drive(&mut pool, &mut side, &links, cfg, acct)?;
-    Ok((side.history, width))
+    drive(&mut pool, &mut side, &links, cfg, acct, observers)?;
+    Ok(width)
 }
 
 fn run_threaded(
@@ -530,7 +608,8 @@ fn run_threaded(
     cfg: &FedRunConfig,
     backend: &Backend,
     acct: &Arc<Accounting>,
-) -> Result<(RunHistory, usize)> {
+    observers: &mut [&mut dyn RunObserver],
+) -> Result<usize> {
     let Backend::Native { hyper, batch, negatives, eval_batch } = backend else {
         anyhow::bail!("threaded execution is native-backend only");
     };
@@ -565,6 +644,14 @@ fn run_threaded(
         Vec::new()
     };
     let mut side = server_side(data, cfg, width, refs);
+    emit(
+        observers,
+        &RunEvent::RunStart {
+            label: side.label.clone(),
+            clients: data.clients.len(),
+            width,
+        },
+    );
 
     std::thread::scope(|s| -> Result<()> {
         let n = data.clients.len();
@@ -610,7 +697,7 @@ fn run_threaded(
             verdicts.push(ver_tx);
         }
         let mut pool = ThreadedPool { reports, verdicts };
-        let driven = drive(&mut pool, &mut side, &links, cfg, acct);
+        let driven = drive(&mut pool, &mut side, &links, cfg, acct, observers);
         // Unblock any client still waiting on a verdict or a reply frame
         // before joining, so a server-side error can't deadlock the fleet.
         drop(pool);
@@ -629,5 +716,5 @@ fn run_threaded(
         }
         driven.and(clients_res)
     })?;
-    Ok((side.history, width))
+    Ok(width)
 }

@@ -15,6 +15,12 @@
 //!
 //! ## Module map
 //!
+//! * [`spec`] — **the public entry point**: the declarative experiment
+//!   API.  `ExperimentSpec` is a fully JSON-(de)serializable run
+//!   description (data/backend/budget plus an algorithm-scoped `AlgoSpec`
+//!   where each variant carries only its own knobs); `Session::build`
+//!   turns specs into executable `Run` handles.  The flat `FedRunConfig`
+//!   survives only as a deprecated conversion target.
 //! * [`kge`] — method/table/optimizer definitions and the pure-Rust
 //!   reference engine (`kge::native`).  The training hot path is sparse:
 //!   touched-row gradients (`SparseGrad`) + lazy row-wise Adam
@@ -29,11 +35,18 @@
 //!   aggregation (`fed::server`), wire protocol (`fed::protocol`), and
 //!   the message-driven orchestrator (`fed::orchestrator`) with its
 //!   per-algorithm `Exchange` strategies and sequential/threaded drivers.
+//!   The round loop emits typed events rather than printing or assembling
+//!   results inline.
 //! * [`comm`] — framed transport, byte/parameter accounting, bandwidth
 //!   models.
 //! * [`data`] — KG generation, federated partitioning, batch/eval sets.
-//! * [`metrics`], [`exp`] — rank metrics, early stopping, and the
-//!   experiment harness reproducing the paper's tables/figures.
+//! * [`metrics`] — rank metrics, early stopping, run history, and the
+//!   observer pipeline (`metrics::observe`): `RunEvent`/`RunObserver`
+//!   with the in-memory `HistoryObserver`, console progress, and the
+//!   `JsonlSink` metric stream.
+//! * [`exp`] — the experiment harness: every paper table/figure is a
+//!   declarative sweep grid (`exp::sweep`, base spec × override axes)
+//!   executed by one generic runner plus a small report-shaping function.
 //! * [`runtime`], [`linalg`], [`util`] — PJRT loader, small dense linear
 //!   algebra (incl. the SVD codec's kernel), RNG/JSON/bench/prop-test
 //!   support.
@@ -50,10 +63,12 @@ pub mod kge;
 pub mod linalg;
 pub mod metrics;
 pub mod runtime;
+pub mod spec;
 pub mod trainer;
 pub mod util;
 
 pub use kge::{Hyper, Method};
+pub use spec::{ExperimentSpec, Session};
 
 /// Crate version (matches Cargo.toml).
 pub fn version() -> &'static str {

@@ -2,20 +2,55 @@
 //!
 //! Subcommands:
 //!   info                     runtime + manifest summary
-//!   train [opts]             run one federated training configuration
+//!   run [opts]               run one experiment from a JSON ExperimentSpec
+//!   sweep --spec file [opts] execute a sweep grid from a JSON SweepSpec
+//!   train [opts]             legacy flat-flag runner (prefer `run`)
 //!   exp <table|all> [opts]   regenerate a paper table/figure
 //!   ratio [opts]             Eq. 5 analytic vs measured communication ratio
 //!
-//! Run `feds <cmd> --help` for per-command options.
+//! `run`/`sweep` load a spec file and treat explicitly-passed flags as
+//! spec overrides (`--sparsity 0.7` → `algo.sparsity`).  Run `feds <cmd>
+//! --help` for per-command options.  Usage errors exit with code 2 and the
+//! relevant `--help` text; runtime failures exit with code 1.
+
+use std::path::Path;
 
 use anyhow::Result;
 
 use feds::data::generator::generate;
 use feds::data::partition::partition;
+use feds::exp::sweep::{grid_report, run_sweep, SweepSpec};
 use feds::exp::{self, Ctx};
-use feds::fed::{comm_ratio, run_federated, Algo, ExecMode, FedRunConfig};
+use feds::fed::{comm_ratio, run_federated, Algo, ExecMode, FedRunConfig, RunOutcome};
 use feds::kge::Method;
-use feds::util::cli::Cli;
+use feds::metrics::observe::JsonlSink;
+use feds::spec::{AlgoSpec, BackendSpec, BudgetSpec, DataSpec, ExperimentSpec, Session};
+use feds::util::cli::{Cli, CliError};
+
+/// How a command ends without succeeding.
+enum Failure {
+    /// `--help`: print to stdout, exit 0.
+    Help(String),
+    /// unusable arguments: print to stderr, exit 2.
+    Usage(String),
+    /// the run itself failed: print to stderr, exit 1.
+    Run(anyhow::Error),
+}
+
+impl From<CliError> for Failure {
+    fn from(e: CliError) -> Self {
+        match e {
+            CliError::Help(s) => Failure::Help(s),
+            CliError::Usage(s) => Failure::Usage(s),
+        }
+    }
+}
+
+impl From<anyhow::Error> for Failure {
+    fn from(e: anyhow::Error) -> Self {
+        Failure::Run(e)
+    }
+}
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -25,8 +60,10 @@ fn main() {
     }
     let cmd = args[0].as_str();
     let rest = &args[1..];
-    let result = match cmd {
-        "info" => cmd_info(),
+    let result: Result<(), Failure> = match cmd {
+        "info" => cmd_info().map_err(Failure::Run),
+        "run" => cmd_run(rest),
+        "sweep" => cmd_sweep(rest),
         "train" => cmd_train(rest),
         "exp" => cmd_exp(rest),
         "ratio" => cmd_ratio(rest),
@@ -40,9 +77,17 @@ fn main() {
             std::process::exit(2);
         }
     };
-    if let Err(e) = result {
-        eprintln!("error: {e:#}");
-        std::process::exit(1);
+    match result {
+        Ok(()) => {}
+        Err(Failure::Help(text)) => println!("{text}"),
+        Err(Failure::Usage(text)) => {
+            eprintln!("{text}");
+            std::process::exit(2);
+        }
+        Err(Failure::Run(e)) => {
+            eprintln!("error: {e:#}");
+            std::process::exit(1);
+        }
     }
 }
 
@@ -52,7 +97,9 @@ fn print_usage() {
          USAGE: feds <command> [options]\n\n\
          COMMANDS:\n\
            info     show PJRT runtime and artifact manifest\n\
-           train    run one federated configuration and print the history\n\
+           run      run one experiment from a JSON spec (flags override spec fields)\n\
+           sweep    execute a sweep grid (base spec × axes) from a JSON spec\n\
+           train    legacy flat-flag runner (prefer `run`)\n\
            exp      regenerate paper tables/figures: table1 table23 table4\n\
                     table5 table6 fig2 all\n\
            ratio    Eq. 5 analytic communication ratio vs sparsity\n",
@@ -78,8 +125,210 @@ fn cmd_info() -> Result<()> {
     Ok(())
 }
 
+/// Flag name → dotted spec key, shared by `run` and `sweep`.  Only flags
+/// the user explicitly passed are applied, so spec-file values survive.
+const OVERRIDE_FLAGS: &[(&str, &str)] = &[
+    ("algo", "algo"),
+    ("method", "method"),
+    ("clients", "data.clients"),
+    ("entities", "data.entities"),
+    ("relations", "data.relations"),
+    ("triples", "data.triples"),
+    ("data-seed", "data.seed"),
+    ("rounds", "budget.max_rounds"),
+    ("local-epochs", "budget.local_epochs"),
+    ("eval-every", "budget.eval_every"),
+    ("patience", "budget.patience"),
+    ("eval-cap", "budget.eval_cap"),
+    ("sparsity", "algo.sparsity"),
+    ("sync-interval", "algo.sync_interval"),
+    ("svd-cols", "algo.cols"),
+    ("backend", "backend"),
+    ("dim", "backend.dim"),
+    ("batch", "backend.batch"),
+    ("seed", "seed"),
+    ("exec", "exec"),
+];
+
+fn override_opts(mut cli: Cli) -> Cli {
+    cli = cli
+        .opt("algo", "feds", "single|fedep|fedepl|feds|feds-nosync|fedkd|fedsvd|fedsvd+")
+        .opt("method", "transe", "transe|rotate|complex")
+        .opt("clients", "3", "number of clients (relation partition)")
+        .opt("entities", "512", "number of KG entities")
+        .opt("relations", "24", "number of KG relations")
+        .opt("triples", "8000", "number of KG triples")
+        .opt("data-seed", "64501", "KG generation/partition seed")
+        .opt("rounds", "60", "max communication rounds")
+        .opt("local-epochs", "3", "local epochs per round")
+        .opt("eval-every", "5", "evaluate every N rounds")
+        .opt("patience", "3", "early-stop patience in evaluations")
+        .opt("eval-cap", "384", "max eval queries per client per split (0=all)")
+        .opt("sparsity", "0.4", "FedS sparsity ratio p (feds only)")
+        .opt("sync-interval", "4", "FedS synchronization interval s (feds only)")
+        .opt("svd-cols", "8", "SVD reshape columns (fedsvd only)")
+        .opt("backend", "native", "xla|native")
+        .opt("dim", "32", "native embedding dimension")
+        .opt("batch", "128", "native training batch size")
+        .opt("seed", "64501", "experiment seed")
+        .opt("exec", "seq", "client execution: seq|threaded (threaded is native-only)");
+    cli
+}
+
+/// The built-in default spec `feds run` executes when no `--spec` is
+/// given: FedS on the native backend's standard synthetic KG.
+fn default_spec() -> ExperimentSpec {
+    ExperimentSpec {
+        name: "run".into(),
+        method: Method::TransE,
+        algo: AlgoSpec::feds(),
+        data: DataSpec {
+            entities: 512,
+            relations: 24,
+            triples: 8_000,
+            clusters: 8,
+            clients: 3,
+            seed: 64501,
+        },
+        backend: BackendSpec::native_default(),
+        budget: BudgetSpec {
+            max_rounds: 60,
+            local_epochs: 3,
+            eval_every: 5,
+            patience: 3,
+            eval_cap: 384,
+        },
+        seed: 64501,
+        exec: ExecMode::Sequential,
+    }
+}
+
+fn apply_overrides(
+    spec: &mut ExperimentSpec,
+    m: &feds::util::cli::Matches,
+) -> Result<(), Failure> {
+    for (flag, key) in OVERRIDE_FLAGS {
+        if let Some(raw) = m.explicit(flag) {
+            let raw = raw.to_string();
+            spec.apply_str(key, &raw)
+                .map_err(|e| Failure::Usage(format!("{e:#}")))?;
+        }
+    }
+    spec.validate().map_err(|e| Failure::Usage(format!("{e:#}")))?;
+    Ok(())
+}
+
+fn print_outcome(out: &RunOutcome) {
+    println!("\n=== {} ===", out.history.label);
+    println!("{:>6} {:>12} {:>10} {:>10} {:>10}", "round", "params", "loss", "validMRR", "testMRR");
+    for r in &out.history.records {
+        println!(
+            "{:>6} {:>12} {:>10.4} {:>10.4} {:>10.4}",
+            r.round, r.params_cum, r.mean_loss, r.valid.mrr, r.test.mrr
+        );
+    }
+    if out.history.records.is_empty() {
+        println!("\nno evaluations recorded (eval-every exceeds the round budget)");
+    } else {
+        println!(
+            "\nconverged: round {} MRR {:.4} Hits@10 {:.4}",
+            out.history.rounds_cg(),
+            out.history.mrr_cg(),
+            out.history.hits10_cg()
+        );
+    }
+    println!(
+        "transmitted: {} params, {} bytes ({} messages)",
+        out.acct.params(),
+        out.acct.bytes(),
+        out.acct.messages()
+    );
+    if let Some(r) = out.eq5_ratio {
+        println!("Eq.5 worst-case ratio vs dense: {r:.4}");
+    }
+}
+
+fn run_cli() -> Cli {
+    override_opts(Cli::new(
+        "feds run",
+        "run one experiment from a JSON ExperimentSpec (explicit flags override spec fields)",
+    ))
+    .opt("spec", "", "path to an ExperimentSpec JSON file (empty = built-in default)")
+    .opt("jsonl", "", "stream run events to this JSONL file")
+    .flag("quiet", "suppress console progress")
+}
+
+fn cmd_run(args: &[String]) -> Result<(), Failure> {
+    let cli = run_cli();
+    let m = cli.parse(args)?;
+    if let Some(stray) = m.positional.first() {
+        return Err(Failure::Usage(format!(
+            "unexpected argument '{stray}' — spec files are passed as --spec {stray}\n\n{}",
+            cli.usage()
+        )));
+    }
+    let spec_path = m.get("spec").map_err(Failure::Usage)?;
+    let mut spec = if spec_path.is_empty() {
+        default_spec()
+    } else {
+        ExperimentSpec::load(Path::new(spec_path))?
+    };
+    apply_overrides(&mut spec, &m)?;
+
+    let mut session = Session::new();
+    let mut run = session.build(&spec)?;
+    if m.flag("quiet") {
+        run.quiet();
+    }
+    let jsonl = m.get("jsonl").map_err(Failure::Usage)?;
+    if !jsonl.is_empty() {
+        run.observe(Box::new(JsonlSink::create(Path::new(jsonl))?));
+    }
+    let out = run.execute()?;
+    print_outcome(&out);
+    Ok(())
+}
+
+fn sweep_cli() -> Cli {
+    override_opts(Cli::new(
+        "feds sweep",
+        "execute a sweep grid (base ExperimentSpec × axes); flags override the base spec",
+    ))
+    .opt("spec", "", "path to a SweepSpec JSON file (required)")
+    .opt("jsonl", "", "stream all runs' events to this JSONL file")
+}
+
+fn cmd_sweep(args: &[String]) -> Result<(), Failure> {
+    let cli = sweep_cli();
+    let m = cli.parse(args)?;
+    if let Some(stray) = m.positional.first() {
+        return Err(Failure::Usage(format!(
+            "unexpected argument '{stray}' — spec files are passed as --spec {stray}\n\n{}",
+            cli.usage()
+        )));
+    }
+    let spec_path = m.get("spec").map_err(Failure::Usage)?;
+    if spec_path.is_empty() {
+        return Err(Failure::Usage(format!("--spec is required\n\n{}", cli.usage())));
+    }
+    let mut sweep = SweepSpec::load(Path::new(spec_path))?;
+    apply_overrides(&mut sweep.base, &m)?;
+
+    let mut session = Session::new();
+    let jsonl = m.get("jsonl").map_err(Failure::Usage)?;
+    let grid = if jsonl.is_empty() {
+        run_sweep(&mut session, &sweep, &mut [])?
+    } else {
+        let mut sink = JsonlSink::create(Path::new(jsonl))?;
+        run_sweep(&mut session, &sweep, &mut [&mut sink])?
+    };
+    let rep = grid_report(&grid);
+    rep.save(&exp::reports_dir())?;
+    Ok(())
+}
+
 fn train_cli() -> Cli {
-    Cli::new("feds train", "run one federated training configuration")
+    Cli::new("feds train", "legacy flat-flag runner (prefer `feds run`)")
         .opt("algo", "feds", "single|fedep|fedepl|feds|feds-nosync|fedkd|fedsvd|fedsvd+")
         .opt("method", "transe", "transe|rotate|complex")
         .opt("clients", "3", "number of clients (relation partition)")
@@ -95,53 +344,36 @@ fn train_cli() -> Cli {
         .opt("triples", "0", "override #triples (0 = backend default)")
 }
 
-fn cmd_train(args: &[String]) -> Result<()> {
-    let m = train_cli().parse(args).map_err(|u| anyhow::anyhow!("{u}"))?;
-    let ctx = Ctx::from_options(m.get("backend"), false, m.u64("seed"))?;
+fn cmd_train(args: &[String]) -> Result<(), Failure> {
+    let m = train_cli().parse(args)?;
+    let ctx = Ctx::from_options(
+        m.get("backend").map_err(Failure::Usage)?,
+        false,
+        m.u64("seed").map_err(Failure::Usage)?,
+    )?;
     let mut gen = ctx.gen_config();
-    if m.usize("triples") > 0 {
-        gen.num_triples = m.usize("triples");
+    let triples = m.usize("triples").map_err(Failure::Usage)?;
+    if triples > 0 {
+        gen.num_triples = triples;
     }
     let kg = generate(&gen);
-    let data = partition(&kg, m.usize("clients"), m.u64("seed"));
+    let data = partition(&kg, m.usize("clients").map_err(Failure::Usage)?, m.u64("seed").map_err(Failure::Usage)?);
     let cfg = FedRunConfig {
-        algo: Algo::parse(m.get("algo"))?,
-        method: Method::parse(m.get("method"))?,
-        max_rounds: m.usize("rounds"),
-        local_epochs: m.usize("local-epochs"),
-        eval_every: m.usize("eval-every"),
+        algo: Algo::parse(m.get("algo").map_err(Failure::Usage)?)?,
+        method: Method::parse(m.get("method").map_err(Failure::Usage)?)?,
+        max_rounds: m.usize("rounds").map_err(Failure::Usage)?,
+        local_epochs: m.usize("local-epochs").map_err(Failure::Usage)?,
+        eval_every: m.usize("eval-every").map_err(Failure::Usage)?,
         patience: 3,
-        sparsity: m.f64("sparsity"),
-        sync_interval: m.usize("sync-interval"),
-        eval_cap: m.usize("eval-cap"),
-        seed: m.u64("seed"),
+        sparsity: m.f64("sparsity").map_err(Failure::Usage)?,
+        sync_interval: m.usize("sync-interval").map_err(Failure::Usage)?,
+        eval_cap: m.usize("eval-cap").map_err(Failure::Usage)?,
+        seed: m.u64("seed").map_err(Failure::Usage)?,
         svd_cols: 8,
-        exec: ExecMode::parse(m.get("exec"))?,
+        exec: ExecMode::parse(m.get("exec").map_err(Failure::Usage)?)?,
     };
     let out = run_federated(&data, &cfg, &ctx.backend)?;
-    println!("\n=== {} ===", out.history.label);
-    println!("{:>6} {:>12} {:>10} {:>10} {:>10}", "round", "params", "loss", "validMRR", "testMRR");
-    for r in &out.history.records {
-        println!(
-            "{:>6} {:>12} {:>10.4} {:>10.4} {:>10.4}",
-            r.round, r.params_cum, r.mean_loss, r.valid.mrr, r.test.mrr
-        );
-    }
-    println!(
-        "\nconverged: round {} MRR {:.4} Hits@10 {:.4}",
-        out.history.rounds_cg(),
-        out.history.mrr_cg(),
-        out.history.hits10_cg()
-    );
-    println!(
-        "transmitted: {} params, {} bytes ({} messages)",
-        out.acct.params(),
-        out.acct.bytes(),
-        out.acct.messages()
-    );
-    if let Some(r) = out.eq5_ratio {
-        println!("Eq.5 worst-case ratio vs dense: {r:.4}");
-    }
+    print_outcome(&out);
     Ok(())
 }
 
@@ -153,13 +385,26 @@ fn exp_cli() -> Cli {
         .flag("fast", "CI smoke mode: fewer rounds, smaller eval cap")
 }
 
-fn cmd_exp(args: &[String]) -> Result<()> {
-    let which = args.first().cloned().unwrap_or_else(|| "all".to_string());
-    let m = exp_cli()
-        .parse(&args[1.min(args.len())..])
-        .map_err(|u| anyhow::anyhow!("{u}"))?;
-    let ctx = Ctx::from_options(m.get("backend"), m.flag("fast"), m.u64("seed"))?
-        .with_exec(ExecMode::parse(m.get("exec"))?);
+fn cmd_exp(args: &[String]) -> Result<(), Failure> {
+    // parse first, then read the experiment name from the positionals —
+    // so `feds exp --fast` selects "all" instead of treating "--fast" as
+    // the experiment name
+    let cli = exp_cli();
+    let m = cli.parse(args)?;
+    let which = m.positional.first().cloned().unwrap_or_else(|| "all".to_string());
+    if m.positional.len() > 1 {
+        return Err(Failure::Usage(format!(
+            "unexpected extra argument '{}'\n\n{}",
+            m.positional[1],
+            cli.usage()
+        )));
+    }
+    let ctx = Ctx::from_options(
+        m.get("backend").map_err(Failure::Usage)?,
+        m.flag("fast"),
+        m.u64("seed").map_err(Failure::Usage)?,
+    )?
+    .with_exec(ExecMode::parse(m.get("exec").map_err(Failure::Usage)?)?);
     let dir = exp::reports_dir();
     let run_one = |name: &str| -> Result<()> {
         let rep = match name {
@@ -180,17 +425,17 @@ fn cmd_exp(args: &[String]) -> Result<()> {
         }
         Ok(())
     } else {
-        run_one(&which)
+        run_one(&which).map_err(Failure::Run)
     }
 }
 
-fn cmd_ratio(args: &[String]) -> Result<()> {
+fn cmd_ratio(args: &[String]) -> Result<(), Failure> {
     let cli = Cli::new("feds ratio", "Eq. 5 analytic communication ratio")
         .opt("dim", "64", "embedding width D")
         .opt("sync-interval", "4", "synchronization interval s");
-    let m = cli.parse(args).map_err(|u| anyhow::anyhow!("{u}"))?;
-    let d = m.usize("dim");
-    let s = m.usize("sync-interval");
+    let m = cli.parse(args)?;
+    let d = m.usize("dim").map_err(Failure::Usage)?;
+    let s = m.usize("sync-interval").map_err(Failure::Usage)?;
     println!("Eq. 5 ratio R_c^p for D={d}, s={s}:");
     for p in [0.1, 0.2, 0.3, 0.4, 0.5, 0.6, 0.7, 0.8, 0.9] {
         println!("  p={p:.1} → {:.4}", comm_ratio(p, s, d));

@@ -7,9 +7,11 @@
 //! the baseline), and **R@CG** (communication rounds at convergence).
 
 pub mod early_stop;
+pub mod observe;
 pub mod tracker;
 
 pub use early_stop::EarlyStop;
+pub use observe::{ConsoleObserver, HistoryObserver, JsonlSink, RunEvent, RunObserver};
 pub use tracker::{RoundRecord, RunHistory};
 
 /// Ranking metrics accumulated from filtered ranks.

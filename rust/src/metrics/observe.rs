@@ -1,0 +1,333 @@
+//! The run observer pipeline: the orchestrator's round loop emits typed
+//! [`RunEvent`]s; registered [`RunObserver`]s turn them into whatever a
+//! consumer needs — the in-memory [`HistoryObserver`] assembles the
+//! [`RunHistory`] every outcome carries, [`ConsoleObserver`] prints the
+//! per-evaluation progress line, and [`JsonlSink`] streams one JSON object
+//! per event so downstream tooling consumes metrics without scraping
+//! stdout.
+//!
+//! Events are emitted on the coordinator thread in a deterministic order
+//! (identical for sequential and threaded execution), so observers need no
+//! synchronization and see bit-identical payloads across exec modes.
+
+use std::io::Write;
+use std::path::Path;
+
+use crate::util::json::Json;
+
+use super::tracker::{RoundRecord, RunHistory};
+use super::RankMetrics;
+
+/// One typed event from the federated round loop.
+///
+/// Cumulative counters (`params_cum`, `bytes_cum`, `messages`) are
+/// snapshots of the run's communication accounting at the emission point;
+/// they are deterministic in both execution modes because uploads are
+/// received and downloads sent in client-id order with the control plane
+/// pacing every client.
+#[derive(Clone, Debug)]
+pub enum RunEvent {
+    /// Emitted once before the first round.
+    RunStart {
+        label: String,
+        clients: usize,
+        /// entity-embedding row width of this run
+        width: usize,
+    },
+    /// A communication round is beginning (1-based).
+    RoundStart { round: usize },
+    /// All of this round's uploads have been received and metered.
+    UploadAccounted {
+        round: usize,
+        params_cum: u64,
+        bytes_cum: u64,
+        messages: u64,
+    },
+    /// The round's communication phase completed: downloads metered and
+    /// (in sequential mode) folded into every client.
+    Synced {
+        round: usize,
+        params_cum: u64,
+        bytes_cum: u64,
+    },
+    /// An evaluation round produced a full metric record.
+    Evaluated { record: RoundRecord },
+    /// The convergence point is known (index into the evaluated records —
+    /// the best validation MRR so far, exactly the legacy early-stop rule).
+    Converged { record_index: usize },
+    /// Emitted once after the loop with final accounting totals.
+    RunEnd {
+        params: u64,
+        bytes: u64,
+        messages: u64,
+    },
+}
+
+impl RunEvent {
+    /// One flat JSON object per event (the JSONL wire format).
+    pub fn to_json(&self) -> Json {
+        match self {
+            RunEvent::RunStart { label, clients, width } => Json::obj()
+                .set("event", "run_start")
+                .set("label", label.as_str())
+                .set("clients", *clients)
+                .set("width", *width),
+            RunEvent::RoundStart { round } => {
+                Json::obj().set("event", "round_start").set("round", *round)
+            }
+            RunEvent::UploadAccounted { round, params_cum, bytes_cum, messages } => Json::obj()
+                .set("event", "upload_accounted")
+                .set("round", *round)
+                .set("params_cum", *params_cum)
+                .set("bytes_cum", *bytes_cum)
+                .set("messages", *messages),
+            RunEvent::Synced { round, params_cum, bytes_cum } => Json::obj()
+                .set("event", "synced")
+                .set("round", *round)
+                .set("params_cum", *params_cum)
+                .set("bytes_cum", *bytes_cum),
+            RunEvent::Evaluated { record } => {
+                let rank = |m: &RankMetrics| {
+                    Json::obj()
+                        .set("n", m.n)
+                        .set("mrr", m.mrr)
+                        .set("hits1", m.hits1)
+                        .set("hits3", m.hits3)
+                        .set("hits10", m.hits10)
+                };
+                Json::obj()
+                    .set("event", "evaluated")
+                    .set("round", record.round)
+                    .set("mean_loss", record.mean_loss)
+                    .set("params_cum", record.params_cum)
+                    .set("bytes_cum", record.bytes_cum)
+                    .set("valid", rank(&record.valid))
+                    .set("test", rank(&record.test))
+            }
+            RunEvent::Converged { record_index } => Json::obj()
+                .set("event", "converged")
+                .set("record_index", *record_index),
+            RunEvent::RunEnd { params, bytes, messages } => Json::obj()
+                .set("event", "run_end")
+                .set("params", *params)
+                .set("bytes", *bytes)
+                .set("messages", *messages),
+        }
+    }
+}
+
+/// A consumer of run events.  Observers run on the coordinator thread;
+/// `on_event` must not block on the clients.
+pub trait RunObserver {
+    fn on_event(&mut self, ev: &RunEvent);
+}
+
+/// Deliver `ev` to every observer, in registration order.
+pub fn emit(observers: &mut [&mut dyn RunObserver], ev: &RunEvent) {
+    for o in observers.iter_mut() {
+        o.on_event(ev);
+    }
+}
+
+/// Assembles the [`RunHistory`] a [`crate::fed::RunOutcome`] carries:
+/// `Evaluated` pushes a record, `Converged` marks the convergence index.
+/// The engine registers one of these on every run, so the outcome is
+/// observer-assembled rather than hard-wired into the round loop.
+#[derive(Default)]
+pub struct HistoryObserver {
+    history: RunHistory,
+}
+
+impl HistoryObserver {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Take the assembled history out (leaves an empty one behind).
+    pub fn take(&mut self) -> RunHistory {
+        std::mem::take(&mut self.history)
+    }
+
+    pub fn history(&self) -> &RunHistory {
+        &self.history
+    }
+}
+
+impl RunObserver for HistoryObserver {
+    fn on_event(&mut self, ev: &RunEvent) {
+        match ev {
+            RunEvent::RunStart { label, .. } => self.history = RunHistory::new(label),
+            RunEvent::Evaluated { record } => self.history.push(record.clone()),
+            RunEvent::Converged { record_index } => self.history.mark_converged(*record_index),
+            _ => {}
+        }
+    }
+}
+
+/// Console progress: the per-evaluation `info!` line the round loop used
+/// to print inline, now just another observer.
+#[derive(Default)]
+pub struct ConsoleObserver {
+    label: String,
+}
+
+impl ConsoleObserver {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+impl RunObserver for ConsoleObserver {
+    fn on_event(&mut self, ev: &RunEvent) {
+        match ev {
+            RunEvent::RunStart { label, .. } => self.label = label.clone(),
+            RunEvent::Evaluated { record } => {
+                crate::info!(
+                    "{} round {}: loss {:.4} valid MRR {:.4} test MRR {:.4} \
+                     params {:.2}M",
+                    self.label,
+                    record.round,
+                    record.mean_loss,
+                    record.valid.mrr,
+                    record.test.mrr,
+                    record.params_cum as f64 / 1e6
+                );
+            }
+            _ => {}
+        }
+    }
+}
+
+/// Streams every event as one JSON line.  Multiple runs may share a sink
+/// (a sweep appends each run's stream; `run_start` lines delimit them).
+/// IO errors are logged once and further writes dropped — metrics
+/// streaming must never abort training.
+pub struct JsonlSink<W: Write> {
+    w: W,
+    failed: bool,
+}
+
+impl JsonlSink<std::io::BufWriter<std::fs::File>> {
+    /// Create (truncate) `path` and stream events into it.
+    pub fn create(path: &Path) -> anyhow::Result<Self> {
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)?;
+            }
+        }
+        let f = std::fs::File::create(path)?;
+        Ok(Self::new(std::io::BufWriter::new(f)))
+    }
+}
+
+impl<W: Write> JsonlSink<W> {
+    pub fn new(w: W) -> Self {
+        Self { w, failed: false }
+    }
+
+    fn write_line(&mut self, line: String) {
+        if self.failed {
+            return;
+        }
+        if let Err(e) = self.w.write_all(line.as_bytes()).and_then(|()| self.w.write_all(b"\n")) {
+            crate::warn_!("jsonl sink write failed ({e}); disabling metric stream");
+            self.failed = true;
+        }
+    }
+}
+
+impl<W: Write> RunObserver for JsonlSink<W> {
+    fn on_event(&mut self, ev: &RunEvent) {
+        self.write_line(ev.to_json().to_string());
+        if matches!(ev, RunEvent::RunEnd { .. }) && !self.failed {
+            if let Err(e) = self.w.flush() {
+                crate::warn_!("jsonl sink flush failed ({e})");
+                self.failed = true;
+            }
+        }
+    }
+}
+
+impl<W: Write> Drop for JsonlSink<W> {
+    fn drop(&mut self) {
+        if !self.failed {
+            let _ = self.w.flush();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn record(round: usize, mrr: f64, params: u64) -> RoundRecord {
+        let m = RankMetrics { n: 2, mrr, hits1: 0.0, hits3: 0.0, hits10: mrr };
+        RoundRecord {
+            round,
+            params_cum: params,
+            bytes_cum: params * 4,
+            valid: m,
+            test: m,
+            mean_loss: 0.5,
+        }
+    }
+
+    #[test]
+    fn history_observer_assembles_runs() {
+        let mut h = HistoryObserver::new();
+        h.on_event(&RunEvent::RunStart { label: "t".into(), clients: 3, width: 8 });
+        h.on_event(&RunEvent::RoundStart { round: 1 });
+        h.on_event(&RunEvent::Evaluated { record: record(2, 0.3, 100) });
+        h.on_event(&RunEvent::Evaluated { record: record(4, 0.4, 200) });
+        h.on_event(&RunEvent::Converged { record_index: 1 });
+        let hist = h.take();
+        assert_eq!(hist.label, "t");
+        assert_eq!(hist.records.len(), 2);
+        assert_eq!(hist.converged_idx, Some(1));
+        assert_eq!(hist.rounds_cg(), 4);
+        assert_eq!(hist.params_cg(), 200);
+    }
+
+    #[test]
+    fn jsonl_sink_emits_parseable_lines() {
+        let mut buf = Vec::new();
+        {
+            let mut sink = JsonlSink::new(&mut buf);
+            sink.on_event(&RunEvent::RunStart { label: "x".into(), clients: 2, width: 4 });
+            sink.on_event(&RunEvent::Evaluated { record: record(5, 0.25, 64) });
+            sink.on_event(&RunEvent::RunEnd { params: 64, bytes: 256, messages: 4 });
+        }
+        let text = String::from_utf8(buf).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 3);
+        let first = Json::parse(lines[0]).unwrap();
+        assert_eq!(first.get("event").unwrap().as_str(), Some("run_start"));
+        let eval = Json::parse(lines[1]).unwrap();
+        assert_eq!(eval.get("round").unwrap().as_usize(), Some(5));
+        assert_eq!(
+            eval.get("valid").unwrap().get("mrr").unwrap().as_f64(),
+            Some(0.25)
+        );
+        let end = Json::parse(lines[2]).unwrap();
+        assert_eq!(end.get("messages").unwrap().as_usize(), Some(4));
+    }
+
+    #[test]
+    fn every_event_serializes_with_a_tag() {
+        let evs = [
+            RunEvent::RunStart { label: "l".into(), clients: 1, width: 2 },
+            RunEvent::RoundStart { round: 1 },
+            RunEvent::UploadAccounted { round: 1, params_cum: 2, bytes_cum: 3, messages: 4 },
+            RunEvent::Synced { round: 1, params_cum: 5, bytes_cum: 6 },
+            RunEvent::Evaluated { record: record(1, 0.1, 7) },
+            RunEvent::Converged { record_index: 0 },
+            RunEvent::RunEnd { params: 8, bytes: 9, messages: 10 },
+        ];
+        for ev in &evs {
+            let j = ev.to_json();
+            assert!(j.get("event").and_then(Json::as_str).is_some(), "{ev:?}");
+            // the wire form round-trips through the parser
+            assert_eq!(Json::parse(&j.to_string()).unwrap(), j);
+        }
+    }
+}

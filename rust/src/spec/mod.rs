@@ -1,0 +1,901 @@
+//! The declarative experiment API: a fully JSON-(de)serializable
+//! description of a federated run.
+//!
+//! [`ExperimentSpec`] is the single public entry point for launching runs:
+//! data ([`DataSpec`]), backend ([`BackendSpec`]), training budget
+//! ([`BudgetSpec`]), and an algorithm-scoped [`AlgoSpec`] sum type where
+//! each variant carries **only its own knobs** — `FedS { sparsity,
+//! sync_interval, sync }`, `Svd { cols, plus }`, `Kd`, dense baselines
+//! bare.  Specs validate on construction-from-JSON and before every build,
+//! round-trip exactly through [`crate::util::json::Json`], and support
+//! dotted-key overrides (`"algo.sparsity"`, `"data.clients"`,
+//! `"budget.max_rounds"`) — the one mechanism behind both CLI flag
+//! overrides and sweep axes (`crate::exp::sweep`).
+//!
+//! The legacy flat [`FedRunConfig`] survives only as a deprecated
+//! conversion target ([`ExperimentSpec::run_config`] /
+//! [`AlgoSpec::from_legacy`]); new code should build specs and run them
+//! through [`Session`].
+
+pub mod session;
+
+pub use session::{Run, Session};
+
+use anyhow::{bail, ensure, Result};
+
+use crate::data::generator::{generate, GeneratorConfig};
+use crate::data::partition::{partition, FedDataset};
+use crate::fed::{Algo, ExecMode, FedRunConfig};
+use crate::kge::Method;
+use crate::util::json::Json;
+
+/// Seeds ride in JSON numbers (f64), which are exact only up to 2^53;
+/// larger seeds would silently corrupt on a round-trip, so validation
+/// rejects them.
+const MAX_JSON_SEED: u64 = 1 << 53;
+
+/// Which algorithm runs, carrying only that algorithm's knobs.
+#[derive(Clone, Debug, PartialEq)]
+pub enum AlgoSpec {
+    /// Local training only, no communication.
+    Single,
+    /// Dense FedE with personalized evaluation.
+    FedEP,
+    /// FedEP at the Appendix VI-C reduced dimension (volume-matched to
+    /// FedS at the paper-default p=0.4, s=4).
+    FedEPL,
+    /// Entity-Wise Top-K sparsification + Intermittent Synchronization.
+    FedS {
+        /// sparsity ratio p ∈ (0, 1]
+        sparsity: f64,
+        /// synchronization interval s ≥ 1
+        sync_interval: usize,
+        /// `false` runs the FedS/syn ablation (no synchronization)
+        sync: bool,
+    },
+    /// Dual-dimension co-distillation transport (XLA backend only).
+    Kd,
+    /// SVD-compressed update transport; `plus` adds the low-rank training
+    /// constraint (FedE-SVD+).
+    Svd {
+        /// columns of the SVD reshape ≥ 1
+        cols: usize,
+        plus: bool,
+    },
+}
+
+impl AlgoSpec {
+    /// Paper-default knobs for each family.
+    pub fn feds() -> Self {
+        AlgoSpec::FedS { sparsity: 0.4, sync_interval: 4, sync: true }
+    }
+
+    pub fn svd() -> Self {
+        AlgoSpec::Svd { cols: 8, plus: false }
+    }
+
+    /// The CLI label set (same vocabulary as [`Algo::parse`]), yielding
+    /// paper-default knobs for knobbed families.
+    pub fn parse(s: &str) -> Result<AlgoSpec> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "single" => AlgoSpec::Single,
+            "fedep" | "fede" => AlgoSpec::FedEP,
+            "fedepl" => AlgoSpec::FedEPL,
+            "feds" => AlgoSpec::feds(),
+            "feds-nosync" | "feds/syn" => {
+                AlgoSpec::FedS { sparsity: 0.4, sync_interval: 4, sync: false }
+            }
+            "fedkd" | "fede-kd" | "kd" => AlgoSpec::Kd,
+            "fedsvd" | "fede-svd" | "svd" => AlgoSpec::svd(),
+            "fedsvd+" | "fede-svd+" | "svd+" => AlgoSpec::Svd { cols: 8, plus: true },
+            other => bail!(
+                "unknown algorithm '{other}' \
+                 (single|fedep|fedepl|feds|feds-nosync|fedkd|fedsvd|fedsvd+)"
+            ),
+        })
+    }
+
+    /// The JSON `kind` tag.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            AlgoSpec::Single => "single",
+            AlgoSpec::FedEP => "fedep",
+            AlgoSpec::FedEPL => "fedepl",
+            AlgoSpec::FedS { .. } => "feds",
+            AlgoSpec::Kd => "kd",
+            AlgoSpec::Svd { .. } => "svd",
+        }
+    }
+
+    /// The resolved orchestrator algorithm.
+    pub fn algo(&self) -> Algo {
+        match self {
+            AlgoSpec::Single => Algo::Single,
+            AlgoSpec::FedEP => Algo::FedEP,
+            AlgoSpec::FedEPL => Algo::FedEPL,
+            AlgoSpec::FedS { sync, .. } => Algo::FedS { sync: *sync },
+            AlgoSpec::Kd => Algo::FedKd,
+            AlgoSpec::Svd { plus, .. } => Algo::FedSvd { constrained: *plus },
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        self.algo().label()
+    }
+
+    /// The deprecated flat form → scoped form (knobs lifted off the flat
+    /// config only where the algorithm actually reads them).
+    pub fn from_legacy(cfg: &FedRunConfig) -> AlgoSpec {
+        match cfg.algo {
+            Algo::Single => AlgoSpec::Single,
+            Algo::FedEP => AlgoSpec::FedEP,
+            Algo::FedEPL => AlgoSpec::FedEPL,
+            Algo::FedS { sync } => AlgoSpec::FedS {
+                sparsity: cfg.sparsity,
+                sync_interval: cfg.sync_interval,
+                sync,
+            },
+            Algo::FedKd => AlgoSpec::Kd,
+            Algo::FedSvd { constrained } => AlgoSpec::Svd { cols: cfg.svd_cols, plus: constrained },
+        }
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        match self {
+            AlgoSpec::FedS { sparsity, sync_interval, .. } => {
+                ensure!(
+                    sparsity.is_finite() && *sparsity > 0.0 && *sparsity <= 1.0,
+                    "algo.sparsity must lie in (0, 1], got {sparsity}"
+                );
+                ensure!(*sync_interval >= 1, "algo.sync_interval must be ≥ 1, got 0");
+            }
+            AlgoSpec::Svd { cols, .. } => {
+                ensure!(*cols >= 1, "algo.cols must be ≥ 1, got 0");
+            }
+            _ => {}
+        }
+        Ok(())
+    }
+
+    pub fn to_json(&self) -> Json {
+        let j = Json::obj().set("kind", self.kind());
+        match self {
+            AlgoSpec::FedS { sparsity, sync_interval, sync } => j
+                .set("sparsity", *sparsity)
+                .set("sync_interval", *sync_interval)
+                .set("sync", *sync),
+            AlgoSpec::Svd { cols, plus } => j.set("cols", *cols).set("plus", *plus),
+            _ => j,
+        }
+    }
+
+    /// Accepts either a bare label string (`"feds"`) or the tagged object
+    /// form.  Knobs on the object form are scoped: a knob on a variant
+    /// that does not own it is an error, not silently ignored.
+    pub fn from_json(v: &Json) -> Result<AlgoSpec> {
+        if let Some(label) = v.as_str() {
+            return AlgoSpec::parse(label);
+        }
+        let entries = v
+            .obj_entries()
+            .ok_or_else(|| anyhow::anyhow!("algo must be a label string or an object"))?;
+        let kind = v
+            .req("kind")?
+            .as_str()
+            .ok_or_else(|| anyhow::anyhow!("algo.kind must be a string"))?;
+        let allowed: &[&str] = match kind {
+            "feds" => &["kind", "sparsity", "sync_interval", "sync"],
+            "svd" => &["kind", "cols", "plus"],
+            "single" | "fedep" | "fedepl" | "kd" => &["kind"],
+            other => bail!("unknown algo kind '{other}' (single|fedep|fedepl|feds|kd|svd)"),
+        };
+        for (k, _) in entries {
+            ensure!(
+                allowed.contains(&k.as_str()),
+                "knob '{k}' does not belong to algo kind '{kind}' \
+                 (each variant carries only its own knobs)"
+            );
+        }
+        let spec = match kind {
+            "single" => AlgoSpec::Single,
+            "fedep" => AlgoSpec::FedEP,
+            "fedepl" => AlgoSpec::FedEPL,
+            "kd" => AlgoSpec::Kd,
+            "feds" => {
+                let AlgoSpec::FedS { sparsity, sync_interval, sync } = AlgoSpec::feds() else {
+                    unreachable!()
+                };
+                AlgoSpec::FedS {
+                    sparsity: opt_f64(v, "sparsity")?.unwrap_or(sparsity),
+                    sync_interval: opt_count(v, "sync_interval")?.unwrap_or(sync_interval),
+                    sync: opt_bool(v, "sync")?.unwrap_or(sync),
+                }
+            }
+            "svd" => AlgoSpec::Svd {
+                cols: opt_count(v, "cols")?.unwrap_or(8),
+                plus: opt_bool(v, "plus")?.unwrap_or(false),
+            },
+            _ => unreachable!(),
+        };
+        spec.validate()?;
+        Ok(spec)
+    }
+}
+
+/// The dataset of a run: synthetic-KG generation plus relation
+/// partitioning, deterministic in `seed`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct DataSpec {
+    pub entities: usize,
+    pub relations: usize,
+    pub triples: usize,
+    pub clusters: usize,
+    /// number of clients of the relation partition
+    pub clients: usize,
+    /// generation + partition seed
+    pub seed: u64,
+}
+
+impl DataSpec {
+    pub fn generator(&self) -> GeneratorConfig {
+        GeneratorConfig {
+            num_entities: self.entities,
+            num_relations: self.relations,
+            num_triples: self.triples,
+            num_clusters: self.clusters,
+            seed: self.seed,
+            ..Default::default()
+        }
+    }
+
+    /// Generate and partition the federated dataset.
+    pub fn build(&self) -> FedDataset {
+        partition(&generate(&self.generator()), self.clients, self.seed)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        ensure!(self.clients >= 2, "data.clients must be ≥ 2, got {}", self.clients);
+        ensure!(self.clusters >= 2, "data.clusters must be ≥ 2, got {}", self.clusters);
+        ensure!(
+            self.relations >= self.clients,
+            "data.relations ({}) must be ≥ data.clients ({}) for the relation partition",
+            self.relations,
+            self.clients
+        );
+        ensure!(
+            self.entities >= self.clusters * 4,
+            "data.entities ({}) must be ≥ 4 × data.clusters ({})",
+            self.entities,
+            self.clusters
+        );
+        ensure!(self.triples >= 1, "data.triples must be ≥ 1");
+        ensure!(
+            self.seed <= MAX_JSON_SEED,
+            "data.seed must be ≤ 2^53 (JSON numbers cannot represent it exactly)"
+        );
+        Ok(())
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("entities", self.entities)
+            .set("relations", self.relations)
+            .set("triples", self.triples)
+            .set("clusters", self.clusters)
+            .set("clients", self.clients)
+            .set("seed", self.seed)
+    }
+
+    pub fn from_json(v: &Json) -> Result<DataSpec> {
+        Ok(DataSpec {
+            entities: req_count(v, "entities")?,
+            relations: req_count(v, "relations")?,
+            triples: req_count(v, "triples")?,
+            clusters: opt_count(v, "clusters")?.unwrap_or(8),
+            clients: req_count(v, "clients")?,
+            seed: req_count(v, "seed")? as u64,
+        })
+    }
+}
+
+/// Where local training executes.
+#[derive(Clone, Debug, PartialEq)]
+pub enum BackendSpec {
+    /// AOT artifacts via PJRT ($FEDS_ARTIFACTS or ./artifacts).
+    Xla,
+    /// The pure-Rust engine (artifact-free).
+    Native {
+        dim: usize,
+        learning_rate: f32,
+        batch: usize,
+        negatives: usize,
+        eval_batch: usize,
+    },
+}
+
+impl BackendSpec {
+    /// The default native backend of fast sweeps and artifact-free tests
+    /// (mirrors `exp::native_backend`).
+    pub fn native_default() -> Self {
+        BackendSpec::Native {
+            dim: 32,
+            learning_rate: 3e-3,
+            batch: 128,
+            negatives: 32,
+            eval_batch: 64,
+        }
+    }
+
+    /// Describe a resolved backend (non-default `Hyper` fields beyond
+    /// `dim`/`learning_rate` are not representable and fall back to
+    /// defaults on rebuild).
+    pub fn of(backend: &crate::fed::Backend) -> Self {
+        match backend {
+            crate::fed::Backend::Xla(_) => BackendSpec::Xla,
+            crate::fed::Backend::Native { hyper, batch, negatives, eval_batch } => {
+                BackendSpec::Native {
+                    dim: hyper.dim,
+                    learning_rate: hyper.learning_rate,
+                    batch: *batch,
+                    negatives: *negatives,
+                    eval_batch: *eval_batch,
+                }
+            }
+        }
+    }
+
+    pub fn kind(&self) -> &'static str {
+        match self {
+            BackendSpec::Xla => "xla",
+            BackendSpec::Native { .. } => "native",
+        }
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if let BackendSpec::Native { dim, learning_rate, batch, negatives, eval_batch } = self {
+            ensure!(*dim >= 1, "backend.dim must be ≥ 1");
+            ensure!(
+                learning_rate.is_finite() && *learning_rate > 0.0,
+                "backend.learning_rate must be a positive number, got {learning_rate}"
+            );
+            ensure!(*batch >= 1, "backend.batch must be ≥ 1");
+            ensure!(*negatives >= 1, "backend.negatives must be ≥ 1");
+            ensure!(*eval_batch >= 1, "backend.eval_batch must be ≥ 1");
+        }
+        Ok(())
+    }
+
+    pub fn to_json(&self) -> Json {
+        match self {
+            BackendSpec::Xla => Json::obj().set("kind", "xla"),
+            BackendSpec::Native { dim, learning_rate, batch, negatives, eval_batch } => Json::obj()
+                .set("kind", "native")
+                .set("dim", *dim)
+                .set("learning_rate", *learning_rate)
+                .set("batch", *batch)
+                .set("negatives", *negatives)
+                .set("eval_batch", *eval_batch),
+        }
+    }
+
+    /// Accepts `"xla"`, `"native"` (defaults), or the tagged object form.
+    pub fn from_json(v: &Json) -> Result<BackendSpec> {
+        let kind = match v {
+            Json::Str(s) => s.as_str(),
+            Json::Obj(_) => v
+                .req("kind")?
+                .as_str()
+                .ok_or_else(|| anyhow::anyhow!("backend.kind must be a string"))?,
+            _ => bail!("backend must be a kind string or an object"),
+        };
+        match kind {
+            "xla" => Ok(BackendSpec::Xla),
+            "native" => {
+                let BackendSpec::Native { dim, learning_rate, batch, negatives, eval_batch } =
+                    BackendSpec::native_default()
+                else {
+                    unreachable!()
+                };
+                if v.as_str().is_some() {
+                    return Ok(BackendSpec::native_default());
+                }
+                Ok(BackendSpec::Native {
+                    dim: opt_count(v, "dim")?.unwrap_or(dim),
+                    learning_rate: opt_f64(v, "learning_rate")?
+                        .map(|x| x as f32)
+                        .unwrap_or(learning_rate),
+                    batch: opt_count(v, "batch")?.unwrap_or(batch),
+                    negatives: opt_count(v, "negatives")?.unwrap_or(negatives),
+                    eval_batch: opt_count(v, "eval_batch")?.unwrap_or(eval_batch),
+                })
+            }
+            other => bail!("unknown backend '{other}' (xla|native)"),
+        }
+    }
+}
+
+/// The training budget of a run (paper §IV-B defaults).
+#[derive(Clone, Debug, PartialEq)]
+pub struct BudgetSpec {
+    /// hard cap on communication rounds
+    pub max_rounds: usize,
+    /// local epochs per round (paper: 3)
+    pub local_epochs: usize,
+    /// evaluate every N rounds (paper: 5)
+    pub eval_every: usize,
+    /// early-stop patience in evaluations (paper: 3)
+    pub patience: usize,
+    /// cap on eval queries per client per split (0 = all)
+    pub eval_cap: usize,
+}
+
+impl Default for BudgetSpec {
+    fn default() -> Self {
+        Self { max_rounds: 200, local_epochs: 3, eval_every: 5, patience: 3, eval_cap: 0 }
+    }
+}
+
+impl BudgetSpec {
+    pub fn validate(&self) -> Result<()> {
+        ensure!(self.max_rounds >= 1, "budget.max_rounds must be ≥ 1");
+        ensure!(self.local_epochs >= 1, "budget.local_epochs must be ≥ 1");
+        ensure!(self.eval_every >= 1, "budget.eval_every must be ≥ 1");
+        ensure!(self.patience >= 1, "budget.patience must be ≥ 1");
+        ensure!(
+            self.eval_every <= self.max_rounds,
+            "budget.eval_every ({}) must be ≤ budget.max_rounds ({}) so the run is \
+             evaluated at least once",
+            self.eval_every,
+            self.max_rounds
+        );
+        Ok(())
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("max_rounds", self.max_rounds)
+            .set("local_epochs", self.local_epochs)
+            .set("eval_every", self.eval_every)
+            .set("patience", self.patience)
+            .set("eval_cap", self.eval_cap)
+    }
+
+    pub fn from_json(v: &Json) -> Result<BudgetSpec> {
+        let d = BudgetSpec::default();
+        Ok(BudgetSpec {
+            max_rounds: opt_count(v, "max_rounds")?.unwrap_or(d.max_rounds),
+            local_epochs: opt_count(v, "local_epochs")?.unwrap_or(d.local_epochs),
+            eval_every: opt_count(v, "eval_every")?.unwrap_or(d.eval_every),
+            patience: opt_count(v, "patience")?.unwrap_or(d.patience),
+            eval_cap: opt_count(v, "eval_cap")?.unwrap_or(d.eval_cap),
+        })
+    }
+}
+
+/// A fully serializable description of one federated run.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ExperimentSpec {
+    /// free-form run name (reports, logs); may be empty
+    pub name: String,
+    pub method: Method,
+    pub algo: AlgoSpec,
+    pub data: DataSpec,
+    pub backend: BackendSpec,
+    pub budget: BudgetSpec,
+    /// experiment seed (client RNG streams; independent of `data.seed`)
+    pub seed: u64,
+    pub exec: ExecMode,
+}
+
+impl ExperimentSpec {
+    pub fn validate(&self) -> Result<()> {
+        self.algo.validate()?;
+        self.data.validate()?;
+        self.backend.validate()?;
+        self.budget.validate()?;
+        if self.algo == AlgoSpec::Kd {
+            ensure!(
+                self.backend == BackendSpec::Xla,
+                "algo 'kd' requires the xla backend (co-distillation artifact)"
+            );
+        }
+        ensure!(
+            self.seed <= MAX_JSON_SEED,
+            "seed must be ≤ 2^53 (JSON numbers cannot represent it exactly)"
+        );
+        Ok(())
+    }
+
+    /// Resolve to the deprecated flat config the orchestrator internals
+    /// still consume.  Knobs a variant does not own take the legacy
+    /// defaults (so e.g. FedEPL's volume-matched dimension derives from
+    /// the paper-default p=0.4, s=4 — exactly the legacy behaviour).
+    pub fn run_config(&self) -> FedRunConfig {
+        let d = FedRunConfig::default();
+        let (sparsity, sync_interval, svd_cols) = match &self.algo {
+            AlgoSpec::FedS { sparsity, sync_interval, .. } => {
+                (*sparsity, *sync_interval, d.svd_cols)
+            }
+            AlgoSpec::Svd { cols, .. } => (d.sparsity, d.sync_interval, *cols),
+            _ => (d.sparsity, d.sync_interval, d.svd_cols),
+        };
+        FedRunConfig {
+            algo: self.algo.algo(),
+            method: self.method,
+            max_rounds: self.budget.max_rounds,
+            local_epochs: self.budget.local_epochs,
+            eval_every: self.budget.eval_every,
+            patience: self.budget.patience,
+            sparsity,
+            sync_interval,
+            eval_cap: self.budget.eval_cap,
+            seed: self.seed,
+            svd_cols,
+            exec: self.exec,
+        }
+    }
+
+    /// Lift a deprecated flat config into a spec (the shim direction for
+    /// callers migrating off `run_federated(FedRunConfig)`).
+    pub fn from_legacy(cfg: &FedRunConfig, data: DataSpec, backend: BackendSpec) -> Self {
+        Self {
+            name: String::new(),
+            method: cfg.method,
+            algo: AlgoSpec::from_legacy(cfg),
+            data,
+            backend,
+            budget: BudgetSpec {
+                max_rounds: cfg.max_rounds,
+                local_epochs: cfg.local_epochs,
+                eval_every: cfg.eval_every,
+                patience: cfg.patience,
+                eval_cap: cfg.eval_cap,
+            },
+            seed: cfg.seed,
+            exec: cfg.exec,
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        if !self.name.is_empty() {
+            j = j.set("name", self.name.as_str());
+        }
+        j.set("method", self.method.name())
+            .set("algo", self.algo.to_json())
+            .set("data", self.data.to_json())
+            .set("backend", self.backend.to_json())
+            .set("budget", self.budget.to_json())
+            .set("seed", self.seed)
+            .set("exec", self.exec.label())
+    }
+
+    pub fn from_json(v: &Json) -> Result<ExperimentSpec> {
+        let spec = ExperimentSpec {
+            name: v
+                .get("name")
+                .and_then(Json::as_str)
+                .unwrap_or("")
+                .to_string(),
+            method: Method::parse(
+                v.req("method")?
+                    .as_str()
+                    .ok_or_else(|| anyhow::anyhow!("method must be a string"))?,
+            )?,
+            algo: AlgoSpec::from_json(v.req("algo")?)?,
+            data: DataSpec::from_json(v.req("data")?)?,
+            backend: BackendSpec::from_json(v.req("backend")?)?,
+            budget: match v.get("budget") {
+                Some(b) => BudgetSpec::from_json(b)?,
+                None => BudgetSpec::default(),
+            },
+            seed: req_count(v, "seed")? as u64,
+            exec: match v.get("exec") {
+                Some(e) => ExecMode::parse(
+                    e.as_str().ok_or_else(|| anyhow::anyhow!("exec must be a string"))?,
+                )?,
+                None => ExecMode::Sequential,
+            },
+        };
+        spec.validate()?;
+        Ok(spec)
+    }
+
+    pub fn parse(text: &str) -> Result<ExperimentSpec> {
+        Self::from_json(&Json::parse(text)?)
+    }
+
+    /// Read and parse a spec file.
+    pub fn load(path: &std::path::Path) -> Result<ExperimentSpec> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("reading spec {}: {e}", path.display()))?;
+        Self::parse(&text).map_err(|e| anyhow::anyhow!("spec {}: {e}", path.display()))
+    }
+
+    /// Apply one dotted-key override.  Algorithm knobs are scoped: setting
+    /// `algo.sparsity` on a non-FedS spec is an error, as is a native
+    /// backend knob on the XLA backend.  Does not re-validate — call
+    /// [`ExperimentSpec::validate`] after the last override.
+    pub fn apply(&mut self, key: &str, value: &Json) -> Result<()> {
+        match key {
+            "name" => {
+                self.name = value
+                    .as_str()
+                    .ok_or_else(|| anyhow::anyhow!("name must be a string"))?
+                    .to_string();
+            }
+            "method" => {
+                self.method = Method::parse(
+                    value.as_str().ok_or_else(|| anyhow::anyhow!("method must be a string"))?,
+                )?;
+            }
+            "exec" => {
+                self.exec = ExecMode::parse(
+                    value.as_str().ok_or_else(|| anyhow::anyhow!("exec must be a string"))?,
+                )?;
+            }
+            "seed" => self.seed = count_of(value, key)? as u64,
+            "algo" => self.algo = AlgoSpec::from_json(value)?,
+            "algo.sparsity" => match &mut self.algo {
+                AlgoSpec::FedS { sparsity, .. } => *sparsity = f64_of(value, key)?,
+                other => bail!("algo.sparsity only applies to feds, not '{}'", other.kind()),
+            },
+            "algo.sync_interval" => match &mut self.algo {
+                AlgoSpec::FedS { sync_interval, .. } => *sync_interval = count_of(value, key)?,
+                other => bail!("algo.sync_interval only applies to feds, not '{}'", other.kind()),
+            },
+            "algo.sync" => match &mut self.algo {
+                AlgoSpec::FedS { sync, .. } => *sync = bool_of(value, key)?,
+                other => bail!("algo.sync only applies to feds, not '{}'", other.kind()),
+            },
+            "algo.cols" => match &mut self.algo {
+                AlgoSpec::Svd { cols, .. } => *cols = count_of(value, key)?,
+                other => bail!("algo.cols only applies to svd, not '{}'", other.kind()),
+            },
+            "algo.plus" => match &mut self.algo {
+                AlgoSpec::Svd { plus, .. } => *plus = bool_of(value, key)?,
+                other => bail!("algo.plus only applies to svd, not '{}'", other.kind()),
+            },
+            "data.entities" => self.data.entities = count_of(value, key)?,
+            "data.relations" => self.data.relations = count_of(value, key)?,
+            "data.triples" => self.data.triples = count_of(value, key)?,
+            "data.clusters" => self.data.clusters = count_of(value, key)?,
+            "data.clients" => self.data.clients = count_of(value, key)?,
+            "data.seed" => self.data.seed = count_of(value, key)? as u64,
+            "backend" => {
+                let new = BackendSpec::from_json(value)?;
+                // restating the current kind as a bare label ("--backend
+                // native" on an already-native spec) keeps the spec's
+                // knobs instead of resetting them to defaults
+                if value.as_str().is_none() || new.kind() != self.backend.kind() {
+                    self.backend = new;
+                }
+            }
+            "backend.dim" | "backend.learning_rate" | "backend.batch" | "backend.negatives"
+            | "backend.eval_batch" => match &mut self.backend {
+                BackendSpec::Native { dim, learning_rate, batch, negatives, eval_batch } => {
+                    match key {
+                        "backend.dim" => *dim = count_of(value, key)?,
+                        "backend.learning_rate" => *learning_rate = f64_of(value, key)? as f32,
+                        "backend.batch" => *batch = count_of(value, key)?,
+                        "backend.negatives" => *negatives = count_of(value, key)?,
+                        _ => *eval_batch = count_of(value, key)?,
+                    }
+                }
+                BackendSpec::Xla => {
+                    bail!("{key} only applies to the native backend (this spec uses xla)")
+                }
+            },
+            "budget.max_rounds" => self.budget.max_rounds = count_of(value, key)?,
+            "budget.local_epochs" => self.budget.local_epochs = count_of(value, key)?,
+            "budget.eval_every" => self.budget.eval_every = count_of(value, key)?,
+            "budget.patience" => self.budget.patience = count_of(value, key)?,
+            "budget.eval_cap" => self.budget.eval_cap = count_of(value, key)?,
+            other => bail!(
+                "unknown spec key '{other}' (see spec::ExperimentSpec::apply for the key set)"
+            ),
+        }
+        Ok(())
+    }
+
+    /// Apply an override whose value arrived as CLI text: numbers and
+    /// booleans are coerced, everything else stays a string.
+    pub fn apply_str(&mut self, key: &str, raw: &str) -> Result<()> {
+        let value = match raw {
+            "true" => Json::Bool(true),
+            "false" => Json::Bool(false),
+            _ => match raw.parse::<f64>() {
+                Ok(n) => Json::Num(n),
+                Err(_) => Json::Str(raw.to_string()),
+            },
+        };
+        self.apply(key, &value)
+            .map_err(|e| anyhow::anyhow!("override --{}={raw}: {e}", key))
+    }
+}
+
+// --- json field helpers ----------------------------------------------------
+
+fn f64_of(v: &Json, key: &str) -> Result<f64> {
+    v.as_f64().ok_or_else(|| anyhow::anyhow!("{key} must be a number"))
+}
+
+fn bool_of(v: &Json, key: &str) -> Result<bool> {
+    v.as_bool().ok_or_else(|| anyhow::anyhow!("{key} must be true or false"))
+}
+
+/// A non-negative integer (rejects fractional and negative numbers).
+fn count_of(v: &Json, key: &str) -> Result<usize> {
+    let n = f64_of(v, key)?;
+    ensure!(
+        n.is_finite() && n >= 0.0 && n.fract() == 0.0,
+        "{key} must be a non-negative integer, got {n}"
+    );
+    Ok(n as usize)
+}
+
+fn req_count(v: &Json, key: &str) -> Result<usize> {
+    count_of(v.req(key)?, key)
+}
+
+fn opt_count(v: &Json, key: &str) -> Result<Option<usize>> {
+    v.get(key).map(|x| count_of(x, key)).transpose()
+}
+
+fn opt_f64(v: &Json, key: &str) -> Result<Option<f64>> {
+    v.get(key).map(|x| f64_of(x, key)).transpose()
+}
+
+fn opt_bool(v: &Json, key: &str) -> Result<Option<bool>> {
+    v.get(key).map(|x| bool_of(x, key)).transpose()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_spec() -> ExperimentSpec {
+        ExperimentSpec {
+            name: "tiny".into(),
+            method: Method::TransE,
+            algo: AlgoSpec::feds(),
+            data: DataSpec {
+                entities: 192,
+                relations: 12,
+                triples: 2400,
+                clusters: 4,
+                clients: 3,
+                seed: 7,
+            },
+            backend: BackendSpec::Native {
+                dim: 16,
+                learning_rate: 5e-3,
+                batch: 64,
+                negatives: 16,
+                eval_batch: 32,
+            },
+            budget: BudgetSpec {
+                max_rounds: 6,
+                local_epochs: 1,
+                eval_every: 2,
+                patience: 3,
+                eval_cap: 64,
+            },
+            seed: 7,
+            exec: ExecMode::Sequential,
+        }
+    }
+
+    #[test]
+    fn round_trips_through_json() {
+        let spec = tiny_spec();
+        let rt = ExperimentSpec::parse(&spec.to_json().to_string_pretty()).unwrap();
+        assert_eq!(spec, rt);
+        let rt2 = ExperimentSpec::parse(&spec.to_json().to_string()).unwrap();
+        assert_eq!(spec, rt2);
+    }
+
+    #[test]
+    fn algo_labels_parse_to_default_knobs() {
+        assert_eq!(AlgoSpec::parse("feds").unwrap(), AlgoSpec::feds());
+        assert_eq!(
+            AlgoSpec::parse("feds-nosync").unwrap(),
+            AlgoSpec::FedS { sparsity: 0.4, sync_interval: 4, sync: false }
+        );
+        assert_eq!(AlgoSpec::parse("fedsvd+").unwrap(), AlgoSpec::Svd { cols: 8, plus: true });
+        assert_eq!(AlgoSpec::parse("fedep").unwrap(), AlgoSpec::FedEP);
+        assert!(AlgoSpec::parse("bogus").is_err());
+    }
+
+    #[test]
+    fn scoped_knobs_reject_wrong_family() {
+        let mut spec = tiny_spec();
+        spec.algo = AlgoSpec::FedEP;
+        assert!(spec.apply("algo.sparsity", &Json::Num(0.5)).is_err());
+        assert!(spec.apply("algo.cols", &Json::Num(4.0)).is_err());
+        spec.algo = AlgoSpec::feds();
+        spec.apply("algo.sparsity", &Json::Num(0.5)).unwrap();
+        assert_eq!(spec.algo, AlgoSpec::FedS { sparsity: 0.5, sync_interval: 4, sync: true });
+    }
+
+    #[test]
+    fn unknown_algo_knob_rejected_in_json() {
+        // sparsity is not a fedep knob: scoped configs make this a hard error
+        let j = Json::parse(r#"{"kind": "fedep", "sparsity": 0.4}"#).unwrap();
+        assert!(AlgoSpec::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn out_of_range_knobs_rejected() {
+        for bad in [0.0, -0.2, 1.5, f64::NAN] {
+            let a = AlgoSpec::FedS { sparsity: bad, sync_interval: 4, sync: true };
+            assert!(a.validate().is_err(), "sparsity {bad} must be rejected");
+        }
+        let a = AlgoSpec::FedS { sparsity: 0.4, sync_interval: 0, sync: true };
+        assert!(a.validate().is_err(), "sync_interval 0 must be rejected");
+        let a = AlgoSpec::Svd { cols: 0, plus: false };
+        assert!(a.validate().is_err(), "svd cols 0 must be rejected");
+    }
+
+    #[test]
+    fn run_config_resolves_scoped_knobs() {
+        let mut spec = tiny_spec();
+        spec.algo = AlgoSpec::FedS { sparsity: 0.7, sync_interval: 2, sync: false };
+        let cfg = spec.run_config();
+        assert_eq!(cfg.algo, Algo::FedS { sync: false });
+        assert_eq!(cfg.sparsity, 0.7);
+        assert_eq!(cfg.sync_interval, 2);
+        assert_eq!(cfg.svd_cols, FedRunConfig::default().svd_cols);
+
+        spec.algo = AlgoSpec::Svd { cols: 4, plus: true };
+        let cfg = spec.run_config();
+        assert_eq!(cfg.algo, Algo::FedSvd { constrained: true });
+        assert_eq!(cfg.svd_cols, 4);
+        assert_eq!(cfg.sparsity, FedRunConfig::default().sparsity);
+    }
+
+    #[test]
+    fn legacy_round_trip() {
+        let spec = tiny_spec();
+        let cfg = spec.run_config();
+        let back = ExperimentSpec::from_legacy(&cfg, spec.data.clone(), spec.backend.clone());
+        assert_eq!(back.algo, spec.algo);
+        assert_eq!(back.budget, spec.budget);
+        assert_eq!(back.method, spec.method);
+        assert_eq!(back.seed, spec.seed);
+    }
+
+    #[test]
+    fn overrides_cover_every_section() {
+        let mut spec = tiny_spec();
+        spec.apply("method", &Json::from("rotate")).unwrap();
+        spec.apply("data.clients", &Json::from(5usize)).unwrap();
+        spec.apply("budget.max_rounds", &Json::from(9usize)).unwrap();
+        spec.apply("backend.batch", &Json::from(32usize)).unwrap();
+        spec.apply("algo", &Json::from("fedep")).unwrap();
+        spec.apply("exec", &Json::from("threaded")).unwrap();
+        assert_eq!(spec.method, Method::RotatE);
+        assert_eq!(spec.data.clients, 5);
+        assert_eq!(spec.budget.max_rounds, 9);
+        assert_eq!(spec.algo, AlgoSpec::FedEP);
+        assert_eq!(spec.exec, ExecMode::Threaded);
+        assert!(spec.apply("nope.key", &Json::Null).is_err());
+        // fractional counts are rejected, not truncated
+        assert!(spec.apply("data.clients", &Json::Num(2.5)).is_err());
+        // restating the current backend kind as a label keeps its knobs
+        let before = spec.backend.clone();
+        spec.apply("backend", &Json::from("native")).unwrap();
+        assert_eq!(spec.backend, before, "--backend native must not reset native knobs");
+        spec.apply("backend", &Json::from("xla")).unwrap();
+        assert_eq!(spec.backend, BackendSpec::Xla, "kind changes still switch backends");
+    }
+
+    #[test]
+    fn kd_requires_xla() {
+        let mut spec = tiny_spec();
+        spec.algo = AlgoSpec::Kd;
+        assert!(spec.validate().is_err());
+        spec.backend = BackendSpec::Xla;
+        spec.validate().unwrap();
+    }
+}

@@ -1,0 +1,144 @@
+//! Sessions turn [`ExperimentSpec`]s into executable [`Run`] handles.
+//!
+//! A [`Session`] owns the expensive shared resources (today: the PJRT
+//! runtime, loaded once and reused across builds — a sweep builds many
+//! runs from one session).  A [`Run`] owns everything one experiment
+//! needs — the generated dataset, the resolved backend and the registered
+//! [`RunObserver`]s — and executes the same engine the deprecated
+//! `run_federated(FedRunConfig)` path drives, so outcomes are
+//! byte-identical in accounting and bit-identical in metric history
+//! between the two APIs.
+
+use std::rc::Rc;
+
+use anyhow::Result;
+
+use crate::data::partition::FedDataset;
+use crate::fed::orchestrator::run_with_observers;
+use crate::fed::{Backend, FedRunConfig, RunOutcome};
+use crate::kge::Hyper;
+use crate::metrics::observe::{ConsoleObserver, RunObserver};
+use crate::runtime::Runtime;
+
+use super::{BackendSpec, ExperimentSpec};
+
+/// Builds runs from specs, caching the PJRT runtime across builds.
+#[derive(Default)]
+pub struct Session {
+    xla: Option<Rc<Runtime>>,
+}
+
+impl Session {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Seed the session with an already-loaded runtime (e.g. the
+    /// experiment harness's).
+    pub fn with_runtime(rt: Rc<Runtime>) -> Self {
+        Self { xla: Some(rt) }
+    }
+
+    /// Validate `spec`, resolve its backend, generate its dataset and
+    /// return the run handle.  Building is deterministic: the same spec
+    /// always yields the same dataset and initial state.
+    pub fn build(&mut self, spec: &ExperimentSpec) -> Result<Run> {
+        spec.validate()?;
+        let backend = match &spec.backend {
+            BackendSpec::Xla => {
+                let rt = match &self.xla {
+                    Some(rt) => rt.clone(),
+                    None => {
+                        let rt = Runtime::load_default()?;
+                        self.xla = Some(rt.clone());
+                        rt
+                    }
+                };
+                Backend::Xla(rt)
+            }
+            BackendSpec::Native { dim, learning_rate, batch, negatives, eval_batch } => {
+                Backend::Native {
+                    hyper: Hyper {
+                        dim: *dim,
+                        learning_rate: *learning_rate,
+                        ..Default::default()
+                    },
+                    batch: *batch,
+                    negatives: *negatives,
+                    eval_batch: *eval_batch,
+                }
+            }
+        };
+        let data = spec.data.build();
+        Ok(Run {
+            cfg: spec.run_config(),
+            spec: spec.clone(),
+            data,
+            backend,
+            observers: Vec::new(),
+            console: true,
+        })
+    }
+}
+
+/// One executable experiment: dataset + backend + observers.
+pub struct Run {
+    spec: ExperimentSpec,
+    cfg: FedRunConfig,
+    data: FedDataset,
+    backend: Backend,
+    observers: Vec<Box<dyn RunObserver>>,
+    console: bool,
+}
+
+impl Run {
+    /// Register an observer; events arrive in registration order.
+    pub fn observe(&mut self, o: Box<dyn RunObserver>) -> &mut Self {
+        self.observers.push(o);
+        self
+    }
+
+    /// Drop the default console-progress observer.
+    pub fn quiet(&mut self) -> &mut Self {
+        self.console = false;
+        self
+    }
+
+    pub fn spec(&self) -> &ExperimentSpec {
+        &self.spec
+    }
+
+    /// The generated federated dataset (inspect before executing).
+    pub fn data(&self) -> &FedDataset {
+        &self.data
+    }
+
+    /// The resolved (deprecated-flat) config this run will execute.
+    pub fn config(&self) -> &FedRunConfig {
+        &self.cfg
+    }
+
+    /// Execute the round loop, streaming events to the registered
+    /// observers, and return the observer-assembled outcome.
+    pub fn execute(&mut self) -> Result<RunOutcome> {
+        self.execute_with(&mut [])
+    }
+
+    /// Execute with additional borrowed observers (a sweep shares one
+    /// JSONL sink across its runs this way).
+    pub fn execute_with(&mut self, extra: &mut [&mut dyn RunObserver]) -> Result<RunOutcome> {
+        let mut console = self.console.then(ConsoleObserver::new);
+        let mut refs: Vec<&mut dyn RunObserver> =
+            Vec::with_capacity(1 + self.observers.len() + extra.len());
+        if let Some(c) = console.as_mut() {
+            refs.push(c);
+        }
+        for o in self.observers.iter_mut() {
+            refs.push(o.as_mut());
+        }
+        for o in extra.iter_mut() {
+            refs.push(&mut **o);
+        }
+        run_with_observers(&self.data, &self.cfg, &self.backend, &mut refs)
+    }
+}

@@ -1,9 +1,13 @@
 //! Tiny declarative CLI parser (clap is unavailable offline; DESIGN.md §5).
 //!
 //! Supports `--key value`, `--key=value`, boolean `--flag`, positional args
-//! and auto-generated `--help`.
+//! and auto-generated `--help`.  Parsing and value access are `Result`-based
+//! throughout: malformed values and undeclared keys surface as usage errors
+//! (carrying the relevant `--help` text) instead of panicking, so `main.rs`
+//! can turn them into exit-code-2 failures.
 
 use std::collections::BTreeMap;
+use std::fmt;
 
 #[derive(Clone, Debug)]
 pub struct ArgSpec {
@@ -20,11 +24,35 @@ pub struct Cli {
     specs: Vec<ArgSpec>,
 }
 
+/// How a parse can end without matches: the user asked for help, or the
+/// arguments were unusable.  Both carry the text to show.
+#[derive(Debug, Clone)]
+pub enum CliError {
+    /// `--help`/`-h`: print to stdout and exit 0.
+    Help(String),
+    /// Bad arguments: print to stderr and exit 2.
+    Usage(String),
+}
+
+impl fmt::Display for CliError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            CliError::Help(s) | CliError::Usage(s) => f.write_str(s),
+        }
+    }
+}
+
+impl std::error::Error for CliError {}
+
 #[derive(Debug, Clone)]
 pub struct Matches {
     values: BTreeMap<String, String>,
     flags: Vec<String>,
+    /// option keys the user actually passed (not defaults) — lets callers
+    /// treat present flags as overrides
+    explicit_keys: Vec<String>,
     pub positional: Vec<String>,
+    usage: String,
 }
 
 impl Cli {
@@ -60,11 +88,17 @@ impl Cli {
         s
     }
 
-    pub fn parse(&self, args: &[String]) -> Result<Matches, String> {
+    fn usage_err(&self, msg: String) -> CliError {
+        CliError::Usage(format!("{msg}\n\n{}", self.usage()))
+    }
+
+    pub fn parse(&self, args: &[String]) -> Result<Matches, CliError> {
         let mut m = Matches {
             values: BTreeMap::new(),
             flags: Vec::new(),
+            explicit_keys: Vec::new(),
             positional: Vec::new(),
+            usage: self.usage(),
         };
         for spec in &self.specs {
             if let Some(d) = &spec.default {
@@ -75,7 +109,7 @@ impl Cli {
         while i < args.len() {
             let a = &args[i];
             if a == "--help" || a == "-h" {
-                return Err(self.usage());
+                return Err(CliError::Help(self.usage()));
             }
             if let Some(stripped) = a.strip_prefix("--") {
                 let (key, inline) = match stripped.split_once('=') {
@@ -86,12 +120,12 @@ impl Cli {
                     .specs
                     .iter()
                     .find(|s| s.name == key)
-                    .ok_or_else(|| format!("unknown option --{key}\n\n{}", self.usage()))?;
+                    .ok_or_else(|| self.usage_err(format!("unknown option --{key}")))?;
                 if spec.is_flag {
                     if inline.is_some() {
-                        return Err(format!("--{key} is a flag and takes no value"));
+                        return Err(self.usage_err(format!("--{key} is a flag and takes no value")));
                     }
-                    m.flags.push(key);
+                    m.flags.push(key.clone());
                 } else {
                     let v = match inline {
                         Some(v) => v,
@@ -99,11 +133,12 @@ impl Cli {
                             i += 1;
                             args.get(i)
                                 .cloned()
-                                .ok_or_else(|| format!("--{key} requires a value"))?
+                                .ok_or_else(|| self.usage_err(format!("--{key} requires a value")))?
                         }
                     };
-                    m.values.insert(key, v);
+                    m.values.insert(key.clone(), v);
                 }
+                m.explicit_keys.push(key);
             } else {
                 m.positional.push(a.clone());
             }
@@ -114,37 +149,52 @@ impl Cli {
 }
 
 impl Matches {
-    pub fn get(&self, key: &str) -> &str {
+    fn usage_err(&self, msg: String) -> String {
+        format!("{msg}\n\n{}", self.usage)
+    }
+
+    /// The value of a declared option (its default when not passed).
+    pub fn get(&self, key: &str) -> Result<&str, String> {
         self.values
             .get(key)
             .map(|s| s.as_str())
-            .unwrap_or_else(|| panic!("option --{key} was not declared"))
+            .ok_or_else(|| self.usage_err(format!("option --{key} was not declared")))
     }
 
-    pub fn usize(&self, key: &str) -> usize {
-        self.get(key)
-            .parse()
-            .unwrap_or_else(|_| panic!("--{key} expects an integer, got '{}'", self.get(key)))
+    pub fn usize(&self, key: &str) -> Result<usize, String> {
+        let v = self.get(key)?;
+        v.parse()
+            .map_err(|_| self.usage_err(format!("--{key} expects an integer, got '{v}'")))
     }
 
-    pub fn u64(&self, key: &str) -> u64 {
-        self.get(key)
-            .parse()
-            .unwrap_or_else(|_| panic!("--{key} expects an integer, got '{}'", self.get(key)))
+    pub fn u64(&self, key: &str) -> Result<u64, String> {
+        let v = self.get(key)?;
+        v.parse()
+            .map_err(|_| self.usage_err(format!("--{key} expects an integer, got '{v}'")))
     }
 
-    pub fn f64(&self, key: &str) -> f64 {
-        self.get(key)
-            .parse()
-            .unwrap_or_else(|_| panic!("--{key} expects a number, got '{}'", self.get(key)))
+    pub fn f64(&self, key: &str) -> Result<f64, String> {
+        let v = self.get(key)?;
+        v.parse()
+            .map_err(|_| self.usage_err(format!("--{key} expects a number, got '{v}'")))
     }
 
-    pub fn f32(&self, key: &str) -> f32 {
-        self.f64(key) as f32
+    pub fn f32(&self, key: &str) -> Result<f32, String> {
+        self.f64(key).map(|v| v as f32)
     }
 
     pub fn flag(&self, key: &str) -> bool {
         self.flags.iter().any(|f| f == key)
+    }
+
+    /// The value of `key` only if the user passed it explicitly (spec-file
+    /// override semantics: defaults don't clobber the spec).
+    pub fn explicit(&self, key: &str) -> Option<&str> {
+        if self.explicit_keys.iter().any(|k| k == key) {
+            self.values.get(key).map(|s| s.as_str())
+        } else {
+            None
+        }
     }
 }
 
@@ -166,9 +216,10 @@ mod tests {
     #[test]
     fn defaults_apply() {
         let m = cli().parse(&args(&[])).unwrap();
-        assert_eq!(m.usize("rounds"), 100);
-        assert_eq!(m.get("method"), "transe");
+        assert_eq!(m.usize("rounds").unwrap(), 100);
+        assert_eq!(m.get("method").unwrap(), "transe");
         assert!(!m.flag("verbose"));
+        assert!(m.explicit("rounds").is_none(), "defaults are not explicit");
     }
 
     #[test]
@@ -176,25 +227,47 @@ mod tests {
         let m = cli()
             .parse(&args(&["--rounds", "5", "--verbose", "--method=rotate", "pos1"]))
             .unwrap();
-        assert_eq!(m.usize("rounds"), 5);
-        assert_eq!(m.get("method"), "rotate");
+        assert_eq!(m.usize("rounds").unwrap(), 5);
+        assert_eq!(m.get("method").unwrap(), "rotate");
         assert!(m.flag("verbose"));
         assert_eq!(m.positional, vec!["pos1"]);
+        assert_eq!(m.explicit("rounds"), Some("5"));
+        assert_eq!(m.explicit("method"), Some("rotate"));
     }
 
     #[test]
     fn unknown_option_errors() {
-        assert!(cli().parse(&args(&["--nope", "1"])).is_err());
+        assert!(matches!(
+            cli().parse(&args(&["--nope", "1"])),
+            Err(CliError::Usage(_))
+        ));
     }
 
     #[test]
     fn missing_value_errors() {
-        assert!(cli().parse(&args(&["--rounds"])).is_err());
+        assert!(matches!(cli().parse(&args(&["--rounds"])), Err(CliError::Usage(_))));
     }
 
     #[test]
     fn help_returns_usage() {
-        let err = cli().parse(&args(&["--help"])).unwrap_err();
-        assert!(err.contains("--rounds"));
+        let Err(CliError::Help(text)) = cli().parse(&args(&["--help"])) else {
+            panic!("--help must yield CliError::Help");
+        };
+        assert!(text.contains("--rounds"));
+    }
+
+    #[test]
+    fn malformed_value_is_usage_error_not_panic() {
+        let m = cli().parse(&args(&["--rounds", "abc"])).unwrap();
+        let err = m.usize("rounds").unwrap_err();
+        assert!(err.contains("expects an integer"), "{err}");
+        assert!(err.contains("--rounds"), "error carries the usage text: {err}");
+    }
+
+    #[test]
+    fn undeclared_key_is_usage_error_not_panic() {
+        let m = cli().parse(&args(&[])).unwrap();
+        assert!(m.get("nope").is_err());
+        assert!(m.usize("nope").is_err());
     }
 }

@@ -1,0 +1,189 @@
+//! The API-redesign correctness bar: a run driven through the
+//! `spec::Session` observer pipeline must yield **byte-identical**
+//! communication accounting and **bit-identical** round history to the
+//! legacy `run_federated(FedRunConfig)` path, for every algorithm and both
+//! execution modes, and a sweep-grid cell must equal the same run driven
+//! directly.
+
+use feds::comm::accounting::Direction;
+use feds::exp::sweep::{run_sweep, SweepSpec};
+use feds::fed::{run_federated, Backend, ExecMode, RunOutcome};
+use feds::kge::{Hyper, Method};
+use feds::metrics::observe::JsonlSink;
+use feds::spec::{AlgoSpec, BackendSpec, BudgetSpec, DataSpec, ExperimentSpec, Session};
+use feds::util::json::Json;
+
+fn tiny_spec(algo: AlgoSpec, exec: ExecMode) -> ExperimentSpec {
+    ExperimentSpec {
+        name: String::new(),
+        method: Method::TransE,
+        algo,
+        data: DataSpec {
+            entities: 192,
+            relations: 12,
+            triples: 2400,
+            clusters: 4,
+            clients: 3,
+            seed: 11,
+        },
+        backend: BackendSpec::Native {
+            dim: 16,
+            learning_rate: 5e-3,
+            batch: 64,
+            negatives: 16,
+            eval_batch: 32,
+        },
+        budget: BudgetSpec {
+            max_rounds: 6,
+            local_epochs: 1,
+            eval_every: 2,
+            patience: 3,
+            eval_cap: 64,
+        },
+        seed: 7,
+        exec,
+    }
+}
+
+/// The legacy-path run for `spec`: same dataset, same resolved flat
+/// config, same backend — through `run_federated`.
+fn legacy_run(spec: &ExperimentSpec) -> RunOutcome {
+    let data = spec.data.build();
+    let BackendSpec::Native { dim, learning_rate, batch, negatives, eval_batch } = &spec.backend
+    else {
+        panic!("equivalence tests run on the native backend");
+    };
+    let backend = Backend::Native {
+        hyper: Hyper { dim: *dim, learning_rate: *learning_rate, ..Default::default() },
+        batch: *batch,
+        negatives: *negatives,
+        eval_batch: *eval_batch,
+    };
+    run_federated(&data, &spec.run_config(), &backend).unwrap()
+}
+
+fn assert_equivalent(tag: &str, legacy: &RunOutcome, session: &RunOutcome) {
+    for dir in [Direction::Upload, Direction::Download] {
+        assert_eq!(
+            legacy.acct.params_dir(dir),
+            session.acct.params_dir(dir),
+            "{tag}: params {dir:?}"
+        );
+        assert_eq!(
+            legacy.acct.bytes_dir(dir),
+            session.acct.bytes_dir(dir),
+            "{tag}: bytes {dir:?}"
+        );
+    }
+    assert_eq!(legacy.acct.messages(), session.acct.messages(), "{tag}: messages");
+    assert_eq!(legacy.eq5_ratio, session.eq5_ratio, "{tag}: eq5");
+    let (a, b) = (&legacy.history.records, &session.history.records);
+    assert_eq!(a.len(), b.len(), "{tag}: record count");
+    assert_eq!(
+        legacy.history.converged_idx, session.history.converged_idx,
+        "{tag}: convergence index"
+    );
+    assert_eq!(legacy.history.label, session.history.label, "{tag}: label");
+    for (x, y) in a.iter().zip(b.iter()) {
+        assert_eq!(x.round, y.round, "{tag}");
+        assert_eq!(x.params_cum, y.params_cum, "{tag}: params@{}", x.round);
+        assert_eq!(x.bytes_cum, y.bytes_cum, "{tag}: bytes@{}", x.round);
+        assert_eq!(x.mean_loss.to_bits(), y.mean_loss.to_bits(), "{tag}: loss@{}", x.round);
+        assert_eq!(x.valid.mrr.to_bits(), y.valid.mrr.to_bits(), "{tag}: valid MRR@{}", x.round);
+        assert_eq!(x.test.mrr.to_bits(), y.test.mrr.to_bits(), "{tag}: test MRR@{}", x.round);
+        assert_eq!(
+            x.test.hits10.to_bits(),
+            y.test.hits10.to_bits(),
+            "{tag}: hits@10 @{}",
+            x.round
+        );
+    }
+}
+
+/// Every algorithm × both exec modes: Session == legacy, byte for byte.
+#[test]
+fn session_matches_legacy_for_every_algo_and_exec_mode() {
+    let algos = [
+        AlgoSpec::Single,
+        AlgoSpec::FedEP,
+        AlgoSpec::FedEPL,
+        AlgoSpec::FedS { sparsity: 0.4, sync_interval: 4, sync: true },
+        AlgoSpec::FedS { sparsity: 0.4, sync_interval: 4, sync: false },
+        AlgoSpec::Svd { cols: 8, plus: false },
+        AlgoSpec::Svd { cols: 8, plus: true },
+    ];
+    let mut session = Session::new();
+    for algo in algos {
+        for exec in [ExecMode::Sequential, ExecMode::Threaded] {
+            let spec = tiny_spec(algo.clone(), exec);
+            let legacy = legacy_run(&spec);
+            let mut run = session.build(&spec).unwrap();
+            run.quiet();
+            let out = run.execute().unwrap();
+            assert_equivalent(&format!("{algo:?}/{exec:?}"), &legacy, &out);
+        }
+    }
+}
+
+/// A table4-shaped sweep grid (FedEP / FedEPL / FedS over one dataset)
+/// equals the same three runs driven directly through the legacy path.
+#[test]
+fn sweep_grid_matches_direct_runs() {
+    let base = tiny_spec(AlgoSpec::FedEP, ExecMode::Sequential);
+    let sweep = SweepSpec::new("mini_table4", base.clone()).axis(
+        "algo",
+        vec![Json::from("fedep"), Json::from("fedepl"), Json::from("feds")],
+    );
+    let mut session = Session::new();
+    let grid = run_sweep(&mut session, &sweep, &mut []).unwrap();
+    assert_eq!(grid.cells.len(), 3);
+
+    for (i, label) in ["fedep", "fedepl", "feds"].iter().enumerate() {
+        let mut spec = base.clone();
+        spec.apply("algo", &Json::from(*label)).unwrap();
+        let legacy = legacy_run(&spec);
+        assert_equivalent(&format!("sweep cell {label}"), &legacy, &grid.at(&[i]).outcome);
+        assert_eq!(grid.at(&[i]).spec.algo, AlgoSpec::parse(label).unwrap());
+    }
+    // lookup by override value finds the same cell
+    let found = grid.find(&[("algo", &Json::from("feds"))]).unwrap();
+    assert_eq!(found.spec.algo, AlgoSpec::feds());
+}
+
+/// The sweep's JSONL stream is non-empty, line-parseable, and carries one
+/// evaluated line per history record.
+#[test]
+fn sweep_jsonl_stream_matches_histories() {
+    let base = tiny_spec(AlgoSpec::FedEP, ExecMode::Sequential);
+    let sweep = SweepSpec::new("jsonl_smoke", base).axis(
+        "algo",
+        vec![Json::from("fedep"), Json::from("feds")],
+    );
+    let dir = std::env::temp_dir().join("feds_jsonl_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("stream.jsonl");
+    let mut session = Session::new();
+    let grid = {
+        let mut sink = JsonlSink::create(&path).unwrap();
+        run_sweep(&mut session, &sweep, &mut [&mut sink]).unwrap()
+    };
+    let text = std::fs::read_to_string(&path).unwrap();
+    assert!(!text.trim().is_empty(), "stream must be non-empty");
+    let mut starts = 0usize;
+    let mut evaluated = 0usize;
+    let mut ends = 0usize;
+    for line in text.lines() {
+        let j = Json::parse(line).expect("every line is one JSON object");
+        match j.get("event").and_then(Json::as_str) {
+            Some("run_start") => starts += 1,
+            Some("evaluated") => evaluated += 1,
+            Some("run_end") => ends += 1,
+            Some(_) => {}
+            None => panic!("event tag missing: {line}"),
+        }
+    }
+    assert_eq!(starts, 2, "one run_start per cell");
+    assert_eq!(ends, 2, "one run_end per cell");
+    let records: usize = grid.cells.iter().map(|c| c.outcome.history.records.len()).sum();
+    assert_eq!(evaluated, records, "one evaluated event per history record");
+}

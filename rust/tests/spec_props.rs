@@ -1,0 +1,184 @@
+//! Property tests for the declarative experiment API: `ExperimentSpec` →
+//! JSON → `ExperimentSpec` round-trips exactly for every `AlgoSpec`
+//! variant, and out-of-range knobs are rejected at validation.
+
+use feds::fed::ExecMode;
+use feds::kge::Method;
+use feds::spec::{AlgoSpec, BackendSpec, BudgetSpec, DataSpec, ExperimentSpec};
+use feds::util::json::Json;
+use feds::util::prop;
+use feds::util::rng::Rng;
+
+fn random_algo(rng: &mut Rng) -> AlgoSpec {
+    match rng.usize_below(8) {
+        0 => AlgoSpec::Single,
+        1 => AlgoSpec::FedEP,
+        2 => AlgoSpec::FedEPL,
+        3 => AlgoSpec::Kd,
+        4 => AlgoSpec::Svd { cols: 1 + rng.usize_below(16), plus: false },
+        5 => AlgoSpec::Svd { cols: 1 + rng.usize_below(16), plus: true },
+        6 => AlgoSpec::FedS {
+            // (0, 1]: from 0.001 up to exactly 1.0
+            sparsity: (1 + rng.usize_below(1000)) as f64 / 1000.0,
+            sync_interval: 1 + rng.usize_below(12),
+            sync: true,
+        },
+        _ => AlgoSpec::FedS {
+            sparsity: rng.f64().max(1e-6),
+            sync_interval: 1 + rng.usize_below(12),
+            sync: false,
+        },
+    }
+}
+
+fn random_spec(rng: &mut Rng) -> ExperimentSpec {
+    let clusters = 2 + rng.usize_below(6);
+    let clients = 2 + rng.usize_below(8);
+    let algo = random_algo(rng);
+    let backend = if algo == AlgoSpec::Kd || rng.bool(0.3) {
+        BackendSpec::Xla
+    } else {
+        BackendSpec::Native {
+            dim: 1 + rng.usize_below(64),
+            learning_rate: rng.uniform(1e-4, 1e-1),
+            batch: 1 + rng.usize_below(256),
+            negatives: 1 + rng.usize_below(64),
+            eval_batch: 1 + rng.usize_below(128),
+        }
+    };
+    ExperimentSpec {
+        name: if rng.bool(0.5) { format!("spec-{}", rng.below(1000)) } else { String::new() },
+        method: *rng.choose(&Method::ALL),
+        algo,
+        data: DataSpec {
+            entities: clusters * 4 + rng.usize_below(2048),
+            relations: clients + rng.usize_below(32),
+            triples: 1 + rng.usize_below(50_000),
+            clusters,
+            clients,
+            seed: rng.next_u64() >> 12,
+        },
+        backend,
+        budget: {
+            let max_rounds = 1 + rng.usize_below(300);
+            BudgetSpec {
+                max_rounds,
+                local_epochs: 1 + rng.usize_below(5),
+                // at least one evaluation must fit the budget
+                eval_every: 1 + rng.usize_below(max_rounds.min(10)),
+                patience: 1 + rng.usize_below(5),
+                eval_cap: rng.usize_below(1000),
+            }
+        },
+        seed: rng.next_u64() >> 12,
+        exec: if rng.bool(0.5) { ExecMode::Sequential } else { ExecMode::Threaded },
+    }
+}
+
+#[test]
+fn spec_round_trips_exactly_for_all_variants() {
+    prop::check("spec_json_round_trip", 200, |rng| {
+        let spec = random_spec(rng);
+        spec.validate().expect("random specs are in-range by construction");
+        let pretty = spec.to_json().to_string_pretty();
+        let rt = ExperimentSpec::parse(&pretty).expect("round-trip parse");
+        assert_eq!(spec, rt, "pretty round-trip changed the spec:\n{pretty}");
+        let compact = spec.to_json().to_string();
+        let rt2 = ExperimentSpec::parse(&compact).expect("compact parse");
+        assert_eq!(spec, rt2, "compact round-trip changed the spec:\n{compact}");
+    });
+}
+
+#[test]
+fn every_algo_variant_round_trips() {
+    let variants = [
+        AlgoSpec::Single,
+        AlgoSpec::FedEP,
+        AlgoSpec::FedEPL,
+        AlgoSpec::Kd,
+        AlgoSpec::FedS { sparsity: 0.4, sync_interval: 4, sync: true },
+        AlgoSpec::FedS { sparsity: 1.0, sync_interval: 1, sync: false },
+        AlgoSpec::Svd { cols: 8, plus: false },
+        AlgoSpec::Svd { cols: 3, plus: true },
+    ];
+    for v in variants {
+        let j = v.to_json();
+        let rt = AlgoSpec::from_json(&j).unwrap();
+        assert_eq!(v, rt, "{j}");
+    }
+}
+
+#[test]
+fn out_of_range_sparsity_rejected() {
+    for bad in ["0", "0.0", "-0.4", "1.5", "2"] {
+        let text = format!(r#"{{"kind": "feds", "sparsity": {bad}}}"#);
+        let j = Json::parse(&text).unwrap();
+        assert!(
+            AlgoSpec::from_json(&j).is_err(),
+            "sparsity {bad} must be rejected (sparsity ∉ (0,1])"
+        );
+    }
+    // the boundary p = 1.0 is legal (dense selection)
+    let j = Json::parse(r#"{"kind": "feds", "sparsity": 1.0}"#).unwrap();
+    assert!(AlgoSpec::from_json(&j).is_ok());
+}
+
+#[test]
+fn zero_sync_interval_rejected() {
+    let j = Json::parse(r#"{"kind": "feds", "sync_interval": 0}"#).unwrap();
+    assert!(AlgoSpec::from_json(&j).is_err());
+}
+
+#[test]
+fn zero_svd_cols_rejected() {
+    let j = Json::parse(r#"{"kind": "svd", "cols": 0}"#).unwrap();
+    assert!(AlgoSpec::from_json(&j).is_err());
+}
+
+#[test]
+fn misplaced_knobs_rejected() {
+    // a FedS knob on a dense baseline is a hard error, not ignored
+    let j = Json::parse(r#"{"kind": "fedepl", "sparsity": 0.4}"#).unwrap();
+    assert!(AlgoSpec::from_json(&j).is_err());
+    let j = Json::parse(r#"{"kind": "feds", "cols": 8}"#).unwrap();
+    assert!(AlgoSpec::from_json(&j).is_err());
+}
+
+#[test]
+fn invalid_budget_and_data_rejected() {
+    let base = Json::parse(
+        r#"{
+          "method": "transe",
+          "algo": "feds",
+          "data": {"entities": 192, "relations": 12, "triples": 2400,
+                   "clusters": 4, "clients": 3, "seed": 7},
+          "backend": "native",
+          "budget": {"max_rounds": 10},
+          "seed": 7
+        }"#,
+    )
+    .unwrap();
+    // the base parses fine
+    let spec = ExperimentSpec::from_json(&base).unwrap();
+    assert_eq!(spec.budget.max_rounds, 10);
+    assert_eq!(spec.budget.local_epochs, 3, "budget defaults fill in");
+
+    let mut bad = spec.clone();
+    bad.budget.max_rounds = 0;
+    assert!(bad.validate().is_err());
+    let mut bad = spec.clone();
+    bad.budget.eval_every = 0;
+    assert!(bad.validate().is_err());
+    let mut bad = spec.clone();
+    bad.budget.eval_every = bad.budget.max_rounds + 1;
+    assert!(
+        bad.validate().is_err(),
+        "a budget that never evaluates must be rejected, not panic downstream"
+    );
+    let mut bad = spec.clone();
+    bad.data.clients = 1;
+    assert!(bad.validate().is_err());
+    let mut bad = spec;
+    bad.data.relations = 2;
+    assert!(bad.validate().is_err(), "fewer relations than clients must be rejected");
+}
