@@ -51,6 +51,8 @@ fn main() -> anyhow::Result<()> {
         },
         seed: 64501,
         exec: ExecMode::Sequential,
+        transport: Default::default(),
+        shards: 0,
     };
     let mut session = Session::with_runtime(rt);
 

@@ -62,6 +62,8 @@ fn main() -> anyhow::Result<()> {
         },
         seed: 7,
         exec: ExecMode::Sequential,
+        transport: Default::default(),
+        shards: 0,
     };
     // every spec is JSON-serializable: println!("{}", spec.to_json()) is a
     // ready-made `feds run --spec` file

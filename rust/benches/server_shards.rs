@@ -1,0 +1,123 @@
+//! Sharded server aggregation throughput: one full communication phase
+//! (`begin_round` + per-client `receive` + per-client `feds_download`)
+//! at realistic scale, swept over the shard count.
+//! `cargo bench --bench server_shards` (`FEDS_BENCH_FAST=1` for the CI
+//! smoke run).
+//!
+//! Scenario: E = 50 000 entities, width 128, 8 clients each uploading a
+//! 40% Top-K subset of their shared list — the FedS paper-default round
+//! shape.  Every shard count produces bit-identical downloads (asserted
+//! against the single-shard baseline before timing); only the
+//! parallelism changes.  Besides the criterion-style report
+//! (`reports/bench/server_shards.json`), this writes a single
+//! `BENCH_server.json` trajectory point with per-shard-count round times
+//! and speedups, which CI uploads as an artifact.
+
+use feds::fed::Server;
+use feds::util::bench::{bb, Bench};
+use feds::util::json::Json;
+use feds::util::rng::Rng;
+
+const NUM_ENTITIES: usize = 50_000;
+const WIDTH: usize = 128;
+const CLIENTS: usize = 8;
+const SPARSITY: f64 = 0.4;
+
+fn main() {
+    let mut b = Bench::from_env("server_shards");
+    let mut rng = Rng::new(42);
+
+    // shared lists: each client shares ~60% of the entity space
+    let shared: Vec<Vec<u32>> = (0..CLIENTS)
+        .map(|_| (0..NUM_ENTITIES as u32).filter(|_| rng.bool(0.6)).collect())
+        .collect();
+    // uploads: an ascending ~40% subset of each client's shared list
+    let uploads: Vec<(Vec<u32>, Vec<f32>)> = shared
+        .iter()
+        .map(|ids| {
+            let up: Vec<u32> = ids.iter().copied().filter(|_| rng.bool(SPARSITY)).collect();
+            let rows: Vec<f32> = (0..up.len() * WIDTH).map(|_| rng.uniform(-1.0, 1.0)).collect();
+            (up, rows)
+        })
+        .collect();
+    let k = (shared[0].len() as f64 * SPARSITY) as usize;
+
+    let round = |server: &mut Server, seed: u64| {
+        server.begin_round();
+        for (c, (ids, rows)) in uploads.iter().enumerate() {
+            server.receive(c as u16, ids, rows);
+        }
+        // deterministic download stream so every shard count sees the
+        // same selection work
+        let mut drng = Rng::new(seed);
+        let mut checksum = 0u64;
+        for c in 0..CLIENTS as u16 {
+            let (_, rows, _) = server.feds_download(c, k, &mut drng);
+            checksum ^= rows.len() as u64;
+        }
+        checksum
+    };
+
+    // correctness first: all shard counts agree with the 1-shard baseline
+    let reference = {
+        let mut server = Server::with_shards(NUM_ENTITIES, WIDTH, shared.clone(), 1);
+        server.begin_round();
+        for (c, (ids, rows)) in uploads.iter().enumerate() {
+            server.receive(c as u16, ids, rows);
+        }
+        let mut drng = Rng::new(7);
+        (0..CLIENTS as u16).map(|c| server.feds_download(c, k, &mut drng)).collect::<Vec<_>>()
+    };
+
+    let shard_counts = [1usize, 2, 4, 8];
+    let mut round_ms = Vec::new();
+    for &n_shards in &shard_counts {
+        let mut server = Server::with_shards(NUM_ENTITIES, WIDTH, shared.clone(), n_shards);
+        {
+            server.begin_round();
+            for (c, (ids, rows)) in uploads.iter().enumerate() {
+                server.receive(c as u16, ids, rows);
+            }
+            let mut drng = Rng::new(7);
+            for (c, want) in reference.iter().enumerate() {
+                let got = server.feds_download(c as u16, k, &mut drng);
+                assert_eq!(&got.0, &want.0, "sign diverged at {n_shards} shards");
+                assert!(
+                    got.1.iter().zip(&want.1).all(|(a, b)| a.to_bits() == b.to_bits()),
+                    "rows diverged at {n_shards} shards"
+                );
+                assert_eq!(&got.2, &want.2, "priorities diverged at {n_shards} shards");
+            }
+        }
+        let stats = b.bench(&format!("round/shards{n_shards}"), || bb(round(&mut server, 11)));
+        round_ms.push(stats.mean_ns / 1e6);
+    }
+
+    let speedups: Vec<f64> = round_ms.iter().map(|&ms| round_ms[0] / ms).collect();
+    for (i, &n) in shard_counts.iter().enumerate() {
+        b.report_value(&format!("round/shards{n}/speedup"), speedups[i], "x");
+    }
+
+    let hw_threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let point = Json::obj()
+        .set("suite", "server_shards")
+        .set("entities", NUM_ENTITIES)
+        .set("width", WIDTH)
+        .set("clients", CLIENTS)
+        .set("sparsity", SPARSITY)
+        .set("shard_counts", Json::Arr(shard_counts.iter().map(|&n| Json::from(n)).collect()))
+        .set("round_ms", Json::Arr(round_ms.iter().map(|&x| Json::from(x)).collect()))
+        .set("speedup_vs_1", Json::Arr(speedups.iter().map(|&x| Json::from(x)).collect()))
+        .set("threads", hw_threads);
+    std::fs::write("BENCH_server.json", point.to_string_pretty())
+        .expect("write BENCH_server.json");
+    println!(
+        "server_shards: round {:.2} ms @ 1 shard → {:.2} ms @ {} shards → {:.2}x \
+         (BENCH_server.json written)",
+        round_ms[0],
+        round_ms[round_ms.len() - 1],
+        shard_counts[shard_counts.len() - 1],
+        speedups[speedups.len() - 1]
+    );
+    b.finish();
+}

@@ -9,7 +9,10 @@
 //! * `accounting` — per-client, per-direction parameter AND byte counters,
 //!   with the paper's convention (every sign-vector element counts as one
 //!   f32 parameter, Eq. 5) kept separate from the realistic byte count;
-//! * `transport` — metered in-process duplex links (std::sync::mpsc);
+//! * `transport` — the metered [`transport::Endpoint`] trait with two
+//!   implementations: in-process mpsc duplex links and length-prefixed
+//!   TCP loopback sockets, selected per run by [`transport::TransportSpec`]
+//!   with bit-identical accounting either way;
 //! * `bandwidth` — an analytic link model to turn bytes into seconds.
 
 pub mod accounting;
@@ -19,5 +22,5 @@ pub mod wire;
 
 pub use accounting::{Accounting, Direction};
 pub use bandwidth::BandwidthModel;
-pub use transport::{duplex, Endpoint};
+pub use transport::{duplex, Endpoint, TransportSpec};
 pub use wire::{WireReader, WireWriter};

@@ -1,0 +1,110 @@
+//! Metered client↔server transport links.
+//!
+//! [`Endpoint`] is the seam between the orchestrator and the medium that
+//! carries its frames.  Each endpoint pair models one client↔server
+//! connection under a single **metering contract**: `send` records the
+//! frame's real byte size (and the caller-supplied logical parameter
+//! count) into the shared [`Accounting`] *before* the frame leaves, so
+//! byte/parameter totals are bit-identical across implementations — the
+//! frames are the unit of account, never the medium's own overhead.
+//!
+//! Two implementations:
+//! * [`mpsc`] — in-process duplex links over `std::sync::mpsc` (the
+//!   default; zero-copy hand-off of the frame buffer);
+//! * [`tcp`] — length-prefixed loopback sockets (`comm::wire::write_frame`
+//!   framing; a server listener plus one connection per client), proving
+//!   the byte savings on a real stream transport.
+//!
+//! Receive semantics are **drain-then-error**: once a peer hangs up, any
+//! frames it sent before disconnecting are still delivered in order;
+//! only after the queue is empty do `recv`/`recv_timeout` report the
+//! disconnect.
+
+pub mod mpsc;
+pub mod tcp;
+
+pub use mpsc::{duplex, MpscEndpoint};
+pub use tcp::{TcpEndpoint, TcpTransport};
+
+use std::sync::mpsc::{Receiver, RecvTimeoutError};
+use std::time::Duration;
+
+use anyhow::Result;
+
+/// One side of a metered client↔server connection.  `Send` so threaded
+/// execution can move a client's endpoint onto its OS thread.
+pub trait Endpoint: Send {
+    /// Send a frame, recording `params` logical parameters and the
+    /// frame's real byte size into the shared accounting.
+    fn send(&self, frame: Vec<u8>, params: u64) -> Result<()>;
+
+    /// Block for the next frame.  After a peer disconnect, queued frames
+    /// drain first; only an empty queue reports the hangup.
+    fn recv(&self) -> Result<Vec<u8>>;
+
+    /// Wait up to `d` for a frame (`Ok(None)` on timeout), with the same
+    /// drain-then-error disconnect semantics as [`Endpoint::recv`].
+    fn recv_timeout(&self, d: Duration) -> Result<Option<Vec<u8>>>;
+}
+
+/// Which transport carries a run's frames (the `"transport"` spec field /
+/// `--transport` CLI flag).  Byte and parameter accounting are
+/// bit-identical across variants for every exchange strategy.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum TransportSpec {
+    /// In-process `std::sync::mpsc` duplex links (the default).
+    #[default]
+    Mpsc,
+    /// Length-prefixed TCP loopback: one listener on the server side,
+    /// one connection per client.
+    Tcp,
+}
+
+impl TransportSpec {
+    pub fn parse(s: &str) -> Result<TransportSpec> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "mpsc" | "inproc" => TransportSpec::Mpsc,
+            "tcp" | "socket" => TransportSpec::Tcp,
+            other => anyhow::bail!("unknown transport '{other}' (mpsc|tcp)"),
+        })
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            TransportSpec::Mpsc => "mpsc",
+            TransportSpec::Tcp => "tcp",
+        }
+    }
+}
+
+/// The receive half both endpoint implementations share: an ordered frame
+/// queue with drain-then-error disconnect reporting.
+pub(crate) struct FrameQueue {
+    rx: Receiver<Vec<u8>>,
+}
+
+impl FrameQueue {
+    pub(crate) fn new(rx: Receiver<Vec<u8>>) -> Self {
+        Self { rx }
+    }
+
+    pub(crate) fn recv(&self) -> Result<Vec<u8>> {
+        // std mpsc already drains buffered messages before reporting the
+        // hangup on a blocking recv
+        self.rx.recv().map_err(|_| anyhow::anyhow!("peer disconnected"))
+    }
+
+    pub(crate) fn recv_timeout(&self, d: Duration) -> Result<Option<Vec<u8>>> {
+        match self.rx.recv_timeout(d) {
+            Ok(f) => Ok(Some(f)),
+            Err(RecvTimeoutError::Timeout) => Ok(None),
+            // `recv_timeout` can report Disconnected while frames are
+            // still queued (rust-lang/rust#39364); drain before
+            // surfacing the hangup so no delivered frame is ever lost.
+            Err(RecvTimeoutError::Disconnected) => match self.rx.try_recv() {
+                Ok(f) => Ok(Some(f)),
+                Err(_) => anyhow::bail!("peer disconnected"),
+            },
+        }
+    }
+}

@@ -1,21 +1,21 @@
-//! Metered in-process duplex links over `std::sync::mpsc`.
-//!
-//! Each `Endpoint` pair models one client↔server connection: sending a
-//! frame records its byte size (and caller-supplied parameter count) into
-//! the shared `Accounting`.  Both orchestrator execution modes
-//! (`fed::ExecMode`) route every exchanged frame through these links —
-//! they are the single metering path, so the communication totals are
-//! what a distributed deployment would transmit.
+//! In-process duplex links over `std::sync::mpsc` — the default
+//! [`Endpoint`] implementation.  The frame buffer is handed to the peer
+//! without copying; metering happens at `send` exactly as on a real
+//! transport, so the communication totals are what a distributed
+//! deployment would transmit.
 
-use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::mpsc::{channel, Sender};
 use std::sync::Arc;
 use std::time::Duration;
 
-use super::accounting::{Accounting, Direction};
+use anyhow::Result;
 
-pub struct Endpoint {
+use super::super::accounting::{Accounting, Direction};
+use super::{Endpoint, FrameQueue};
+
+pub struct MpscEndpoint {
     tx: Sender<Vec<u8>>,
-    rx: Receiver<Vec<u8>>,
+    queue: FrameQueue,
     acct: Arc<Accounting>,
     dir: Direction,
 }
@@ -23,44 +23,38 @@ pub struct Endpoint {
 /// Build a connected (client_end, server_end) pair sharing `acct`.
 /// Frames sent from the client end are recorded as uploads; frames sent
 /// from the server end as downloads.
-pub fn duplex(acct: Arc<Accounting>) -> (Endpoint, Endpoint) {
+pub fn duplex(acct: Arc<Accounting>) -> (MpscEndpoint, MpscEndpoint) {
     let (tx_up, rx_up) = channel();
     let (tx_down, rx_down) = channel();
-    let client = Endpoint {
+    let client = MpscEndpoint {
         tx: tx_up,
-        rx: rx_down,
+        queue: FrameQueue::new(rx_down),
         acct: acct.clone(),
         dir: Direction::Upload,
     };
-    let server = Endpoint {
+    let server = MpscEndpoint {
         tx: tx_down,
-        rx: rx_up,
+        queue: FrameQueue::new(rx_up),
         acct,
         dir: Direction::Download,
     };
     (client, server)
 }
 
-impl Endpoint {
-    /// Send a frame, recording `params` logical parameters and the frame's
-    /// real byte size.
-    pub fn send(&self, frame: Vec<u8>, params: u64) -> anyhow::Result<()> {
+impl Endpoint for MpscEndpoint {
+    fn send(&self, frame: Vec<u8>, params: u64) -> Result<()> {
         self.acct.record(self.dir, params, frame.len() as u64);
         self.tx
             .send(frame)
             .map_err(|_| anyhow::anyhow!("peer disconnected"))
     }
 
-    pub fn recv(&self) -> anyhow::Result<Vec<u8>> {
-        self.rx.recv().map_err(|_| anyhow::anyhow!("peer disconnected"))
+    fn recv(&self) -> Result<Vec<u8>> {
+        self.queue.recv()
     }
 
-    pub fn recv_timeout(&self, d: Duration) -> anyhow::Result<Option<Vec<u8>>> {
-        match self.rx.recv_timeout(d) {
-            Ok(f) => Ok(Some(f)),
-            Err(RecvTimeoutError::Timeout) => Ok(None),
-            Err(RecvTimeoutError::Disconnected) => anyhow::bail!("peer disconnected"),
-        }
+    fn recv_timeout(&self, d: Duration) -> Result<Option<Vec<u8>>> {
+        self.queue.recv_timeout(d)
     }
 }
 
@@ -109,5 +103,24 @@ mod tests {
         let (client, server) = duplex(acct);
         drop(server);
         assert!(client.send(vec![1], 1).is_err());
+    }
+
+    /// Regression (drain-then-error): frames queued before the peer hung
+    /// up must all be delivered — by `recv` and by `recv_timeout` — and
+    /// only an empty queue reports the disconnect.
+    #[test]
+    fn recv_timeout_drains_queued_frames_after_disconnect() {
+        let acct = Accounting::new();
+        let (client, server) = duplex(acct);
+        client.send(vec![1], 1).unwrap();
+        client.send(vec![2], 1).unwrap();
+        client.send(vec![3], 1).unwrap();
+        drop(client);
+        let d = Duration::from_millis(10);
+        assert_eq!(server.recv_timeout(d).unwrap(), Some(vec![1]));
+        assert_eq!(server.recv().unwrap(), vec![2]);
+        assert_eq!(server.recv_timeout(d).unwrap(), Some(vec![3]));
+        assert!(server.recv_timeout(d).is_err(), "empty queue reports the hangup");
+        assert!(server.recv().is_err());
     }
 }

@@ -1,0 +1,213 @@
+//! Length-prefixed TCP loopback transport.
+//!
+//! [`TcpTransport`] owns the server-side listener; [`connect_pair`]
+//! establishes one real socket per client and returns the two
+//! [`TcpEndpoint`] halves.  Frames travel as `comm::wire::write_frame`
+//! length-prefixed payloads; metering records the **payload** bytes only
+//! (the 4-byte prefix is transport overhead), so accounting is
+//! bit-identical to the in-process [`super::mpsc`] links.
+//!
+//! Each endpoint runs two daemon threads:
+//! * a **reader** that reassembles frames from the stream (tolerating
+//!   arbitrarily short `read()`s) and queues them for `recv` — on EOF or
+//!   a broken stream it closes the queue, preserving drain-then-error
+//!   delivery of everything already received;
+//! * a **writer** that drains an outbox onto the socket, so `send` never
+//!   blocks on the peer.  Without it, single-threaded (sequential-mode)
+//!   drivers could deadlock once a frame outgrew the kernel's socket
+//!   buffers.  When the endpoint drops, the writer flushes the outbox
+//!   and shuts down the write half, which is the peer's EOF.
+//!
+//! [`connect_pair`]: TcpTransport::connect_pair
+
+use std::io::Write as _;
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{channel, Sender};
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::Result;
+
+use super::super::accounting::{Accounting, Direction};
+use super::super::wire::{read_frame, write_frame};
+use super::{Endpoint, FrameQueue};
+
+/// The server side's listener: one of these per run, one accepted
+/// connection per client.
+pub struct TcpTransport {
+    listener: TcpListener,
+    addr: SocketAddr,
+}
+
+impl TcpTransport {
+    /// Bind an ephemeral loopback port.
+    pub fn bind_loopback() -> Result<Self> {
+        let listener = TcpListener::bind(("127.0.0.1", 0))?;
+        let addr = listener.local_addr()?;
+        Ok(Self { listener, addr })
+    }
+
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Establish one client↔server connection and return
+    /// `(client_end, server_end)` sharing `acct` — the TCP analogue of
+    /// [`super::mpsc::duplex`].  Pairs must be established one at a time
+    /// (concurrent connects would interleave in the accept queue).
+    pub fn connect_pair(&self, acct: Arc<Accounting>) -> Result<(TcpEndpoint, TcpEndpoint)> {
+        let client_sock = TcpStream::connect(self.addr)?;
+        let (server_sock, _peer) = self.listener.accept()?;
+        Ok((
+            TcpEndpoint::new(client_sock, acct.clone(), Direction::Upload)?,
+            TcpEndpoint::new(server_sock, acct, Direction::Download)?,
+        ))
+    }
+}
+
+/// One side of a socket-backed connection.  Frames sent from the
+/// `Direction::Upload` end are recorded as uploads, from the
+/// `Direction::Download` end as downloads — exactly the mpsc contract.
+pub struct TcpEndpoint {
+    outbox: Sender<Vec<u8>>,
+    queue: FrameQueue,
+    acct: Arc<Accounting>,
+    dir: Direction,
+    /// set by the writer thread when the stream breaks mid-run
+    broken: Arc<AtomicBool>,
+}
+
+impl TcpEndpoint {
+    fn new(sock: TcpStream, acct: Arc<Accounting>, dir: Direction) -> Result<Self> {
+        sock.set_nodelay(true)?;
+        let wsock = sock.try_clone()?;
+
+        let (out_tx, out_rx) = channel::<Vec<u8>>();
+        let broken = Arc::new(AtomicBool::new(false));
+        let wbroken = broken.clone();
+        std::thread::spawn(move || {
+            let mut w = std::io::BufWriter::new(wsock);
+            for frame in out_rx {
+                if write_frame(&mut w, &frame).and_then(|()| w.flush()).is_err() {
+                    wbroken.store(true, Ordering::Relaxed);
+                    break;
+                }
+            }
+            if let Ok(s) = w.into_inner() {
+                let _ = s.shutdown(Shutdown::Write);
+            }
+        });
+
+        let (in_tx, in_rx) = channel::<Vec<u8>>();
+        std::thread::spawn(move || {
+            let mut r = std::io::BufReader::new(sock);
+            loop {
+                match read_frame(&mut r) {
+                    Ok(Some(frame)) => {
+                        if in_tx.send(frame).is_err() {
+                            break; // endpoint dropped, nobody will recv
+                        }
+                    }
+                    // clean peer EOF or broken stream: close the queue;
+                    // frames already delivered drain before recv errors
+                    Ok(None) | Err(_) => break,
+                }
+            }
+        });
+
+        Ok(Self { outbox: out_tx, queue: FrameQueue::new(in_rx), acct, dir, broken })
+    }
+}
+
+impl Endpoint for TcpEndpoint {
+    fn send(&self, frame: Vec<u8>, params: u64) -> Result<()> {
+        if self.broken.load(Ordering::Relaxed) {
+            anyhow::bail!("peer disconnected");
+        }
+        self.acct.record(self.dir, params, frame.len() as u64);
+        self.outbox
+            .send(frame)
+            .map_err(|_| anyhow::anyhow!("peer disconnected"))
+    }
+
+    fn recv(&self) -> Result<Vec<u8>> {
+        self.queue.recv()
+    }
+
+    fn recv_timeout(&self, d: Duration) -> Result<Option<Vec<u8>>> {
+        self.queue.recv_timeout(d)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pair() -> (Arc<Accounting>, TcpEndpoint, TcpEndpoint) {
+        let acct = Accounting::new();
+        let t = TcpTransport::bind_loopback().unwrap();
+        let (c, s) = t.connect_pair(acct.clone()).unwrap();
+        (acct, c, s)
+    }
+
+    #[test]
+    fn roundtrip_and_metering_matches_mpsc_contract() {
+        let (acct, client, server) = pair();
+        client.send(vec![1, 2, 3], 10).unwrap();
+        assert_eq!(server.recv().unwrap(), vec![1, 2, 3]);
+        server.send(vec![9; 8], 2).unwrap();
+        assert_eq!(client.recv().unwrap(), vec![9; 8]);
+        assert_eq!(acct.params_dir(Direction::Upload), 10);
+        assert_eq!(acct.params_dir(Direction::Download), 2);
+        // metered bytes are the frame payload, not payload + prefix
+        assert_eq!(acct.bytes_dir(Direction::Upload), 3);
+        assert_eq!(acct.bytes_dir(Direction::Download), 8);
+        assert_eq!(acct.messages(), 2);
+    }
+
+    #[test]
+    fn many_frames_keep_order_and_boundaries() {
+        let (_acct, client, server) = pair();
+        let frames: Vec<Vec<u8>> = (0..50u8).map(|i| vec![i; i as usize]).collect();
+        for f in &frames {
+            client.send(f.clone(), 1).unwrap();
+        }
+        for f in &frames {
+            assert_eq!(&server.recv().unwrap(), f);
+        }
+    }
+
+    #[test]
+    fn timeout_returns_none() {
+        let (_acct, client, _server) = pair();
+        assert!(client.recv_timeout(Duration::from_millis(10)).unwrap().is_none());
+    }
+
+    /// Drain-then-error over a real socket: everything the peer sent
+    /// before hanging up is delivered, then the disconnect surfaces.
+    #[test]
+    fn queued_frames_survive_peer_disconnect() {
+        let (_acct, client, server) = pair();
+        client.send(vec![1], 1).unwrap();
+        client.send(vec![2, 2], 1).unwrap();
+        drop(client); // writer flushes, then EOF
+        let d = Duration::from_millis(500);
+        assert_eq!(server.recv_timeout(d).unwrap(), Some(vec![1]));
+        assert_eq!(server.recv_timeout(d).unwrap(), Some(vec![2, 2]));
+        assert!(server.recv().is_err(), "after the drain the hangup surfaces");
+    }
+
+    /// A sequential (single-threaded) driver must be able to push a frame
+    /// larger than any kernel socket buffer without deadlocking: the
+    /// writer thread decouples `send` from the peer's reads.
+    #[test]
+    fn large_frame_send_does_not_block_the_caller() {
+        let (_acct, client, server) = pair();
+        let big = vec![0xABu8; 8 << 20]; // 8 MiB ≫ socket buffers
+        client.send(big.clone(), 1).unwrap(); // must return immediately
+        let got = server.recv().unwrap();
+        assert_eq!(got.len(), big.len());
+        assert_eq!(got, big);
+    }
+}

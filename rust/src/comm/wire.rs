@@ -161,6 +161,59 @@ impl<'a> WireReader<'a> {
     }
 }
 
+// --- stream framing ---------------------------------------------------------
+//
+// Message boundaries for byte-stream transports (`comm::transport::tcp`):
+// each frame travels as a u32le length followed by the payload.  The
+// 4-byte prefix is transport overhead, NOT part of the metered frame —
+// accounting records the payload size only, so byte totals are identical
+// across transports (see PERF.md "Transport overhead").
+
+/// Write one length-prefixed frame to a byte stream.
+pub fn write_frame<W: std::io::Write>(w: &mut W, frame: &[u8]) -> std::io::Result<()> {
+    w.write_all(&(frame.len() as u32).to_le_bytes())?;
+    w.write_all(frame)
+}
+
+/// Largest frame `read_frame` will accept.  Real frames top out at tens
+/// of megabytes (a dense upload of every shared row); a prefix beyond
+/// this bound means the stream desynchronized, and must surface as an
+/// error instead of a multi-gigabyte allocation.
+pub const MAX_FRAME_BYTES: usize = 1 << 30;
+
+/// Read one length-prefixed frame from a byte stream, tolerating
+/// arbitrarily short `read()`s.  Returns `Ok(None)` on a clean EOF at a
+/// frame boundary; EOF inside a frame — or a length prefix beyond
+/// [`MAX_FRAME_BYTES`] — is an error.
+pub fn read_frame<R: std::io::Read>(r: &mut R) -> std::io::Result<Option<Vec<u8>>> {
+    let mut len = [0u8; 4];
+    let mut got = 0usize;
+    while got < 4 {
+        match r.read(&mut len[got..]) {
+            Ok(0) if got == 0 => return Ok(None),
+            Ok(0) => {
+                return Err(std::io::Error::new(
+                    std::io::ErrorKind::UnexpectedEof,
+                    "EOF inside a frame length prefix",
+                ))
+            }
+            Ok(n) => got += n,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(e) => return Err(e),
+        }
+    }
+    let n = u32::from_le_bytes(len) as usize;
+    if n > MAX_FRAME_BYTES {
+        return Err(std::io::Error::new(
+            std::io::ErrorKind::InvalidData,
+            format!("frame length {n} exceeds the {MAX_FRAME_BYTES}-byte cap (stream desync?)"),
+        ));
+    }
+    let mut buf = vec![0u8; n];
+    r.read_exact(&mut buf)?;
+    Ok(Some(buf))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -218,5 +271,64 @@ mod tests {
         let mut w = WireWriter::new();
         w.f32s(&[0.0; 100]);
         assert_eq!(w.len(), 4 + 400);
+    }
+
+    /// A `Read` that yields at most `cap` bytes per call — the shortest
+    /// reads a stream socket could legally produce.
+    pub(crate) struct ChunkedReader<'a> {
+        buf: &'a [u8],
+        pos: usize,
+        cap: usize,
+    }
+
+    impl<'a> ChunkedReader<'a> {
+        pub(crate) fn new(buf: &'a [u8], cap: usize) -> Self {
+            Self { buf, pos: 0, cap: cap.max(1) }
+        }
+    }
+
+    impl std::io::Read for ChunkedReader<'_> {
+        fn read(&mut self, out: &mut [u8]) -> std::io::Result<usize> {
+            let n = out.len().min(self.cap).min(self.buf.len() - self.pos);
+            out[..n].copy_from_slice(&self.buf[self.pos..self.pos + n]);
+            self.pos += n;
+            Ok(n)
+        }
+    }
+
+    #[test]
+    fn frames_roundtrip_under_short_reads() {
+        let frames: Vec<Vec<u8>> = vec![vec![], vec![7], (0..=255).collect()];
+        let mut stream = Vec::new();
+        for f in &frames {
+            write_frame(&mut stream, f).unwrap();
+        }
+        for cap in [1usize, 2, 3, 7, 1024] {
+            let mut r = ChunkedReader::new(&stream, cap);
+            for f in &frames {
+                assert_eq!(read_frame(&mut r).unwrap().as_deref(), Some(&f[..]), "cap {cap}");
+            }
+            assert!(read_frame(&mut r).unwrap().is_none(), "clean EOF at a boundary");
+        }
+    }
+
+    #[test]
+    fn frame_eof_inside_length_or_payload_errors() {
+        let mut stream = Vec::new();
+        write_frame(&mut stream, &[1, 2, 3, 4, 5]).unwrap();
+        // cut inside the length prefix and inside the payload
+        for cut in [1usize, 3, 6] {
+            let mut r = ChunkedReader::new(&stream[..cut], 2);
+            assert!(read_frame(&mut r).is_err(), "cut {cut} must error, not hang or truncate");
+        }
+    }
+
+    #[test]
+    fn absurd_frame_length_is_an_error_not_an_allocation() {
+        // a desynced stream handing us a ~4 GiB length prefix
+        let bogus = u32::MAX.to_le_bytes();
+        let mut r = ChunkedReader::new(&bogus, 4);
+        let err = read_frame(&mut r).unwrap_err();
+        assert_eq!(err.kind(), std::io::ErrorKind::InvalidData);
     }
 }

@@ -149,6 +149,8 @@ impl Ctx {
             },
             seed: self.seed ^ 0xA11CE,
             exec: self.exec,
+            transport: crate::comm::transport::TransportSpec::Mpsc,
+            shards: 0,
         }
     }
 

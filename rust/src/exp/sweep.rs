@@ -11,6 +11,14 @@
 //! Cells are materialized in row-major order (last axis fastest) and each
 //! cell is an independent deterministic run, so grid results are
 //! identical to driving the legacy per-table loops by hand.
+//!
+//! Grids are **resumable**: because cells execute in deterministic order
+//! and every completed run writes a `run_end` event to its JSONL stream,
+//! [`completed_runs`] counts how many cells an interrupted sweep already
+//! finished and [`run_sweep_from`] re-executes only the missing tail,
+//! appending to the same stream (`feds sweep --resume`).
+
+use std::path::Path;
 
 use anyhow::{ensure, Result};
 
@@ -158,16 +166,20 @@ pub struct SweepCell {
     pub outcome: RunOutcome,
 }
 
-/// All executed cells of a sweep, in row-major axis order.
+/// All executed cells of a sweep, in row-major axis order.  A resumed
+/// sweep carries only the cells this invocation executed: `start` is the
+/// flat index of the first one (0 for a full run).
 pub struct SweepGrid {
     pub name: String,
     pub axis_keys: Vec<String>,
     pub dims: Vec<usize>,
+    pub start: usize,
     pub cells: Vec<SweepCell>,
 }
 
 impl SweepGrid {
-    /// The cell at one multi-dimensional axis index (row-major).
+    /// The cell at one multi-dimensional axis index (row-major).  Panics
+    /// for cells a resumed grid skipped.
     pub fn at(&self, idx: &[usize]) -> &SweepCell {
         assert_eq!(idx.len(), self.dims.len(), "sweep index arity");
         let mut flat = 0usize;
@@ -175,7 +187,12 @@ impl SweepGrid {
             assert!(x < self.dims[i], "axis {i} index {x} out of range (dim {})", self.dims[i]);
             flat = flat * self.dims[i] + x;
         }
-        &self.cells[flat]
+        assert!(
+            flat >= self.start,
+            "cell {flat} was skipped by this resumed sweep (start {})",
+            self.start
+        );
+        &self.cells[flat - self.start]
     }
 
     /// First cell whose overrides contain every given (key, value) pair.
@@ -197,10 +214,34 @@ pub fn run_sweep(
     sweep: &SweepSpec,
     extra: &mut [&mut dyn RunObserver],
 ) -> Result<SweepGrid> {
+    run_sweep_from(session, sweep, 0, extra)
+}
+
+/// Execute the grid's cells from flat index `skip` onward — the resume
+/// path: `skip` is [`completed_runs`] of the interrupted sweep's JSONL
+/// stream, and `extra` should include a [`JsonlSink`] opened in append
+/// mode so the completed cells' events survive.
+///
+/// [`JsonlSink`]: crate::metrics::observe::JsonlSink
+pub fn run_sweep_from(
+    session: &mut Session,
+    sweep: &SweepSpec,
+    skip: usize,
+    extra: &mut [&mut dyn RunObserver],
+) -> Result<SweepGrid> {
     let cells_in = sweep.cells()?;
     let total = cells_in.len();
-    let mut cells = Vec::with_capacity(total);
-    for (i, (overrides, spec)) in cells_in.into_iter().enumerate() {
+    ensure!(
+        skip <= total,
+        "sweep {}: cannot skip {skip} of {total} cells — the JSONL stream records more \
+         completed runs than the grid has (stale file for a different sweep?)",
+        sweep.name
+    );
+    if skip > 0 {
+        crate::info!("sweep {}: resuming — skipping {skip}/{total} completed cells", sweep.name);
+    }
+    let mut cells = Vec::with_capacity(total - skip);
+    for (i, (overrides, spec)) in cells_in.into_iter().enumerate().skip(skip) {
         crate::info!(
             "sweep {}: cell {}/{} [{}]",
             sweep.name,
@@ -216,8 +257,82 @@ pub fn run_sweep(
         name: sweep.name.clone(),
         axis_keys: sweep.axes.iter().map(|a| a.key.clone()).collect(),
         dims: sweep.axes.iter().map(|a| a.values.len()).collect(),
+        start: skip,
         cells,
     })
+}
+
+/// How many runs a JSONL event stream records as completed — one
+/// `run_end` line per finished cell.  A missing file is zero (nothing has
+/// run); unparseable lines (e.g. a line truncated by a crash) are
+/// skipped, so a cell only counts once its terminal event hit the disk
+/// intact.
+pub fn completed_runs(path: &Path) -> Result<usize> {
+    if !path.exists() {
+        return Ok(0);
+    }
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| anyhow::anyhow!("reading JSONL stream {}: {e}", path.display()))?;
+    Ok(text
+        .lines()
+        .filter(|line| {
+            Json::parse(line)
+                .ok()
+                .and_then(|j| j.get("event").and_then(Json::as_str).map(String::from))
+                .is_some_and(|ev| ev == "run_end")
+        })
+        .count())
+}
+
+/// The validated resume point of `sweep` against an existing JSONL
+/// stream: the number of completed cells to skip.  Besides counting
+/// `run_end` events, every completed run's `run_start` label is checked
+/// against the label the corresponding grid cell would produce — a
+/// stream left over from a *different* sweep (stale file, edited spec)
+/// fails loudly instead of silently skipping the wrong cells.
+pub fn resume_point(sweep: &SweepSpec, path: &Path) -> Result<usize> {
+    let done = completed_runs(path)?;
+    if done == 0 {
+        return Ok(0);
+    }
+    let cells = sweep.cells()?;
+    ensure!(
+        done <= cells.len(),
+        "sweep {}: the JSONL stream {} records {done} completed runs but the grid has only \
+         {} cells — it belongs to a different sweep; use a fresh --jsonl or drop --resume",
+        sweep.name,
+        path.display(),
+        cells.len()
+    );
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| anyhow::anyhow!("reading JSONL stream {}: {e}", path.display()))?;
+    let labels: Vec<String> = text
+        .lines()
+        .filter_map(|line| {
+            let j = Json::parse(line).ok()?;
+            if j.get("event").and_then(Json::as_str) != Some("run_start") {
+                return None;
+            }
+            j.get("label").and_then(Json::as_str).map(String::from)
+        })
+        .collect();
+    for (j, (_, spec)) in cells.iter().take(done).enumerate() {
+        // the orchestrator's run label: "{algo}-{method}-{clients}c"
+        let expected =
+            format!("{}-{}-{}c", spec.algo.label(), spec.method.name(), spec.data.clients);
+        if let Some(actual) = labels.get(j) {
+            ensure!(
+                *actual == expected,
+                "sweep {}: completed run {} in {} is '{actual}' but this grid's cell there \
+                 is '{expected}' — the stream belongs to a different sweep; use a fresh \
+                 --jsonl or drop --resume",
+                sweep.name,
+                j + 1,
+                path.display()
+            );
+        }
+    }
+    Ok(done)
 }
 
 /// Render a Json override value without string quotes.
@@ -271,7 +386,22 @@ pub fn grid_report(grid: &SweepGrid) -> Report {
                 .set("messages", cell.outcome.acct.messages()),
         );
     }
-    let mut rep = Report::new(&grid.name, &format!("Sweep {} — {} cells", grid.name, grid.cells.len()));
+    let desc = if grid.start > 0 {
+        // a resumed grid holds only this invocation's cells; the earlier
+        // cells' events live in the original JSONL stream
+        format!(
+            "Sweep {} — resumed at cell {}: rows {}..{} of {} (earlier rows in the \
+             sweep's JSONL stream)",
+            grid.name,
+            grid.start + 1,
+            grid.start + 1,
+            grid.start + grid.cells.len(),
+            grid.start + grid.cells.len()
+        )
+    } else {
+        format!("Sweep {} — {} cells", grid.name, grid.cells.len())
+    };
+    let mut rep = Report::new(&grid.name, &desc);
     rep.table("Grid", t);
     rep.raw = Json::obj().set("cells", Json::Arr(raw));
     rep
@@ -313,6 +443,8 @@ mod tests {
             },
             seed: 7,
             exec: ExecMode::Sequential,
+            transport: Default::default(),
+            shards: 0,
         }
     }
 
@@ -365,5 +497,128 @@ mod tests {
         // base algo is fedep: a sparsity axis must fail loudly
         let sweep = SweepSpec::new("bad", base()).axis("algo.sparsity", vec![Json::Num(0.3)]);
         assert!(sweep.cells().is_err());
+    }
+
+    #[test]
+    fn completed_runs_counts_only_intact_run_end_lines() {
+        let dir = std::env::temp_dir().join("feds_completed_runs_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("stream.jsonl");
+        assert_eq!(completed_runs(&dir.join("missing.jsonl")).unwrap(), 0);
+        std::fs::write(
+            &path,
+            concat!(
+                "{\"event\": \"run_start\", \"label\": \"a\"}\n",
+                "{\"event\": \"run_end\", \"params\": 1}\n",
+                "{\"event\": \"evaluated\", \"round\": 2}\n",
+                "{\"event\": \"run_end\", \"params\": 2}\n",
+                "{\"event\": \"run_en", // truncated by a crash: not counted
+            ),
+        )
+        .unwrap();
+        assert_eq!(completed_runs(&path).unwrap(), 2);
+    }
+
+    /// Re-running a half-finished sweep executes only the missing cells:
+    /// the first invocation covers a 2-cell prefix of a 4-cell grid, the
+    /// resumed invocation skips those and completes the JSONL stream.
+    #[test]
+    fn resumed_sweep_executes_only_missing_cells() {
+        use crate::metrics::observe::JsonlSink;
+
+        let algos = vec![
+            Json::from("single"),
+            Json::from("fedep"),
+            Json::from("fedepl"),
+            Json::from("feds"),
+        ];
+        let sweep = SweepSpec::new("resume", base()).axis("algo", algos.clone());
+        assert_eq!(sweep.len(), 4);
+
+        let dir = std::env::temp_dir().join("feds_sweep_resume_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("resume.jsonl");
+        let mut session = Session::new();
+
+        // "interrupted" first attempt: only the first two cells ran
+        let mut half = sweep.clone();
+        half.axes[0].values.truncate(2);
+        {
+            let mut sink = JsonlSink::create(&path).unwrap();
+            run_sweep(&mut session, &half, &mut [&mut sink]).unwrap();
+        }
+        assert_eq!(completed_runs(&path).unwrap(), 2);
+
+        // resume the full grid: exactly the two missing cells execute.
+        // (resume_point also validates the completed runs' labels against
+        // the grid's cells — same algo axis prefix, so it passes here.)
+        let skip = resume_point(&sweep, &path).unwrap();
+        let grid = {
+            let mut sink = JsonlSink::append(&path).unwrap();
+            run_sweep_from(&mut session, &sweep, skip, &mut [&mut sink]).unwrap()
+        };
+        assert_eq!(grid.start, 2);
+        assert_eq!(grid.cells.len(), 2, "only the missing cells run");
+        assert_eq!(grid.cells[0].overrides, vec![("algo".to_string(), algos[2].clone())]);
+        assert_eq!(grid.cells[1].overrides, vec![("algo".to_string(), algos[3].clone())]);
+        assert_eq!(grid.at(&[3]).overrides[0].1, algos[3]);
+        assert_eq!(
+            completed_runs(&path).unwrap(),
+            4,
+            "the appended stream now records the whole grid"
+        );
+
+        // a fully-complete stream resumes to a no-op
+        let done = resume_point(&sweep, &path).unwrap();
+        assert_eq!(done, 4);
+        let grid = run_sweep_from(&mut session, &sweep, done, &mut []).unwrap();
+        assert!(grid.cells.is_empty());
+        // more run_ends than cells is a stale/mismatched stream — an error
+        assert!(run_sweep_from(&mut session, &sweep, 5, &mut []).is_err());
+    }
+
+    /// `--resume` must refuse a JSONL stream whose completed runs don't
+    /// match the grid's cells (a stale file or an edited spec), instead
+    /// of silently skipping the wrong cells.
+    #[test]
+    fn resume_rejects_a_stream_from_a_different_sweep() {
+        let sweep = SweepSpec::new("mismatch", base())
+            .axis("algo", vec![Json::from("fedep"), Json::from("feds")]);
+        let dir = std::env::temp_dir().join("feds_resume_mismatch_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("stale.jsonl");
+
+        // a foreign run (different algo/method/clients) claims cell 1
+        std::fs::write(
+            &path,
+            concat!(
+                "{\"event\": \"run_start\", \"label\": \"FedS-rotate-9c\", ",
+                "\"clients\": 9, \"width\": 4}\n",
+                "{\"event\": \"run_end\", \"params\": 1, \"bytes\": 2, \"messages\": 3}\n",
+            ),
+        )
+        .unwrap();
+        assert!(resume_point(&sweep, &path).is_err());
+
+        // the matching label passes: cell 1 of this grid is FedEP-transe-3c
+        std::fs::write(
+            &path,
+            concat!(
+                "{\"event\": \"run_start\", \"label\": \"FedEP-transe-3c\", ",
+                "\"clients\": 3, \"width\": 32}\n",
+                "{\"event\": \"run_end\", \"params\": 1, \"bytes\": 2, \"messages\": 3}\n",
+            ),
+        )
+        .unwrap();
+        assert_eq!(resume_point(&sweep, &path).unwrap(), 1);
+
+        // more completed runs than grid cells: a different sweep entirely
+        let mut many = String::new();
+        for _ in 0..3 {
+            many.push_str("{\"event\": \"run_start\", \"label\": \"FedEP-transe-3c\"}\n");
+            many.push_str("{\"event\": \"run_end\", \"params\": 1}\n");
+        }
+        std::fs::write(&path, many).unwrap();
+        assert!(resume_point(&sweep, &path).is_err());
     }
 }

@@ -15,7 +15,11 @@
 //!     client half and a server half
 //!   * `orchestrator::client`   — `ClientRunner`s that own their local
 //!     state and exchange only framed `Upload`/`Download` messages over
-//!     metered `comm::transport` links
+//!     metered `comm::transport` links (in-process mpsc or TCP loopback,
+//!     selected per run with bit-identical accounting)
+//!   * `orchestrator::params`   — `RoundParams`, the resolved-parameter
+//!     struct derived once per run; the only configuration the
+//!     orchestrator internals consume
 //!   * sequential and per-client-thread execution drivers (`ExecMode`),
 //!     byte- and bit-identical to each other
 //!   * the round loop reports through typed `RunEvent`s to registered
@@ -25,7 +29,7 @@
 //! Entry points: describe runs with [`crate::spec::ExperimentSpec`] and
 //! execute them through [`crate::spec::Session`].  [`run_federated`] with
 //! the flat [`FedRunConfig`] survives as a deprecated shim over the same
-//! engine ([`run_with_observers`]), with byte-identical accounting and
+//! engine ([`run_params`]), with byte-identical accounting and
 //! bit-identical metrics between the two paths.
 
 pub mod compression;
@@ -36,7 +40,8 @@ pub mod sync;
 pub mod topk;
 
 pub use orchestrator::{
-    run_federated, run_with_observers, Algo, Backend, ExecMode, FedRunConfig, RunOutcome,
+    run_federated, run_params, run_with_observers, Algo, Backend, ExecMode, FedRunConfig,
+    RoundParams, RunOutcome,
 };
 pub use server::Server;
 pub use sync::SyncSchedule;

@@ -2,9 +2,10 @@
 //! local tables + eval sets) and speaks to the server **only** through
 //! framed `Upload`/`Download` messages on a metered
 //! `comm::transport::Endpoint` — the single path on which every exchanged
-//! parameter and byte is accounted.  Round results (loss, eval metrics)
-//! and the continue/stop verdict travel on a separate unmetered control
-//! plane, mirroring a deployment's control/data-plane split.
+//! parameter and byte is accounted, whichever transport backs it.  Round
+//! results (loss, eval metrics) and the continue/stop verdict travel on a
+//! separate unmetered control plane, mirroring a deployment's
+//! control/data-plane split.
 
 use std::sync::mpsc::{Receiver, Sender};
 
@@ -22,7 +23,7 @@ use crate::trainer::{evaluate, LocalTrainer};
 use crate::util::rng::Rng;
 
 use super::exchange::{self, Exchange};
-use super::{Algo, FedRunConfig};
+use super::{Algo, RoundParams};
 
 /// Per-client local state, owned by exactly one `ClientRunner`.
 pub struct ClientCtx {
@@ -70,8 +71,8 @@ pub(crate) fn initial_table(
 pub struct ClientRunner<'d> {
     ctx: ClientCtx,
     exchange: Option<Box<dyn Exchange>>,
-    link: Endpoint,
-    cfg: FedRunConfig,
+    link: Box<dyn Endpoint>,
+    params: RoundParams,
     train: &'d [Triple],
     local_ents: &'d [u32],
     batch_size: usize,
@@ -85,32 +86,32 @@ impl<'d> ClientRunner<'d> {
     pub fn build(
         data: &'d FedDataset,
         id: u16,
-        cfg: &FedRunConfig,
+        params: &RoundParams,
         mut trainer: Box<dyn LocalTrainer>,
-        link: Endpoint,
+        link: Box<dyn Endpoint>,
         batch_size: usize,
         negatives: usize,
     ) -> Result<Self> {
         let c = &data.clients[id as usize];
         let shared = data.shared_entities_of(id);
-        let mut rng = Rng::new(cfg.seed ^ (0xC11E57 + id as u64));
+        let mut rng = Rng::new(params.seed ^ (0xC11E57 + id as u64));
         let filters = c.filter_index();
         let mut valid_set = EvalSet::new(&c.valid, data.num_entities);
         let mut test_set = EvalSet::new(&c.test, data.num_entities);
-        valid_set.subsample(cfg.eval_cap, &mut rng);
-        test_set.subsample(cfg.eval_cap, &mut rng);
+        valid_set.subsample(params.eval_cap, &mut rng);
+        test_set.subsample(params.eval_cap, &mut rng);
 
         let width = trainer.entity_width();
         let mut hist = None;
         let mut svd_ref = None;
-        if matches!(cfg.algo, Algo::FedS { .. }) {
+        if matches!(params.algo, Algo::FedS { .. }) {
             hist = Some(initial_table(trainer.as_mut(), &shared, data.num_entities, width)?);
-        } else if matches!(cfg.algo, Algo::FedSvd { .. }) {
+        } else if matches!(params.algo, Algo::FedSvd { .. }) {
             svd_ref = Some(initial_table(trainer.as_mut(), &shared, data.num_entities, width)?);
         }
-        let exchange = exchange::client_half(cfg, width);
-        let svd_plus = (cfg.algo == (Algo::FedSvd { constrained: true }))
-            .then(|| SvdCodec::for_width(width, cfg.svd_cols.min(width)));
+        let exchange = exchange::client_half(params, width);
+        let svd_plus = (params.algo == (Algo::FedSvd { constrained: true }))
+            .then(|| SvdCodec::for_width(width, params.svd_cols.min(width)));
 
         Ok(Self {
             ctx: ClientCtx {
@@ -126,7 +127,7 @@ impl<'d> ClientRunner<'d> {
             },
             exchange,
             link,
-            cfg: cfg.clone(),
+            params: params.clone(),
             train: &c.train,
             local_ents: &c.entities,
             batch_size,
@@ -151,8 +152,8 @@ impl<'d> ClientRunner<'d> {
         // all epochs' batches gathered so the XLA trainers can fuse the
         // whole phase into scan-stepped executions
         let per_epoch = self.train.len().div_ceil(self.batch_size.max(1));
-        let mut batches = Vec::with_capacity(self.cfg.local_epochs * per_epoch);
-        for _ in 0..self.cfg.local_epochs {
+        let mut batches = Vec::with_capacity(self.params.local_epochs * per_epoch);
+        for _ in 0..self.params.local_epochs {
             let mut brng = self.ctx.rng.fork(round as u64);
             batches.extend(BatchIter::new(
                 self.train,
@@ -220,8 +221,8 @@ impl<'d> ClientRunner<'d> {
     /// rounds) → exchange, every round, mirroring the server driver's
     /// schedule exactly.
     pub fn run(mut self, reports: Sender<Report>, verdicts: Receiver<bool>) -> Result<()> {
-        for round in 1..=self.cfg.max_rounds {
-            let eval_round = round % self.cfg.eval_every == 0;
+        for round in 1..=self.params.max_rounds {
+            let eval_round = round % self.params.eval_every == 0;
             let report = self.local_round(round, eval_round)?;
             reports
                 .send(report)

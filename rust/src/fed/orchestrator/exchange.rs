@@ -20,7 +20,7 @@ use crate::kge::Table;
 use crate::util::rng::Rng;
 
 use super::client::ClientCtx;
-use super::{Algo, FedRunConfig};
+use super::{Algo, RoundParams};
 
 /// One algorithm family's communication pattern.  The orchestrator drives
 /// the client methods on the client side of an `Endpoint` and the server
@@ -46,37 +46,43 @@ pub trait Exchange {
         -> Result<Download>;
 }
 
-/// The client-side strategy instance for `cfg` (`None`: no communication).
-pub fn client_half(cfg: &FedRunConfig, width: usize) -> Option<Box<dyn Exchange>> {
-    build_half(cfg, width, None)
+/// The client-side strategy instance for `params` (`None`: no
+/// communication).
+pub fn client_half(params: &RoundParams, width: usize) -> Option<Box<dyn Exchange>> {
+    build_half(params, width, None)
 }
 
 /// The server-side strategy instance.  `refs` carries the per-client
 /// initial reference tables the SVD transport needs (empty for all other
 /// algorithms).
 pub fn server_half(
-    cfg: &FedRunConfig,
+    params: &RoundParams,
     width: usize,
     refs: Vec<Table>,
 ) -> Option<Box<dyn Exchange>> {
-    build_half(cfg, width, Some(refs))
+    build_half(params, width, Some(refs))
 }
 
 fn build_half(
-    cfg: &FedRunConfig,
+    params: &RoundParams,
     width: usize,
     server_refs: Option<Vec<Table>>,
 ) -> Option<Box<dyn Exchange>> {
-    match cfg.algo {
+    match params.algo {
         Algo::Single => None,
         Algo::FedEP | Algo::FedEPL | Algo::FedKd => Some(Box::new(DenseExchange)),
         Algo::FedS { sync } => {
-            let schedule = SyncSchedule::new(sync.then_some(cfg.sync_interval));
-            let rng = server_refs.is_some().then(|| Rng::new(cfg.seed ^ 0x5E4E4));
-            Some(Box::new(FedSExchange { sparsity: cfg.sparsity, schedule, sync_now: false, rng }))
+            let schedule = SyncSchedule::new(sync.then_some(params.sync_interval));
+            let rng = server_refs.is_some().then(|| Rng::new(params.seed ^ 0x5E4E4));
+            Some(Box::new(FedSExchange {
+                sparsity: params.sparsity,
+                schedule,
+                sync_now: false,
+                rng,
+            }))
         }
         Algo::FedSvd { .. } => Some(Box::new(SvdExchange {
-            codec: SvdCodec::for_width(width, cfg.svd_cols.min(width)),
+            codec: SvdCodec::for_width(width, params.svd_cols.min(width)),
             width,
             refs: server_refs.unwrap_or_default(),
         })),

@@ -16,18 +16,27 @@
 //! family is an [`exchange::Exchange`] strategy with a client half and a
 //! server half; each client is a [`client::ClientRunner`] that owns its
 //! state and talks to the server **only** via framed `Upload`/`Download`
-//! messages over a `comm::transport::Endpoint` pair — the single path on
-//! which parameters and bytes are metered, identical to what a
-//! distributed deployment would transmit.  Two execution modes share the
-//! same server-side driver ([`ExecMode`]): `Sequential` steps clients in
-//! order on the calling thread (required for the non-`Send` PJRT-backed
-//! trainers), `Threaded` runs each native-backend client's training and
-//! evaluation on its own OS thread.  Both modes produce byte-identical
-//! accounting and bit-identical metrics: uploads are folded and replies
-//! built in client-id order regardless of thread arrival order.
+//! messages over a metered `comm::transport::Endpoint` pair — the single
+//! path on which parameters and bytes are metered, identical to what a
+//! distributed deployment would transmit.  The links are **pluggable**
+//! ([`crate::comm::transport::TransportSpec`]): in-process mpsc duplexes
+//! or real TCP loopback sockets, with bit-identical accounting either
+//! way.  Two execution modes share the same server-side driver
+//! ([`ExecMode`]): `Sequential` steps clients in order on the calling
+//! thread (required for the non-`Send` PJRT-backed trainers), `Threaded`
+//! runs each native-backend client's training and evaluation on its own
+//! OS thread.  Both modes produce byte-identical accounting and
+//! bit-identical metrics: uploads are folded and replies built in
+//! client-id order regardless of thread arrival order.
+//!
+//! Internals consume [`RoundParams`] — the resolved-parameter struct
+//! derived once per run — never the deprecated flat [`FedRunConfig`],
+//! which survives only as the public shim ([`run_federated`] /
+//! [`run_with_observers`]) over the same engine ([`run_params`]).
 
 pub mod client;
 pub mod exchange;
+pub mod params;
 
 use std::rc::Rc;
 use std::sync::mpsc::{channel, Receiver, Sender};
@@ -35,8 +44,8 @@ use std::sync::Arc;
 
 use anyhow::Result;
 
-use crate::comm::accounting::Accounting;
-use crate::comm::transport::{duplex, Endpoint};
+use crate::comm::accounting::{Accounting, Direction};
+use crate::comm::transport::{duplex, Endpoint, TcpTransport, TransportSpec};
 use crate::data::partition::FedDataset;
 use crate::kge::{Hyper, Method, Table};
 use crate::metrics::observe::{emit, ConsoleObserver, HistoryObserver, RunEvent, RunObserver};
@@ -51,6 +60,7 @@ use super::server::Server;
 use super::{comm_ratio, fedepl_dim};
 
 use client::{initial_table, ClientRunner, Report};
+pub use params::RoundParams;
 
 /// Which algorithm drives the communication phase.
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -119,21 +129,23 @@ impl Backend {
 
     fn make_trainer(
         &self,
-        cfg: &FedRunConfig,
+        params: &RoundParams,
         num_entities: usize,
         num_relations: usize,
     ) -> Result<Box<dyn LocalTrainer>> {
-        let mut rng = Rng::new(cfg.seed);
+        let mut rng = Rng::new(params.seed);
         match self {
-            Backend::Xla(rt) => match cfg.algo {
-                Algo::FedKd => Ok(Box::new(KdXlaTrainer::new(rt.clone(), cfg.method, &mut rng)?)),
+            Backend::Xla(rt) => match params.algo {
+                Algo::FedKd => {
+                    Ok(Box::new(KdXlaTrainer::new(rt.clone(), params.method, &mut rng)?))
+                }
                 Algo::FedEPL => {
                     let dim = rt.manifest.fedepl_dim;
-                    Ok(Box::new(XlaTrainer::new(rt.clone(), cfg.method, dim, &mut rng)?))
+                    Ok(Box::new(XlaTrainer::new(rt.clone(), params.method, dim, &mut rng)?))
                 }
                 _ => Ok(Box::new(XlaTrainer::new(
                     rt.clone(),
-                    cfg.method,
+                    params.method,
                     rt.manifest.hyper.dim,
                     &mut rng,
                 )?)),
@@ -141,7 +153,7 @@ impl Backend {
             Backend::Native { hyper, eval_batch, .. } => Ok(Box::new(native_trainer(
                 hyper,
                 *eval_batch,
-                cfg,
+                params,
                 num_entities,
                 num_relations,
                 &mut rng,
@@ -153,28 +165,28 @@ impl Backend {
 /// Build one client's pure-Rust trainer.  FedEPL's reduced dimension
 /// (Appendix VI-C) is derived from the **configured** sparsity and sync
 /// interval, so the FedEPL/FedS comparison stays volume-matched for any
-/// `FedRunConfig`, not just the paper defaults.
+/// parameterization, not just the paper defaults.
 fn native_trainer(
     hyper: &Hyper,
     eval_batch: usize,
-    cfg: &FedRunConfig,
+    params: &RoundParams,
     num_entities: usize,
     num_relations: usize,
     rng: &mut Rng,
 ) -> Result<NativeTrainer> {
     anyhow::ensure!(
-        cfg.algo != Algo::FedKd,
+        params.algo != Algo::FedKd,
         "FedE-KD requires the XLA backend (co-distillation artifact)"
     );
-    let hyper = if cfg.algo == Algo::FedEPL {
+    let hyper = if params.algo == Algo::FedEPL {
         Hyper {
-            dim: fedepl_dim(hyper.dim, cfg.sparsity, cfg.sync_interval),
+            dim: fedepl_dim(hyper.dim, params.sparsity, params.sync_interval),
             ..hyper.clone()
         }
     } else {
         hyper.clone()
     };
-    Ok(NativeTrainer::new(cfg.method, hyper, num_entities, num_relations, eval_batch, rng))
+    Ok(NativeTrainer::new(params.method, hyper, num_entities, num_relations, eval_batch, rng))
 }
 
 /// How client-side work executes within a round.
@@ -216,9 +228,9 @@ impl ExecMode {
 /// `svd_cols` is the SVD transport's).  New code should describe runs
 /// with [`crate::spec::ExperimentSpec`] — whose `AlgoSpec` carries only
 /// the selected algorithm's knobs — and execute them through
-/// [`crate::spec::Session`]; this struct survives as the conversion
-/// target ([`crate::spec::ExperimentSpec::run_config`]) the orchestrator
-/// internals still consume.
+/// [`crate::spec::Session`].  This struct is **only** the public shim:
+/// the orchestrator internals consume the resolved [`RoundParams`]
+/// ([`RoundParams::resolve`] is the one conversion point).
 #[derive(Clone, Debug)]
 pub struct FedRunConfig {
     pub algo: Algo,
@@ -287,26 +299,27 @@ pub fn run_federated(
     run_with_observers(data, cfg, backend, &mut [&mut console])
 }
 
-/// The engine entry point: run the round loop, streaming [`RunEvent`]s to
-/// `extra` observers (plus the internal [`HistoryObserver`] that assembles
-/// the outcome's history).
+/// Deprecated-config entry point: resolve the flat config once and run
+/// the engine.
 pub fn run_with_observers(
     data: &FedDataset,
     cfg: &FedRunConfig,
     backend: &Backend,
     extra: &mut [&mut dyn RunObserver],
 ) -> Result<RunOutcome> {
+    run_params(data, &RoundParams::resolve(cfg, backend), backend, extra)
+}
+
+/// The engine entry point: run the round loop over the resolved
+/// parameters, streaming [`RunEvent`]s to `extra` observers (plus the
+/// internal [`HistoryObserver`] that assembles the outcome's history).
+pub fn run_params(
+    data: &FedDataset,
+    params: &RoundParams,
+    backend: &Backend,
+    extra: &mut [&mut dyn RunObserver],
+) -> Result<RunOutcome> {
     let acct = Accounting::new();
-    let exec = match (cfg.exec, backend) {
-        (ExecMode::Threaded, Backend::Xla(_)) => {
-            crate::warn_!(
-                "threaded execution needs Send trainers and the PJRT client is not Send; \
-                 falling back to sequential"
-            );
-            ExecMode::Sequential
-        }
-        (e, _) => e,
-    };
     let mut hist = HistoryObserver::new();
     let width;
     {
@@ -315,9 +328,9 @@ pub fn run_with_observers(
         for o in extra.iter_mut() {
             observers.push(&mut **o);
         }
-        width = match exec {
-            ExecMode::Sequential => run_sequential(data, cfg, backend, &acct, &mut observers)?,
-            ExecMode::Threaded => run_threaded(data, cfg, backend, &acct, &mut observers)?,
+        width = match params.exec {
+            ExecMode::Sequential => run_sequential(data, params, backend, &acct, &mut observers)?,
+            ExecMode::Threaded => run_threaded(data, params, backend, &acct, &mut observers)?,
         };
         emit(
             &mut observers,
@@ -328,9 +341,39 @@ pub fn run_with_observers(
             },
         );
     }
-    let eq5 = matches!(cfg.algo, Algo::FedS { .. })
-        .then(|| comm_ratio(cfg.sparsity, cfg.sync_interval, width));
+    let eq5 = matches!(params.algo, Algo::FedS { .. })
+        .then(|| comm_ratio(params.sparsity, params.sync_interval, width));
     Ok(RunOutcome { history: hist.take(), acct, eq5_ratio: eq5 })
+}
+
+/// The run's link factory: how each client↔server endpoint pair is
+/// established for the selected transport.
+enum LinkFactory {
+    Mpsc,
+    Tcp(TcpTransport),
+}
+
+impl LinkFactory {
+    fn new(transport: TransportSpec) -> Result<Self> {
+        Ok(match transport {
+            TransportSpec::Mpsc => LinkFactory::Mpsc,
+            TransportSpec::Tcp => LinkFactory::Tcp(TcpTransport::bind_loopback()?),
+        })
+    }
+
+    /// One connected (client_end, server_end) pair metering into `acct`.
+    fn pair(&self, acct: &Arc<Accounting>) -> Result<(Box<dyn Endpoint>, Box<dyn Endpoint>)> {
+        Ok(match self {
+            LinkFactory::Mpsc => {
+                let (c, s) = duplex(acct.clone());
+                (Box::new(c) as Box<dyn Endpoint>, Box::new(s) as Box<dyn Endpoint>)
+            }
+            LinkFactory::Tcp(t) => {
+                let (c, s) = t.connect_pair(acct.clone())?;
+                (Box::new(c) as Box<dyn Endpoint>, Box::new(s) as Box<dyn Endpoint>)
+            }
+        })
+    }
 }
 
 /// The server side of a run: aggregation state, the strategy's server
@@ -345,29 +388,32 @@ struct ServerSide {
 
 fn server_side(
     data: &FedDataset,
-    cfg: &FedRunConfig,
+    params: &RoundParams,
     width: usize,
     refs: Vec<Table>,
 ) -> ServerSide {
     let shared: Vec<Vec<u32>> =
         data.clients.iter().map(|c| data.shared_entities_of(c.id)).collect();
-    let server = Server::new(data.num_entities, width, shared);
-    let exchange = exchange::server_half(cfg, width, refs);
+    let server = Server::with_shards(data.num_entities, width, shared, params.shards);
+    let exchange = exchange::server_half(params, width, refs);
     let label = format!(
         "{}-{}-{}c",
-        cfg.algo.label(),
-        cfg.method.name(),
+        params.algo.label(),
+        params.method.name(),
         data.clients.len()
     );
     crate::info!(
-        "run {}: {} clients, {} shared entities, width {}, p={}, s={}, exec {}",
+        "run {}: {} clients, {} shared entities, width {}, p={}, s={}, exec {}, \
+         transport {}, {} server shard(s)",
         label,
         data.clients.len(),
         data.shared.len(),
         width,
-        cfg.sparsity,
-        cfg.sync_interval,
-        cfg.exec.label()
+        params.sparsity,
+        params.sync_interval,
+        params.exec.label(),
+        params.transport.label(),
+        server.num_shards()
     );
     ServerSide { server, exchange, weights: data.test_weights(), label }
 }
@@ -389,27 +435,28 @@ trait ClientPool {
 }
 
 /// Shared server-side round loop: pace the fleet, meter every frame over
-/// the duplex links, aggregate in client-id order for bit-stable results.
+/// the transport links, aggregate in client-id order for bit-stable
+/// results.
 ///
 /// The loop emits typed [`RunEvent`]s instead of assembling history or
-/// printing inline; the [`HistoryObserver`] registered by
-/// [`run_with_observers`] reconstructs exactly the legacy history
-/// (bit-identical records, same convergence index).
+/// printing inline; the [`HistoryObserver`] registered by [`run_params`]
+/// reconstructs exactly the legacy history (bit-identical records, same
+/// convergence index).
 fn drive(
     pool: &mut dyn ClientPool,
     side: &mut ServerSide,
-    links: &[Endpoint],
-    cfg: &FedRunConfig,
+    links: &[Box<dyn Endpoint>],
+    params: &RoundParams,
     acct: &Accounting,
     observers: &mut [&mut dyn RunObserver],
 ) -> Result<()> {
-    let mut es = EarlyStop::new(cfg.patience);
+    let mut es = EarlyStop::new(params.patience);
     let mut n_records = 0usize;
     let mut converged_emitted = false;
-    for round in 1..=cfg.max_rounds {
+    for round in 1..=params.max_rounds {
         emit(observers, &RunEvent::RoundStart { round });
         // --- 1. local training (+ eval) on every client --------------------
-        let eval_round = round % cfg.eval_every == 0;
+        let eval_round = round % params.eval_every == 0;
         let reports = pool.collect_reports(round, eval_round)?;
         let mut loss_sum = 0.0f64;
         let mut loss_n = 0usize;
@@ -460,6 +507,14 @@ fn drive(
                 let msg = Upload::decode(&link.recv()?)?;
                 ex.server_receive(&mut side.server, c as u16, msg)?;
             }
+            // Snapshot the upload-side counters here, where they are
+            // deterministic in both exec modes: every client has sent
+            // exactly `round` uploads and none can start round+1 before
+            // receiving this round's download.  (In threaded mode a fast
+            // client may send its NEXT upload before the Synced emission
+            // below — reading the shared totals there would race.)
+            let up_params = acct.params_dir(Direction::Upload);
+            let up_bytes = acct.bytes_dir(Direction::Upload);
             emit(
                 observers,
                 &RunEvent::UploadAccounted {
@@ -474,16 +529,19 @@ fn drive(
                     continue;
                 }
                 let msg = ex.server_download(round as u32, &mut side.server, c as u16)?;
-                let params = msg.params();
-                link.send(msg.encode(), params)?;
+                let params_count = msg.params();
+                link.send(msg.encode(), params_count)?;
             }
             pool.recv_downloads()?;
+            // Download counters are driver-written only, so combining
+            // them with the pre-download upload snapshot makes Synced
+            // deterministic and identical across exec modes/transports.
             emit(
                 observers,
                 &RunEvent::Synced {
                     round,
-                    params_cum: acct.params(),
-                    bytes_cum: acct.bytes(),
+                    params_cum: up_params + acct.params_dir(Direction::Download),
+                    bytes_cum: up_bytes + acct.bytes_dir(Direction::Download),
                 },
             );
         }
@@ -497,8 +555,8 @@ fn drive(
 }
 
 /// Sequential mode: runners stepped in order on this thread.  The frames
-/// still round-trip through the duplex links, so metering is exactly the
-/// threaded path's.
+/// still round-trip through the transport links, so metering is exactly
+/// the threaded path's.
 struct SeqPool<'r, 'd> {
     runners: &'r mut [ClientRunner<'d>],
 }
@@ -564,24 +622,25 @@ impl ClientPool for ThreadedPool {
 
 fn run_sequential(
     data: &FedDataset,
-    cfg: &FedRunConfig,
+    params: &RoundParams,
     backend: &Backend,
     acct: &Arc<Accounting>,
     observers: &mut [&mut dyn RunObserver],
 ) -> Result<usize> {
     let (batch_size, negatives) = backend.batch_shape();
+    let factory = LinkFactory::new(params.transport)?;
     let mut runners = Vec::with_capacity(data.clients.len());
     let mut links = Vec::with_capacity(data.clients.len());
     for c in &data.clients {
-        let (client_end, server_end) = duplex(acct.clone());
-        let trainer = backend.make_trainer(cfg, data.num_entities, data.num_relations)?;
+        let (client_end, server_end) = factory.pair(acct)?;
+        let trainer = backend.make_trainer(params, data.num_entities, data.num_relations)?;
         runners.push(ClientRunner::build(
-            data, c.id, cfg, trainer, client_end, batch_size, negatives,
+            data, c.id, params, trainer, client_end, batch_size, negatives,
         )?);
         links.push(server_end);
     }
     let width = runners[0].width();
-    let refs: Vec<Table> = if matches!(cfg.algo, Algo::FedSvd { .. }) {
+    let refs: Vec<Table> = if matches!(params.algo, Algo::FedSvd { .. }) {
         runners
             .iter()
             .map(|r| r.reference_table().expect("SVD runner carries a reference table"))
@@ -589,7 +648,7 @@ fn run_sequential(
     } else {
         Vec::new()
     };
-    let mut side = server_side(data, cfg, width, refs);
+    let mut side = server_side(data, params, width, refs);
     emit(
         observers,
         &RunEvent::RunStart {
@@ -599,13 +658,13 @@ fn run_sequential(
         },
     );
     let mut pool = SeqPool { runners: &mut runners };
-    drive(&mut pool, &mut side, &links, cfg, acct, observers)?;
+    drive(&mut pool, &mut side, &links, params, acct, observers)?;
     Ok(width)
 }
 
 fn run_threaded(
     data: &FedDataset,
-    cfg: &FedRunConfig,
+    params: &RoundParams,
     backend: &Backend,
     acct: &Arc<Accounting>,
     observers: &mut [&mut dyn RunObserver],
@@ -613,21 +672,22 @@ fn run_threaded(
     let Backend::Native { hyper, batch, negatives, eval_batch } = backend else {
         anyhow::bail!("threaded execution is native-backend only");
     };
-    let dim = if cfg.algo == Algo::FedEPL {
-        fedepl_dim(hyper.dim, cfg.sparsity, cfg.sync_interval)
+    let dim = if params.algo == Algo::FedEPL {
+        fedepl_dim(hyper.dim, params.sparsity, params.sync_interval)
     } else {
         hyper.dim
     };
-    let width = cfg.method.entity_width(dim);
-    let refs: Vec<Table> = if matches!(cfg.algo, Algo::FedSvd { .. }) {
-        // Probe trainer: every client initializes from the same `cfg.seed`
-        // stream, so one throwaway trainer yields the agreed initial SVD
-        // reference state without touching any client's RNG.
-        let mut probe_rng = Rng::new(cfg.seed);
+    let width = params.method.entity_width(dim);
+    let refs: Vec<Table> = if matches!(params.algo, Algo::FedSvd { .. }) {
+        // Probe trainer: every client initializes from the same
+        // `params.seed` stream, so one throwaway trainer yields the
+        // agreed initial SVD reference state without touching any
+        // client's RNG.
+        let mut probe_rng = Rng::new(params.seed);
         let mut probe = native_trainer(
             hyper,
             *eval_batch,
-            cfg,
+            params,
             data.num_entities,
             data.num_relations,
             &mut probe_rng,
@@ -643,7 +703,7 @@ fn run_threaded(
     } else {
         Vec::new()
     };
-    let mut side = server_side(data, cfg, width, refs);
+    let mut side = server_side(data, params, width, refs);
     emit(
         observers,
         &RunEvent::RunStart {
@@ -653,26 +713,33 @@ fn run_threaded(
         },
     );
 
+    let factory = LinkFactory::new(params.transport)?;
+    // establish every connection before any client thread starts: a
+    // failed connect must surface as an error, not leave already-running
+    // clients blocked on a server that will never drive them
+    let mut pairs = Vec::with_capacity(data.clients.len());
+    for _ in &data.clients {
+        pairs.push(factory.pair(acct)?);
+    }
     std::thread::scope(|s| -> Result<()> {
         let n = data.clients.len();
         let mut links = Vec::with_capacity(n);
         let mut reports = Vec::with_capacity(n);
         let mut verdicts = Vec::with_capacity(n);
         let mut handles = Vec::with_capacity(n);
-        for c in &data.clients {
-            let (client_end, server_end) = duplex(acct.clone());
+        for (c, (client_end, server_end)) in data.clients.iter().zip(pairs) {
             let (rep_tx, rep_rx) = channel();
             let (ver_tx, ver_rx) = channel();
             let id = c.id;
-            let cfg = cfg.clone();
+            let params = params.clone();
             let hyper = hyper.clone();
             let (eval_batch, batch_size, negatives) = (*eval_batch, *batch, *negatives);
             handles.push(s.spawn(move || -> Result<()> {
-                let mut rng = Rng::new(cfg.seed);
+                let mut rng = Rng::new(params.seed);
                 let mut trainer = native_trainer(
                     &hyper,
                     eval_batch,
-                    &cfg,
+                    &params,
                     data.num_entities,
                     data.num_relations,
                     &mut rng,
@@ -684,7 +751,7 @@ fn run_threaded(
                 let runner = ClientRunner::build(
                     data,
                     id,
-                    &cfg,
+                    &params,
                     Box::new(trainer),
                     client_end,
                     batch_size,
@@ -697,7 +764,7 @@ fn run_threaded(
             verdicts.push(ver_tx);
         }
         let mut pool = ThreadedPool { reports, verdicts };
-        let driven = drive(&mut pool, &mut side, &links, cfg, acct, observers);
+        let driven = drive(&mut pool, &mut side, &links, params, acct, observers);
         // Unblock any client still waiting on a verdict or a reply frame
         // before joining, so a server-side error can't deadlock the fleet.
         drop(pool);

@@ -1,0 +1,119 @@
+//! The orchestrator's resolved per-run parameters.
+//!
+//! [`RoundParams`] is derived **once** per run — from a
+//! [`crate::spec::ExperimentSpec`] by [`crate::spec::Session::build`], or
+//! from the deprecated flat [`FedRunConfig`] by [`RoundParams::resolve`]
+//! — and is the only configuration type the orchestrator internals
+//! (`client`, `exchange`, the drivers) consume.  Resolution happens at
+//! derivation, not at use sites: the execution mode is already downgraded
+//! when the backend cannot thread, the transport and server shard count
+//! are concrete values, and every knob is the one the run will actually
+//! honor.  `FedRunConfig` itself survives only as the public shim.
+
+use crate::comm::transport::TransportSpec;
+use crate::kge::Method;
+
+use super::{Algo, Backend, ExecMode, FedRunConfig};
+
+/// Resolved knobs of one federated run (see module docs).
+#[derive(Clone, Debug)]
+pub struct RoundParams {
+    pub algo: Algo,
+    pub method: Method,
+    /// hard cap on communication rounds
+    pub max_rounds: usize,
+    /// local epochs per round (paper default 3)
+    pub local_epochs: usize,
+    /// evaluate every N rounds (paper: every 5)
+    pub eval_every: usize,
+    /// early-stop patience in evaluations (paper: 3)
+    pub patience: usize,
+    /// FedS sparsity ratio p (paper: 0.4, 0.7 for one config)
+    pub sparsity: f64,
+    /// FedS synchronization interval s (paper: 4)
+    pub sync_interval: usize,
+    /// cap on eval queries per client per split (0 = all)
+    pub eval_cap: usize,
+    pub seed: u64,
+    /// columns of the SVD reshape (paper: 8)
+    pub svd_cols: usize,
+    /// client execution mode, already resolved against the backend
+    /// (threaded + PJRT downgrades to sequential at derivation)
+    pub exec: ExecMode,
+    /// which transport carries the frames (accounting is bit-identical
+    /// across variants)
+    pub transport: TransportSpec,
+    /// server aggregation shard count (≥ 1; results are bit-identical
+    /// for any value)
+    pub shards: usize,
+}
+
+impl RoundParams {
+    /// Resolve the deprecated flat config against `backend`.  The legacy
+    /// path always ran in-process links, so the transport stays mpsc;
+    /// the server shard count defaults to the machine's parallelism
+    /// (bit-identical to one shard, see `fed::server`).
+    pub fn resolve(cfg: &FedRunConfig, backend: &Backend) -> Self {
+        let exec = match (cfg.exec, backend) {
+            (ExecMode::Threaded, Backend::Xla(_)) => {
+                crate::warn_!(
+                    "threaded execution needs Send trainers and the PJRT client is not Send; \
+                     falling back to sequential"
+                );
+                ExecMode::Sequential
+            }
+            (e, _) => e,
+        };
+        Self {
+            algo: cfg.algo,
+            method: cfg.method,
+            max_rounds: cfg.max_rounds,
+            local_epochs: cfg.local_epochs,
+            eval_every: cfg.eval_every,
+            patience: cfg.patience,
+            sparsity: cfg.sparsity,
+            sync_interval: cfg.sync_interval,
+            eval_cap: cfg.eval_cap,
+            seed: cfg.seed,
+            svd_cols: cfg.svd_cols,
+            exec,
+            transport: TransportSpec::Mpsc,
+            shards: auto_shards(),
+        }
+    }
+}
+
+/// The default server shard count: one per core, capped — aggregation is
+/// memory-bound well before it scales past a handful of threads.
+pub fn auto_shards() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+        .min(8)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn resolve_copies_every_knob() {
+        let cfg = FedRunConfig {
+            algo: Algo::FedS { sync: false },
+            sparsity: 0.7,
+            sync_interval: 2,
+            max_rounds: 9,
+            exec: ExecMode::Threaded,
+            ..Default::default()
+        };
+        let backend = crate::exp::native_backend();
+        let p = RoundParams::resolve(&cfg, &backend);
+        assert_eq!(p.algo, cfg.algo);
+        assert_eq!(p.sparsity, cfg.sparsity);
+        assert_eq!(p.sync_interval, cfg.sync_interval);
+        assert_eq!(p.max_rounds, cfg.max_rounds);
+        assert_eq!(p.exec, ExecMode::Threaded, "native backend keeps threaded exec");
+        assert_eq!(p.transport, TransportSpec::Mpsc, "legacy path is in-process");
+        assert!(p.shards >= 1);
+    }
+}

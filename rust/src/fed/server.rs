@@ -1,10 +1,25 @@
 //! Server-side state: per-round upload accumulation, FedE-style dense
 //! aggregation, and FedS's personalized aggregation (Eq. 3) + priority
-//! computation (§III-D).
+//! computation (§III-D) — sharded by entity range so heavy rounds
+//! parallelize across OS threads.
 //!
 //! Eq. 3: `A_{c,e}^t = Σ_{i ∈ C_{c,e}^t} E_{i,e}^t` where `C_{c,e}^t` is
 //! the set of clients **other than c** that uploaded entity e this round;
 //! the priority weight `P_{c,e}^t = |C_{c,e}^t|`.
+//!
+//! ## Sharding
+//!
+//! Round state (`sum`/`count`/`dirty`/per-client upload index) is split
+//! into N independent contiguous entity-range shards.  Every entity
+//! belongs to exactly one shard, upload ids arrive ascending, and
+//! download rows leave in shared-list (ascending-id) order, so each
+//! operation decomposes into per-shard work on disjoint state and
+//! disjoint output slices — no locks, and results are **bit-identical
+//! for any shard count** (per-entity accumulation order is the client
+//! call order regardless of sharding; Top-K selection stays global and
+//! single-threaded to preserve the deterministic RNG tie-break stream).
+//! Small rounds stay on the calling thread: threads are only spawned
+//! when a call writes at least [`PAR_MIN_WORK`] output elements.
 
 use std::collections::HashMap;
 
@@ -12,18 +27,41 @@ use crate::util::rng::Rng;
 
 use super::topk::select_by_priority;
 
-pub struct Server {
-    pub num_entities: usize,
-    pub width: usize,
-    /// registered shared-entity lists (sorted global ids), per client
-    pub shared: Vec<Vec<u32>>,
-    /// Σ of all uploads this round, per entity (E × W).  Invariant:
-    /// entities not in `dirty` have an all-zero sum row and a zero count,
-    /// so per-round reset work scales with what was uploaded, not E.
+/// Below this many output elements written per call, per-shard work runs
+/// inline on the calling thread — thread spawn would cost more than it
+/// buys.  (Row gathers count floats, priority fills count counters.)
+pub const PAR_MIN_WORK: usize = 1 << 16;
+
+/// Split `buf` into consecutive segments of `(cuts[s+1] - cuts[s]) * unit`
+/// elements, one per shard — the disjoint output slices the per-shard
+/// fills write into.
+fn split_segments<'a, T>(
+    mut rest: &'a mut [T],
+    cuts: &[usize],
+    unit: usize,
+) -> Vec<&'a mut [T]> {
+    let mut segs = Vec::with_capacity(cuts.len().saturating_sub(1));
+    for s in 0..cuts.len().saturating_sub(1) {
+        let (seg, tail) =
+            std::mem::take(&mut rest).split_at_mut((cuts[s + 1] - cuts[s]) * unit);
+        segs.push(seg);
+        rest = tail;
+    }
+    segs
+}
+
+/// One contiguous entity range `[lo, hi)` of round state.
+struct Shard {
+    lo: usize,
+    hi: usize,
+    /// Σ of all uploads this round for entities in range ((hi-lo) × W).
+    /// Invariant: entities not in `dirty` have an all-zero sum row and a
+    /// zero count, so per-round reset work scales with what was uploaded.
     sum: Vec<f32>,
-    /// number of uploaders this round, per entity
+    /// number of uploaders this round, per in-range entity
     count: Vec<u32>,
-    /// entities with ≥1 upload this round, in first-upload order
+    /// in-range entities (global ids) with ≥1 upload this round, in
+    /// first-upload order
     dirty: Vec<u32>,
     /// this round's per-client uploads: id → row offset in `rows[c]`
     /// (maps and row buffers are cleared, never reallocated, per round)
@@ -31,36 +69,10 @@ pub struct Server {
     rows: Vec<Vec<f32>>,
 }
 
-impl Server {
-    pub fn new(num_entities: usize, width: usize, shared: Vec<Vec<u32>>) -> Self {
-        let n_clients = shared.len();
-        Self {
-            num_entities,
-            width,
-            shared,
-            sum: vec![0.0; num_entities * width],
-            count: vec![0; num_entities],
-            dirty: Vec::new(),
-            uploaded: vec![HashMap::new(); n_clients],
-            rows: vec![Vec::new(); n_clients],
-        }
-    }
-
-    pub fn n_clients(&self) -> usize {
-        self.shared.len()
-    }
-
-    /// Entities uploaded at least once this round.
-    pub fn dirty_len(&self) -> usize {
-        self.dirty.len()
-    }
-
-    /// Clear per-round accumulation state.  O(dirty·width + uploads) —
-    /// only the rows the previous round actually touched are re-zeroed.
-    pub fn begin_round(&mut self) {
-        let w = self.width;
+impl Shard {
+    fn begin_round(&mut self, w: usize) {
         for &id in &self.dirty {
-            let e = id as usize;
+            let e = id as usize - self.lo;
             self.sum[e * w..(e + 1) * w].fill(0.0);
             self.count[e] = 0;
         }
@@ -73,15 +85,10 @@ impl Server {
         }
     }
 
-    /// Accept a client's upload: `ids` (global) with concatenated `rows`.
-    /// Accumulation is slice-wise per row; first touch of an entity this
-    /// round registers it in the dirty list.
-    pub fn receive(&mut self, client: u16, ids: &[u32], rows: &[f32]) {
-        let w = self.width;
-        assert_eq!(rows.len(), ids.len() * w, "upload size mismatch");
-        let c = client as usize;
+    /// Fold `client`'s in-range upload slice into this shard's state.
+    fn receive(&mut self, client: usize, ids: &[u32], rows: &[f32], w: usize) {
         for (k, &id) in ids.iter().enumerate() {
-            let e = id as usize;
+            let e = id as usize - self.lo;
             let row = &rows[k * w..(k + 1) * w];
             if self.count[e] == 0 {
                 self.dirty.push(id);
@@ -91,9 +98,216 @@ impl Server {
             for (d, &v) in dst.iter_mut().zip(row) {
                 *d += v;
             }
-            self.uploaded[c].insert(id, self.rows[c].len());
-            self.rows[c].extend_from_slice(row);
+            self.uploaded[client].insert(id, self.rows[client].len());
+            self.rows[client].extend_from_slice(row);
         }
+    }
+
+    /// FedE means for the in-range slice of a client's shared list.
+    fn fill_mean(&self, ids: &[u32], out: &mut [f32], w: usize) {
+        for (k, &id) in ids.iter().enumerate() {
+            let e = id as usize - self.lo;
+            let n = self.count[e].max(1) as f32;
+            let src = &self.sum[e * w..(e + 1) * w];
+            for (o, &s) in out[k * w..(k + 1) * w].iter_mut().zip(src) {
+                *o = s / n;
+            }
+        }
+    }
+
+    /// §III-D priorities (own upload excluded) for the in-range slice.
+    fn fill_prios(&self, client: usize, ids: &[u32], out: &mut [u32]) {
+        for (k, &id) in ids.iter().enumerate() {
+            let own = u32::from(self.uploaded[client].contains_key(&id));
+            out[k] = self.count[id as usize - self.lo] - own;
+        }
+    }
+
+    /// Gather the Eq. 3 aggregates (own contribution excluded) for the
+    /// selected in-range entities, in shared-list order.
+    #[allow(clippy::too_many_arguments)]
+    fn fill_selected(
+        &self,
+        client: usize,
+        ids: &[u32],
+        selected: &[bool],
+        prios: &[u32],
+        rows_out: &mut [f32],
+        prio_out: &mut [u32],
+        w: usize,
+    ) {
+        let mut j = 0usize;
+        for (i, &id) in ids.iter().enumerate() {
+            if !selected[i] {
+                continue;
+            }
+            let e = id as usize - self.lo;
+            let out = &mut rows_out[j * w..(j + 1) * w];
+            out.copy_from_slice(&self.sum[e * w..(e + 1) * w]);
+            if let Some(&off) = self.uploaded[client].get(&id) {
+                let own = &self.rows[client][off..off + w];
+                for (o, &v) in out.iter_mut().zip(own) {
+                    *o -= v;
+                }
+            }
+            prio_out[j] = prios[i];
+            j += 1;
+        }
+        debug_assert_eq!(j * w, rows_out.len());
+    }
+}
+
+pub struct Server {
+    pub num_entities: usize,
+    pub width: usize,
+    /// registered shared-entity lists (sorted global ids), per client
+    pub shared: Vec<Vec<u32>>,
+    shards: Vec<Shard>,
+    /// parallelism gate, in output elements per call (see [`PAR_MIN_WORK`])
+    par_min_work: usize,
+}
+
+impl Server {
+    pub fn new(num_entities: usize, width: usize, shared: Vec<Vec<u32>>) -> Self {
+        Self::with_shards(num_entities, width, shared, 1)
+    }
+
+    /// Build with `n_shards` entity-range shards (clamped to ≥ 1 and to
+    /// the entity count).  Results are bit-identical for any value; only
+    /// the available parallelism changes.
+    pub fn with_shards(
+        num_entities: usize,
+        width: usize,
+        shared: Vec<Vec<u32>>,
+        n_shards: usize,
+    ) -> Self {
+        let n = n_shards.clamp(1, num_entities.max(1));
+        let n_clients = shared.len();
+        let shards = (0..n)
+            .map(|s| {
+                let lo = s * num_entities / n;
+                let hi = (s + 1) * num_entities / n;
+                Shard {
+                    lo,
+                    hi,
+                    sum: vec![0.0; (hi - lo) * width],
+                    count: vec![0; hi - lo],
+                    dirty: Vec::new(),
+                    uploaded: vec![HashMap::new(); n_clients],
+                    rows: vec![Vec::new(); n_clients],
+                }
+            })
+            .collect();
+        Self { num_entities, width, shared, shards, par_min_work: PAR_MIN_WORK }
+    }
+
+    pub fn n_clients(&self) -> usize {
+        self.shared.len()
+    }
+
+    pub fn num_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Override the inline-vs-threads work threshold (output elements per
+    /// call).  `0` forces the threaded path — tests and benches use this
+    /// to exercise or isolate the parallel code on small inputs.
+    pub fn set_parallel_threshold(&mut self, elements: usize) {
+        self.par_min_work = elements;
+    }
+
+    /// Entities uploaded at least once this round.
+    pub fn dirty_len(&self) -> usize {
+        self.shards.iter().map(|s| s.dirty.len()).sum()
+    }
+
+    /// The per-shard contiguous subranges of an ascending id list:
+    /// `cuts[s]..cuts[s+1]` indexes the ids owned by shard `s`.
+    fn cuts(&self, ids: &[u32]) -> Vec<usize> {
+        debug_assert!(ids.windows(2).all(|p| p[0] < p[1]), "id lists must ascend");
+        let mut cuts = Vec::with_capacity(self.shards.len() + 1);
+        cuts.push(0);
+        for shard in &self.shards {
+            cuts.push(ids.partition_point(|&id| (id as usize) < shard.hi));
+        }
+        cuts
+    }
+
+    /// Run `run(s, shard, payload)` for every shard, handing shard `s`
+    /// the s-th payload (typically its disjoint output segment from
+    /// [`split_segments`]).  Threads are spawned only when the call
+    /// writes at least `work` ≥ the parallel threshold; the inline path
+    /// is identical in every other respect.
+    fn run_sharded<P: Send>(
+        &self,
+        work: usize,
+        payloads: Vec<P>,
+        run: impl Fn(usize, &Shard, P) + Sync,
+    ) {
+        debug_assert_eq!(payloads.len(), self.shards.len());
+        if self.shards.len() > 1 && work >= self.par_min_work {
+            std::thread::scope(|scope| {
+                for ((s, shard), payload) in self.shards.iter().enumerate().zip(payloads) {
+                    let run = &run;
+                    scope.spawn(move || run(s, shard, payload));
+                }
+            });
+        } else {
+            for ((s, shard), payload) in self.shards.iter().enumerate().zip(payloads) {
+                run(s, shard, payload);
+            }
+        }
+    }
+
+    /// [`Server::run_sharded`] for mutating operations (`receive`): same
+    /// gate, same inline fallback, `&mut Shard` access.
+    fn run_sharded_mut<P: Send>(
+        &mut self,
+        work: usize,
+        payloads: Vec<P>,
+        run: impl Fn(&mut Shard, P) + Sync,
+    ) {
+        debug_assert_eq!(payloads.len(), self.shards.len());
+        if self.shards.len() > 1 && work >= self.par_min_work {
+            std::thread::scope(|scope| {
+                for (shard, payload) in self.shards.iter_mut().zip(payloads) {
+                    let run = &run;
+                    scope.spawn(move || run(shard, payload));
+                }
+            });
+        } else {
+            for (shard, payload) in self.shards.iter_mut().zip(payloads) {
+                run(shard, payload);
+            }
+        }
+    }
+
+    /// Clear per-round accumulation state.  O(dirty·width + uploads) —
+    /// only the rows the previous round actually touched are re-zeroed.
+    pub fn begin_round(&mut self) {
+        let w = self.width;
+        for shard in &mut self.shards {
+            shard.begin_round(w);
+        }
+    }
+
+    /// Accept a client's upload: ascending `ids` (global) with
+    /// concatenated `rows`.  Accumulation is slice-wise per row; first
+    /// touch of an entity this round registers it in its shard's dirty
+    /// list.  Shards fold their id subranges in parallel on large
+    /// uploads — bit-identical to the inline path, since every entity's
+    /// accumulation order is the per-client call order either way.
+    pub fn receive(&mut self, client: u16, ids: &[u32], rows: &[f32]) {
+        let w = self.width;
+        assert_eq!(rows.len(), ids.len() * w, "upload size mismatch");
+        let c = client as usize;
+        let cuts = self.cuts(ids);
+        let payloads: Vec<(&[u32], &[f32])> = (0..cuts.len() - 1)
+            .map(|s| (&ids[cuts[s]..cuts[s + 1]], &rows[cuts[s] * w..cuts[s + 1] * w]))
+            .collect();
+        self.run_sharded_mut(ids.len() * w, payloads, |shard, (ids, rows)| {
+            shard.receive(c, ids, rows, w);
+        });
     }
 
     /// Accept a dense upload covering every registered shared entity of
@@ -106,20 +320,17 @@ impl Server {
     }
 
     /// Dense FedE aggregation for client `c`: the average over ALL
-    /// uploaders of each of c's shared entities (c included).  Entities
-    /// nobody uploaded keep... that cannot happen on dense rounds (every
-    /// owner uploads); they fall back to zero-count guard anyway.
+    /// uploaders of each of c's shared entities (c included), computed
+    /// per shard into disjoint output slices.
     pub fn fede_download(&self, c: u16) -> Vec<f32> {
         let w = self.width;
         let ids = &self.shared[c as usize];
         let mut out = vec![0.0f32; ids.len() * w];
-        for (k, &id) in ids.iter().enumerate() {
-            let e = id as usize;
-            let n = self.count[e].max(1) as f32;
-            for j in 0..w {
-                out[k * w + j] = self.sum[e * w + j] / n;
-            }
-        }
+        let cuts = self.cuts(ids);
+        let segs = split_segments(&mut out, &cuts, w);
+        self.run_sharded(ids.len() * w, segs, |s, shard, seg| {
+            shard.fill_mean(&ids[cuts[s]..cuts[s + 1]], seg, w);
+        });
         out
     }
 
@@ -128,7 +339,9 @@ impl Server {
     /// Returns `(sign, rows, prio)`: `sign[i]` marks the i-th entity of
     /// c's shared list as selected; `rows` holds the aggregated SUMS
     /// (Eq. 3, own contribution excluded) of the selected entities in
-    /// shared-list order; `prio[i]` the matching |C_{c,e}|.
+    /// shared-list order; `prio[i]` the matching |C_{c,e}|.  Priority
+    /// computation and the row gather run per shard; the Top-K selection
+    /// itself stays global so the RNG tie-break stream is unchanged.
     pub fn feds_download(
         &self,
         c: u16,
@@ -138,15 +351,18 @@ impl Server {
         let w = self.width;
         let ci = c as usize;
         let ids = &self.shared[ci];
+        let cuts = self.cuts(ids);
 
-        // personalized priorities: exclude c's own upload
-        let prios: Vec<u32> = ids
-            .iter()
-            .map(|&id| {
-                let own = u32::from(self.uploaded[ci].contains_key(&id));
-                self.count[id as usize] - own
-            })
-            .collect();
+        // personalized priorities: exclude c's own upload.  The work
+        // measure is the counters written (NOT scaled by width — the
+        // rows aren't touched here), so small fills stay inline.
+        let mut prios = vec![0u32; ids.len()];
+        {
+            let segs = split_segments(&mut prios, &cuts, 1);
+            self.run_sharded(ids.len(), segs, |s, shard, seg| {
+                shard.fill_prios(ci, &ids[cuts[s]..cuts[s + 1]], seg);
+            });
+        }
 
         let sel = select_by_priority(&prios, k, rng);
         let mut selected = vec![false; ids.len()];
@@ -154,22 +370,24 @@ impl Server {
             selected[i] = true;
         }
 
-        let mut rows = Vec::with_capacity(sel.len() * w);
-        let mut prio_out = Vec::with_capacity(sel.len());
-        for (i, &id) in ids.iter().enumerate() {
-            if !selected[i] {
-                continue;
-            }
-            let e = id as usize;
-            let mut row: Vec<f32> = self.sum[e * w..(e + 1) * w].to_vec();
-            if let Some(&off) = self.uploaded[ci].get(&id) {
-                let own = &self.rows[ci][off..off + w];
-                for j in 0..w {
-                    row[j] -= own[j];
-                }
-            }
-            rows.extend_from_slice(&row);
-            prio_out.push(prios[i]);
+        // shared-list order groups selected rows contiguously by shard
+        let mut sel_cuts = Vec::with_capacity(cuts.len());
+        sel_cuts.push(0usize);
+        for s in 0..self.shards.len() {
+            let n = selected[cuts[s]..cuts[s + 1]].iter().filter(|&&x| x).count();
+            sel_cuts.push(sel_cuts[s] + n);
+        }
+        let n_sel = *sel_cuts.last().unwrap();
+        let mut rows = vec![0.0f32; n_sel * w];
+        let mut prio_out = vec![0u32; n_sel];
+        {
+            let rsegs = split_segments(&mut rows, &sel_cuts, w);
+            let psegs = split_segments(&mut prio_out, &sel_cuts, 1);
+            let segs: Vec<(&mut [f32], &mut [u32])> = rsegs.into_iter().zip(psegs).collect();
+            self.run_sharded(n_sel * w, segs, |s, shard, (rseg, pseg)| {
+                let (a, b) = (cuts[s], cuts[s + 1]);
+                shard.fill_selected(ci, &ids[a..b], &selected[a..b], &prios[a..b], rseg, pseg, w);
+            });
         }
         (selected, rows, prio_out)
     }
@@ -178,6 +396,7 @@ impl Server {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::prop::check;
 
     fn server2() -> Server {
         // 2 clients, entities {0,1,2} shared by both; width 2
@@ -293,5 +512,90 @@ mod tests {
         // entities 0,1 have priority 2; entities 2,3 priority 1 → top-2 = {0,1}
         assert_eq!(sign, vec![true, true, false, false]);
         assert_eq!(prio, vec![2, 2]);
+    }
+
+    #[test]
+    fn shard_ranges_cover_all_entities_exactly_once() {
+        for (e, n) in [(10usize, 3usize), (7, 7), (5, 9), (100, 8), (1, 4)] {
+            let s = Server::with_shards(e, 1, vec![vec![]], n);
+            assert!(s.num_shards() >= 1 && s.num_shards() <= e.max(1));
+            let mut covered = 0usize;
+            let mut prev_hi = 0usize;
+            for shard in &s.shards {
+                assert_eq!(shard.lo, prev_hi, "ranges must be contiguous");
+                covered += shard.hi - shard.lo;
+                prev_hi = shard.hi;
+            }
+            assert_eq!(prev_hi, e);
+            assert_eq!(covered, e);
+        }
+    }
+
+    /// Property: for random upload patterns, every shard count — inline
+    /// or forced-threaded — yields bit-identical dense means, sparse
+    /// downloads, priorities and dirty counts to the single-shard server.
+    #[test]
+    fn sharded_servers_match_single_shard_bit_exactly() {
+        check("server_shard_equivalence", 25, |rng| {
+            let e = 16 + rng.usize_below(120);
+            let w = 1 + rng.usize_below(6);
+            let n_clients = 2 + rng.usize_below(4);
+            // ascending shared lists, one per client
+            let shared: Vec<Vec<u32>> = (0..n_clients)
+                .map(|_| {
+                    (0..e as u32).filter(|_| rng.bool(0.5)).collect::<Vec<u32>>()
+                })
+                .collect();
+            // one round of uploads: a random ascending subset per client
+            let uploads: Vec<(Vec<u32>, Vec<f32>)> = shared
+                .iter()
+                .map(|ids| {
+                    let up: Vec<u32> = ids.iter().copied().filter(|_| rng.bool(0.6)).collect();
+                    let rows: Vec<f32> =
+                        (0..up.len() * w).map(|_| rng.uniform(-3.0, 3.0)).collect();
+                    (up, rows)
+                })
+                .collect();
+            let k = 1 + rng.usize_below(e);
+            let seed = rng.next_u64();
+
+            let run = |n_shards: usize, force_threads: bool| {
+                let mut s = Server::with_shards(e, w, shared.clone(), n_shards);
+                if force_threads {
+                    s.set_parallel_threshold(0);
+                }
+                s.begin_round();
+                for (c, (ids, rows)) in uploads.iter().enumerate() {
+                    s.receive(c as u16, ids, rows);
+                }
+                let mut drng = Rng::new(seed);
+                let mut out = Vec::new();
+                for c in 0..n_clients as u16 {
+                    out.push((s.fede_download(c), s.feds_download(c, k, &mut drng)));
+                }
+                (s.dirty_len(), out)
+            };
+
+            let baseline = run(1, false);
+            for n_shards in [2usize, 3, 8, 64] {
+                for force in [false, true] {
+                    let got = run(n_shards, force);
+                    assert_eq!(
+                        baseline.0, got.0,
+                        "dirty_len diverged at {n_shards} shards (threads: {force})"
+                    );
+                    for (c, (base, shard)) in baseline.1.iter().zip(&got.1).enumerate() {
+                        assert_eq!(base.0, shard.0, "fede_download c{c} @ {n_shards} shards");
+                        assert_eq!(base.1 .0, shard.1 .0, "sign c{c} @ {n_shards} shards");
+                        assert_eq!(
+                            base.1 .1.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                            shard.1 .1.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                            "rows c{c} @ {n_shards} shards"
+                        );
+                        assert_eq!(base.1 .2, shard.1 .2, "prio c{c} @ {n_shards} shards");
+                    }
+                }
+            }
+        });
     }
 }

@@ -32,13 +32,20 @@
 //!   native oracle, PJRT-backed XLA trainers, and the KD transport.
 //! * [`fed`] — the federated layer: Entity-Wise Top-K (`fed::topk`,
 //!   partial selection both directions), dirty-entity-tracked server
-//!   aggregation (`fed::server`), wire protocol (`fed::protocol`), and
-//!   the message-driven orchestrator (`fed::orchestrator`) with its
-//!   per-algorithm `Exchange` strategies and sequential/threaded drivers.
+//!   aggregation sharded by entity range (`fed::server`, bit-identical
+//!   for any shard count), wire protocol (`fed::protocol`), and the
+//!   message-driven orchestrator (`fed::orchestrator`) with its
+//!   per-algorithm `Exchange` strategies, sequential/threaded drivers,
+//!   and the resolved per-run `RoundParams` its internals consume.
 //!   The round loop emits typed events rather than printing or assembling
 //!   results inline.
-//! * [`comm`] — framed transport, byte/parameter accounting, bandwidth
-//!   models.
+//! * [`comm`] — the transport trait hierarchy and accounting:
+//!   `comm::transport::Endpoint` is the metered link seam with two
+//!   implementations — in-process mpsc duplexes (`transport::mpsc`) and
+//!   length-prefixed TCP loopback sockets (`transport::tcp`) — selected
+//!   per run by `TransportSpec` (`--transport`), with byte/parameter
+//!   accounting bit-identical across transports; plus the wire codec
+//!   (`comm::wire`, stream framing included) and bandwidth models.
 //! * [`data`] — KG generation, federated partitioning, batch/eval sets.
 //! * [`metrics`] — rank metrics, early stopping, run history, and the
 //!   observer pipeline (`metrics::observe`): `RunEvent`/`RunObserver`

@@ -19,12 +19,14 @@ use anyhow::Result;
 
 use feds::data::generator::generate;
 use feds::data::partition::partition;
-use feds::exp::sweep::{grid_report, run_sweep, SweepSpec};
+use feds::exp::sweep::{grid_report, resume_point, run_sweep, run_sweep_from, SweepSpec};
 use feds::exp::{self, Ctx};
 use feds::fed::{comm_ratio, run_federated, Algo, ExecMode, FedRunConfig, RunOutcome};
 use feds::kge::Method;
 use feds::metrics::observe::JsonlSink;
-use feds::spec::{AlgoSpec, BackendSpec, BudgetSpec, DataSpec, ExperimentSpec, Session};
+use feds::spec::{
+    AlgoSpec, BackendSpec, BudgetSpec, DataSpec, ExperimentSpec, Session, TransportSpec,
+};
 use feds::util::cli::{Cli, CliError};
 
 /// How a command ends without succeeding.
@@ -148,6 +150,8 @@ const OVERRIDE_FLAGS: &[(&str, &str)] = &[
     ("batch", "backend.batch"),
     ("seed", "seed"),
     ("exec", "exec"),
+    ("transport", "transport"),
+    ("shards", "shards"),
 ];
 
 fn override_opts(mut cli: Cli) -> Cli {
@@ -171,7 +175,9 @@ fn override_opts(mut cli: Cli) -> Cli {
         .opt("dim", "32", "native embedding dimension")
         .opt("batch", "128", "native training batch size")
         .opt("seed", "64501", "experiment seed")
-        .opt("exec", "seq", "client execution: seq|threaded (threaded is native-only)");
+        .opt("exec", "seq", "client execution: seq|threaded (threaded is native-only)")
+        .opt("transport", "mpsc", "frame transport: mpsc|tcp (loopback sockets)")
+        .opt("shards", "0", "server aggregation shards (0 = auto: one per core, capped)");
     cli
 }
 
@@ -200,6 +206,8 @@ fn default_spec() -> ExperimentSpec {
         },
         seed: 64501,
         exec: ExecMode::Sequential,
+        transport: TransportSpec::Mpsc,
+        shards: 0,
     }
 }
 
@@ -296,6 +304,11 @@ fn sweep_cli() -> Cli {
     ))
     .opt("spec", "", "path to a SweepSpec JSON file (required)")
     .opt("jsonl", "", "stream all runs' events to this JSONL file")
+    .flag(
+        "resume",
+        "skip cells whose runs already completed in the --jsonl stream (counted by \
+         run_end events) and append the remaining cells to it",
+    )
 }
 
 fn cmd_sweep(args: &[String]) -> Result<(), Failure> {
@@ -316,12 +329,33 @@ fn cmd_sweep(args: &[String]) -> Result<(), Failure> {
 
     let mut session = Session::new();
     let jsonl = m.get("jsonl").map_err(Failure::Usage)?;
+    let resume = m.flag("resume");
+    if resume && jsonl.is_empty() {
+        return Err(Failure::Usage(format!(
+            "--resume needs the sweep's --jsonl stream to know which cells completed\n\n{}",
+            cli.usage()
+        )));
+    }
     let grid = if jsonl.is_empty() {
         run_sweep(&mut session, &sweep, &mut [])?
+    } else if resume {
+        let path = Path::new(jsonl);
+        let skip = resume_point(&sweep, path)?;
+        let mut sink = JsonlSink::append(path)?;
+        run_sweep_from(&mut session, &sweep, skip, &mut [&mut sink])?
     } else {
         let mut sink = JsonlSink::create(Path::new(jsonl))?;
         run_sweep(&mut session, &sweep, &mut [&mut sink])?
     };
+    if grid.cells.is_empty() {
+        // a fully-resumed sweep: nothing ran, so don't overwrite the
+        // saved report with an empty table
+        println!(
+            "sweep '{}' already complete ({} cells recorded in {jsonl}); nothing to run",
+            grid.name, grid.start
+        );
+        return Ok(());
+    }
     let rep = grid_report(&grid);
     rep.save(&exp::reports_dir())?;
     Ok(())

@@ -218,6 +218,38 @@ impl JsonlSink<std::io::BufWriter<std::fs::File>> {
         let f = std::fs::File::create(path)?;
         Ok(Self::new(std::io::BufWriter::new(f)))
     }
+
+    /// Append to an existing stream (creating it when absent) — the
+    /// resumable-sweep mode, where completed runs' events must survive.
+    /// If the file ends mid-line (a crashed run), a newline is inserted
+    /// first so the partial line cannot corrupt the next event.
+    pub fn append(path: &Path) -> anyhow::Result<Self> {
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)?;
+            }
+        }
+        let needs_newline = {
+            use std::io::{Read as _, Seek as _, SeekFrom};
+            std::fs::File::open(path)
+                .ok()
+                .and_then(|mut f| {
+                    if f.seek(SeekFrom::End(0)).ok()? == 0 {
+                        return Some(false);
+                    }
+                    f.seek(SeekFrom::End(-1)).ok()?;
+                    let mut last = [0u8; 1];
+                    f.read_exact(&mut last).ok()?;
+                    Some(last[0] != b'\n')
+                })
+                .unwrap_or(false)
+        };
+        let mut f = std::fs::OpenOptions::new().create(true).append(true).open(path)?;
+        if needs_newline {
+            f.write_all(b"\n")?;
+        }
+        Ok(Self::new(std::io::BufWriter::new(f)))
+    }
 }
 
 impl<W: Write> JsonlSink<W> {

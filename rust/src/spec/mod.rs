@@ -9,13 +9,14 @@
 //! bare.  Specs validate on construction-from-JSON and before every build,
 //! round-trip exactly through [`crate::util::json::Json`], and support
 //! dotted-key overrides (`"algo.sparsity"`, `"data.clients"`,
-//! `"budget.max_rounds"`) — the one mechanism behind both CLI flag
-//! overrides and sweep axes (`crate::exp::sweep`).
+//! `"budget.max_rounds"`, `"transport"`, `"shards"`) — the one mechanism
+//! behind both CLI flag overrides and sweep axes (`crate::exp::sweep`).
 //!
-//! The legacy flat [`FedRunConfig`] survives only as a deprecated
-//! conversion target ([`ExperimentSpec::run_config`] /
-//! [`AlgoSpec::from_legacy`]); new code should build specs and run them
-//! through [`Session`].
+//! The legacy flat [`FedRunConfig`] survives only as the deprecated
+//! public shim ([`ExperimentSpec::run_config`] /
+//! [`AlgoSpec::from_legacy`]); the orchestrator internals consume the
+//! resolved [`crate::fed::RoundParams`].  New code should build specs and
+//! run them through [`Session`].
 
 pub mod session;
 
@@ -28,6 +29,8 @@ use crate::data::partition::{partition, FedDataset};
 use crate::fed::{Algo, ExecMode, FedRunConfig};
 use crate::kge::Method;
 use crate::util::json::Json;
+
+pub use crate::comm::transport::TransportSpec;
 
 /// Seeds ride in JSON numbers (f64), which are exact only up to 2^53;
 /// larger seeds would silently corrupt on a round-trip, so validation
@@ -485,6 +488,12 @@ pub struct ExperimentSpec {
     /// experiment seed (client RNG streams; independent of `data.seed`)
     pub seed: u64,
     pub exec: ExecMode,
+    /// which transport carries the frames (mpsc or TCP loopback) —
+    /// accounting and metrics are bit-identical across variants
+    pub transport: TransportSpec,
+    /// server aggregation shards (0 = auto: one per core, capped);
+    /// results are bit-identical for any value
+    pub shards: usize,
 }
 
 impl ExperimentSpec {
@@ -506,10 +515,14 @@ impl ExperimentSpec {
         Ok(())
     }
 
-    /// Resolve to the deprecated flat config the orchestrator internals
-    /// still consume.  Knobs a variant does not own take the legacy
-    /// defaults (so e.g. FedEPL's volume-matched dimension derives from
-    /// the paper-default p=0.4, s=4 — exactly the legacy behaviour).
+    /// Resolve to the deprecated flat config — the public shim form, and
+    /// the input [`crate::fed::RoundParams::resolve`] derives the
+    /// orchestrator's resolved parameters from.  Knobs a variant does not
+    /// own take the legacy defaults (so e.g. FedEPL's volume-matched
+    /// dimension derives from the paper-default p=0.4, s=4 — exactly the
+    /// legacy behaviour).  `transport`/`shards` are spec-only fields the
+    /// flat config cannot carry; [`Session::build`] overlays them onto
+    /// the resolved params.
     pub fn run_config(&self) -> FedRunConfig {
         let d = FedRunConfig::default();
         let (sparsity, sync_interval, svd_cols) = match &self.algo {
@@ -553,6 +566,8 @@ impl ExperimentSpec {
             },
             seed: cfg.seed,
             exec: cfg.exec,
+            transport: TransportSpec::Mpsc,
+            shards: 0,
         }
     }
 
@@ -568,6 +583,8 @@ impl ExperimentSpec {
             .set("budget", self.budget.to_json())
             .set("seed", self.seed)
             .set("exec", self.exec.label())
+            .set("transport", self.transport.label())
+            .set("shards", self.shards)
     }
 
     pub fn from_json(v: &Json) -> Result<ExperimentSpec> {
@@ -596,6 +613,13 @@ impl ExperimentSpec {
                 )?,
                 None => ExecMode::Sequential,
             },
+            transport: match v.get("transport") {
+                Some(t) => TransportSpec::parse(
+                    t.as_str().ok_or_else(|| anyhow::anyhow!("transport must be a string"))?,
+                )?,
+                None => TransportSpec::Mpsc,
+            },
+            shards: opt_count(v, "shards")?.unwrap_or(0),
         };
         spec.validate()?;
         Ok(spec)
@@ -634,6 +658,14 @@ impl ExperimentSpec {
                     value.as_str().ok_or_else(|| anyhow::anyhow!("exec must be a string"))?,
                 )?;
             }
+            "transport" => {
+                self.transport = TransportSpec::parse(
+                    value
+                        .as_str()
+                        .ok_or_else(|| anyhow::anyhow!("transport must be a string"))?,
+                )?;
+            }
+            "shards" => self.shards = count_of(value, key)?,
             "seed" => self.seed = count_of(value, key)? as u64,
             "algo" => self.algo = AlgoSpec::from_json(value)?,
             "algo.sparsity" => match &mut self.algo {
@@ -783,6 +815,8 @@ mod tests {
             },
             seed: 7,
             exec: ExecMode::Sequential,
+            transport: TransportSpec::Mpsc,
+            shards: 0,
         }
     }
 
@@ -888,6 +922,39 @@ mod tests {
         assert_eq!(spec.backend, before, "--backend native must not reset native knobs");
         spec.apply("backend", &Json::from("xla")).unwrap();
         assert_eq!(spec.backend, BackendSpec::Xla, "kind changes still switch backends");
+    }
+
+    #[test]
+    fn transport_and_shards_round_trip_and_override() {
+        let mut spec = tiny_spec();
+        spec.transport = TransportSpec::Tcp;
+        spec.shards = 4;
+        let rt = ExperimentSpec::parse(&spec.to_json().to_string()).unwrap();
+        assert_eq!(rt.transport, TransportSpec::Tcp);
+        assert_eq!(rt.shards, 4);
+        assert_eq!(spec, rt);
+
+        let mut spec = tiny_spec();
+        assert_eq!(spec.transport, TransportSpec::Mpsc, "mpsc is the default");
+        spec.apply("transport", &Json::from("tcp")).unwrap();
+        assert_eq!(spec.transport, TransportSpec::Tcp);
+        spec.apply("shards", &Json::from(8usize)).unwrap();
+        assert_eq!(spec.shards, 8);
+        assert!(spec.apply("transport", &Json::from("carrier-pigeon")).is_err());
+        assert!(spec.apply("shards", &Json::Num(2.5)).is_err(), "fractional shards rejected");
+
+        // a spec file without the keys parses to the defaults
+        let j = tiny_spec().to_json();
+        let Json::Obj(entries) = j else { panic!() };
+        let trimmed = Json::Obj(
+            entries
+                .into_iter()
+                .filter(|(k, _)| k != "transport" && k != "shards")
+                .collect(),
+        );
+        let rt = ExperimentSpec::from_json(&trimmed).unwrap();
+        assert_eq!(rt.transport, TransportSpec::Mpsc);
+        assert_eq!(rt.shards, 0);
     }
 
     #[test]

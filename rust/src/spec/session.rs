@@ -14,8 +14,8 @@ use std::rc::Rc;
 use anyhow::Result;
 
 use crate::data::partition::FedDataset;
-use crate::fed::orchestrator::run_with_observers;
-use crate::fed::{Backend, FedRunConfig, RunOutcome};
+use crate::fed::orchestrator::run_params;
+use crate::fed::{Backend, FedRunConfig, RoundParams, RunOutcome};
 use crate::kge::Hyper;
 use crate::metrics::observe::{ConsoleObserver, RunObserver};
 use crate::runtime::Runtime;
@@ -70,8 +70,16 @@ impl Session {
             }
         };
         let data = spec.data.build();
+        // the one derivation point: resolve the flat knobs against the
+        // backend, then overlay the spec-only fields the deprecated
+        // config cannot carry
+        let mut params = RoundParams::resolve(&spec.run_config(), &backend);
+        params.transport = spec.transport;
+        if spec.shards > 0 {
+            params.shards = spec.shards;
+        }
         Ok(Run {
-            cfg: spec.run_config(),
+            params,
             spec: spec.clone(),
             data,
             backend,
@@ -84,7 +92,7 @@ impl Session {
 /// One executable experiment: dataset + backend + observers.
 pub struct Run {
     spec: ExperimentSpec,
-    cfg: FedRunConfig,
+    params: RoundParams,
     data: FedDataset,
     backend: Backend,
     observers: Vec<Box<dyn RunObserver>>,
@@ -113,9 +121,16 @@ impl Run {
         &self.data
     }
 
-    /// The resolved (deprecated-flat) config this run will execute.
-    pub fn config(&self) -> &FedRunConfig {
-        &self.cfg
+    /// The resolved parameters this run will execute.
+    pub fn params(&self) -> &RoundParams {
+        &self.params
+    }
+
+    /// The deprecated flat view of this run's knobs (compatibility
+    /// accessor; `transport`/`shards` are not representable here — read
+    /// them from [`Run::params`]).
+    pub fn config(&self) -> FedRunConfig {
+        self.spec.run_config()
     }
 
     /// Execute the round loop, streaming events to the registered
@@ -139,6 +154,6 @@ impl Run {
         for o in extra.iter_mut() {
             refs.push(&mut **o);
         }
-        run_with_observers(&self.data, &self.cfg, &self.backend, &mut refs)
+        run_params(&self.data, &self.params, &self.backend, &mut refs)
     }
 }

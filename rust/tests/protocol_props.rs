@@ -2,8 +2,9 @@
 //! aggregation conservation, sign/row consistency, Eq. 4 merge algebra,
 //! sync cycle structure, and failure injection on the wire.
 
-use feds::comm::accounting::Accounting;
-use feds::comm::transport::duplex;
+use feds::comm::accounting::{Accounting, Direction};
+use feds::comm::transport::{duplex, Endpoint, TcpTransport};
+use feds::comm::wire::{read_frame, write_frame};
 use feds::fed::protocol::{Download, Upload};
 use feds::fed::topk::{select_by_change, select_by_priority, top_k_count};
 use feds::fed::{Server, SyncSchedule};
@@ -274,7 +275,6 @@ fn sparse_messages_roundtrip_the_wire() {
 /// paper-parameter count and the bit-packed byte size, in both directions.
 #[test]
 fn endpoint_meters_sparse_frames_exactly() {
-    use feds::comm::accounting::Direction;
     check("sparse_endpoint_metering", 30, |rng| {
         let n = 1 + rng.usize_below(128);
         let w = 1 + rng.usize_below(8);
@@ -296,5 +296,136 @@ fn endpoint_meters_sparse_frames_exactly() {
         assert_eq!(acct.params_dir(Direction::Download), down.params());
         assert_eq!(acct.bytes_dir(Direction::Upload), up.encode().len() as u64);
         assert_eq!(acct.bytes_dir(Direction::Download), down.encode().len() as u64);
+    });
+}
+
+/// A `Read` that returns at most `cap` bytes per call — the shortest
+/// reads a stream socket could legally produce.
+struct ChunkedReader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+    cap: usize,
+}
+
+impl std::io::Read for ChunkedReader<'_> {
+    fn read(&mut self, out: &mut [u8]) -> std::io::Result<usize> {
+        let n = out.len().min(self.cap).min(self.buf.len() - self.pos);
+        out[..n].copy_from_slice(&self.buf[self.pos..self.pos + n]);
+        self.pos += n;
+        Ok(n)
+    }
+}
+
+fn random_upload(rng: &mut Rng) -> Upload {
+    let n = 1 + rng.usize_below(96);
+    let w = 1 + rng.usize_below(8);
+    if rng.bool(0.5) {
+        Upload::Full {
+            round: rng.next_u64() as u32,
+            client: rng.u32_below(64) as u16,
+            emb: (0..n * w).map(|_| rng.uniform(-2.0, 2.0)).collect(),
+        }
+    } else {
+        let sign: Vec<bool> = (0..n).map(|_| rng.bool(0.4)).collect();
+        let k = sign.iter().filter(|&&s| s).count();
+        Upload::Sparse {
+            round: rng.next_u64() as u32,
+            client: rng.u32_below(64) as u16,
+            sign,
+            emb: (0..k * w).map(|_| rng.uniform(-2.0, 2.0)).collect(),
+        }
+    }
+}
+
+fn random_download(rng: &mut Rng) -> Download {
+    let n = 1 + rng.usize_below(96);
+    let w = 1 + rng.usize_below(8);
+    if rng.bool(0.5) {
+        Download::Full {
+            round: rng.next_u64() as u32,
+            emb: (0..n * w).map(|_| rng.uniform(-2.0, 2.0)).collect(),
+        }
+    } else {
+        let sign: Vec<bool> = (0..n).map(|_| rng.bool(0.4)).collect();
+        let k = sign.iter().filter(|&&s| s).count();
+        Download::Sparse {
+            round: rng.next_u64() as u32,
+            sign,
+            emb: (0..k * w).map(|_| rng.uniform(-2.0, 2.0)).collect(),
+            prio: (0..k).map(|_| rng.u32_below(32)).collect(),
+        }
+    }
+}
+
+/// Property: arbitrary protocol frames survive the stream framing codec
+/// under arbitrarily short reads — the TCP reader reassembles frame
+/// boundaries no matter how the stream fragments.
+#[test]
+fn frames_roundtrip_the_stream_codec_under_partial_reads() {
+    check("stream_codec_partial_reads", 40, |rng| {
+        let ups: Vec<Upload> = (0..1 + rng.usize_below(6)).map(|_| random_upload(rng)).collect();
+        let downs: Vec<Download> =
+            (0..1 + rng.usize_below(6)).map(|_| random_download(rng)).collect();
+        let mut stream = Vec::new();
+        for u in &ups {
+            write_frame(&mut stream, &u.encode()).unwrap();
+        }
+        for d in &downs {
+            write_frame(&mut stream, &d.encode()).unwrap();
+        }
+        let cap = 1 + rng.usize_below(17);
+        let mut r = ChunkedReader { buf: &stream, pos: 0, cap };
+        for u in &ups {
+            let frame = read_frame(&mut r).unwrap().expect("frame present");
+            assert_eq!(&Upload::decode(&frame).unwrap(), u, "cap {cap}");
+        }
+        for d in &downs {
+            let frame = read_frame(&mut r).unwrap().expect("frame present");
+            assert_eq!(&Download::decode(&frame).unwrap(), d, "cap {cap}");
+        }
+        assert!(read_frame(&mut r).unwrap().is_none(), "clean EOF at a frame boundary");
+    });
+}
+
+/// Property: arbitrary `Upload`/`Download` frames round-trip the real TCP
+/// loopback transport — boundaries, order and metering all intact, with
+/// byte accounting identical to what the mpsc duplex records for the
+/// same frames.
+#[test]
+fn frames_roundtrip_the_tcp_transport() {
+    check("tcp_transport_roundtrip", 12, |rng| {
+        let ups: Vec<Upload> = (0..1 + rng.usize_below(5)).map(|_| random_upload(rng)).collect();
+        let downs: Vec<Download> =
+            (0..1 + rng.usize_below(5)).map(|_| random_download(rng)).collect();
+
+        let tcp_acct = Accounting::new();
+        let transport = TcpTransport::bind_loopback().unwrap();
+        let (tcp_client, tcp_server) = transport.connect_pair(tcp_acct.clone()).unwrap();
+        let mpsc_acct = Accounting::new();
+        let (mpsc_client, mpsc_server) = duplex(mpsc_acct.clone());
+
+        for u in &ups {
+            tcp_client.send(u.encode(), u.params()).unwrap();
+            mpsc_client.send(u.encode(), u.params()).unwrap();
+        }
+        for u in &ups {
+            assert_eq!(&Upload::decode(&tcp_server.recv().unwrap()).unwrap(), u);
+            mpsc_server.recv().unwrap();
+        }
+        for d in &downs {
+            tcp_server.send(d.encode(), d.params()).unwrap();
+            mpsc_server.send(d.encode(), d.params()).unwrap();
+        }
+        for d in &downs {
+            assert_eq!(&Download::decode(&tcp_client.recv().unwrap()).unwrap(), d);
+            mpsc_client.recv().unwrap();
+        }
+
+        // the metering contract is transport-independent, bit for bit
+        for dir in [Direction::Upload, Direction::Download] {
+            assert_eq!(tcp_acct.params_dir(dir), mpsc_acct.params_dir(dir), "{dir:?} params");
+            assert_eq!(tcp_acct.bytes_dir(dir), mpsc_acct.bytes_dir(dir), "{dir:?} bytes");
+        }
+        assert_eq!(tcp_acct.messages(), mpsc_acct.messages());
     });
 }

@@ -42,6 +42,8 @@ fn tiny_spec(algo: AlgoSpec, exec: ExecMode) -> ExperimentSpec {
         },
         seed: 7,
         exec,
+        transport: Default::default(),
+        shards: 0,
     }
 }
 

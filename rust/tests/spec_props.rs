@@ -4,7 +4,7 @@
 
 use feds::fed::ExecMode;
 use feds::kge::Method;
-use feds::spec::{AlgoSpec, BackendSpec, BudgetSpec, DataSpec, ExperimentSpec};
+use feds::spec::{AlgoSpec, BackendSpec, BudgetSpec, DataSpec, ExperimentSpec, TransportSpec};
 use feds::util::json::Json;
 use feds::util::prop;
 use feds::util::rng::Rng;
@@ -72,6 +72,8 @@ fn random_spec(rng: &mut Rng) -> ExperimentSpec {
         },
         seed: rng.next_u64() >> 12,
         exec: if rng.bool(0.5) { ExecMode::Sequential } else { ExecMode::Threaded },
+        transport: if rng.bool(0.5) { TransportSpec::Mpsc } else { TransportSpec::Tcp },
+        shards: rng.usize_below(17),
     }
 }
 
