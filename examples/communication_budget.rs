@@ -11,10 +11,11 @@
 //! cargo run --release --example communication_budget
 //! ```
 
+use feds::comm::transport::TransportSpec;
 use feds::comm::BandwidthModel;
 use feds::data::generator::{generate, GeneratorConfig};
 use feds::data::partition::partition;
-use feds::fed::{run_federated, Algo, Backend, FedRunConfig, RunOutcome};
+use feds::fed::{run_params, Algo, Backend, ExecMode, RoundParams, RunOutcome};
 use feds::kge::{Hyper, Method};
 
 fn main() -> anyhow::Result<()> {
@@ -34,16 +35,23 @@ fn main() -> anyhow::Result<()> {
     };
 
     let run = |algo: Algo| -> anyhow::Result<RunOutcome> {
-        let cfg = FedRunConfig {
+        let cfg = RoundParams {
             algo,
             method: Method::TransE,
             max_rounds: 40,
+            local_epochs: 3,
             eval_every: 5,
+            patience: 3,
+            sparsity: 0.4,
+            sync_interval: 4,
             eval_cap: 256,
             seed: 3,
-            ..Default::default()
+            svd_cols: 8,
+            exec: ExecMode::Sequential,
+            transport: TransportSpec::Mpsc,
+            shards: 1,
         };
-        Ok(run_federated(&data, &cfg, &backend)?)
+        run_params(&data, &cfg, &backend, &mut [])
     };
     let fedep = run(Algo::FedEP)?;
     let feds = run(Algo::FedS { sync: true })?;

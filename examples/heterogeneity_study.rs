@@ -11,9 +11,10 @@
 //! cargo run --release --example heterogeneity_study
 //! ```
 
+use feds::comm::transport::TransportSpec;
 use feds::data::generator::{generate, GeneratorConfig};
 use feds::data::partition::partition;
-use feds::fed::{run_federated, Algo, Backend, FedRunConfig};
+use feds::fed::{run_params, Algo, Backend, ExecMode, RoundParams};
 use feds::kge::{Hyper, Method};
 
 fn main() -> anyhow::Result<()> {
@@ -41,16 +42,23 @@ fn main() -> anyhow::Result<()> {
             / data.num_entities as f64;
 
         let run = |algo: Algo| {
-            let cfg = FedRunConfig {
+            let cfg = RoundParams {
                 algo,
                 method: Method::TransE,
                 max_rounds: 30,
+                local_epochs: 3,
                 eval_every: 5,
+                patience: 3,
+                sparsity: 0.4,
+                sync_interval: 4,
                 eval_cap: 192,
                 seed: 5,
-                ..Default::default()
+                svd_cols: 8,
+                exec: ExecMode::Sequential,
+                transport: TransportSpec::Mpsc,
+                shards: 1,
             };
-            run_federated(&data, &cfg, &backend)
+            run_params(&data, &cfg, &backend, &mut [])
         };
         let fedep = run(Algo::FedEP)?;
         let feds = run(Algo::FedS { sync: true })?;

@@ -1,0 +1,142 @@
+//! Measured wall-clock per federated round on the cluster runtime:
+//! a loopback `ClusterServer` plus one OS thread per client process,
+//! run unthrottled and again on a rate-limited link ([`Throttle`]
+//! enforcing a [`BandwidthModel`]), so the per-round seconds in
+//! `ClusterOutcome::times` *measure* what `comm::bandwidth` predicts
+//! statically from bytes.  `cargo bench --bench cluster_wallclock`
+//! (`FEDS_BENCH_FAST=1` for the CI smoke run).
+//!
+//! The throttled run must stay bit-identical to the unthrottled one —
+//! pacing delays frames, it never changes them — which the bench asserts
+//! before reporting.  Besides the criterion-style report this writes one
+//! `BENCH_cluster.json` trajectory point (measured round seconds, the
+//! static model estimate, and the accounting totals), which CI uploads
+//! as an artifact.
+//!
+//! [`Throttle`]: feds::comm::bandwidth::Throttle
+
+use std::time::Duration;
+
+use feds::comm::bandwidth::BandwidthModel;
+use feds::fed::cluster::{run_client, ClientOpts, ClusterOutcome, ClusterServer, ServeOpts};
+use feds::kge::Method;
+use feds::spec::{AlgoSpec, BackendSpec, BudgetSpec, DataSpec, ExperimentSpec};
+use feds::util::bench::Bench;
+use feds::util::json::Json;
+
+fn bench_spec(rounds: usize) -> ExperimentSpec {
+    ExperimentSpec {
+        name: "cluster_wallclock".into(),
+        method: Method::TransE,
+        algo: AlgoSpec::feds(),
+        data: DataSpec {
+            entities: 256,
+            relations: 12,
+            triples: 4000,
+            clusters: 4,
+            clients: 3,
+            seed: 11,
+        },
+        backend: BackendSpec::Native {
+            dim: 16,
+            learning_rate: 5e-3,
+            batch: 64,
+            negatives: 16,
+            eval_batch: 32,
+        },
+        budget: BudgetSpec {
+            max_rounds: rounds,
+            local_epochs: 1,
+            eval_every: 4,
+            patience: 99,
+            eval_cap: 64,
+        },
+        seed: 7,
+        exec: Default::default(),
+        transport: Default::default(),
+        shards: 0,
+    }
+}
+
+/// One full cluster run over loopback TCP: the server in this thread,
+/// every client as its own thread speaking the cluster protocol.
+fn cluster_run(spec: &ExperimentSpec, bandwidth: Option<BandwidthModel>) -> ClusterOutcome {
+    let opts = ServeOpts { deadline: Duration::from_secs(60), bandwidth, expect: 0 };
+    let server = ClusterServer::bind("127.0.0.1:0", spec, opts).expect("bind loopback");
+    let addr = server.addr().to_string();
+    let handles: Vec<_> = (0..spec.data.clients)
+        .map(|id| {
+            let spec = spec.clone();
+            let addr = addr.clone();
+            std::thread::spawn(move || {
+                let mut o = ClientOpts::new(addr, id as u16);
+                o.bandwidth = bandwidth;
+                run_client(&spec, &o).expect("client run");
+            })
+        })
+        .collect();
+    let out = server.run(&mut []).expect("server run");
+    for h in handles {
+        h.join().expect("client thread");
+    }
+    out
+}
+
+fn main() {
+    let mut b = Bench::from_env("cluster_wallclock");
+    let fast = std::env::var("FEDS_BENCH_FAST").as_deref() == Ok("1");
+    let spec = bench_spec(if fast { 4 } else { 12 });
+
+    // 200 Mbit/s + 2 ms per message: fast enough to keep the bench quick,
+    // slow enough that the link (not the loopback stack) dominates
+    let link = BandwidthModel { bytes_per_sec: 200e6 / 8.0, latency_s: 0.002 };
+    let free = cluster_run(&spec, None);
+    let throttled = cluster_run(&spec, Some(link));
+
+    // pacing must not change what is computed, only when it arrives
+    assert_eq!(free.run.acct.params(), throttled.run.acct.params(), "params diverged");
+    assert_eq!(free.run.acct.bytes(), throttled.run.acct.bytes(), "bytes diverged");
+    let (a, b_) = (&free.run.history.records, &throttled.run.history.records);
+    assert_eq!(a.len(), b_.len(), "record count diverged");
+    for (x, y) in a.iter().zip(b_.iter()) {
+        assert_eq!(x.valid.mrr.to_bits(), y.valid.mrr.to_bits(), "MRR diverged at {}", x.round);
+    }
+
+    let rounds = throttled.times.secs.len() as u64;
+    // static estimate: total metered bytes spread over the measured
+    // rounds, two messages (upload + download) per client per comm round
+    let per_round_bytes = throttled.run.acct.bytes() / rounds.max(1);
+    let model_round_s = link.time_for(per_round_bytes / spec.data.clients as u64, 2);
+
+    b.report_value("round/unthrottled/mean", free.times.mean(), "s");
+    b.report_value("round/unthrottled/max", free.times.max(), "s");
+    b.report_value("round/throttled/mean", throttled.times.mean(), "s");
+    b.report_value("round/throttled/max", throttled.times.max(), "s");
+    b.report_value("round/throttled/model", model_round_s, "s");
+
+    let secs = |ts: &[f64]| Json::Arr(ts.iter().map(|&s| Json::from(s)).collect());
+    let point = Json::obj()
+        .set("suite", "cluster_wallclock")
+        .set("clients", spec.data.clients)
+        .set("rounds", rounds)
+        .set("rate_mbps", link.bytes_per_sec * 8.0 / 1e6)
+        .set("latency_ms", link.latency_s * 1e3)
+        .set("unthrottled_secs", secs(&free.times.secs))
+        .set("throttled_secs", secs(&throttled.times.secs))
+        .set("unthrottled_mean_s", free.times.mean())
+        .set("throttled_mean_s", throttled.times.mean())
+        .set("model_round_s", model_round_s)
+        .set("bytes", throttled.run.acct.bytes())
+        .set("params", throttled.run.acct.params());
+    std::fs::write("BENCH_cluster.json", point.to_string_pretty())
+        .expect("write BENCH_cluster.json");
+    println!(
+        "cluster_wallclock: {} rounds, mean {:.4}s free → {:.4}s throttled \
+         (model {:.4}s; BENCH_cluster.json written)",
+        rounds,
+        free.times.mean(),
+        throttled.times.mean(),
+        model_round_s
+    );
+    b.finish();
+}

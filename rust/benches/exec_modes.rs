@@ -3,9 +3,11 @@
 //! plus a hard check that accounting is independent of the execution
 //! mode.  `cargo bench --bench exec_modes`.
 
+use feds::comm::transport::TransportSpec;
 use feds::data::generator::{generate, GeneratorConfig};
 use feds::data::partition::partition;
-use feds::fed::{run_federated, Algo, Backend, ExecMode, FedRunConfig};
+use feds::fed::orchestrator::params::auto_shards;
+use feds::fed::{run_params, Algo, Backend, ExecMode, RoundParams};
 use feds::kge::{Hyper, Method};
 use feds::util::bench::Bench;
 
@@ -30,25 +32,31 @@ fn main() {
     };
 
     for algo in [Algo::FedEP, Algo::FedS { sync: true }] {
-        let mut cfg = FedRunConfig {
+        let mut cfg = RoundParams {
             algo,
             method: Method::TransE,
             max_rounds: 6,
             local_epochs: 2,
             eval_every: 3,
+            patience: 3,
+            sparsity: 0.4,
+            sync_interval: 4,
             eval_cap: 128,
             seed: 42,
-            ..Default::default()
+            svd_cols: 8,
+            exec: ExecMode::Sequential,
+            transport: TransportSpec::Mpsc,
+            shards: auto_shards(),
         };
         let name = algo.label();
 
         let t0 = std::time::Instant::now();
-        let seq = run_federated(&data, &cfg, &backend).expect("sequential run");
+        let seq = run_params(&data, &cfg, &backend, &mut []).expect("sequential run");
         let seq_s = t0.elapsed().as_secs_f64();
 
         cfg.exec = ExecMode::Threaded;
         let t0 = std::time::Instant::now();
-        let thr = run_federated(&data, &cfg, &backend).expect("threaded run");
+        let thr = run_params(&data, &cfg, &backend, &mut []).expect("threaded run");
         let thr_s = t0.elapsed().as_secs_f64();
 
         assert_eq!(

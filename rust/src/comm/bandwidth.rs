@@ -1,7 +1,13 @@
-//! Analytic link model: turn transmitted bytes into wall-clock estimates
-//! for bandwidth-constrained edge links (the deployment scenario motivating
-//! the paper's §I).  Round time = max over clients of per-client link time,
-//! since uploads happen in parallel across clients.
+//! Link timing: the analytic [`BandwidthModel`] turns transmitted bytes
+//! into wall-clock estimates for bandwidth-constrained edge links (the
+//! deployment scenario motivating the paper's §I); [`Throttle`] enforces
+//! the same model on a live stream so a loopback cluster run *measures*
+//! that wall-clock instead of predicting it; [`RoundTimes`] accumulates
+//! the per-round measurements the cluster server reports into
+//! `BENCH_cluster.json`.  Round time = max over clients of per-client
+//! link time, since uploads happen in parallel across clients.
+
+use std::time::{Duration, Instant};
 
 #[derive(Clone, Copy, Debug)]
 pub struct BandwidthModel {
@@ -36,6 +42,73 @@ impl BandwidthModel {
     }
 }
 
+/// Enforce a [`BandwidthModel`] on a live link: the transport's writer
+/// calls [`Throttle::pace`] before each frame, sleeping for the model's
+/// transmission time, so the modeled latency becomes measured latency.
+#[derive(Clone, Copy, Debug)]
+pub struct Throttle {
+    model: BandwidthModel,
+}
+
+impl Throttle {
+    pub fn new(model: BandwidthModel) -> Self {
+        Self { model }
+    }
+
+    /// Block for as long as `model` says a `bytes`-byte message occupies
+    /// the link (serialization delay + per-message latency).
+    pub fn pace(&self, bytes: usize) {
+        let s = self.model.time_for(bytes as u64, 1);
+        if s > 0.0 {
+            std::thread::sleep(Duration::from_secs_f64(s));
+        }
+    }
+}
+
+/// Measured wall-clock per round.  The cluster server brackets each
+/// round — local training through the last download — with
+/// [`RoundTimes::start`]/[`RoundTimes::stop`]; totals feed
+/// `BENCH_cluster.json`, where FedS vs dense shows up as latency rather
+/// than bytes.
+#[derive(Default)]
+pub struct RoundTimes {
+    open: Option<Instant>,
+    /// seconds per completed round, in round order
+    pub secs: Vec<f64>,
+}
+
+impl RoundTimes {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn start(&mut self) {
+        self.open = Some(Instant::now());
+    }
+
+    pub fn stop(&mut self) {
+        if let Some(t) = self.open.take() {
+            self.secs.push(t.elapsed().as_secs_f64());
+        }
+    }
+
+    pub fn total(&self) -> f64 {
+        self.secs.iter().sum()
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.secs.is_empty() {
+            0.0
+        } else {
+            self.total() / self.secs.len() as f64
+        }
+    }
+
+    pub fn max(&self) -> f64 {
+        self.secs.iter().fold(0.0, |a, &b| f64::max(a, b))
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -55,5 +128,27 @@ mod tests {
     #[test]
     fn presets_sane() {
         assert!(BandwidthModel::edge().bytes_per_sec < BandwidthModel::datacenter().bytes_per_sec);
+    }
+
+    #[test]
+    fn throttle_sleeps_for_the_modeled_time() {
+        // 1 MB/s + 10 ms latency: a 10 kB message should take ≥ 20 ms
+        let t = Throttle::new(BandwidthModel { bytes_per_sec: 1e6, latency_s: 0.01 });
+        let start = Instant::now();
+        t.pace(10_000);
+        assert!(start.elapsed() >= Duration::from_millis(19));
+    }
+
+    #[test]
+    fn round_times_accumulate() {
+        let mut rt = RoundTimes::new();
+        assert_eq!(rt.mean(), 0.0);
+        rt.start();
+        std::thread::sleep(Duration::from_millis(5));
+        rt.stop();
+        rt.stop(); // unbalanced stop is a no-op
+        assert_eq!(rt.secs.len(), 1);
+        assert!(rt.total() > 0.0);
+        assert!(rt.max() >= rt.mean());
     }
 }

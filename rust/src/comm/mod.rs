@@ -13,7 +13,9 @@
 //!   implementations: in-process mpsc duplex links and length-prefixed
 //!   TCP loopback sockets, selected per run by [`transport::TransportSpec`]
 //!   with bit-identical accounting either way;
-//! * `bandwidth` — an analytic link model to turn bytes into seconds.
+//! * `bandwidth` — an analytic link model to turn bytes into seconds,
+//!   plus a [`bandwidth::Throttle`] that enforces the model on live
+//!   sockets so cluster runs *measure* that wall-clock.
 
 pub mod accounting;
 pub mod bandwidth;
@@ -21,6 +23,6 @@ pub mod transport;
 pub mod wire;
 
 pub use accounting::{Accounting, Direction};
-pub use bandwidth::BandwidthModel;
-pub use transport::{duplex, Endpoint, TransportSpec};
+pub use bandwidth::{BandwidthModel, RoundTimes, Throttle};
+pub use transport::{duplex, Disconnect, Endpoint, TransportSpec};
 pub use wire::{WireReader, WireWriter};

@@ -47,6 +47,18 @@ pub trait Endpoint: Send {
     fn recv_timeout(&self, d: Duration) -> Result<Option<Vec<u8>>>;
 }
 
+/// How a peer link stopped delivering frames.  Dropout detection keys on
+/// this: a [`Disconnect::Clean`] is a deliberate leave (the peer shut its
+/// write half at a frame boundary), while [`Disconnect::Abrupt`] means the
+/// process died mid-frame or the stream desynchronized.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Disconnect {
+    /// EOF exactly at a frame boundary: a graceful shutdown.
+    Clean,
+    /// Truncation mid-frame, desync, or a transport IO failure.
+    Abrupt,
+}
+
 /// Which transport carries a run's frames (the `"transport"` spec field /
 /// `--transport` CLI flag).  Byte and parameter accounting are
 /// bit-identical across variants for every exchange strategy.
@@ -78,23 +90,25 @@ impl TransportSpec {
 }
 
 /// The receive half both endpoint implementations share: an ordered frame
-/// queue with drain-then-error disconnect reporting.
-pub(crate) struct FrameQueue {
-    rx: Receiver<Vec<u8>>,
+/// queue with drain-then-error disconnect reporting.  Generic so the
+/// cluster runtime can queue decoded control messages alongside the
+/// default raw-frame payloads.
+pub(crate) struct FrameQueue<T = Vec<u8>> {
+    rx: Receiver<T>,
 }
 
-impl FrameQueue {
-    pub(crate) fn new(rx: Receiver<Vec<u8>>) -> Self {
+impl<T> FrameQueue<T> {
+    pub(crate) fn new(rx: Receiver<T>) -> Self {
         Self { rx }
     }
 
-    pub(crate) fn recv(&self) -> Result<Vec<u8>> {
+    pub(crate) fn recv(&self) -> Result<T> {
         // std mpsc already drains buffered messages before reporting the
         // hangup on a blocking recv
         self.rx.recv().map_err(|_| anyhow::anyhow!("peer disconnected"))
     }
 
-    pub(crate) fn recv_timeout(&self, d: Duration) -> Result<Option<Vec<u8>>> {
+    pub(crate) fn recv_timeout(&self, d: Duration) -> Result<Option<T>> {
         match self.rx.recv_timeout(d) {
             Ok(f) => Ok(Some(f)),
             Err(RecvTimeoutError::Timeout) => Ok(None),

@@ -24,14 +24,15 @@ use std::io::Write as _;
 use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{channel, Sender};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
 use anyhow::Result;
 
 use super::super::accounting::{Accounting, Direction};
-use super::super::wire::{read_frame, write_frame};
-use super::{Endpoint, FrameQueue};
+use super::super::bandwidth::Throttle;
+use super::super::wire::{read_frame, write_frame, FrameError};
+use super::{Disconnect, Endpoint, FrameQueue};
 
 /// The server side's listener: one of these per run, one accepted
 /// connection per client.
@@ -60,9 +61,16 @@ impl TcpTransport {
         let client_sock = TcpStream::connect(self.addr)?;
         let (server_sock, _peer) = self.listener.accept()?;
         Ok((
-            TcpEndpoint::new(client_sock, acct.clone(), Direction::Upload)?,
-            TcpEndpoint::new(server_sock, acct, Direction::Download)?,
+            TcpEndpoint::from_stream(client_sock, acct.clone(), Direction::Upload, None)?,
+            TcpEndpoint::from_stream(server_sock, acct, Direction::Download, None)?,
         ))
+    }
+
+    /// Accept the next incoming connection (blocking) — the cluster
+    /// server's accept loop.
+    pub fn accept(&self) -> Result<TcpStream> {
+        let (sock, _peer) = self.listener.accept()?;
+        Ok(sock)
     }
 }
 
@@ -76,10 +84,20 @@ pub struct TcpEndpoint {
     dir: Direction,
     /// set by the writer thread when the stream breaks mid-run
     broken: Arc<AtomicBool>,
+    /// set by the reader thread when the peer's stream ends
+    disconnect: Arc<Mutex<Option<Disconnect>>>,
 }
 
 impl TcpEndpoint {
-    fn new(sock: TcpStream, acct: Arc<Accounting>, dir: Direction) -> Result<Self> {
+    /// Wrap an established stream.  `throttle` (when `Some`) rate-limits
+    /// the writer to the model's bandwidth and per-message latency, so a
+    /// loopback run measures the wall-clock an edge link would show.
+    pub fn from_stream(
+        sock: TcpStream,
+        acct: Arc<Accounting>,
+        dir: Direction,
+        throttle: Option<Throttle>,
+    ) -> Result<Self> {
         sock.set_nodelay(true)?;
         let wsock = sock.try_clone()?;
 
@@ -89,6 +107,11 @@ impl TcpEndpoint {
         std::thread::spawn(move || {
             let mut w = std::io::BufWriter::new(wsock);
             for frame in out_rx {
+                if let Some(t) = &throttle {
+                    // pace before the write: the frame "occupies the link"
+                    // for its modeled transmission time
+                    t.pace(frame.len() + 4);
+                }
                 if write_frame(&mut w, &frame).and_then(|()| w.flush()).is_err() {
                     wbroken.store(true, Ordering::Relaxed);
                     break;
@@ -100,23 +123,36 @@ impl TcpEndpoint {
         });
 
         let (in_tx, in_rx) = channel::<Vec<u8>>();
+        let disconnect = Arc::new(Mutex::new(None));
+        let rdisconnect = disconnect.clone();
         std::thread::spawn(move || {
             let mut r = std::io::BufReader::new(sock);
-            loop {
+            let why = loop {
                 match read_frame(&mut r) {
                     Ok(Some(frame)) => {
                         if in_tx.send(frame).is_err() {
-                            break; // endpoint dropped, nobody will recv
+                            return; // endpoint dropped, nobody will recv
                         }
                     }
-                    // clean peer EOF or broken stream: close the queue;
-                    // frames already delivered drain before recv errors
-                    Ok(None) | Err(_) => break,
+                    // close the queue either way; frames already delivered
+                    // drain before recv errors.  The *kind* of ending is
+                    // recorded for dropout detection: a clean EOF at a
+                    // frame boundary is a leave, anything else a crash.
+                    Ok(None) => break Disconnect::Clean,
+                    Err(FrameError::Truncated { .. })
+                    | Err(FrameError::Desync { .. })
+                    | Err(FrameError::Io(_)) => break Disconnect::Abrupt,
                 }
-            }
+            };
+            *rdisconnect.lock().unwrap() = Some(why);
         });
 
-        Ok(Self { outbox: out_tx, queue: FrameQueue::new(in_rx), acct, dir, broken })
+        Ok(Self { outbox: out_tx, queue: FrameQueue::new(in_rx), acct, dir, broken, disconnect })
+    }
+
+    /// How the peer's stream ended, once it has (`None` while connected).
+    pub fn disconnect_reason(&self) -> Option<Disconnect> {
+        *self.disconnect.lock().unwrap()
     }
 }
 
@@ -196,6 +232,39 @@ mod tests {
         assert_eq!(server.recv_timeout(d).unwrap(), Some(vec![1]));
         assert_eq!(server.recv_timeout(d).unwrap(), Some(vec![2, 2]));
         assert!(server.recv().is_err(), "after the drain the hangup surfaces");
+    }
+
+    fn wait_disconnect(ep: &TcpEndpoint) -> Disconnect {
+        for _ in 0..200 {
+            if let Some(d) = ep.disconnect_reason() {
+                return d;
+            }
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        panic!("peer disconnect never surfaced");
+    }
+
+    #[test]
+    fn graceful_shutdown_classifies_as_clean_disconnect() {
+        let (_acct, client, server) = pair();
+        assert_eq!(server.disconnect_reason(), None, "connected peers report nothing");
+        drop(client); // writer flushes, shuts down the write half: EOF at a boundary
+        assert_eq!(wait_disconnect(&server), Disconnect::Clean);
+    }
+
+    #[test]
+    fn mid_frame_death_classifies_as_abrupt_disconnect() {
+        let acct = Accounting::new();
+        let t = TcpTransport::bind_loopback().unwrap();
+        let mut raw = TcpStream::connect(t.addr()).unwrap();
+        let sock = t.accept().unwrap();
+        let server =
+            TcpEndpoint::from_stream(sock, acct, Direction::Download, None).unwrap();
+        // a length prefix promising 10 bytes, then only 3 before vanishing
+        raw.write_all(&10u32.to_le_bytes()).unwrap();
+        raw.write_all(&[1, 2, 3]).unwrap();
+        drop(raw);
+        assert_eq!(wait_disconnect(&server), Disconnect::Abrupt);
     }
 
     /// A sequential (single-threaded) driver must be able to push a frame

@@ -40,6 +40,11 @@ impl WireWriter {
         self
     }
 
+    pub fn f64(&mut self, v: f64) -> &mut Self {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+        self
+    }
+
     pub fn u32s(&mut self, v: &[u32]) -> &mut Self {
         self.u32(v.len() as u32);
         for &x in v {
@@ -73,6 +78,14 @@ impl WireWriter {
         if v.len() % 8 != 0 {
             self.buf.push(byte);
         }
+        self
+    }
+
+    /// Opaque length-prefixed byte blob (e.g. a nested, already-encoded
+    /// protocol frame carried inside a cluster envelope).
+    pub fn blob(&mut self, v: &[u8]) -> &mut Self {
+        self.u32(v.len() as u32);
+        self.buf.extend_from_slice(v);
         self
     }
 
@@ -132,6 +145,10 @@ impl<'a> WireReader<'a> {
         Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
     }
 
+    pub fn f64(&mut self) -> anyhow::Result<f64> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
     pub fn u32s(&mut self) -> anyhow::Result<Vec<u32>> {
         let n = self.u32()? as usize;
         let raw = self.take(n * 4)?;
@@ -154,6 +171,12 @@ impl<'a> WireReader<'a> {
         let n = self.u32()? as usize;
         let raw = self.take(n.div_ceil(8))?;
         Ok((0..n).map(|i| raw[i / 8] & (1 << (i % 8)) != 0).collect())
+    }
+
+    /// Opaque length-prefixed byte blob (mirror of [`WireWriter::blob`]).
+    pub fn blob(&mut self) -> anyhow::Result<Vec<u8>> {
+        let n = self.u32()? as usize;
+        Ok(self.take(n)?.to_vec())
     }
 
     pub fn remaining(&self) -> usize {
@@ -181,36 +204,75 @@ pub fn write_frame<W: std::io::Write>(w: &mut W, frame: &[u8]) -> std::io::Resul
 /// error instead of a multi-gigabyte allocation.
 pub const MAX_FRAME_BYTES: usize = 1 << 30;
 
+/// How reading a frame can fail.  A clean EOF at a frame boundary is NOT
+/// an error (`read_frame` returns `Ok(None)`); these variants classify
+/// everything else, so a dropout detector can tell a peer that hung up
+/// gracefully from one that died mid-frame or desynchronized the stream.
+#[derive(Debug)]
+pub enum FrameError {
+    /// EOF in the middle of a length prefix or payload: the peer vanished
+    /// mid-frame (crash, kill, connection reset at an unlucky moment).
+    Truncated {
+        /// where in the frame the stream cut off
+        context: &'static str,
+    },
+    /// A length prefix beyond [`MAX_FRAME_BYTES`]: the stream is no longer
+    /// aligned on frame boundaries (protocol bug or corruption).
+    Desync { claimed_len: u64 },
+    /// Any other transport-level IO failure.
+    Io(std::io::Error),
+}
+
+impl std::fmt::Display for FrameError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            FrameError::Truncated { context } => write!(f, "stream truncated {context}"),
+            FrameError::Desync { claimed_len } => write!(
+                f,
+                "frame length {claimed_len} exceeds the {MAX_FRAME_BYTES}-byte cap (stream desync)"
+            ),
+            FrameError::Io(e) => write!(f, "frame read failed: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for FrameError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            FrameError::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
 /// Read one length-prefixed frame from a byte stream, tolerating
 /// arbitrarily short `read()`s.  Returns `Ok(None)` on a clean EOF at a
-/// frame boundary; EOF inside a frame — or a length prefix beyond
-/// [`MAX_FRAME_BYTES`] — is an error.
-pub fn read_frame<R: std::io::Read>(r: &mut R) -> std::io::Result<Option<Vec<u8>>> {
+/// frame boundary; EOF inside a frame is [`FrameError::Truncated`], a
+/// length prefix beyond [`MAX_FRAME_BYTES`] is [`FrameError::Desync`].
+pub fn read_frame<R: std::io::Read>(r: &mut R) -> Result<Option<Vec<u8>>, FrameError> {
     let mut len = [0u8; 4];
     let mut got = 0usize;
     while got < 4 {
         match r.read(&mut len[got..]) {
             Ok(0) if got == 0 => return Ok(None),
-            Ok(0) => {
-                return Err(std::io::Error::new(
-                    std::io::ErrorKind::UnexpectedEof,
-                    "EOF inside a frame length prefix",
-                ))
-            }
+            Ok(0) => return Err(FrameError::Truncated { context: "inside a frame length prefix" }),
             Ok(n) => got += n,
             Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
-            Err(e) => return Err(e),
+            Err(e) => return Err(FrameError::Io(e)),
         }
     }
     let n = u32::from_le_bytes(len) as usize;
     if n > MAX_FRAME_BYTES {
-        return Err(std::io::Error::new(
-            std::io::ErrorKind::InvalidData,
-            format!("frame length {n} exceeds the {MAX_FRAME_BYTES}-byte cap (stream desync?)"),
-        ));
+        return Err(FrameError::Desync { claimed_len: n as u64 });
     }
     let mut buf = vec![0u8; n];
-    r.read_exact(&mut buf)?;
+    if let Err(e) = r.read_exact(&mut buf) {
+        return Err(if e.kind() == std::io::ErrorKind::UnexpectedEof {
+            FrameError::Truncated { context: "inside a frame payload" }
+        } else {
+            FrameError::Io(e)
+        });
+    }
     Ok(Some(buf))
 }
 
@@ -222,7 +284,7 @@ mod tests {
     #[test]
     fn primitives_roundtrip() {
         let mut w = WireWriter::new();
-        w.u8(7).u16(300).u32(70_000).u64(1 << 40).f32(-2.5);
+        w.u8(7).u16(300).u32(70_000).u64(1 << 40).f32(-2.5).f64(0.125);
         let buf = w.finish();
         let mut r = WireReader::new(&buf);
         assert_eq!(r.u8().unwrap(), 7);
@@ -230,6 +292,7 @@ mod tests {
         assert_eq!(r.u32().unwrap(), 70_000);
         assert_eq!(r.u64().unwrap(), 1 << 40);
         assert_eq!(r.f32().unwrap(), -2.5);
+        assert_eq!(r.f64().unwrap(), 0.125);
         assert_eq!(r.remaining(), 0);
     }
 
@@ -313,22 +376,26 @@ mod tests {
     }
 
     #[test]
-    fn frame_eof_inside_length_or_payload_errors() {
+    fn frame_eof_inside_length_or_payload_is_truncation_not_clean_eof() {
         let mut stream = Vec::new();
         write_frame(&mut stream, &[1, 2, 3, 4, 5]).unwrap();
         // cut inside the length prefix and inside the payload
         for cut in [1usize, 3, 6] {
             let mut r = ChunkedReader::new(&stream[..cut], 2);
-            assert!(read_frame(&mut r).is_err(), "cut {cut} must error, not hang or truncate");
+            let err = read_frame(&mut r).unwrap_err();
+            assert!(
+                matches!(err, FrameError::Truncated { .. }),
+                "cut {cut} must classify as truncation, got {err:?}"
+            );
         }
     }
 
     #[test]
-    fn absurd_frame_length_is_an_error_not_an_allocation() {
+    fn absurd_frame_length_is_a_desync_not_an_allocation() {
         // a desynced stream handing us a ~4 GiB length prefix
         let bogus = u32::MAX.to_le_bytes();
         let mut r = ChunkedReader::new(&bogus, 4);
         let err = read_frame(&mut r).unwrap_err();
-        assert_eq!(err.kind(), std::io::ErrorKind::InvalidData);
+        assert!(matches!(err, FrameError::Desync { .. }), "{err:?}");
     }
 }

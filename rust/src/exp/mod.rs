@@ -21,7 +21,7 @@ use anyhow::Result;
 
 use crate::data::generator::{generate, GeneratorConfig};
 use crate::data::partition::{partition, FedDataset};
-use crate::fed::{Algo, Backend, ExecMode, FedRunConfig, RunOutcome};
+use crate::fed::{Backend, ExecMode};
 use crate::kge::{Hyper, Method};
 use crate::runtime::Runtime;
 use crate::spec::{AlgoSpec, BackendSpec, BudgetSpec, DataSpec, ExperimentSpec, Session};
@@ -93,28 +93,6 @@ impl Ctx {
             .collect()
     }
 
-    /// Baseline run configuration (paper §IV-B defaults, scaled).
-    pub fn run_cfg(&self, algo: Algo, method: Method) -> FedRunConfig {
-        FedRunConfig {
-            algo,
-            method,
-            max_rounds: self.max_rounds,
-            local_epochs: 3,
-            eval_every: if self.fast { 3 } else { 5 },
-            patience: 3,
-            sparsity: 0.4,
-            sync_interval: 4,
-            eval_cap: self.eval_cap,
-            seed: self.seed ^ 0xA11CE,
-            svd_cols: 8,
-            exec: self.exec,
-        }
-    }
-
-    pub fn run(&self, data: &FedDataset, cfg: &FedRunConfig) -> Result<RunOutcome> {
-        crate::fed::run_federated(data, cfg, &self.backend)
-    }
-
     /// The serializable description of this context's backend.
     pub fn backend_spec(&self) -> BackendSpec {
         BackendSpec::of(&self.backend)
@@ -122,9 +100,7 @@ impl Ctx {
 
     /// The base [`ExperimentSpec`] every table sweep derives from: this
     /// context's data shape, backend and budget with the paper-default
-    /// algorithm knobs — field-for-field what [`Ctx::run_cfg`] resolves
-    /// to, so sweep cells and legacy `ctx.run(...)` calls are the same
-    /// run.
+    /// algorithm knobs (§IV-B, scaled).
     pub fn base_spec(&self) -> ExperimentSpec {
         let gen = self.gen_config();
         ExperimentSpec {

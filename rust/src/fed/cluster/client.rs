@@ -1,0 +1,148 @@
+//! One federated client as an OS process: connect, register, and run the
+//! round loop against a [`ClusterServer`](super::ClusterServer).
+//!
+//! The client is a thin shell around the ordinary
+//! [`ClientRunner`](crate::fed::orchestrator::client::ClientRunner): it
+//! performs the versioned handshake, then plugs the runner into the
+//! connection's data plane and mirrors the in-process threaded loop —
+//! train → report → (verdict on eval rounds) → upload → download — so a
+//! failure-free cluster run computes exactly what the in-process driver
+//! computes.  Rejoin support: a `join_round > 1` registration is held by
+//! the server until that round, and the welcome's resync frame (the
+//! server's cached last personalized download for this id) restores the
+//! shared rows missed while away; the stateful sync schedule is
+//! fast-forwarded through the missed rounds.
+//!
+//! Failure injection for tests and drills: `leave_after` closes the
+//! socket cleanly after a round's exchange; `fail_after` dies mid-frame
+//! instead, which the server classifies as an abrupt crash.
+
+use std::net::TcpStream;
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::comm::accounting::Accounting;
+use crate::comm::bandwidth::{BandwidthModel, Throttle};
+use crate::comm::transport::Endpoint;
+use crate::fed::orchestrator::client::ClientRunner;
+use crate::fed::orchestrator::RoundParams;
+use crate::spec::ExperimentSpec;
+
+use super::conn::Conn;
+use super::native_backend;
+use super::proto::{spec_digest, ClusterMsg, PROTO_VERSION};
+
+/// How this client process joins and (optionally) leaves the federation.
+#[derive(Clone, Debug)]
+pub struct ClientOpts {
+    /// Server address, `HOST:PORT`.
+    pub connect: String,
+    /// This client's id within the spec's fleet.
+    pub id: u16,
+    /// Defer participation until this round (0 or 1 = immediately).  The
+    /// server holds the registration and welcomes it when the round
+    /// starts — the rejoin path of a dropout drill.
+    pub join_round: u32,
+    /// Rate-limit this client's uplink to the model.
+    pub bandwidth: Option<BandwidthModel>,
+    /// Failure injection: leave cleanly after completing this round.
+    pub leave_after: Option<usize>,
+    /// Failure injection: die mid-frame after completing this round (the
+    /// server sees an abrupt crash, exactly like a SIGKILL mid-write).
+    pub fail_after: Option<usize>,
+}
+
+impl ClientOpts {
+    pub fn new(connect: impl Into<String>, id: u16) -> Self {
+        Self {
+            connect: connect.into(),
+            id,
+            join_round: 0,
+            bandwidth: None,
+            leave_after: None,
+            fail_after: None,
+        }
+    }
+}
+
+/// Connect, register, and run this client's rounds to completion.
+/// Returns once the run converges, `max_rounds` completes, an injected
+/// failure triggers, or the server cuts the connection (deadline missed,
+/// duplicate id, shutdown) — the last case is an error.
+pub fn run_client(spec: &ExperimentSpec, opts: &ClientOpts) -> Result<()> {
+    let backend = native_backend(spec)?;
+    let data = spec.data.build();
+    anyhow::ensure!(
+        (opts.id as usize) < data.clients.len(),
+        "client id {} out of range (the spec has {} clients)",
+        opts.id,
+        data.clients.len()
+    );
+    let params = RoundParams::from_spec(spec, &backend);
+    let (batch_size, negatives) = backend.batch_shape();
+
+    let sock = TcpStream::connect(&opts.connect)?;
+    let mut conn = Conn::new(sock, opts.bandwidth.map(Throttle::new))?;
+    conn.send(&ClusterMsg::Hello {
+        version: PROTO_VERSION,
+        client: opts.id,
+        spec_digest: spec_digest(spec),
+        join_round: opts.join_round,
+    })?;
+    let (start_round, resync) = match conn.recv()? {
+        ClusterMsg::Welcome { round, resync } => (round.max(1) as usize, resync),
+        ClusterMsg::Reject { reason } => anyhow::bail!("server refused the handshake: {reason}"),
+        other => anyhow::bail!("unexpected handshake reply: {other:?}"),
+    };
+
+    // This process's own view of the metered traffic; the server's
+    // accounting is the authoritative one for the run.
+    let acct: Arc<Accounting> = Accounting::new();
+    let trainer = backend.make_trainer(&params, data.num_entities, data.num_relations)?;
+    let link = Box::new(conn.data_endpoint(acct)) as Box<dyn Endpoint>;
+    let mut runner =
+        ClientRunner::build(&data, opts.id, &params, trainer, link, batch_size, negatives)?;
+    if start_round > 1 {
+        runner.fast_forward(start_round as u32 - 1);
+    }
+    if let Some(frame) = resync {
+        runner.apply_resync(&frame)?;
+    }
+
+    for round in start_round..=params.max_rounds {
+        let eval_round = round % params.eval_every == 0;
+        let report = runner.local_round(round, eval_round)?;
+        conn.send(&ClusterMsg::Report {
+            round: round as u32,
+            loss: report.loss,
+            batches: report.batches as u64,
+            eval: report.eval,
+        })?;
+        if eval_round {
+            match conn.recv().map_err(|_| anyhow::anyhow!("server hung up before the verdict"))? {
+                ClusterMsg::Verdict { stop } => {
+                    if stop {
+                        break;
+                    }
+                }
+                other => anyhow::bail!("expected a verdict, got {other:?}"),
+            }
+        }
+        runner.send_upload(round as u32)?;
+        runner.recv_download()?;
+        if opts.fail_after == Some(round) {
+            drop(runner); // release the endpoint's outbox clone
+            conn.fail_abruptly();
+            return Ok(());
+        }
+        if opts.leave_after == Some(round) {
+            break;
+        }
+    }
+    // flush the final frames before the process exits: the runner holds a
+    // clone of the outbox, so it must go first
+    drop(runner);
+    conn.finish();
+    Ok(())
+}

@@ -1,0 +1,317 @@
+//! One cluster socket: a demultiplexing connection wrapper.
+//!
+//! Both sides of a cluster link speak [`ClusterMsg`] envelopes over one
+//! TCP stream.  A [`Conn`] owns the socket's reader/writer threads and
+//! splits incoming traffic onto two queues:
+//!
+//! * **control** — decoded envelopes (handshake, reports, verdicts, and
+//!   on the server side the nested upload frames), consumed by whoever
+//!   drives the connection;
+//! * **data** — the payloads of [`ClusterMsg::Download`] envelopes, raw.
+//!   Only the client side receives downloads, and it consumes them
+//!   through a [`ClusterEndpoint`] — the `comm::transport::Endpoint`
+//!   the ordinary `ClientRunner` plugs into, none the wiser that its
+//!   frames ride inside cluster envelopes.
+//!
+//! Metering: the envelope is control-plane overhead and is never
+//! recorded.  The client end meters its upload payloads in
+//! [`ClusterEndpoint::send`]; the server meters upload payloads on
+//! receipt and download payloads before sending, so both sides account
+//! exactly the bytes the in-process transports would.
+//!
+//! Disconnect classification mirrors [`TcpEndpoint`]
+//! (`comm::transport::tcp`): a clean EOF at a frame boundary is a
+//! deliberate leave, truncation/desync/IO failure is a crash.  For the
+//! crash-injection tests and CLI, [`Conn::fail_abruptly`] writes a
+//! deliberately truncated frame (a length prefix promising more bytes
+//! than follow) and drops the socket, which the peer classifies as
+//! [`Disconnect::Abrupt`].
+//!
+//! [`TcpEndpoint`]: crate::comm::transport::TcpEndpoint
+
+use std::io::Write as _;
+use std::net::{Shutdown, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{channel, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use anyhow::Result;
+
+use crate::comm::accounting::{Accounting, Direction};
+use crate::comm::bandwidth::Throttle;
+use crate::comm::transport::{Disconnect, Endpoint, FrameQueue};
+use crate::comm::wire::{read_frame, write_frame, FrameError};
+
+use super::proto::ClusterMsg;
+
+/// What the writer thread should put on the stream next.
+enum WriteCmd {
+    /// An encoded envelope, length-prefix framed.
+    Frame(Vec<u8>),
+    /// Crash injection: a length prefix claiming `promised` bytes, then
+    /// only `partial`, then die — the peer sees a mid-frame truncation.
+    PartialThenDie { promised: u32, partial: Vec<u8> },
+}
+
+/// One side of a cluster socket.  See the module docs for the routing
+/// and metering contract.
+pub(crate) struct Conn {
+    out: Option<Sender<WriteCmd>>,
+    ctrl: FrameQueue<ClusterMsg>,
+    data: Option<FrameQueue<Vec<u8>>>,
+    broken: Arc<AtomicBool>,
+    disconnect: Arc<Mutex<Option<Disconnect>>>,
+    writer: Option<JoinHandle<()>>,
+}
+
+impl Conn {
+    /// Wrap an established stream.  `throttle` (when `Some`) paces the
+    /// writer to the bandwidth model, so loopback rounds measure the
+    /// wall-clock a rate-limited link would show.
+    pub(crate) fn new(sock: TcpStream, throttle: Option<Throttle>) -> Result<Self> {
+        sock.set_nodelay(true)?;
+        sock.set_read_timeout(None)?;
+        let wsock = sock.try_clone()?;
+
+        let (out_tx, out_rx) = channel::<WriteCmd>();
+        let broken = Arc::new(AtomicBool::new(false));
+        let wbroken = broken.clone();
+        let writer = std::thread::spawn(move || {
+            let mut w = std::io::BufWriter::new(wsock);
+            for cmd in out_rx {
+                match cmd {
+                    WriteCmd::Frame(frame) => {
+                        if let Some(t) = &throttle {
+                            t.pace(frame.len() + 4);
+                        }
+                        if write_frame(&mut w, &frame).and_then(|()| w.flush()).is_err() {
+                            wbroken.store(true, Ordering::Relaxed);
+                            break;
+                        }
+                    }
+                    WriteCmd::PartialThenDie { promised, partial } => {
+                        let _ = w
+                            .write_all(&promised.to_le_bytes())
+                            .and_then(|()| w.write_all(&partial))
+                            .and_then(|()| w.flush());
+                        wbroken.store(true, Ordering::Relaxed);
+                        if let Ok(s) = w.into_inner() {
+                            let _ = s.shutdown(Shutdown::Both);
+                        }
+                        return;
+                    }
+                }
+            }
+            if let Ok(s) = w.into_inner() {
+                let _ = s.shutdown(Shutdown::Write);
+            }
+        });
+
+        let (ctrl_tx, ctrl_rx) = channel::<ClusterMsg>();
+        let (data_tx, data_rx) = channel::<Vec<u8>>();
+        let disconnect = Arc::new(Mutex::new(None));
+        let rdisconnect = disconnect.clone();
+        std::thread::spawn(move || {
+            let mut r = std::io::BufReader::new(sock);
+            let why = loop {
+                match read_frame(&mut r) {
+                    Ok(Some(frame)) => match ClusterMsg::decode(&frame) {
+                        // data plane raw, everything else decoded: the
+                        // ClientRunner's endpoint reads downloads without
+                        // re-encoding, the driver reads typed control
+                        Ok(ClusterMsg::Download(payload)) => {
+                            if data_tx.send(payload).is_err() {
+                                return; // data consumer gone, link winding down
+                            }
+                        }
+                        Ok(msg) => {
+                            if ctrl_tx.send(msg).is_err() {
+                                return;
+                            }
+                        }
+                        // an undecodable envelope means the stream is no
+                        // longer trustworthy — same as a desync
+                        Err(_) => break Disconnect::Abrupt,
+                    },
+                    Ok(None) => break Disconnect::Clean,
+                    Err(FrameError::Truncated { .. })
+                    | Err(FrameError::Desync { .. })
+                    | Err(FrameError::Io(_)) => break Disconnect::Abrupt,
+                }
+            };
+            *rdisconnect.lock().unwrap() = Some(why);
+        });
+
+        Ok(Self {
+            out: Some(out_tx),
+            ctrl: FrameQueue::new(ctrl_rx),
+            data: Some(FrameQueue::new(data_rx)),
+            broken,
+            disconnect,
+            writer: Some(writer),
+        })
+    }
+
+    pub(crate) fn send(&self, msg: &ClusterMsg) -> Result<()> {
+        if self.broken.load(Ordering::Relaxed) {
+            anyhow::bail!("peer disconnected");
+        }
+        self.out
+            .as_ref()
+            .expect("connection already finished")
+            .send(WriteCmd::Frame(msg.encode()))
+            .map_err(|_| anyhow::anyhow!("peer disconnected"))
+    }
+
+    /// Block for the next control message.
+    pub(crate) fn recv(&self) -> Result<ClusterMsg> {
+        self.ctrl.recv()
+    }
+
+    /// Wait up to `d` for a control message (`Ok(None)` on timeout, error
+    /// once the peer hung up and the queue is drained).
+    pub(crate) fn recv_timeout(&self, d: Duration) -> Result<Option<ClusterMsg>> {
+        self.ctrl.recv_timeout(d)
+    }
+
+    /// How the peer's stream ended, once it has (`None` while connected).
+    pub(crate) fn disconnect_reason(&self) -> Option<Disconnect> {
+        *self.disconnect.lock().unwrap()
+    }
+
+    /// Split off the data-plane half as a `comm::transport::Endpoint` for
+    /// a `ClientRunner`.  Client side only; callable once.
+    pub(crate) fn data_endpoint(&mut self, acct: Arc<Accounting>) -> ClusterEndpoint {
+        ClusterEndpoint {
+            out: self.out.as_ref().expect("connection already finished").clone(),
+            data: self.data.take().expect("data endpoint already taken"),
+            acct,
+            broken: self.broken.clone(),
+        }
+    }
+
+    /// Crash injection: put a truncated frame on the stream and kill the
+    /// connection, so the peer observes [`Disconnect::Abrupt`] — exactly
+    /// what a process dying mid-write looks like.
+    pub(crate) fn fail_abruptly(mut self) {
+        if let Some(out) = self.out.take() {
+            let _ = out.send(WriteCmd::PartialThenDie {
+                promised: 10,
+                partial: vec![0xDE, 0xAD, 0xBE],
+            });
+        }
+        if let Some(w) = self.writer.take() {
+            let _ = w.join();
+        }
+    }
+
+    /// Graceful close: flush every queued frame, shut down the write half
+    /// (the peer's clean EOF), and only then return.  Joining the writer
+    /// matters in short-lived client processes, where exiting `main`
+    /// would otherwise race the final frames onto a dying socket.
+    ///
+    /// Any [`ClusterEndpoint`] split off this connection must be dropped
+    /// first — it holds a clone of the outbox sender, and the writer only
+    /// exits once every sender is gone.
+    pub(crate) fn finish(mut self) {
+        self.out.take();
+        if let Some(w) = self.writer.take() {
+            let _ = w.join();
+        }
+    }
+}
+
+/// The client-side data plane of a [`Conn`], as the metered
+/// [`Endpoint`] seam `ClientRunner` expects: `send` wraps the frame in a
+/// [`ClusterMsg::Upload`] envelope (metering the inner payload, exactly
+/// the in-process contract), `recv` yields unwrapped download payloads.
+pub(crate) struct ClusterEndpoint {
+    out: Sender<WriteCmd>,
+    data: FrameQueue<Vec<u8>>,
+    acct: Arc<Accounting>,
+    broken: Arc<AtomicBool>,
+}
+
+impl Endpoint for ClusterEndpoint {
+    fn send(&self, frame: Vec<u8>, params: u64) -> Result<()> {
+        if self.broken.load(Ordering::Relaxed) {
+            anyhow::bail!("peer disconnected");
+        }
+        self.acct.record(Direction::Upload, params, frame.len() as u64);
+        self.out
+            .send(WriteCmd::Frame(ClusterMsg::Upload(frame).encode()))
+            .map_err(|_| anyhow::anyhow!("peer disconnected"))
+    }
+
+    fn recv(&self) -> Result<Vec<u8>> {
+        self.data.recv()
+    }
+
+    fn recv_timeout(&self, d: Duration) -> Result<Option<Vec<u8>>> {
+        self.data.recv_timeout(d)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::net::TcpListener;
+
+    fn pair() -> (Conn, Conn) {
+        let listener = TcpListener::bind(("127.0.0.1", 0)).unwrap();
+        let addr = listener.local_addr().unwrap();
+        let client = TcpStream::connect(addr).unwrap();
+        let (server, _) = listener.accept().unwrap();
+        (Conn::new(client, None).unwrap(), Conn::new(server, None).unwrap())
+    }
+
+    #[test]
+    fn control_and_data_planes_demultiplex() {
+        let (mut client, server) = pair();
+        let acct = Accounting::new();
+        let ep = client.data_endpoint(acct.clone());
+
+        // server → client: a verdict (control) then a download (data)
+        server.send(&ClusterMsg::Verdict { stop: false }).unwrap();
+        server.send(&ClusterMsg::Download(vec![7, 8, 9])).unwrap();
+        assert_eq!(client.recv().unwrap(), ClusterMsg::Verdict { stop: false });
+        assert_eq!(ep.recv().unwrap(), vec![7, 8, 9]);
+
+        // client → server: endpoint sends arrive as Upload envelopes,
+        // metered as upload payload bytes only
+        ep.send(vec![1, 2, 3, 4], 11).unwrap();
+        assert_eq!(server.recv().unwrap(), ClusterMsg::Upload(vec![1, 2, 3, 4]));
+        assert_eq!(acct.params_dir(Direction::Upload), 11);
+        assert_eq!(acct.bytes_dir(Direction::Upload), 4);
+        assert_eq!(acct.messages(), 1);
+    }
+
+    fn wait_disconnect(conn: &Conn) -> Disconnect {
+        for _ in 0..200 {
+            if let Some(d) = conn.disconnect_reason() {
+                return d;
+            }
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        panic!("peer disconnect never surfaced");
+    }
+
+    #[test]
+    fn finish_flushes_then_reads_as_clean_leave() {
+        let (client, server) = pair();
+        client.send(&ClusterMsg::Verdict { stop: true }).unwrap();
+        client.finish();
+        assert_eq!(server.recv().unwrap(), ClusterMsg::Verdict { stop: true });
+        assert_eq!(wait_disconnect(&server), Disconnect::Clean);
+        assert!(server.recv().is_err(), "drained queue surfaces the hangup");
+    }
+
+    #[test]
+    fn fail_abruptly_reads_as_crash() {
+        let (client, server) = pair();
+        client.fail_abruptly();
+        assert_eq!(wait_disconnect(&server), Disconnect::Abrupt);
+    }
+}

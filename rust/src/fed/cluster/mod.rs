@@ -1,0 +1,69 @@
+//! Multi-process cluster runtime: the federated engine deployed across
+//! OS processes with real failure semantics.
+//!
+//! The in-process drivers (`fed::orchestrator`) run every client inside
+//! one process.  This module runs the **same engine** over a routable
+//! TCP server (`feds serve --bind HOST:PORT`) and independent client
+//! processes (`feds client --connect HOST:PORT --spec file.json`):
+//!
+//! * [`proto`] — the versioned control-plane envelope ([`ClusterMsg`]):
+//!   hello/welcome/reject handshake, per-round reports and verdicts, and
+//!   nested data-plane frames carrying the exact `fed::protocol` bytes.
+//!   A registration is validated against the protocol version and an
+//!   FNV-1a digest of the experiment spec ([`spec_digest`]), so two
+//!   processes can never silently train different experiments.
+//! * [`ClusterServer`] — the coordinator: accepts registrations, drives
+//!   the round loop with a per-round **deadline** (stragglers are cut
+//!   and the round aggregates partially, their completed uploads carried
+//!   into the next round), detects dropouts through the transport's
+//!   clean/abrupt disconnect classification, and welcomes rejoining ids
+//!   back with a **resync** replay of their last personalized download.
+//! * [`run_client`] — one client process: handshake, then the ordinary
+//!   `ClientRunner` round loop over the connection's data plane, with
+//!   optional failure injection (`leave_after` / `fail_after`) for
+//!   drills and tests.
+//!
+//! Guarantee: with no failures injected, a cluster run over N processes
+//! is bit-identical — accounting, round records, convergence — to the
+//! same spec driven in-process (`session_equivalence` has the in-process
+//! bar, `tests/cluster.rs` the cross-process one).  Under failures the
+//! run still terminates: every round ends by deadline, partial rounds
+//! aggregate whoever reported, and `RunEvent::{ClientJoined,
+//! ClientDropped, PartialRound}` record the membership history.
+//!
+//! Wall-clock: [`ClusterOutcome::times`] measures real seconds per round
+//! (training + transfer), the dynamic counterpart of the static
+//! `comm::bandwidth` byte model — on a throttled link the two are
+//! directly comparable (see `benches/cluster_wallclock.rs`).
+
+mod client;
+mod conn;
+pub mod proto;
+mod server;
+
+pub use client::{run_client, ClientOpts};
+pub use proto::{spec_digest, ClusterMsg, PROTO_VERSION};
+pub use server::{ClusterOutcome, ClusterServer, ServeOpts};
+
+use anyhow::Result;
+
+use crate::fed::Backend;
+use crate::kge::Hyper;
+use crate::spec::{BackendSpec, ExperimentSpec};
+
+/// Resolve a spec's backend for cluster use.  Native only: cluster
+/// processes build their trainers from the spec alone, and the XLA
+/// runtime's AOT artifacts are not part of the handshake.
+pub(crate) fn native_backend(spec: &ExperimentSpec) -> Result<Backend> {
+    spec.validate()?;
+    let BackendSpec::Native { dim, learning_rate, batch, negatives, eval_batch } = &spec.backend
+    else {
+        anyhow::bail!("the cluster runtime is native-backend only (spec backend must be native)");
+    };
+    Ok(Backend::Native {
+        hyper: Hyper { dim: *dim, learning_rate: *learning_rate, ..Default::default() },
+        batch: *batch,
+        negatives: *negatives,
+        eval_batch: *eval_batch,
+    })
+}

@@ -1,0 +1,252 @@
+//! The cluster control-plane protocol: versioned envelopes carrying the
+//! handshake, per-round reports/verdicts, and the (already-encoded)
+//! `fed::protocol` data frames.
+//!
+//! Every message on a cluster socket is one [`ClusterMsg`] envelope,
+//! length-prefix framed by `comm::wire`.  The data-plane payloads
+//! ([`ClusterMsg::Upload`] / [`ClusterMsg::Download`]) nest the exact
+//! bytes the in-process transports would carry, so metering the inner
+//! blob keeps byte accounting bit-identical to a single-process run;
+//! the envelope itself is control-plane overhead and is never metered.
+
+use anyhow::Result;
+
+use crate::comm::wire::{WireReader, WireWriter};
+use crate::metrics::RankMetrics;
+use crate::spec::ExperimentSpec;
+
+/// Version of this control-plane protocol.  A [`ClusterMsg::Hello`] with
+/// any other version is rejected before the client enters the federation.
+pub const PROTO_VERSION: u16 = 1;
+
+/// FNV-1a digest of the spec's canonical JSON form.  Server and clients
+/// each hash their own copy; a mismatch at handshake time means the two
+/// processes would train different experiments, so the join is refused.
+pub fn spec_digest(spec: &ExperimentSpec) -> u64 {
+    let text = spec.to_json().to_string();
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in text.as_bytes() {
+        h ^= *b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// One control-plane envelope.  Tags are part of the wire format; new
+/// message kinds must append, never renumber.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ClusterMsg {
+    /// Client → server, first frame on the socket: register `client`
+    /// against the server's experiment, deferred until `join_round`
+    /// (0 or 1 = immediately).
+    Hello {
+        version: u16,
+        client: u16,
+        spec_digest: u64,
+        join_round: u32,
+    },
+    /// Server → client, admission: start working at `round`; `resync`
+    /// replays the server's last personalized download frame when this
+    /// id rejoins after a dropout.
+    Welcome {
+        round: u32,
+        resync: Option<Vec<u8>>,
+    },
+    /// Server → client: the handshake (or a duplicate registration) was
+    /// refused; the socket closes after this frame.
+    Reject { reason: String },
+    /// Client → server, once per round: the local-training result
+    /// (mirrors `orchestrator::client::Report`).
+    Report {
+        round: u32,
+        loss: f32,
+        batches: u64,
+        eval: Option<(RankMetrics, RankMetrics)>,
+    },
+    /// Server → client after an evaluation round: continue or stop.
+    Verdict { stop: bool },
+    /// Client → server data plane: an encoded `fed::protocol::Upload`.
+    Upload(Vec<u8>),
+    /// Server → client data plane: an encoded `fed::protocol::Download`.
+    Download(Vec<u8>),
+}
+
+const TAG_HELLO: u8 = 0;
+const TAG_WELCOME: u8 = 1;
+const TAG_REJECT: u8 = 2;
+const TAG_REPORT: u8 = 3;
+const TAG_VERDICT: u8 = 4;
+const TAG_UPLOAD: u8 = 5;
+const TAG_DOWNLOAD: u8 = 6;
+
+fn write_metrics(w: &mut WireWriter, m: &RankMetrics) {
+    w.u64(m.n as u64).f64(m.mrr).f64(m.hits1).f64(m.hits3).f64(m.hits10);
+}
+
+fn read_metrics(r: &mut WireReader) -> Result<RankMetrics> {
+    Ok(RankMetrics {
+        n: r.u64()? as usize,
+        mrr: r.f64()?,
+        hits1: r.f64()?,
+        hits3: r.f64()?,
+        hits10: r.f64()?,
+    })
+}
+
+impl ClusterMsg {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut w = WireWriter::new();
+        match self {
+            ClusterMsg::Hello { version, client, spec_digest, join_round } => {
+                w.u8(TAG_HELLO).u16(*version).u16(*client).u64(*spec_digest).u32(*join_round);
+            }
+            ClusterMsg::Welcome { round, resync } => {
+                w.u8(TAG_WELCOME).u32(*round);
+                match resync {
+                    Some(frame) => {
+                        w.u8(1).blob(frame);
+                    }
+                    None => {
+                        w.u8(0);
+                    }
+                }
+            }
+            ClusterMsg::Reject { reason } => {
+                w.u8(TAG_REJECT).blob(reason.as_bytes());
+            }
+            ClusterMsg::Report { round, loss, batches, eval } => {
+                w.u8(TAG_REPORT).u32(*round).f32(*loss).u64(*batches);
+                match eval {
+                    Some((valid, test)) => {
+                        w.u8(1);
+                        write_metrics(&mut w, valid);
+                        write_metrics(&mut w, test);
+                    }
+                    None => {
+                        w.u8(0);
+                    }
+                }
+            }
+            ClusterMsg::Verdict { stop } => {
+                w.u8(TAG_VERDICT).u8(*stop as u8);
+            }
+            ClusterMsg::Upload(frame) => {
+                w.u8(TAG_UPLOAD).blob(frame);
+            }
+            ClusterMsg::Download(frame) => {
+                w.u8(TAG_DOWNLOAD).blob(frame);
+            }
+        }
+        w.finish()
+    }
+
+    pub fn decode(buf: &[u8]) -> Result<ClusterMsg> {
+        let mut r = WireReader::new(buf);
+        let msg = match r.u8()? {
+            TAG_HELLO => ClusterMsg::Hello {
+                version: r.u16()?,
+                client: r.u16()?,
+                spec_digest: r.u64()?,
+                join_round: r.u32()?,
+            },
+            TAG_WELCOME => {
+                let round = r.u32()?;
+                let resync = match r.u8()? {
+                    0 => None,
+                    1 => Some(r.blob()?),
+                    other => anyhow::bail!("bad resync marker {other}"),
+                };
+                ClusterMsg::Welcome { round, resync }
+            }
+            TAG_REJECT => ClusterMsg::Reject {
+                reason: String::from_utf8(r.blob()?)
+                    .map_err(|_| anyhow::anyhow!("reject reason is not UTF-8"))?,
+            },
+            TAG_REPORT => {
+                let round = r.u32()?;
+                let loss = r.f32()?;
+                let batches = r.u64()?;
+                let eval = match r.u8()? {
+                    0 => None,
+                    1 => Some((read_metrics(&mut r)?, read_metrics(&mut r)?)),
+                    other => anyhow::bail!("bad eval marker {other}"),
+                };
+                ClusterMsg::Report { round, loss, batches, eval }
+            }
+            TAG_VERDICT => ClusterMsg::Verdict { stop: r.u8()? != 0 },
+            TAG_UPLOAD => ClusterMsg::Upload(r.blob()?),
+            TAG_DOWNLOAD => ClusterMsg::Download(r.blob()?),
+            other => anyhow::bail!("unknown cluster message tag {other}"),
+        };
+        anyhow::ensure!(r.remaining() == 0, "trailing bytes after cluster message");
+        Ok(msg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::check;
+    use crate::util::rng::Rng;
+
+    fn arb_metrics(rng: &mut Rng) -> RankMetrics {
+        RankMetrics {
+            n: rng.below(1000) as usize,
+            mrr: rng.f64(),
+            hits1: rng.f64(),
+            hits3: rng.f64(),
+            hits10: rng.f64(),
+        }
+    }
+
+    fn arb_msg(rng: &mut Rng) -> ClusterMsg {
+        match rng.below(7) {
+            0 => ClusterMsg::Hello {
+                version: rng.below(1 << 16) as u16,
+                client: rng.below(64) as u16,
+                spec_digest: rng.next_u64(),
+                join_round: rng.below(100) as u32,
+            },
+            1 => ClusterMsg::Welcome {
+                round: rng.below(100) as u32,
+                resync: (rng.below(2) == 1)
+                    .then(|| (0..rng.below(40)).map(|_| rng.below(256) as u8).collect()),
+            },
+            2 => ClusterMsg::Reject { reason: format!("reason {}", rng.below(1000)) },
+            3 => ClusterMsg::Report {
+                round: rng.below(100) as u32,
+                loss: rng.f64() as f32,
+                batches: rng.below(10_000),
+                eval: (rng.below(2) == 1).then(|| (arb_metrics(rng), arb_metrics(rng))),
+            },
+            4 => ClusterMsg::Verdict { stop: rng.below(2) == 1 },
+            5 => ClusterMsg::Upload((0..rng.below(64)).map(|_| rng.below(256) as u8).collect()),
+            _ => ClusterMsg::Download((0..rng.below(64)).map(|_| rng.below(256) as u8).collect()),
+        }
+    }
+
+    #[test]
+    fn envelope_roundtrip() {
+        check("cluster envelope roundtrip", 300, |rng| {
+            let msg = arb_msg(rng);
+            let decoded = ClusterMsg::decode(&msg.encode()).expect("decode");
+            assert_eq!(msg, decoded);
+        });
+    }
+
+    #[test]
+    fn malformed_envelopes_are_rejected() {
+        assert!(ClusterMsg::decode(&[]).is_err(), "empty buffer");
+        assert!(ClusterMsg::decode(&[200]).is_err(), "unknown tag");
+        // a valid message truncated anywhere must fail, never panic
+        check("truncated envelope rejected", 200, |rng| {
+            let buf = arb_msg(rng).encode();
+            let cut = rng.below(buf.len() as u64) as usize;
+            assert!(ClusterMsg::decode(&buf[..cut]).is_err(), "cut at {cut}/{}", buf.len());
+        });
+        // trailing garbage after a complete message is a desync, not data
+        let mut buf = ClusterMsg::Verdict { stop: true }.encode();
+        buf.push(0);
+        assert!(ClusterMsg::decode(&buf).is_err(), "trailing bytes");
+    }
+}

@@ -27,11 +27,13 @@
 //!     progress and JSONL metric streams are observers, not hard-wired
 //!
 //! Entry points: describe runs with [`crate::spec::ExperimentSpec`] and
-//! execute them through [`crate::spec::Session`].  [`run_federated`] with
-//! the flat [`FedRunConfig`] survives as a deprecated shim over the same
-//! engine ([`run_params`]), with byte-identical accounting and
-//! bit-identical metrics between the two paths.
+//! execute them through [`crate::spec::Session`], which derives the
+//! resolved [`RoundParams`] and drives the engine ([`run_params`]).  The
+//! `cluster` module deploys the same engine across OS processes: a
+//! routable TCP server plus independent client processes, with round
+//! deadlines, partial aggregation and rejoin-with-resync semantics.
 
+pub mod cluster;
 pub mod compression;
 pub mod orchestrator;
 pub mod protocol;
@@ -39,10 +41,7 @@ pub mod server;
 pub mod sync;
 pub mod topk;
 
-pub use orchestrator::{
-    run_federated, run_params, run_with_observers, Algo, Backend, ExecMode, FedRunConfig,
-    RoundParams, RunOutcome,
-};
+pub use orchestrator::{run_params, Algo, Backend, ExecMode, RoundParams, RunOutcome};
 pub use server::Server;
 pub use sync::SyncSchedule;
 

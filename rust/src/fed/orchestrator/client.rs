@@ -217,6 +217,64 @@ impl<'d> ClientRunner<'d> {
         ex.apply_download(&mut self.ctx, msg)
     }
 
+    /// Cluster rejoin: advance the client half of the exchange through
+    /// rounds this process never ran.  The FedS sync schedule is stateful
+    /// (`last_sync`), so a client joining at round `r` must replay
+    /// `begin_round` for every earlier round or its sparse/dense parity
+    /// diverges from the server's persistent half.
+    pub fn fast_forward(&mut self, last_completed_round: u32) {
+        if let Some(ex) = self.exchange.as_mut() {
+            for r in 1..=last_completed_round {
+                ex.begin_round(r);
+            }
+        }
+    }
+
+    /// Cluster rejoin resync: fold a replayed download frame (the server's
+    /// last personalized reply to this client id) into local state,
+    /// bypassing the exchange's round-parity guards.  A full frame
+    /// overwrites the shared rows outright; a sparse frame applies the
+    /// Eq. 4 priority-weighted merge against this trainer's current rows.
+    pub fn apply_resync(&mut self, frame: &[u8]) -> Result<()> {
+        let width = self.ctx.trainer.entity_width();
+        match Download::decode(frame)? {
+            Download::Full { emb, .. } => {
+                anyhow::ensure!(
+                    emb.len() == self.ctx.shared.len() * width,
+                    "resync frame disagrees with this client's shared-row count"
+                );
+                self.ctx.trainer.set_entity_rows(&self.ctx.shared, &emb)
+            }
+            Download::Sparse { sign, emb, prio, .. } => {
+                anyhow::ensure!(
+                    sign.len() == self.ctx.shared.len(),
+                    "resync sign vector disagrees with this client's shared-row count"
+                );
+                let ids: Vec<u32> = sign
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, &s)| s)
+                    .map(|(i, _)| self.ctx.shared[i])
+                    .collect();
+                anyhow::ensure!(prio.len() == ids.len(), "resync priority vector length mismatch");
+                if ids.is_empty() {
+                    return Ok(());
+                }
+                let own = self.ctx.trainer.get_entity_rows(&ids)?;
+                let mut merged = vec![0.0f32; ids.len() * width];
+                for (j, out) in merged.chunks_exact_mut(width).enumerate() {
+                    let denom = 1.0 + prio[j] as f32;
+                    let agg = &emb[j * width..(j + 1) * width];
+                    let mine = &own[j * width..(j + 1) * width];
+                    for ((o, &a), &m) in out.iter_mut().zip(agg).zip(mine) {
+                        *o = (a + m) / denom;
+                    }
+                }
+                self.ctx.trainer.set_entity_rows(&ids, &merged)
+            }
+        }
+    }
+
     /// Threaded-mode loop: train → report → (await verdict on eval
     /// rounds) → exchange, every round, mirroring the server driver's
     /// schedule exactly.

@@ -30,9 +30,10 @@
 //! client-id order regardless of thread arrival order.
 //!
 //! Internals consume [`RoundParams`] — the resolved-parameter struct
-//! derived once per run — never the deprecated flat [`FedRunConfig`],
-//! which survives only as the public shim ([`run_federated`] /
-//! [`run_with_observers`]) over the same engine ([`run_params`]).
+//! derived once per run from a [`crate::spec::ExperimentSpec`]
+//! ([`RoundParams::from_spec`]); [`run_params`] is the engine entry
+//! point every public surface (sessions, the CLI, the cluster runtime)
+//! drives.
 
 pub mod client;
 pub mod exchange;
@@ -47,8 +48,8 @@ use anyhow::Result;
 use crate::comm::accounting::{Accounting, Direction};
 use crate::comm::transport::{duplex, Endpoint, TcpTransport, TransportSpec};
 use crate::data::partition::FedDataset;
-use crate::kge::{Hyper, Method, Table};
-use crate::metrics::observe::{emit, ConsoleObserver, HistoryObserver, RunEvent, RunObserver};
+use crate::kge::{Hyper, Table};
+use crate::metrics::observe::{emit, HistoryObserver, RunEvent, RunObserver};
 use crate::metrics::tracker::{RoundRecord, RunHistory};
 use crate::metrics::{EarlyStop, RankMetrics};
 use crate::runtime::Runtime;
@@ -120,14 +121,14 @@ pub enum Backend {
 }
 
 impl Backend {
-    fn batch_shape(&self) -> (usize, usize) {
+    pub(crate) fn batch_shape(&self) -> (usize, usize) {
         match self {
             Backend::Xla(rt) => (rt.manifest.batch, rt.manifest.negatives),
             Backend::Native { batch, negatives, .. } => (*batch, *negatives),
         }
     }
 
-    fn make_trainer(
+    pub(crate) fn make_trainer(
         &self,
         params: &RoundParams,
         num_entities: usize,
@@ -166,7 +167,7 @@ impl Backend {
 /// (Appendix VI-C) is derived from the **configured** sparsity and sync
 /// interval, so the FedEPL/FedS comparison stays volume-matched for any
 /// parameterization, not just the paper defaults.
-fn native_trainer(
+pub(crate) fn native_trainer(
     hyper: &Hyper,
     eval_batch: usize,
     params: &RoundParams,
@@ -221,93 +222,12 @@ impl ExecMode {
     }
 }
 
-/// The deprecated flat run configuration.
-///
-/// Every algorithm's knobs live side by side here whether or not the
-/// selected algorithm reads them (`sparsity`/`sync_interval` are FedS's,
-/// `svd_cols` is the SVD transport's).  New code should describe runs
-/// with [`crate::spec::ExperimentSpec`] — whose `AlgoSpec` carries only
-/// the selected algorithm's knobs — and execute them through
-/// [`crate::spec::Session`].  This struct is **only** the public shim:
-/// the orchestrator internals consume the resolved [`RoundParams`]
-/// ([`RoundParams::resolve`] is the one conversion point).
-#[derive(Clone, Debug)]
-pub struct FedRunConfig {
-    pub algo: Algo,
-    pub method: Method,
-    /// hard cap on communication rounds
-    pub max_rounds: usize,
-    /// local epochs per round (paper default 3)
-    pub local_epochs: usize,
-    /// evaluate every N rounds (paper: every 5)
-    pub eval_every: usize,
-    /// early-stop patience in evaluations (paper: 3)
-    pub patience: usize,
-    /// FedS sparsity ratio p (paper: 0.4, 0.7 for one config)
-    pub sparsity: f64,
-    /// FedS synchronization interval s (paper: 4)
-    pub sync_interval: usize,
-    /// cap on eval queries per client per split (0 = all)
-    pub eval_cap: usize,
-    pub seed: u64,
-    /// columns of the SVD reshape (paper: 8)
-    pub svd_cols: usize,
-    /// client execution mode (sequential or one OS thread per client)
-    pub exec: ExecMode,
-}
-
-impl Default for FedRunConfig {
-    fn default() -> Self {
-        Self {
-            algo: Algo::FedS { sync: true },
-            method: Method::TransE,
-            max_rounds: 200,
-            local_epochs: 3,
-            eval_every: 5,
-            patience: 3,
-            sparsity: 0.4,
-            sync_interval: 4,
-            eval_cap: 0,
-            seed: 0xFED5,
-            svd_cols: 8,
-            exec: ExecMode::Sequential,
-        }
-    }
-}
-
 /// Outcome of a federated run: history plus final accounting.
 pub struct RunOutcome {
     pub history: RunHistory,
     pub acct: Arc<Accounting>,
     /// analytic Eq. 5 ratio for this configuration (FedS only)
     pub eq5_ratio: Option<f64>,
-}
-
-/// Run one federated training experiment from the deprecated flat config.
-///
-/// Legacy shim: prefer building a [`crate::spec::ExperimentSpec`] and
-/// executing it through [`crate::spec::Session`] — both paths drive this
-/// same engine, so accounting is byte-identical and metric history
-/// bit-identical between them.  This wrapper just registers the default
-/// console-progress observer and delegates.
-pub fn run_federated(
-    data: &FedDataset,
-    cfg: &FedRunConfig,
-    backend: &Backend,
-) -> Result<RunOutcome> {
-    let mut console = ConsoleObserver::new();
-    run_with_observers(data, cfg, backend, &mut [&mut console])
-}
-
-/// Deprecated-config entry point: resolve the flat config once and run
-/// the engine.
-pub fn run_with_observers(
-    data: &FedDataset,
-    cfg: &FedRunConfig,
-    backend: &Backend,
-    extra: &mut [&mut dyn RunObserver],
-) -> Result<RunOutcome> {
-    run_params(data, &RoundParams::resolve(cfg, backend), backend, extra)
 }
 
 /// The engine entry point: run the round loop over the resolved
@@ -379,14 +299,14 @@ impl LinkFactory {
 /// The server side of a run: aggregation state, the strategy's server
 /// half, eval weights, and the run label (history itself is assembled by
 /// the observer pipeline).
-struct ServerSide {
-    server: Server,
-    exchange: Option<Box<dyn exchange::Exchange>>,
-    weights: Vec<f64>,
-    label: String,
+pub(crate) struct ServerSide {
+    pub(crate) server: Server,
+    pub(crate) exchange: Option<Box<dyn exchange::Exchange>>,
+    pub(crate) weights: Vec<f64>,
+    pub(crate) label: String,
 }
 
-fn server_side(
+pub(crate) fn server_side(
     data: &FedDataset,
     params: &RoundParams,
     width: usize,

@@ -1,19 +1,27 @@
 //! The orchestrator's resolved per-run parameters.
 //!
-//! [`RoundParams`] is derived **once** per run — from a
-//! [`crate::spec::ExperimentSpec`] by [`crate::spec::Session::build`], or
-//! from the deprecated flat [`FedRunConfig`] by [`RoundParams::resolve`]
-//! — and is the only configuration type the orchestrator internals
-//! (`client`, `exchange`, the drivers) consume.  Resolution happens at
-//! derivation, not at use sites: the execution mode is already downgraded
-//! when the backend cannot thread, the transport and server shard count
-//! are concrete values, and every knob is the one the run will actually
-//! honor.  `FedRunConfig` itself survives only as the public shim.
+//! [`RoundParams`] is derived **once** per run from a
+//! [`crate::spec::ExperimentSpec`] by [`RoundParams::from_spec`] (what
+//! [`crate::spec::Session::build`] calls) and is the only configuration
+//! type the orchestrator internals (`client`, `exchange`, the drivers)
+//! consume.  Resolution happens at derivation, not at use sites: the
+//! execution mode is already downgraded when the backend cannot thread,
+//! the transport and server shard count are concrete values, and every
+//! knob is the one the run will actually honor.
 
 use crate::comm::transport::TransportSpec;
 use crate::kge::Method;
+use crate::spec::{AlgoSpec, ExperimentSpec};
 
-use super::{Algo, Backend, ExecMode, FedRunConfig};
+use super::{Algo, Backend, ExecMode};
+
+/// Knobs a run carries whether or not the selected algorithm reads them
+/// (FedEPL's volume-matched dimension derives from the paper-default
+/// sparsity and sync interval; the SVD column count only matters to the
+/// SVD transport).
+const DEFAULT_SPARSITY: f64 = 0.4;
+const DEFAULT_SYNC_INTERVAL: usize = 4;
+const DEFAULT_SVD_COLS: usize = 8;
 
 /// Resolved knobs of one federated run (see module docs).
 #[derive(Clone, Debug)]
@@ -49,12 +57,22 @@ pub struct RoundParams {
 }
 
 impl RoundParams {
-    /// Resolve the deprecated flat config against `backend`.  The legacy
-    /// path always ran in-process links, so the transport stays mpsc;
-    /// the server shard count defaults to the machine's parallelism
-    /// (bit-identical to one shard, see `fed::server`).
-    pub fn resolve(cfg: &FedRunConfig, backend: &Backend) -> Self {
-        let exec = match (cfg.exec, backend) {
+    /// The one derivation point: resolve a spec against `backend`.
+    ///
+    /// Scoped algorithm knobs land in their flat slots; knobs a variant
+    /// does not own take the paper defaults (so e.g. FedEPL's
+    /// volume-matched dimension derives from p=0.4, s=4 for any spec).
+    /// `shards == 0` resolves to [`auto_shards`]; threaded execution on
+    /// the XLA backend downgrades to sequential here, with a warning.
+    pub fn from_spec(spec: &ExperimentSpec, backend: &Backend) -> Self {
+        let (sparsity, sync_interval, svd_cols) = match &spec.algo {
+            AlgoSpec::FedS { sparsity, sync_interval, .. } => {
+                (*sparsity, *sync_interval, DEFAULT_SVD_COLS)
+            }
+            AlgoSpec::Svd { cols, .. } => (DEFAULT_SPARSITY, DEFAULT_SYNC_INTERVAL, *cols),
+            _ => (DEFAULT_SPARSITY, DEFAULT_SYNC_INTERVAL, DEFAULT_SVD_COLS),
+        };
+        let exec = match (spec.exec, backend) {
             (ExecMode::Threaded, Backend::Xla(_)) => {
                 crate::warn_!(
                     "threaded execution needs Send trainers and the PJRT client is not Send; \
@@ -65,20 +83,20 @@ impl RoundParams {
             (e, _) => e,
         };
         Self {
-            algo: cfg.algo,
-            method: cfg.method,
-            max_rounds: cfg.max_rounds,
-            local_epochs: cfg.local_epochs,
-            eval_every: cfg.eval_every,
-            patience: cfg.patience,
-            sparsity: cfg.sparsity,
-            sync_interval: cfg.sync_interval,
-            eval_cap: cfg.eval_cap,
-            seed: cfg.seed,
-            svd_cols: cfg.svd_cols,
+            algo: spec.algo.algo(),
+            method: spec.method,
+            max_rounds: spec.budget.max_rounds,
+            local_epochs: spec.budget.local_epochs,
+            eval_every: spec.budget.eval_every,
+            patience: spec.budget.patience,
+            sparsity,
+            sync_interval,
+            eval_cap: spec.budget.eval_cap,
+            seed: spec.seed,
+            svd_cols,
             exec,
-            transport: TransportSpec::Mpsc,
-            shards: auto_shards(),
+            transport: spec.transport,
+            shards: if spec.shards > 0 { spec.shards } else { auto_shards() },
         }
     }
 }
@@ -95,25 +113,58 @@ pub fn auto_shards() -> usize {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::spec::{BackendSpec, BudgetSpec, DataSpec};
+
+    fn spec() -> ExperimentSpec {
+        ExperimentSpec {
+            name: String::new(),
+            method: Method::TransE,
+            algo: AlgoSpec::FedS { sparsity: 0.7, sync_interval: 2, sync: false },
+            data: DataSpec {
+                entities: 192,
+                relations: 12,
+                triples: 2400,
+                clusters: 4,
+                clients: 3,
+                seed: 7,
+            },
+            backend: BackendSpec::native_default(),
+            budget: BudgetSpec { max_rounds: 9, ..Default::default() },
+            seed: 7,
+            exec: ExecMode::Threaded,
+            transport: TransportSpec::Mpsc,
+            shards: 0,
+        }
+    }
 
     #[test]
-    fn resolve_copies_every_knob() {
-        let cfg = FedRunConfig {
-            algo: Algo::FedS { sync: false },
-            sparsity: 0.7,
-            sync_interval: 2,
-            max_rounds: 9,
-            exec: ExecMode::Threaded,
-            ..Default::default()
-        };
+    fn from_spec_copies_every_knob() {
+        let spec = spec();
         let backend = crate::exp::native_backend();
-        let p = RoundParams::resolve(&cfg, &backend);
-        assert_eq!(p.algo, cfg.algo);
-        assert_eq!(p.sparsity, cfg.sparsity);
-        assert_eq!(p.sync_interval, cfg.sync_interval);
-        assert_eq!(p.max_rounds, cfg.max_rounds);
+        let p = RoundParams::from_spec(&spec, &backend);
+        assert_eq!(p.algo, Algo::FedS { sync: false });
+        assert_eq!(p.sparsity, 0.7);
+        assert_eq!(p.sync_interval, 2);
+        assert_eq!(p.max_rounds, 9);
+        assert_eq!(p.svd_cols, DEFAULT_SVD_COLS, "unowned knobs take the paper defaults");
         assert_eq!(p.exec, ExecMode::Threaded, "native backend keeps threaded exec");
-        assert_eq!(p.transport, TransportSpec::Mpsc, "legacy path is in-process");
-        assert!(p.shards >= 1);
+        assert_eq!(p.transport, TransportSpec::Mpsc);
+        assert!(p.shards >= 1, "shards 0 resolves to auto");
+    }
+
+    #[test]
+    fn from_spec_scopes_svd_and_defaults() {
+        let mut spec = spec();
+        spec.algo = AlgoSpec::Svd { cols: 4, plus: true };
+        spec.shards = 3;
+        spec.transport = TransportSpec::Tcp;
+        let backend = crate::exp::native_backend();
+        let p = RoundParams::from_spec(&spec, &backend);
+        assert_eq!(p.algo, Algo::FedSvd { constrained: true });
+        assert_eq!(p.svd_cols, 4);
+        assert_eq!(p.sparsity, DEFAULT_SPARSITY);
+        assert_eq!(p.sync_interval, DEFAULT_SYNC_INTERVAL);
+        assert_eq!(p.shards, 3, "explicit shard counts pass through");
+        assert_eq!(p.transport, TransportSpec::Tcp);
     }
 }

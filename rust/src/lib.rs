@@ -19,8 +19,7 @@
 //!   API.  `ExperimentSpec` is a fully JSON-(de)serializable run
 //!   description (data/backend/budget plus an algorithm-scoped `AlgoSpec`
 //!   where each variant carries only its own knobs); `Session::build`
-//!   turns specs into executable `Run` handles.  The flat `FedRunConfig`
-//!   survives only as a deprecated conversion target.
+//!   turns specs into executable `Run` handles.
 //! * [`kge`] — method/table/optimizer definitions and the pure-Rust
 //!   reference engine (`kge::native`).  The training hot path is sparse:
 //!   touched-row gradients (`SparseGrad`) + lazy row-wise Adam
@@ -38,7 +37,10 @@
 //!   per-algorithm `Exchange` strategies, sequential/threaded drivers,
 //!   and the resolved per-run `RoundParams` its internals consume.
 //!   The round loop emits typed events rather than printing or assembling
-//!   results inline.
+//!   results inline.  `fed::cluster` deploys the same engine across OS
+//!   processes — `feds serve` + N `feds client` — with a versioned
+//!   handshake, round deadlines with partial aggregation, dropout
+//!   detection and rejoin-with-resync.
 //! * [`comm`] — the transport trait hierarchy and accounting:
 //!   `comm::transport::Endpoint` is the metered link seam with two
 //!   implementations — in-process mpsc duplexes (`transport::mpsc`) and

@@ -4,6 +4,8 @@
 //!   info                     runtime + manifest summary
 //!   run [opts]               run one experiment from a JSON ExperimentSpec
 //!   sweep --spec file [opts] execute a sweep grid from a JSON SweepSpec
+//!   serve --spec file [opts] host a cluster run over TCP for client processes
+//!   client --spec file [opts] join a hosted cluster run as one client process
 //!   train [opts]             legacy flat-flag runner (prefer `run`)
 //!   exp <table|all> [opts]   regenerate a paper table/figure
 //!   ratio [opts]             Eq. 5 analytic vs measured communication ratio
@@ -13,17 +15,19 @@
 //! --help` for per-command options.  Usage errors exit with code 2 and the
 //! relevant `--help` text; runtime failures exit with code 1.
 
+use std::io::Write as _;
 use std::path::Path;
+use std::time::Duration;
 
 use anyhow::Result;
 
-use feds::data::generator::generate;
-use feds::data::partition::partition;
+use feds::comm::bandwidth::BandwidthModel;
 use feds::exp::sweep::{grid_report, resume_point, run_sweep, run_sweep_from, SweepSpec};
 use feds::exp::{self, Ctx};
-use feds::fed::{comm_ratio, run_federated, Algo, ExecMode, FedRunConfig, RunOutcome};
+use feds::fed::cluster::{run_client, ClientOpts, ClusterServer, ServeOpts};
+use feds::fed::{comm_ratio, Backend, ExecMode, RunOutcome};
 use feds::kge::Method;
-use feds::metrics::observe::JsonlSink;
+use feds::metrics::observe::{ConsoleObserver, JsonlSink, RunObserver};
 use feds::spec::{
     AlgoSpec, BackendSpec, BudgetSpec, DataSpec, ExperimentSpec, Session, TransportSpec,
 };
@@ -66,6 +70,8 @@ fn main() {
         "info" => cmd_info().map_err(Failure::Run),
         "run" => cmd_run(rest),
         "sweep" => cmd_sweep(rest),
+        "serve" => cmd_serve(rest),
+        "client" => cmd_client(rest),
         "train" => cmd_train(rest),
         "exp" => cmd_exp(rest),
         "ratio" => cmd_ratio(rest),
@@ -101,6 +107,8 @@ fn print_usage() {
            info     show PJRT runtime and artifact manifest\n\
            run      run one experiment from a JSON spec (flags override spec fields)\n\
            sweep    execute a sweep grid (base spec × axes) from a JSON spec\n\
+           serve    host a cluster run: accept client processes, drive the rounds\n\
+           client   join a hosted cluster run as one client process\n\
            train    legacy flat-flag runner (prefer `run`)\n\
            exp      regenerate paper tables/figures: table1 table23 table4\n\
                     table5 table6 fig2 all\n\
@@ -361,6 +369,107 @@ fn cmd_sweep(args: &[String]) -> Result<(), Failure> {
     Ok(())
 }
 
+/// `--rate-mbps`/`--latency-ms` → the per-link rate model shared by
+/// `serve` and `client` (`None` = unthrottled loopback).
+fn bandwidth_model(m: &feds::util::cli::Matches) -> Result<Option<BandwidthModel>, Failure> {
+    let mbps = m.f64("rate-mbps").map_err(Failure::Usage)?;
+    let latency_ms = m.f64("latency-ms").map_err(Failure::Usage)?;
+    if mbps <= 0.0 {
+        return Ok(None);
+    }
+    Ok(Some(BandwidthModel { bytes_per_sec: mbps * 1e6 / 8.0, latency_s: latency_ms / 1e3 }))
+}
+
+fn serve_cli() -> Cli {
+    Cli::new("feds serve", "host a cluster run: accept client processes and drive the rounds")
+        .opt("spec", "", "path to an ExperimentSpec JSON file (required; native backend)")
+        .opt("bind", "127.0.0.1:7464", "listen address HOST:PORT (port 0 = ephemeral)")
+        .opt("deadline-ms", "30000", "per-round report deadline before partial aggregation")
+        .opt("expect", "0", "clients required before round 1 starts (0 = every client)")
+        .opt("rate-mbps", "0", "rate-limit every link to this many Mbit/s (0 = unthrottled)")
+        .opt("latency-ms", "0", "per-message link latency for the rate model")
+        .opt("jsonl", "", "stream run events to this JSONL file")
+        .flag("quiet", "suppress console progress")
+}
+
+fn cmd_serve(args: &[String]) -> Result<(), Failure> {
+    let cli = serve_cli();
+    let m = cli.parse(args)?;
+    let spec_path = m.get("spec").map_err(Failure::Usage)?;
+    if spec_path.is_empty() {
+        return Err(Failure::Usage(format!("--spec is required\n\n{}", cli.usage())));
+    }
+    let spec = ExperimentSpec::load(Path::new(spec_path))?;
+    let opts = ServeOpts {
+        deadline: Duration::from_millis(m.u64("deadline-ms").map_err(Failure::Usage)?),
+        bandwidth: bandwidth_model(&m)?,
+        expect: m.usize("expect").map_err(Failure::Usage)?,
+    };
+    let server = ClusterServer::bind(m.get("bind").map_err(Failure::Usage)?, &spec, opts)?;
+    // harnesses parse this line to learn an ephemeral port; flush
+    // explicitly, since a piped stdout is block-buffered
+    println!("listening on {}", server.addr());
+    std::io::stdout().flush().map_err(|e| Failure::Run(e.into()))?;
+
+    let mut console = ConsoleObserver::new();
+    let mut sink = None;
+    let jsonl = m.get("jsonl").map_err(Failure::Usage)?;
+    if !jsonl.is_empty() {
+        sink = Some(JsonlSink::create(Path::new(jsonl))?);
+    }
+    let mut observers: Vec<&mut dyn RunObserver> = Vec::new();
+    if !m.flag("quiet") {
+        observers.push(&mut console);
+    }
+    if let Some(s) = sink.as_mut() {
+        observers.push(s);
+    }
+    let out = server.run(&mut observers)?;
+    print_outcome(&out.run);
+    let t = &out.times;
+    println!(
+        "wall-clock: {} rounds, mean {:.3}s, max {:.3}s, total {:.1}s",
+        t.secs.len(),
+        t.mean(),
+        t.max(),
+        t.total()
+    );
+    Ok(())
+}
+
+fn client_cli() -> Cli {
+    Cli::new("feds client", "join a cluster run hosted by `feds serve` as one client process")
+        .opt("spec", "", "path to the server's ExperimentSpec JSON file (required)")
+        .opt("connect", "127.0.0.1:7464", "server address HOST:PORT")
+        .opt("id", "0", "this client's id within the spec's fleet")
+        .opt("join-at", "0", "defer participation until this round (0 = join immediately)")
+        .opt("rate-mbps", "0", "rate-limit the uplink to this many Mbit/s (0 = unthrottled)")
+        .opt("latency-ms", "0", "per-message link latency for the rate model")
+        .opt("leave-after", "0", "failure drill: leave cleanly after this round (0 = never)")
+        .opt("fail-after", "0", "failure drill: crash mid-frame after this round (0 = never)")
+}
+
+fn cmd_client(args: &[String]) -> Result<(), Failure> {
+    let cli = client_cli();
+    let m = cli.parse(args)?;
+    let spec_path = m.get("spec").map_err(Failure::Usage)?;
+    if spec_path.is_empty() {
+        return Err(Failure::Usage(format!("--spec is required\n\n{}", cli.usage())));
+    }
+    let spec = ExperimentSpec::load(Path::new(spec_path))?;
+    let id = m.usize("id").map_err(Failure::Usage)? as u16;
+    let mut opts = ClientOpts::new(m.get("connect").map_err(Failure::Usage)?, id);
+    opts.join_round = m.usize("join-at").map_err(Failure::Usage)? as u32;
+    opts.bandwidth = bandwidth_model(&m)?;
+    let leave = m.usize("leave-after").map_err(Failure::Usage)?;
+    opts.leave_after = (leave > 0).then_some(leave);
+    let fail = m.usize("fail-after").map_err(Failure::Usage)?;
+    opts.fail_after = (fail > 0).then_some(fail);
+    run_client(&spec, &opts)?;
+    println!("client {id} done");
+    Ok(())
+}
+
 fn train_cli() -> Cli {
     Cli::new("feds train", "legacy flat-flag runner (prefer `feds run`)")
         .opt("algo", "feds", "single|fedep|fedepl|feds|feds-nosync|fedkd|fedsvd|fedsvd+")
@@ -380,33 +489,45 @@ fn train_cli() -> Cli {
 
 fn cmd_train(args: &[String]) -> Result<(), Failure> {
     let m = train_cli().parse(args)?;
-    let ctx = Ctx::from_options(
-        m.get("backend").map_err(Failure::Usage)?,
-        false,
-        m.u64("seed").map_err(Failure::Usage)?,
-    )?;
-    let mut gen = ctx.gen_config();
+    let seed = m.u64("seed").map_err(Failure::Usage)?;
+    let ctx = Ctx::from_options(m.get("backend").map_err(Failure::Usage)?, false, seed)?;
+    let gen = ctx.gen_config();
     let triples = m.usize("triples").map_err(Failure::Usage)?;
-    if triples > 0 {
-        gen.num_triples = triples;
+    let mut algo = AlgoSpec::parse(m.get("algo").map_err(Failure::Usage)?)?;
+    if let AlgoSpec::FedS { sparsity, sync_interval, .. } = &mut algo {
+        *sparsity = m.f64("sparsity").map_err(Failure::Usage)?;
+        *sync_interval = m.usize("sync-interval").map_err(Failure::Usage)?;
     }
-    let kg = generate(&gen);
-    let data = partition(&kg, m.usize("clients").map_err(Failure::Usage)?, m.u64("seed").map_err(Failure::Usage)?);
-    let cfg = FedRunConfig {
-        algo: Algo::parse(m.get("algo").map_err(Failure::Usage)?)?,
+    let spec = ExperimentSpec {
+        name: "train".into(),
         method: Method::parse(m.get("method").map_err(Failure::Usage)?)?,
-        max_rounds: m.usize("rounds").map_err(Failure::Usage)?,
-        local_epochs: m.usize("local-epochs").map_err(Failure::Usage)?,
-        eval_every: m.usize("eval-every").map_err(Failure::Usage)?,
-        patience: 3,
-        sparsity: m.f64("sparsity").map_err(Failure::Usage)?,
-        sync_interval: m.usize("sync-interval").map_err(Failure::Usage)?,
-        eval_cap: m.usize("eval-cap").map_err(Failure::Usage)?,
-        seed: m.u64("seed").map_err(Failure::Usage)?,
-        svd_cols: 8,
+        algo,
+        data: DataSpec {
+            entities: gen.num_entities,
+            relations: gen.num_relations,
+            triples: if triples > 0 { triples } else { gen.num_triples },
+            clusters: gen.num_clusters,
+            clients: m.usize("clients").map_err(Failure::Usage)?,
+            seed,
+        },
+        backend: ctx.backend_spec(),
+        budget: BudgetSpec {
+            max_rounds: m.usize("rounds").map_err(Failure::Usage)?,
+            local_epochs: m.usize("local-epochs").map_err(Failure::Usage)?,
+            eval_every: m.usize("eval-every").map_err(Failure::Usage)?,
+            patience: 3,
+            eval_cap: m.usize("eval-cap").map_err(Failure::Usage)?,
+        },
+        seed,
         exec: ExecMode::parse(m.get("exec").map_err(Failure::Usage)?)?,
+        transport: TransportSpec::Mpsc,
+        shards: 0,
     };
-    let out = run_federated(&data, &cfg, &ctx.backend)?;
+    let mut session = match &ctx.backend {
+        Backend::Xla(rt) => Session::with_runtime(rt.clone()),
+        _ => Session::new(),
+    };
+    let out = session.build(&spec)?.execute()?;
     print_outcome(&out);
     Ok(())
 }

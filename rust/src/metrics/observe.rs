@@ -52,6 +52,29 @@ pub enum RunEvent {
     },
     /// An evaluation round produced a full metric record.
     Evaluated { record: RoundRecord },
+    /// A cluster client completed the handshake and entered the
+    /// federation (`rejoin` when it re-registered after a dropout and
+    /// had the cached personalized download replayed).
+    ClientJoined {
+        round: usize,
+        client: usize,
+        rejoin: bool,
+    },
+    /// A cluster client's connection ended (`clean` distinguishes a
+    /// graceful leave from a mid-frame crash — see
+    /// [`crate::comm::Disconnect`]).
+    ClientDropped {
+        round: usize,
+        client: usize,
+        clean: bool,
+    },
+    /// The round deadline expired before every live client reported; the
+    /// server aggregated partially over the `reported` of `expected`.
+    PartialRound {
+        round: usize,
+        reported: usize,
+        expected: usize,
+    },
     /// The convergence point is known (index into the evaluated records —
     /// the best validation MRR so far, exactly the legacy early-stop rule).
     Converged { record_index: usize },
@@ -104,6 +127,21 @@ impl RunEvent {
                     .set("valid", rank(&record.valid))
                     .set("test", rank(&record.test))
             }
+            RunEvent::ClientJoined { round, client, rejoin } => Json::obj()
+                .set("event", "client_joined")
+                .set("round", *round)
+                .set("client", *client)
+                .set("rejoin", *rejoin),
+            RunEvent::ClientDropped { round, client, clean } => Json::obj()
+                .set("event", "client_dropped")
+                .set("round", *round)
+                .set("client", *client)
+                .set("clean", *clean),
+            RunEvent::PartialRound { round, reported, expected } => Json::obj()
+                .set("event", "partial_round")
+                .set("round", *round)
+                .set("reported", *reported)
+                .set("expected", *expected),
             RunEvent::Converged { record_index } => Json::obj()
                 .set("event", "converged")
                 .set("record_index", *record_index),
@@ -191,6 +229,23 @@ impl RunObserver for ConsoleObserver {
                     record.valid.mrr,
                     record.test.mrr,
                     record.params_cum as f64 / 1e6
+                );
+            }
+            RunEvent::ClientJoined { round, client, rejoin } => {
+                let how = if *rejoin { "rejoined (resynced)" } else { "joined" };
+                crate::info!("{} round {}: client {} {}", self.label, round, client, how);
+            }
+            RunEvent::ClientDropped { round, client, clean } => {
+                let how = if *clean { "left" } else { "dropped" };
+                crate::info!("{} round {}: client {} {}", self.label, round, client, how);
+            }
+            RunEvent::PartialRound { round, reported, expected } => {
+                crate::info!(
+                    "{} round {}: partial aggregation over {}/{} clients",
+                    self.label,
+                    round,
+                    reported,
+                    expected
                 );
             }
             _ => {}
@@ -352,6 +407,9 @@ mod tests {
             RunEvent::UploadAccounted { round: 1, params_cum: 2, bytes_cum: 3, messages: 4 },
             RunEvent::Synced { round: 1, params_cum: 5, bytes_cum: 6 },
             RunEvent::Evaluated { record: record(1, 0.1, 7) },
+            RunEvent::ClientJoined { round: 3, client: 1, rejoin: true },
+            RunEvent::ClientDropped { round: 2, client: 0, clean: false },
+            RunEvent::PartialRound { round: 2, reported: 2, expected: 3 },
             RunEvent::Converged { record_index: 0 },
             RunEvent::RunEnd { params: 8, bytes: 9, messages: 10 },
         ];

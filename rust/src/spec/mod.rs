@@ -12,11 +12,9 @@
 //! `"budget.max_rounds"`, `"transport"`, `"shards"`) — the one mechanism
 //! behind both CLI flag overrides and sweep axes (`crate::exp::sweep`).
 //!
-//! The legacy flat [`FedRunConfig`] survives only as the deprecated
-//! public shim ([`ExperimentSpec::run_config`] /
-//! [`AlgoSpec::from_legacy`]); the orchestrator internals consume the
-//! resolved [`crate::fed::RoundParams`].  New code should build specs and
-//! run them through [`Session`].
+//! Specs are the only way to launch runs: [`Session::build`] derives the
+//! orchestrator's resolved [`crate::fed::RoundParams`] directly from the
+//! spec and the resolved backend.
 
 pub mod session;
 
@@ -26,7 +24,7 @@ use anyhow::{bail, ensure, Result};
 
 use crate::data::generator::{generate, GeneratorConfig};
 use crate::data::partition::{partition, FedDataset};
-use crate::fed::{Algo, ExecMode, FedRunConfig};
+use crate::fed::{Algo, ExecMode};
 use crate::kge::Method;
 use crate::util::json::Json;
 
@@ -124,23 +122,6 @@ impl AlgoSpec {
 
     pub fn label(&self) -> &'static str {
         self.algo().label()
-    }
-
-    /// The deprecated flat form → scoped form (knobs lifted off the flat
-    /// config only where the algorithm actually reads them).
-    pub fn from_legacy(cfg: &FedRunConfig) -> AlgoSpec {
-        match cfg.algo {
-            Algo::Single => AlgoSpec::Single,
-            Algo::FedEP => AlgoSpec::FedEP,
-            Algo::FedEPL => AlgoSpec::FedEPL,
-            Algo::FedS { sync } => AlgoSpec::FedS {
-                sparsity: cfg.sparsity,
-                sync_interval: cfg.sync_interval,
-                sync,
-            },
-            Algo::FedKd => AlgoSpec::Kd,
-            Algo::FedSvd { constrained } => AlgoSpec::Svd { cols: cfg.svd_cols, plus: constrained },
-        }
     }
 
     pub fn validate(&self) -> Result<()> {
@@ -515,62 +496,6 @@ impl ExperimentSpec {
         Ok(())
     }
 
-    /// Resolve to the deprecated flat config — the public shim form, and
-    /// the input [`crate::fed::RoundParams::resolve`] derives the
-    /// orchestrator's resolved parameters from.  Knobs a variant does not
-    /// own take the legacy defaults (so e.g. FedEPL's volume-matched
-    /// dimension derives from the paper-default p=0.4, s=4 — exactly the
-    /// legacy behaviour).  `transport`/`shards` are spec-only fields the
-    /// flat config cannot carry; [`Session::build`] overlays them onto
-    /// the resolved params.
-    pub fn run_config(&self) -> FedRunConfig {
-        let d = FedRunConfig::default();
-        let (sparsity, sync_interval, svd_cols) = match &self.algo {
-            AlgoSpec::FedS { sparsity, sync_interval, .. } => {
-                (*sparsity, *sync_interval, d.svd_cols)
-            }
-            AlgoSpec::Svd { cols, .. } => (d.sparsity, d.sync_interval, *cols),
-            _ => (d.sparsity, d.sync_interval, d.svd_cols),
-        };
-        FedRunConfig {
-            algo: self.algo.algo(),
-            method: self.method,
-            max_rounds: self.budget.max_rounds,
-            local_epochs: self.budget.local_epochs,
-            eval_every: self.budget.eval_every,
-            patience: self.budget.patience,
-            sparsity,
-            sync_interval,
-            eval_cap: self.budget.eval_cap,
-            seed: self.seed,
-            svd_cols,
-            exec: self.exec,
-        }
-    }
-
-    /// Lift a deprecated flat config into a spec (the shim direction for
-    /// callers migrating off `run_federated(FedRunConfig)`).
-    pub fn from_legacy(cfg: &FedRunConfig, data: DataSpec, backend: BackendSpec) -> Self {
-        Self {
-            name: String::new(),
-            method: cfg.method,
-            algo: AlgoSpec::from_legacy(cfg),
-            data,
-            backend,
-            budget: BudgetSpec {
-                max_rounds: cfg.max_rounds,
-                local_epochs: cfg.local_epochs,
-                eval_every: cfg.eval_every,
-                patience: cfg.patience,
-                eval_cap: cfg.eval_cap,
-            },
-            seed: cfg.seed,
-            exec: cfg.exec,
-            transport: TransportSpec::Mpsc,
-            shards: 0,
-        }
-    }
-
     pub fn to_json(&self) -> Json {
         let mut j = Json::obj();
         if !self.name.is_empty() {
@@ -869,34 +794,6 @@ mod tests {
         assert!(a.validate().is_err(), "sync_interval 0 must be rejected");
         let a = AlgoSpec::Svd { cols: 0, plus: false };
         assert!(a.validate().is_err(), "svd cols 0 must be rejected");
-    }
-
-    #[test]
-    fn run_config_resolves_scoped_knobs() {
-        let mut spec = tiny_spec();
-        spec.algo = AlgoSpec::FedS { sparsity: 0.7, sync_interval: 2, sync: false };
-        let cfg = spec.run_config();
-        assert_eq!(cfg.algo, Algo::FedS { sync: false });
-        assert_eq!(cfg.sparsity, 0.7);
-        assert_eq!(cfg.sync_interval, 2);
-        assert_eq!(cfg.svd_cols, FedRunConfig::default().svd_cols);
-
-        spec.algo = AlgoSpec::Svd { cols: 4, plus: true };
-        let cfg = spec.run_config();
-        assert_eq!(cfg.algo, Algo::FedSvd { constrained: true });
-        assert_eq!(cfg.svd_cols, 4);
-        assert_eq!(cfg.sparsity, FedRunConfig::default().sparsity);
-    }
-
-    #[test]
-    fn legacy_round_trip() {
-        let spec = tiny_spec();
-        let cfg = spec.run_config();
-        let back = ExperimentSpec::from_legacy(&cfg, spec.data.clone(), spec.backend.clone());
-        assert_eq!(back.algo, spec.algo);
-        assert_eq!(back.budget, spec.budget);
-        assert_eq!(back.method, spec.method);
-        assert_eq!(back.seed, spec.seed);
     }
 
     #[test]

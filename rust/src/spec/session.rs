@@ -4,10 +4,8 @@
 //! runtime, loaded once and reused across builds — a sweep builds many
 //! runs from one session).  A [`Run`] owns everything one experiment
 //! needs — the generated dataset, the resolved backend and the registered
-//! [`RunObserver`]s — and executes the same engine the deprecated
-//! `run_federated(FedRunConfig)` path drives, so outcomes are
-//! byte-identical in accounting and bit-identical in metric history
-//! between the two APIs.
+//! [`RunObserver`]s — and executes the engine through
+//! [`run_params`], the only entry point.
 
 use std::rc::Rc;
 
@@ -15,7 +13,7 @@ use anyhow::Result;
 
 use crate::data::partition::FedDataset;
 use crate::fed::orchestrator::run_params;
-use crate::fed::{Backend, FedRunConfig, RoundParams, RunOutcome};
+use crate::fed::{Backend, RoundParams, RunOutcome};
 use crate::kge::Hyper;
 use crate::metrics::observe::{ConsoleObserver, RunObserver};
 use crate::runtime::Runtime;
@@ -70,14 +68,7 @@ impl Session {
             }
         };
         let data = spec.data.build();
-        // the one derivation point: resolve the flat knobs against the
-        // backend, then overlay the spec-only fields the deprecated
-        // config cannot carry
-        let mut params = RoundParams::resolve(&spec.run_config(), &backend);
-        params.transport = spec.transport;
-        if spec.shards > 0 {
-            params.shards = spec.shards;
-        }
+        let params = RoundParams::from_spec(spec, &backend);
         Ok(Run {
             params,
             spec: spec.clone(),
@@ -124,13 +115,6 @@ impl Run {
     /// The resolved parameters this run will execute.
     pub fn params(&self) -> &RoundParams {
         &self.params
-    }
-
-    /// The deprecated flat view of this run's knobs (compatibility
-    /// accessor; `transport`/`shards` are not representable here — read
-    /// them from [`Run::params`]).
-    pub fn config(&self) -> FedRunConfig {
-        self.spec.run_config()
     }
 
     /// Execute the round loop, streaming events to the registered

@@ -1,0 +1,278 @@
+//! The cluster-runtime correctness bar.
+//!
+//! * Handshake: wrong protocol version, wrong spec digest, out-of-range
+//!   id, and a non-hello first frame are all refused with a reasoned
+//!   [`ClusterMsg::Reject`].
+//! * No failures: a 3-client run over real loopback TCP processes¹ is
+//!   **bit-identical** — accounting, round records, convergence — to the
+//!   same spec driven in-process by the bare engine.
+//! * Crash mid-run: the abrupt client is cut, the round aggregates
+//!   partially (`PartialRound`), and the run still completes.
+//! * Handover: a clean leave and a mid-frame crash at the same round,
+//!   each followed by a rejoin with resync, yield bit-identical runs —
+//!   failure *classification* differs, failure *semantics* don't.
+//!
+//! ¹ client processes are OS threads here (same sockets, same protocol);
+//!   `tests/cluster_process.rs` runs the real multi-process drill.
+
+use std::net::TcpStream;
+use std::thread;
+
+use feds::comm::accounting::Direction;
+use feds::comm::wire::{read_frame, write_frame};
+use feds::fed::cluster::{
+    run_client, spec_digest, ClientOpts, ClusterMsg, ClusterOutcome, ClusterServer, ServeOpts,
+    PROTO_VERSION,
+};
+use feds::fed::{run_params, Backend, RoundParams, RunOutcome};
+use feds::kge::{Hyper, Method};
+use feds::metrics::observe::{RunEvent, RunObserver};
+use feds::spec::{AlgoSpec, BackendSpec, BudgetSpec, DataSpec, ExperimentSpec};
+
+fn tiny_spec(algo: AlgoSpec, max_rounds: usize) -> ExperimentSpec {
+    ExperimentSpec {
+        name: String::new(),
+        method: Method::TransE,
+        algo,
+        data: DataSpec {
+            entities: 192,
+            relations: 12,
+            triples: 2400,
+            clusters: 4,
+            clients: 3,
+            seed: 11,
+        },
+        backend: BackendSpec::Native {
+            dim: 16,
+            learning_rate: 5e-3,
+            batch: 64,
+            negatives: 16,
+            eval_batch: 32,
+        },
+        budget: BudgetSpec {
+            max_rounds,
+            local_epochs: 1,
+            eval_every: 2,
+            patience: 3,
+            eval_cap: 64,
+        },
+        seed: 7,
+        exec: Default::default(),
+        transport: Default::default(),
+        shards: 0,
+    }
+}
+
+/// The in-process reference run: same dataset, same resolved params,
+/// through the bare `run_params` engine.
+fn direct_run(spec: &ExperimentSpec) -> RunOutcome {
+    let data = spec.data.build();
+    let BackendSpec::Native { dim, learning_rate, batch, negatives, eval_batch } = &spec.backend
+    else {
+        panic!("cluster tests run on the native backend");
+    };
+    let backend = Backend::Native {
+        hyper: Hyper { dim: *dim, learning_rate: *learning_rate, ..Default::default() },
+        batch: *batch,
+        negatives: *negatives,
+        eval_batch: *eval_batch,
+    };
+    let params = RoundParams::from_spec(spec, &backend);
+    run_params(&data, &params, &backend, &mut []).unwrap()
+}
+
+fn assert_equivalent(tag: &str, direct: &RunOutcome, cluster: &RunOutcome) {
+    for dir in [Direction::Upload, Direction::Download] {
+        assert_eq!(
+            direct.acct.params_dir(dir),
+            cluster.acct.params_dir(dir),
+            "{tag}: params {dir:?}"
+        );
+        assert_eq!(
+            direct.acct.bytes_dir(dir),
+            cluster.acct.bytes_dir(dir),
+            "{tag}: bytes {dir:?}"
+        );
+    }
+    assert_eq!(direct.acct.messages(), cluster.acct.messages(), "{tag}: messages");
+    assert_eq!(direct.eq5_ratio, cluster.eq5_ratio, "{tag}: eq5");
+    let (a, b) = (&direct.history.records, &cluster.history.records);
+    assert_eq!(a.len(), b.len(), "{tag}: record count");
+    assert_eq!(
+        direct.history.converged_idx, cluster.history.converged_idx,
+        "{tag}: convergence index"
+    );
+    assert_eq!(direct.history.label, cluster.history.label, "{tag}: label");
+    for (x, y) in a.iter().zip(b.iter()) {
+        assert_eq!(x.round, y.round, "{tag}");
+        assert_eq!(x.params_cum, y.params_cum, "{tag}: params@{}", x.round);
+        assert_eq!(x.bytes_cum, y.bytes_cum, "{tag}: bytes@{}", x.round);
+        assert_eq!(x.mean_loss.to_bits(), y.mean_loss.to_bits(), "{tag}: loss@{}", x.round);
+        assert_eq!(x.valid.mrr.to_bits(), y.valid.mrr.to_bits(), "{tag}: valid MRR@{}", x.round);
+        assert_eq!(x.test.mrr.to_bits(), y.test.mrr.to_bits(), "{tag}: test MRR@{}", x.round);
+        assert_eq!(
+            x.test.hits10.to_bits(),
+            y.test.hits10.to_bits(),
+            "{tag}: hits@10 @{}",
+            x.round
+        );
+    }
+}
+
+#[derive(Default)]
+struct EventLog(Vec<RunEvent>);
+
+impl RunObserver for EventLog {
+    fn on_event(&mut self, ev: &RunEvent) {
+        self.0.push(ev.clone());
+    }
+}
+
+/// One full cluster run over loopback: the coordinator on this thread,
+/// every entry of `clients` as its own OS thread running the real
+/// `run_client` protocol loop (`connect` is filled in from the bind).
+fn cluster_run(spec: &ExperimentSpec, clients: Vec<ClientOpts>) -> (ClusterOutcome, Vec<RunEvent>) {
+    let server = ClusterServer::bind("127.0.0.1:0", spec, ServeOpts::default()).expect("bind");
+    let addr = server.addr().to_string();
+    let handles: Vec<_> = clients
+        .into_iter()
+        .map(|mut o| {
+            let spec = spec.clone();
+            o.connect = addr.clone();
+            thread::spawn(move || run_client(&spec, &o).expect("client run"))
+        })
+        .collect();
+    let mut log = EventLog::default();
+    let out = server.run(&mut [&mut log]).expect("server run");
+    for h in handles {
+        h.join().expect("client thread");
+    }
+    (out, log.0)
+}
+
+fn fleet(n: u16) -> Vec<ClientOpts> {
+    (0..n).map(|id| ClientOpts::new("", id)).collect()
+}
+
+/// Every refusable handshake is refused with a reasoned reject frame.
+#[test]
+fn handshake_rejects_mismatched_registrations() {
+    let spec = tiny_spec(AlgoSpec::FedEP, 6);
+    let digest = spec_digest(&spec);
+    let server = ClusterServer::bind("127.0.0.1:0", &spec, ServeOpts::default()).expect("bind");
+    let addr = server.addr();
+
+    let expect_reject = |first: ClusterMsg, needle: &str| {
+        let sock = TcpStream::connect(addr).expect("connect");
+        write_frame(&mut (&sock), &first.encode()).expect("send first frame");
+        let frame = read_frame(&mut (&sock)).expect("read reply").expect("reply before close");
+        match ClusterMsg::decode(&frame).expect("decode reply") {
+            ClusterMsg::Reject { reason } => {
+                assert!(reason.contains(needle), "reason {reason:?} lacks {needle:?}");
+            }
+            other => panic!("expected a reject, got {other:?}"),
+        }
+    };
+
+    let hello = |version, client, spec_digest| ClusterMsg::Hello {
+        version,
+        client,
+        spec_digest,
+        join_round: 0,
+    };
+    expect_reject(hello(PROTO_VERSION + 1, 0, digest), "protocol version");
+    expect_reject(hello(PROTO_VERSION, 0, digest ^ 1), "spec mismatch");
+    expect_reject(hello(PROTO_VERSION, 9, digest), "out of range");
+    let report = ClusterMsg::Report { round: 1, loss: 0.0, batches: 1, eval: None };
+    expect_reject(report, "hello");
+    // the acceptor stays up for real joins afterwards; the run is never
+    // started here, so the server value just drops (acceptor detaches)
+}
+
+/// With no failures injected, a multi-process run is bit-identical to
+/// the in-process engine — for a dense algorithm and for sparse FedS.
+#[test]
+fn cluster_run_matches_in_process_engine() {
+    for algo in [AlgoSpec::FedEP, AlgoSpec::feds()] {
+        let spec = tiny_spec(algo.clone(), 6);
+        let direct = direct_run(&spec);
+        let (out, events) = cluster_run(&spec, fleet(3));
+        assert_equivalent(&format!("{algo:?}"), &direct, &out.run);
+        assert_eq!(out.times.secs.len(), 6, "{algo:?}: one wall-clock sample per round");
+        let joins = events
+            .iter()
+            .filter(|e| matches!(e, RunEvent::ClientJoined { rejoin: false, .. }))
+            .count();
+        assert_eq!(joins, 3, "{algo:?}: three fresh registrations");
+        let failures = events.iter().any(|e| {
+            matches!(e, RunEvent::ClientDropped { .. } | RunEvent::PartialRound { .. })
+        });
+        assert!(!failures, "{algo:?}: no failure events in a failure-free run");
+    }
+}
+
+/// A client killed mid-frame is classified as an abrupt crash, cut from
+/// the round, and the round aggregates whoever reported.
+#[test]
+fn crashed_client_is_cut_and_the_round_aggregates_partially() {
+    let spec = tiny_spec(AlgoSpec::FedEP, 6);
+    let mut clients = fleet(3);
+    clients[1].fail_after = Some(2);
+    let (out, events) = cluster_run(&spec, clients);
+
+    let dropped = events.iter().any(|e| {
+        matches!(e, RunEvent::ClientDropped { round: 3, client: 1, clean: false })
+    });
+    assert!(dropped, "client 1 must be cut abruptly at round 3: {events:?}");
+    let partial = events.iter().any(|e| {
+        matches!(e, RunEvent::PartialRound { round: 3, reported: 2, expected: 3 })
+    });
+    assert!(partial, "round 3 must aggregate partially: {events:?}");
+    assert_eq!(out.run.history.records.len(), 3, "evaluations at rounds 2, 4, 6");
+    assert_eq!(out.times.secs.len(), 6, "the run completes every round despite the crash");
+}
+
+/// The handover drill: client 2 leaves after round 3 — once cleanly,
+/// once by dying mid-frame — and a replacement process for the same id
+/// rejoins at round 6, resynced from the cached download.  The two
+/// scenarios differ only in disconnect classification; every number in
+/// the run is bit-identical.
+#[test]
+fn clean_leave_and_crash_handover_are_bit_identical_with_rejoin() {
+    let spec = tiny_spec(AlgoSpec::feds(), 8);
+    let scenario = |crash: bool| {
+        let mut clients = fleet(3);
+        if crash {
+            clients[2].fail_after = Some(3);
+        } else {
+            clients[2].leave_after = Some(3);
+        }
+        let mut replacement = ClientOpts::new("", 2);
+        replacement.join_round = 6;
+        clients.push(replacement);
+        cluster_run(&spec, clients)
+    };
+    let (clean, clean_ev) = scenario(false);
+    let (crash, crash_ev) = scenario(true);
+
+    assert_equivalent("clean vs crash handover", &clean.run, &crash.run);
+    let clean_drop = clean_ev.iter().any(|e| {
+        matches!(e, RunEvent::ClientDropped { client: 2, clean: true, .. })
+    });
+    assert!(clean_drop, "the leave must classify as clean: {clean_ev:?}");
+    let crash_drop = crash_ev.iter().any(|e| {
+        matches!(e, RunEvent::ClientDropped { client: 2, clean: false, .. })
+    });
+    assert!(crash_drop, "the crash must classify as abrupt: {crash_ev:?}");
+    for events in [&clean_ev, &crash_ev] {
+        let rejoined = events.iter().any(|e| {
+            matches!(e, RunEvent::ClientJoined { round: 6, client: 2, rejoin: true })
+        });
+        assert!(rejoined, "the replacement must rejoin at round 6: {events:?}");
+        let partial = events.iter().any(|e| {
+            matches!(e, RunEvent::PartialRound { round: 4, reported: 2, expected: 3 })
+        });
+        assert!(partial, "round 4 must aggregate partially: {events:?}");
+    }
+    assert_eq!(clean.run.history.records.len(), 4, "evaluations at rounds 2, 4, 6, 8");
+}

@@ -1,0 +1,102 @@
+//! The real multi-process drill: the `feds` binary serving three client
+//! *processes* over loopback, one of which dies mid-frame partway in.
+//! The server must cut the crashed process, finish the run on partial
+//! aggregation, and stream the membership history to the JSONL sink.
+//!
+//! This is the process-isolation counterpart of `tests/cluster.rs`
+//! (which runs the same protocol on threads); CI additionally runs a
+//! SIGKILL variant of this drill from the workflow.
+
+use std::io::{BufRead, BufReader};
+use std::process::{Command, Stdio};
+
+use feds::kge::Method;
+use feds::spec::{AlgoSpec, BackendSpec, BudgetSpec, DataSpec, ExperimentSpec};
+
+fn drill_spec() -> ExperimentSpec {
+    ExperimentSpec {
+        name: "cluster_process_drill".into(),
+        method: Method::TransE,
+        algo: AlgoSpec::FedEP,
+        data: DataSpec {
+            entities: 192,
+            relations: 12,
+            triples: 2400,
+            clusters: 4,
+            clients: 3,
+            seed: 11,
+        },
+        backend: BackendSpec::Native {
+            dim: 16,
+            learning_rate: 5e-3,
+            batch: 64,
+            negatives: 16,
+            eval_batch: 32,
+        },
+        budget: BudgetSpec {
+            max_rounds: 6,
+            local_epochs: 1,
+            eval_every: 2,
+            patience: 3,
+            eval_cap: 64,
+        },
+        seed: 7,
+        exec: Default::default(),
+        transport: Default::default(),
+        shards: 0,
+    }
+}
+
+#[test]
+fn three_processes_one_dying_mid_run_complete_via_partial_aggregation() {
+    let dir = std::env::temp_dir().join("feds_cluster_process_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let spec_path = dir.join("spec.json");
+    std::fs::write(&spec_path, drill_spec().to_json().to_string_pretty()).unwrap();
+    let jsonl = dir.join("events.jsonl");
+    let _ = std::fs::remove_file(&jsonl);
+
+    let bin = env!("CARGO_BIN_EXE_feds");
+    let mut server = Command::new(bin)
+        .args(["serve", "--spec", spec_path.to_str().unwrap(), "--bind", "127.0.0.1:0"])
+        .args(["--jsonl", jsonl.to_str().unwrap(), "--deadline-ms", "20000", "--quiet"])
+        .stdout(Stdio::piped())
+        .spawn()
+        .expect("spawn server");
+    let stdout = server.stdout.take().expect("server stdout piped");
+    let mut lines = BufReader::new(stdout).lines();
+    let first = lines.next().expect("server prints its address").expect("read listen line");
+    let addr = first.strip_prefix("listening on ").expect("listen-line prefix").to_string();
+
+    let client = |id: &str, extra: &[&str]| {
+        let mut cmd = Command::new(bin);
+        cmd.args(["client", "--spec", spec_path.to_str().unwrap()]);
+        cmd.args(["--connect", &addr, "--id", id]);
+        cmd.args(extra);
+        cmd.stdout(Stdio::null()).spawn().expect("spawn client")
+    };
+    let mut c0 = client("0", &[]);
+    let mut c1 = client("1", &[]);
+    // dies mid-frame after completing round 2 — the server classifies an
+    // abrupt crash and must finish the run without it
+    let mut c2 = client("2", &["--fail-after", "2"]);
+
+    assert!(c2.wait().expect("wait c2").success(), "the crashing client exits by design");
+    assert!(c0.wait().expect("wait c0").success(), "client 0 runs to completion");
+    assert!(c1.wait().expect("wait c1").success(), "client 1 runs to completion");
+    // drain remaining output so the server never blocks on a full pipe
+    for line in lines.by_ref() {
+        let _ = line;
+    }
+    assert!(server.wait().expect("wait server").success(), "server completes the run");
+
+    let text = std::fs::read_to_string(&jsonl).expect("events.jsonl written");
+    let needles = [
+        r#""event": "client_dropped""#,
+        r#""event": "partial_round""#,
+        r#""event": "run_end""#,
+    ];
+    for needle in needles {
+        assert!(text.contains(needle), "{needle} missing from the event stream:\n{text}");
+    }
+}

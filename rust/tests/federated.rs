@@ -3,10 +3,11 @@
 //! qualitative claims at miniature scale.
 
 use feds::comm::accounting::Direction;
+use feds::comm::transport::TransportSpec;
 use feds::data::generator::{generate, GeneratorConfig};
 use feds::data::partition::partition;
 use feds::fed::protocol::{Download, Upload};
-use feds::fed::{comm_ratio, run_federated, Algo, Backend, ExecMode, FedRunConfig};
+use feds::fed::{comm_ratio, run_params, Algo, Backend, ExecMode, RoundParams, RunOutcome};
 use feds::kge::{Hyper, Method};
 
 fn tiny_data(clients: usize, seed: u64) -> feds::data::partition::FedDataset {
@@ -30,8 +31,8 @@ fn native_backend(dim: usize) -> Backend {
     }
 }
 
-fn base_cfg(algo: Algo, rounds: usize) -> FedRunConfig {
-    FedRunConfig {
+fn base_cfg(algo: Algo, rounds: usize) -> RoundParams {
+    RoundParams {
         algo,
         method: Method::TransE,
         max_rounds: rounds,
@@ -44,7 +45,17 @@ fn base_cfg(algo: Algo, rounds: usize) -> FedRunConfig {
         seed: 7,
         svd_cols: 8,
         exec: ExecMode::Sequential,
+        transport: TransportSpec::Mpsc,
+        shards: 1,
     }
+}
+
+fn run(
+    data: &feds::data::partition::FedDataset,
+    cfg: &RoundParams,
+    backend: &Backend,
+) -> anyhow::Result<RunOutcome> {
+    run_params(data, cfg, backend, &mut [])
 }
 
 #[test]
@@ -52,7 +63,7 @@ fn fedep_learns_and_meters() {
     let data = tiny_data(3, 1);
     let mut cfg = base_cfg(Algo::FedEP, 24);
     cfg.eval_every = 4;
-    let out = run_federated(&data, &cfg, &native_backend(16)).unwrap();
+    let out = run(&data, &cfg, &native_backend(16)).unwrap();
     let h = &out.history;
     assert!(!h.records.is_empty());
     // learning happened: clearly above the ~0.028 chance MRR of 192 entities
@@ -74,8 +85,8 @@ fn fedep_learns_and_meters() {
 #[test]
 fn feds_transmits_fewer_params_than_fedep() {
     let data = tiny_data(4, 2);
-    let fedep = run_federated(&data, &base_cfg(Algo::FedEP, 6), &native_backend(16)).unwrap();
-    let feds = run_federated(
+    let fedep = run(&data, &base_cfg(Algo::FedEP, 6), &native_backend(16)).unwrap();
+    let feds = run(
         &data,
         &base_cfg(Algo::FedS { sync: true }, 6),
         &native_backend(16),
@@ -97,13 +108,13 @@ fn feds_transmits_fewer_params_than_fedep() {
 #[test]
 fn feds_nosync_transmits_even_fewer() {
     let data = tiny_data(3, 3);
-    let with = run_federated(
+    let with = run(
         &data,
         &base_cfg(Algo::FedS { sync: true }, 6),
         &native_backend(16),
     )
     .unwrap();
-    let without = run_federated(
+    let without = run(
         &data,
         &base_cfg(Algo::FedS { sync: false }, 6),
         &native_backend(16),
@@ -118,7 +129,7 @@ fn feds_nosync_transmits_even_fewer() {
 #[test]
 fn single_never_communicates() {
     let data = tiny_data(3, 4);
-    let out = run_federated(&data, &base_cfg(Algo::Single, 4), &native_backend(16)).unwrap();
+    let out = run(&data, &base_cfg(Algo::Single, 4), &native_backend(16)).unwrap();
     assert_eq!(out.acct.params(), 0);
     assert_eq!(out.acct.bytes(), 0);
 }
@@ -126,10 +137,10 @@ fn single_never_communicates() {
 #[test]
 fn fedepl_runs_at_reduced_dim() {
     let data = tiny_data(3, 5);
-    let out = run_federated(&data, &base_cfg(Algo::FedEPL, 4), &native_backend(16)).unwrap();
+    let out = run(&data, &base_cfg(Algo::FedEPL, 4), &native_backend(16)).unwrap();
     assert!(out.history.mrr_cg() > 0.0);
     // reduced dim → dense rounds cheaper than FedEP's
-    let fedep = run_federated(&data, &base_cfg(Algo::FedEP, 4), &native_backend(16)).unwrap();
+    let fedep = run(&data, &base_cfg(Algo::FedEP, 4), &native_backend(16)).unwrap();
     assert!(
         out.acct.params() < fedep.acct.params(),
         "FedEPL {} vs FedEP {}",
@@ -142,14 +153,14 @@ fn fedepl_runs_at_reduced_dim() {
 fn svd_baselines_compress_per_round_but_run() {
     let data = tiny_data(3, 6);
     for constrained in [false, true] {
-        let out = run_federated(
+        let out = run(
             &data,
             &base_cfg(Algo::FedSvd { constrained }, 4),
             &native_backend(16),
         )
         .unwrap();
         let fedep =
-            run_federated(&data, &base_cfg(Algo::FedEP, 4), &native_backend(16)).unwrap();
+            run(&data, &base_cfg(Algo::FedEP, 4), &native_backend(16)).unwrap();
         assert!(out.history.mrr_cg().is_finite());
         assert!(
             out.acct.params() < fedep.acct.params(),
@@ -164,8 +175,8 @@ fn svd_baselines_compress_per_round_but_run() {
 fn deterministic_given_seed() {
     let data = tiny_data(3, 7);
     let cfg = base_cfg(Algo::FedS { sync: true }, 4);
-    let a = run_federated(&data, &cfg, &native_backend(16)).unwrap();
-    let b = run_federated(&data, &cfg, &native_backend(16)).unwrap();
+    let a = run(&data, &cfg, &native_backend(16)).unwrap();
+    let b = run(&data, &cfg, &native_backend(16)).unwrap();
     assert_eq!(a.acct.params(), b.acct.params());
     let (ra, rb) = (&a.history.records, &b.history.records);
     assert_eq!(ra.len(), rb.len());
@@ -182,9 +193,9 @@ fn federation_beats_single_on_shared_structure() {
     let mut cfg = base_cfg(Algo::FedEP, 60);
     cfg.eval_every = 5;
     cfg.patience = 5;
-    let fed = run_federated(&data, &cfg, &native_backend(16)).unwrap();
+    let fed = run(&data, &cfg, &native_backend(16)).unwrap();
     cfg.algo = Algo::Single;
-    let single = run_federated(&data, &cfg, &native_backend(16)).unwrap();
+    let single = run(&data, &cfg, &native_backend(16)).unwrap();
     assert!(
         fed.history.mrr_cg() > 0.9 * single.history.mrr_cg(),
         "FedEP {:.4} vs Single {:.4}",
@@ -196,7 +207,7 @@ fn federation_beats_single_on_shared_structure() {
 #[test]
 fn eq5_ratio_reported_for_feds_only() {
     let data = tiny_data(3, 9);
-    let feds = run_federated(
+    let feds = run(
         &data,
         &base_cfg(Algo::FedS { sync: true }, 2),
         &native_backend(16),
@@ -204,7 +215,7 @@ fn eq5_ratio_reported_for_feds_only() {
     .unwrap();
     assert!(feds.eq5_ratio.is_some());
     assert!((feds.eq5_ratio.unwrap() - comm_ratio(0.4, 4, 16)).abs() < 1e-9);
-    let fedep = run_federated(&data, &base_cfg(Algo::FedEP, 2), &native_backend(16)).unwrap();
+    let fedep = run(&data, &base_cfg(Algo::FedEP, 2), &native_backend(16)).unwrap();
     assert!(fedep.eq5_ratio.is_none());
 }
 
@@ -224,9 +235,9 @@ fn threaded_matches_sequential_bitwise() {
         Algo::FedSvd { constrained: true },
     ] {
         let mut cfg = base_cfg(algo, 8);
-        let seq = run_federated(&data, &cfg, &native_backend(16)).unwrap();
+        let seq = run(&data, &cfg, &native_backend(16)).unwrap();
         cfg.exec = ExecMode::Threaded;
-        let thr = run_federated(&data, &cfg, &native_backend(16)).unwrap();
+        let thr = run(&data, &cfg, &native_backend(16)).unwrap();
         for dir in [Direction::Upload, Direction::Download] {
             assert_eq!(
                 seq.acct.params_dir(dir),
@@ -262,7 +273,7 @@ fn dense_accounting_matches_message_frames_exactly() {
     let mut cfg = base_cfg(Algo::FedEP, 3);
     cfg.eval_every = 100; // no evals → no early stop → exactly 3 comm rounds
     let width = 16usize;
-    let out = run_federated(&data, &cfg, &native_backend(width)).unwrap();
+    let out = run(&data, &cfg, &native_backend(width)).unwrap();
     let mut params = 0u64;
     let mut bytes = 0u64;
     for round in 1..=3u32 {
@@ -289,7 +300,7 @@ fn single_threaded_mode_never_communicates() {
     let data = tiny_data(3, 13);
     let mut cfg = base_cfg(Algo::Single, 4);
     cfg.exec = ExecMode::Threaded;
-    let out = run_federated(&data, &cfg, &native_backend(16)).unwrap();
+    let out = run(&data, &cfg, &native_backend(16)).unwrap();
     assert_eq!(out.acct.params(), 0);
     assert_eq!(out.acct.bytes(), 0);
     assert!(out.history.mrr_cg() > 0.0);

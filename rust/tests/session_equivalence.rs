@@ -1,13 +1,13 @@
 //! The API-redesign correctness bar: a run driven through the
 //! `spec::Session` observer pipeline must yield **byte-identical**
 //! communication accounting and **bit-identical** round history to the
-//! legacy `run_federated(FedRunConfig)` path, for every algorithm and both
-//! execution modes, and a sweep-grid cell must equal the same run driven
-//! directly.
+//! same engine driven directly (`run_params` on hand-derived
+//! `RoundParams`), for every algorithm and both execution modes, and a
+//! sweep-grid cell must equal the same run driven directly.
 
 use feds::comm::accounting::Direction;
 use feds::exp::sweep::{run_sweep, SweepSpec};
-use feds::fed::{run_federated, Backend, ExecMode, RunOutcome};
+use feds::fed::{run_params, Backend, ExecMode, RoundParams, RunOutcome};
 use feds::kge::{Hyper, Method};
 use feds::metrics::observe::JsonlSink;
 use feds::spec::{AlgoSpec, BackendSpec, BudgetSpec, DataSpec, ExperimentSpec, Session};
@@ -47,9 +47,9 @@ fn tiny_spec(algo: AlgoSpec, exec: ExecMode) -> ExperimentSpec {
     }
 }
 
-/// The legacy-path run for `spec`: same dataset, same resolved flat
-/// config, same backend — through `run_federated`.
-fn legacy_run(spec: &ExperimentSpec) -> RunOutcome {
+/// The direct-path run for `spec`: same dataset, same resolved params,
+/// same backend — through the bare `run_params` engine, no Session.
+fn direct_run(spec: &ExperimentSpec) -> RunOutcome {
     let data = spec.data.build();
     let BackendSpec::Native { dim, learning_rate, batch, negatives, eval_batch } = &spec.backend
     else {
@@ -61,31 +61,32 @@ fn legacy_run(spec: &ExperimentSpec) -> RunOutcome {
         negatives: *negatives,
         eval_batch: *eval_batch,
     };
-    run_federated(&data, &spec.run_config(), &backend).unwrap()
+    let params = RoundParams::from_spec(spec, &backend);
+    run_params(&data, &params, &backend, &mut []).unwrap()
 }
 
-fn assert_equivalent(tag: &str, legacy: &RunOutcome, session: &RunOutcome) {
+fn assert_equivalent(tag: &str, direct: &RunOutcome, session: &RunOutcome) {
     for dir in [Direction::Upload, Direction::Download] {
         assert_eq!(
-            legacy.acct.params_dir(dir),
+            direct.acct.params_dir(dir),
             session.acct.params_dir(dir),
             "{tag}: params {dir:?}"
         );
         assert_eq!(
-            legacy.acct.bytes_dir(dir),
+            direct.acct.bytes_dir(dir),
             session.acct.bytes_dir(dir),
             "{tag}: bytes {dir:?}"
         );
     }
-    assert_eq!(legacy.acct.messages(), session.acct.messages(), "{tag}: messages");
-    assert_eq!(legacy.eq5_ratio, session.eq5_ratio, "{tag}: eq5");
-    let (a, b) = (&legacy.history.records, &session.history.records);
+    assert_eq!(direct.acct.messages(), session.acct.messages(), "{tag}: messages");
+    assert_eq!(direct.eq5_ratio, session.eq5_ratio, "{tag}: eq5");
+    let (a, b) = (&direct.history.records, &session.history.records);
     assert_eq!(a.len(), b.len(), "{tag}: record count");
     assert_eq!(
-        legacy.history.converged_idx, session.history.converged_idx,
+        direct.history.converged_idx, session.history.converged_idx,
         "{tag}: convergence index"
     );
-    assert_eq!(legacy.history.label, session.history.label, "{tag}: label");
+    assert_eq!(direct.history.label, session.history.label, "{tag}: label");
     for (x, y) in a.iter().zip(b.iter()) {
         assert_eq!(x.round, y.round, "{tag}");
         assert_eq!(x.params_cum, y.params_cum, "{tag}: params@{}", x.round);
@@ -102,9 +103,9 @@ fn assert_equivalent(tag: &str, legacy: &RunOutcome, session: &RunOutcome) {
     }
 }
 
-/// Every algorithm × both exec modes: Session == legacy, byte for byte.
+/// Every algorithm × both exec modes: Session == direct engine, byte for byte.
 #[test]
-fn session_matches_legacy_for_every_algo_and_exec_mode() {
+fn session_matches_direct_engine_for_every_algo_and_exec_mode() {
     let algos = [
         AlgoSpec::Single,
         AlgoSpec::FedEP,
@@ -118,17 +119,17 @@ fn session_matches_legacy_for_every_algo_and_exec_mode() {
     for algo in algos {
         for exec in [ExecMode::Sequential, ExecMode::Threaded] {
             let spec = tiny_spec(algo.clone(), exec);
-            let legacy = legacy_run(&spec);
+            let direct = direct_run(&spec);
             let mut run = session.build(&spec).unwrap();
             run.quiet();
             let out = run.execute().unwrap();
-            assert_equivalent(&format!("{algo:?}/{exec:?}"), &legacy, &out);
+            assert_equivalent(&format!("{algo:?}/{exec:?}"), &direct, &out);
         }
     }
 }
 
 /// A table4-shaped sweep grid (FedEP / FedEPL / FedS over one dataset)
-/// equals the same three runs driven directly through the legacy path.
+/// equals the same three runs driven directly through the bare engine.
 #[test]
 fn sweep_grid_matches_direct_runs() {
     let base = tiny_spec(AlgoSpec::FedEP, ExecMode::Sequential);
@@ -143,8 +144,8 @@ fn sweep_grid_matches_direct_runs() {
     for (i, label) in ["fedep", "fedepl", "feds"].iter().enumerate() {
         let mut spec = base.clone();
         spec.apply("algo", &Json::from(*label)).unwrap();
-        let legacy = legacy_run(&spec);
-        assert_equivalent(&format!("sweep cell {label}"), &legacy, &grid.at(&[i]).outcome);
+        let direct = direct_run(&spec);
+        assert_equivalent(&format!("sweep cell {label}"), &direct, &grid.at(&[i]).outcome);
         assert_eq!(grid.at(&[i]).spec.algo, AlgoSpec::parse(label).unwrap());
     }
     // lookup by override value finds the same cell
