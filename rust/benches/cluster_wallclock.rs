@@ -21,7 +21,7 @@ use feds::comm::bandwidth::BandwidthModel;
 use feds::fed::cluster::{run_client, ClientOpts, ClusterOutcome, ClusterServer, ServeOpts};
 use feds::kge::Method;
 use feds::spec::{AlgoSpec, BackendSpec, BudgetSpec, DataSpec, ExperimentSpec};
-use feds::util::bench::Bench;
+use feds::util::bench::{write_trajectory, Bench};
 use feds::util::json::Json;
 
 fn bench_spec(rounds: usize) -> ExperimentSpec {
@@ -128,8 +128,7 @@ fn main() {
         .set("model_round_s", model_round_s)
         .set("bytes", throttled.run.acct.bytes())
         .set("params", throttled.run.acct.params());
-    std::fs::write("BENCH_cluster.json", point.to_string_pretty())
-        .expect("write BENCH_cluster.json");
+    write_trajectory("BENCH_cluster", &point);
     println!(
         "cluster_wallclock: {} rounds, mean {:.4}s free → {:.4}s throttled \
          (model {:.4}s; BENCH_cluster.json written)",

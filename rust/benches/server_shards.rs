@@ -14,7 +14,7 @@
 //! and speedups, which CI uploads as an artifact.
 
 use feds::fed::Server;
-use feds::util::bench::{bb, Bench};
+use feds::util::bench::{bb, write_trajectory, Bench};
 use feds::util::json::Json;
 use feds::util::rng::Rng;
 
@@ -109,8 +109,7 @@ fn main() {
         .set("round_ms", Json::Arr(round_ms.iter().map(|&x| Json::from(x)).collect()))
         .set("speedup_vs_1", Json::Arr(speedups.iter().map(|&x| Json::from(x)).collect()))
         .set("threads", hw_threads);
-    std::fs::write("BENCH_server.json", point.to_string_pretty())
-        .expect("write BENCH_server.json");
+    write_trajectory("BENCH_server", &point);
     println!(
         "server_shards: round {:.2} ms @ 1 shard → {:.2} ms @ {} shards → {:.2}x \
          (BENCH_server.json written)",

@@ -12,13 +12,20 @@
 //!
 //! Besides the criterion-style report (`reports/bench/train_hot_path.json`),
 //! this writes a single `BENCH_train.json` trajectory point with the
-//! measured per-step times and speedups, which CI uploads as an artifact.
+//! measured per-step times and speedups, which CI uploads as an artifact
+//! and gates against the committed baseline (`scripts/bench_gate.py`).
+//! The point includes per-method kernel timings
+//! (`kernel_{scalar,simd}_ms_<method>` / `kernel_speedup_<method>`)
+//! comparing the width-dispatched forward/backward kernels against the
+//! retained scalar oracle on the same batch.  Run via
+//! `scripts/bench_snapshot.sh` to also refresh the committed root copy.
 
 use feds::data::dataset::{BatchIter, EvalBatch};
 use feds::data::Triple;
+use feds::kge::kernels::KernelSet;
 use feds::kge::native::{DenseOracle, NativeModel};
 use feds::kge::{Hyper, Method};
-use feds::util::bench::{bb, Bench};
+use feds::util::bench::{bb, write_trajectory, Bench};
 use feds::util::json::Json;
 use feds::util::rng::Rng;
 
@@ -80,6 +87,37 @@ fn main() {
     let train_speedup = s_dense.mean_ns / s_sparse.mean_ns;
     b.report_value("train_step/speedup", train_speedup, "x");
 
+    // --- per-method kernels: dispatched vs the retained scalar oracle -----
+    // times forward_backward (gather + score + gradient accumulation, no
+    // optimizer step) so the comparison isolates exactly the kernel work
+    let mut kernel_fields: Vec<(String, f64)> = Vec::new();
+    for (mi, method) in Method::ALL.into_iter().enumerate() {
+        let mut krng = rng.fork(100 + mi as u64);
+        let mut fast =
+            NativeModel::new(method, hyper.clone(), NUM_ENTITIES, NUM_RELATIONS, &mut krng);
+        let mut scalar = fast.clone();
+        scalar.kernels = KernelSet::scalar();
+        assert!(!fast.kernels.is_scalar(), "d={DIM} must select fixed-width kernels");
+        let (lf, ls) = (fast.forward_backward(&batch), scalar.forward_backward(&batch));
+        assert!(
+            (lf - ls).abs() <= 1e-5 * (1.0 + ls.abs()),
+            "{} dispatched kernels disagree with the scalar oracle: {lf} vs {ls}",
+            method.name()
+        );
+        let s_fast = b.bench(&format!("kernel_fwd_bwd/simd_{}_{label}", method.name()), || {
+            bb(fast.forward_backward(&batch))
+        });
+        let s_scalar = b.bench(&format!("kernel_fwd_bwd/scalar_{}_{label}", method.name()), || {
+            bb(scalar.forward_backward(&batch))
+        });
+        let speedup = s_scalar.mean_ns / s_fast.mean_ns;
+        b.report_value(&format!("kernel_fwd_bwd/speedup_{}", method.name()), speedup, "x");
+        let m = method.name();
+        kernel_fields.push((format!("kernel_scalar_ms_{m}"), s_scalar.mean_ns / 1e6));
+        kernel_fields.push((format!("kernel_simd_ms_{m}"), s_fast.mean_ns / 1e6));
+        kernel_fields.push((format!("kernel_speedup_{m}"), speedup));
+    }
+
     // --- eval: candidate scan, sequential vs chunked across threads -------
     // queries × candidates must clear PAR_EVAL_MIN_WORK (1 << 18) or the
     // auto budget stays sequential and the comparison measures nothing
@@ -105,7 +143,7 @@ fn main() {
 
     // --- the BENCH_train.json trajectory point ----------------------------
     let hw_threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
-    let point = Json::obj()
+    let mut point = Json::obj()
         .set("suite", "train_hot_path")
         .set("entities", NUM_ENTITIES)
         .set("dim", DIM)
@@ -119,7 +157,10 @@ fn main() {
         .set("eval_par_ms", s_eval_par.mean_ns / 1e6)
         .set("eval_speedup", eval_speedup)
         .set("threads", hw_threads);
-    std::fs::write("BENCH_train.json", point.to_string_pretty()).expect("write BENCH_train.json");
+    for (k, v) in &kernel_fields {
+        point = point.set(k.as_str(), *v);
+    }
+    write_trajectory("BENCH_train", &point);
     println!(
         "train_hot_path: sparse {:.2} ms/step vs dense {:.2} ms/step → {:.1}x; \
          eval {:.2} ms → {:.2} ms → {:.1}x (BENCH_train.json written)",

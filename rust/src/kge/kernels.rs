@@ -1,0 +1,629 @@
+//! Width-dispatched, lane-friendly training kernels for the native engine.
+//!
+//! The per-step cost of `kge::native` is the batch·negatives gather math —
+//! `logit`, the candidate backward, and the compose backward, executed
+//! `B·(N+1)` times per step over `W`-float rows.  This module rebuilds
+//! those inner loops as **fixed-lane accumulator** kernels that stable
+//! Rust autovectorizes: every reduction accumulates into a `[f32; LANES]`
+//! block (one partial sum per lane, horizontally combined once at the
+//! end), every elementwise pass is written over pre-bounded slices so the
+//! compiler can emit packed instructions without bounds checks.
+//!
+//! **Dispatch** happens once, at model/trainer construction
+//! ([`KernelSet::select`]): the common spans (64/128/256 floats — d=64/128
+//! entity rows and RotatE/ComplEx's re‖im halves) get monomorphized
+//! copies with a compile-time width (`const W`), which lets LLVM fully
+//! unroll and keep the whole row in vector registers; every other span
+//! takes the `Lanes` path — the same lane-blocked loop with a runtime
+//! bound plus a scalar remainder, so widths not divisible by [`LANES`]
+//! (d=100, odd RotatE half-width, tiny test dims) are exact.
+//!
+//! The element-at-a-time loops these kernels replace are **retained** in
+//! `kge::native` as the scalar reference oracle (`Kernel::Scalar`, same
+//! pattern as `DenseOracle`): parity tests drive both engines over the
+//! same batches and require agreement at the usual 1e-4 tolerance — the
+//! only numeric difference is the reduction order of the lane partials.
+//!
+//! Lane layout: [`LANES`] = 8 f32 partials.  On baseline x86-64 that is
+//! two SSE2 vectors per accumulator block; with wider ISAs the same code
+//! compiles to a single AVX register.  The horizontal combine ([`hsum`])
+//! is a fixed-shape pairwise tree so results do not depend on the ISA the
+//! autovectorizer picked.
+
+use super::Method;
+
+/// f32 partial sums per accumulator block.
+pub const LANES: usize = 8;
+
+/// RotatE modulus epsilon (shared with the scalar reference loops).
+pub const MOD_EPS: f32 = 1e-12;
+
+/// One inner-loop implementation, selected per span at construction.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Kernel {
+    /// Element-at-a-time reference loops (the retained oracle; lives in
+    /// `kge::native`, never dispatched through this module's fast paths).
+    Scalar,
+    /// Monomorphized 64-float span.
+    Fixed64,
+    /// Monomorphized 128-float span.
+    Fixed128,
+    /// Monomorphized 256-float span.
+    Fixed256,
+    /// Lane-blocked loop with runtime span + scalar remainder (any width).
+    Lanes,
+}
+
+impl Kernel {
+    /// Width dispatch for a `span`-float inner loop.
+    pub fn select(span: usize) -> Kernel {
+        match span {
+            64 => Kernel::Fixed64,
+            128 => Kernel::Fixed128,
+            256 => Kernel::Fixed256,
+            _ => Kernel::Lanes,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Kernel::Scalar => "scalar",
+            Kernel::Fixed64 => "fixed64",
+            Kernel::Fixed128 => "fixed128",
+            Kernel::Fixed256 => "fixed256",
+            Kernel::Lanes => "lanes",
+        }
+    }
+}
+
+/// The two spans one model needs, chosen once at construction: `full` for
+/// whole-row loops (TransE L1, ComplEx dot/axpy), `half` for re‖im
+/// half-row loops (RotatE modulus, ComplEx compose).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct KernelSet {
+    pub full: Kernel,
+    pub half: Kernel,
+}
+
+impl KernelSet {
+    /// Dispatch for an entity row of `entity_width` floats.
+    pub fn select(entity_width: usize) -> Self {
+        Self { full: Kernel::select(entity_width), half: Kernel::select(entity_width / 2) }
+    }
+
+    /// The retained element-at-a-time reference (parity oracle).
+    pub fn scalar() -> Self {
+        Self { full: Kernel::Scalar, half: Kernel::Scalar }
+    }
+
+    pub fn is_scalar(self) -> bool {
+        self.full == Kernel::Scalar
+    }
+
+    /// `logit(q, cand)`: γ − dist (TransE/RotatE) or dot (ComplEx).
+    #[inline]
+    pub fn logit(self, method: Method, gamma: f32, q: &[f32], cand: &[f32]) -> f32 {
+        match method {
+            Method::TransE => gamma - l1_dist_k(self.full, q, cand),
+            Method::RotatE => gamma - rot_dist_k(self.half, q, cand),
+            Method::ComplEx => dot_k(self.full, q, cand),
+        }
+    }
+
+    /// d logit/d q and d logit/d cand scaled by `g`, accumulated into `dq`
+    /// and the candidate's gradient row `gc`.
+    #[inline]
+    pub fn bwd_candidate(
+        self,
+        method: Method,
+        q: &[f32],
+        cand: &[f32],
+        g: f32,
+        dq: &mut [f32],
+        gc: &mut [f32],
+    ) {
+        match method {
+            Method::TransE => transe_bwd_k(self.full, q, cand, g, dq, gc),
+            Method::RotatE => rotate_bwd_k(self.half, q, cand, g, dq, gc),
+            Method::ComplEx => complex_bwd_k(self.full, q, cand, g, dq, gc),
+        }
+    }
+}
+
+/// Dispatch a `const W`-generic kernel: monomorphized for the fixed spans,
+/// `W = 0` (runtime span) otherwise.
+macro_rules! widths {
+    ($k:expr, $f:ident($($a:expr),* $(,)?)) => {
+        match $k {
+            Kernel::Fixed64 => $f::<64>($($a),*),
+            Kernel::Fixed128 => $f::<128>($($a),*),
+            Kernel::Fixed256 => $f::<256>($($a),*),
+            Kernel::Scalar | Kernel::Lanes => $f::<0>($($a),*),
+        }
+    };
+}
+
+/// Fixed-shape pairwise combine of the lane partials, independent of the
+/// vector ISA the autovectorizer picked.
+#[inline(always)]
+fn hsum(acc: &[f32; LANES]) -> f32 {
+    let a = acc[0] + acc[4];
+    let b = acc[1] + acc[5];
+    let c = acc[2] + acc[6];
+    let d = acc[3] + acc[7];
+    (a + c) + (b + d)
+}
+
+// ---------------------------------------------------------------------------
+// reductions (lane accumulators + horizontal combine)
+// ---------------------------------------------------------------------------
+
+#[inline(always)]
+fn l1_dist<const W: usize>(q: &[f32], c: &[f32]) -> f32 {
+    let n = if W != 0 { W } else { q.len() };
+    let (q, c) = (&q[..n], &c[..n]);
+    let mut acc = [0.0f32; LANES];
+    let mut qc = q.chunks_exact(LANES);
+    let mut cc = c.chunks_exact(LANES);
+    for (qa, ca) in (&mut qc).zip(&mut cc) {
+        for l in 0..LANES {
+            acc[l] += (qa[l] - ca[l]).abs();
+        }
+    }
+    let mut d = hsum(&acc);
+    for (a, b) in qc.remainder().iter().zip(cc.remainder()) {
+        d += (a - b).abs();
+    }
+    d
+}
+
+#[inline]
+pub fn l1_dist_k(k: Kernel, q: &[f32], c: &[f32]) -> f32 {
+    widths!(k, l1_dist(q, c))
+}
+
+#[inline(always)]
+fn dot<const W: usize>(a: &[f32], b: &[f32]) -> f32 {
+    let n = if W != 0 { W } else { a.len() };
+    let (a, b) = (&a[..n], &b[..n]);
+    let mut acc = [0.0f32; LANES];
+    let mut ac = a.chunks_exact(LANES);
+    let mut bc = b.chunks_exact(LANES);
+    for (aa, ba) in (&mut ac).zip(&mut bc) {
+        for l in 0..LANES {
+            acc[l] += aa[l] * ba[l];
+        }
+    }
+    let mut d = hsum(&acc);
+    for (x, y) in ac.remainder().iter().zip(bc.remainder()) {
+        d += x * y;
+    }
+    d
+}
+
+#[inline]
+pub fn dot_k(k: Kernel, a: &[f32], b: &[f32]) -> f32 {
+    widths!(k, dot(a, b))
+}
+
+/// Σ x², lane-blocked.
+#[inline]
+pub fn sumsq_k(k: Kernel, a: &[f32]) -> f32 {
+    widths!(k, dot(a, a))
+}
+
+/// RotatE modulus distance over re‖im halves: Σ √(Δre² + Δim² + ε).
+/// `DH` is the half span; `q`/`c` are full `2·dh` rows.
+#[inline(always)]
+fn rot_dist<const DH: usize>(q: &[f32], c: &[f32]) -> f32 {
+    let dh = if DH != 0 { DH } else { q.len() / 2 };
+    let (qre, qim) = q.split_at(dh);
+    let (cre, cim) = c.split_at(dh);
+    let (qre, qim) = (&qre[..dh], &qim[..dh]);
+    let (cre, cim) = (&cre[..dh], &cim[..dh]);
+    let mut acc = [0.0f32; LANES];
+    let whole = dh - dh % LANES;
+    let mut k = 0;
+    while k < whole {
+        for l in 0..LANES {
+            let dre = qre[k + l] - cre[k + l];
+            let dim = qim[k + l] - cim[k + l];
+            acc[l] += (dre * dre + dim * dim + MOD_EPS).sqrt();
+        }
+        k += LANES;
+    }
+    let mut d = hsum(&acc);
+    while k < dh {
+        let dre = qre[k] - cre[k];
+        let dim = qim[k] - cim[k];
+        d += (dre * dre + dim * dim + MOD_EPS).sqrt();
+        k += 1;
+    }
+    d
+}
+
+#[inline]
+pub fn rot_dist_k(k: Kernel, q: &[f32], c: &[f32]) -> f32 {
+    widths!(k, rot_dist(q, c))
+}
+
+// ---------------------------------------------------------------------------
+// candidate backward (elementwise, packed)
+// ---------------------------------------------------------------------------
+
+#[inline(always)]
+fn transe_bwd<const W: usize>(q: &[f32], c: &[f32], g: f32, dq: &mut [f32], gc: &mut [f32]) {
+    let n = if W != 0 { W } else { q.len() };
+    let (q, c) = (&q[..n], &c[..n]);
+    let (dq, gc) = (&mut dq[..n], &mut gc[..n]);
+    for k in 0..n {
+        let s = (q[k] - c[k]).signum();
+        dq[k] -= g * s;
+        gc[k] += g * s;
+    }
+}
+
+#[inline]
+pub fn transe_bwd_k(k: Kernel, q: &[f32], c: &[f32], g: f32, dq: &mut [f32], gc: &mut [f32]) {
+    widths!(k, transe_bwd(q, c, g, dq, gc))
+}
+
+#[inline(always)]
+fn rotate_bwd<const DH: usize>(q: &[f32], c: &[f32], g: f32, dq: &mut [f32], gc: &mut [f32]) {
+    let dh = if DH != 0 { DH } else { q.len() / 2 };
+    let (qre, qim) = q.split_at(dh);
+    let (cre, cim) = c.split_at(dh);
+    let (dqre, dqim) = dq.split_at_mut(dh);
+    let (gcre, gcim) = gc.split_at_mut(dh);
+    let (qre, qim) = (&qre[..dh], &qim[..dh]);
+    let (cre, cim) = (&cre[..dh], &cim[..dh]);
+    let (dqre, dqim) = (&mut dqre[..dh], &mut dqim[..dh]);
+    let (gcre, gcim) = (&mut gcre[..dh], &mut gcim[..dh]);
+    for k in 0..dh {
+        let dre = qre[k] - cre[k];
+        let dim = qim[k] - cim[k];
+        let m = (dre * dre + dim * dim + MOD_EPS).sqrt();
+        let (ure, uim) = (dre / m, dim / m);
+        dqre[k] -= g * ure;
+        dqim[k] -= g * uim;
+        gcre[k] += g * ure;
+        gcim[k] += g * uim;
+    }
+}
+
+#[inline]
+pub fn rotate_bwd_k(k: Kernel, q: &[f32], c: &[f32], g: f32, dq: &mut [f32], gc: &mut [f32]) {
+    widths!(k, rotate_bwd(q, c, g, dq, gc))
+}
+
+#[inline(always)]
+fn complex_bwd<const W: usize>(q: &[f32], c: &[f32], g: f32, dq: &mut [f32], gc: &mut [f32]) {
+    let n = if W != 0 { W } else { q.len() };
+    let (q, c) = (&q[..n], &c[..n]);
+    let (dq, gc) = (&mut dq[..n], &mut gc[..n]);
+    for k in 0..n {
+        dq[k] += g * c[k];
+        gc[k] += g * q[k];
+    }
+}
+
+#[inline]
+pub fn complex_bwd_k(k: Kernel, q: &[f32], c: &[f32], g: f32, dq: &mut [f32], gc: &mut [f32]) {
+    widths!(k, complex_bwd(q, c, g, dq, gc))
+}
+
+/// `y += a·x`, lane-blocked (ComplEx regularizer rows).
+#[inline(always)]
+fn axpy<const W: usize>(a: f32, x: &[f32], y: &mut [f32]) {
+    let n = if W != 0 { W } else { x.len() };
+    let (x, y) = (&x[..n], &mut y[..n]);
+    for k in 0..n {
+        y[k] += a * x[k];
+    }
+}
+
+#[inline]
+pub fn axpy_k(k: Kernel, a: f32, x: &[f32], y: &mut [f32]) {
+    widths!(k, axpy(a, x, y))
+}
+
+// ---------------------------------------------------------------------------
+// compose forward + backward
+// ---------------------------------------------------------------------------
+
+/// TransE: `out = src + sign·rel`.
+#[inline(always)]
+fn transe_compose<const W: usize>(src: &[f32], rel: &[f32], sign: f32, out: &mut [f32]) {
+    let n = if W != 0 { W } else { src.len() };
+    let (src, rel, out) = (&src[..n], &rel[..n], &mut out[..n]);
+    for k in 0..n {
+        out[k] = src[k] + sign * rel[k];
+    }
+}
+
+#[inline]
+pub fn transe_compose_k(k: Kernel, src: &[f32], rel: &[f32], sign: f32, out: &mut [f32]) {
+    widths!(k, transe_compose(src, rel, sign, out))
+}
+
+/// TransE backward through compose: `gsrc += dq; grel += sign·dq`.
+#[inline(always)]
+fn transe_bwd_compose<const W: usize>(dq: &[f32], sign: f32, gsrc: &mut [f32], grel: &mut [f32]) {
+    let n = if W != 0 { W } else { dq.len() };
+    let (dq, gsrc, grel) = (&dq[..n], &mut gsrc[..n], &mut grel[..n]);
+    for k in 0..n {
+        gsrc[k] += dq[k];
+        grel[k] += sign * dq[k];
+    }
+}
+
+#[inline]
+pub fn transe_bwd_compose_k(k: Kernel, dq: &[f32], sign: f32, gsrc: &mut [f32], grel: &mut [f32]) {
+    widths!(k, transe_bwd_compose(dq, sign, gsrc, grel))
+}
+
+/// RotatE compose, **caching the per-element rotation** (cos θ, sin θ) so
+/// the backward pass needs no trigonometry at all.  θ is trig-bound, not
+/// width-bound, so this takes no dispatch tag.
+#[inline]
+pub fn rotate_compose_cached(
+    src: &[f32],
+    rel: &[f32],
+    scale: f32,
+    sign: f32,
+    cos_c: &mut [f32],
+    sin_c: &mut [f32],
+    out: &mut [f32],
+) {
+    let dh = rel.len();
+    let (sre, sim) = src.split_at(dh);
+    let (ore, oim) = out.split_at_mut(dh);
+    for k in 0..dh {
+        let theta = rel[k] * scale * sign;
+        let (c, s) = (theta.cos(), theta.sin());
+        cos_c[k] = c;
+        sin_c[k] = s;
+        ore[k] = sre[k] * c - sim[k] * s;
+        oim[k] = sre[k] * s + sim[k] * c;
+    }
+}
+
+/// RotatE backward through compose off the cached rotation — pure packed
+/// multiply/adds (the scalar reference recomputes cos/sin here).
+#[inline(always)]
+#[allow(clippy::too_many_arguments)]
+fn rotate_bwd_compose<const DH: usize>(
+    q: &[f32],
+    dq: &[f32],
+    cos_c: &[f32],
+    sin_c: &[f32],
+    sign: f32,
+    scale: f32,
+    gsrc: &mut [f32],
+    grel: &mut [f32],
+) {
+    let dh = if DH != 0 { DH } else { q.len() / 2 };
+    let (qre, qim) = q.split_at(dh);
+    let (dqre, dqim) = dq.split_at(dh);
+    let (gsre, gsim) = gsrc.split_at_mut(dh);
+    let (qre, qim) = (&qre[..dh], &qim[..dh]);
+    let (dqre, dqim) = (&dqre[..dh], &dqim[..dh]);
+    let (cos_c, sin_c) = (&cos_c[..dh], &sin_c[..dh]);
+    let (gsre, gsim) = (&mut gsre[..dh], &mut gsim[..dh]);
+    let grel = &mut grel[..dh];
+    for k in 0..dh {
+        let (c, s) = (cos_c[k], sin_c[k]);
+        gsre[k] += dqre[k] * c + dqim[k] * s;
+        gsim[k] += -dqre[k] * s + dqim[k] * c;
+        let dtheta = -dqre[k] * qim[k] + dqim[k] * qre[k];
+        grel[k] += dtheta * sign * scale;
+    }
+}
+
+#[inline]
+#[allow(clippy::too_many_arguments)]
+pub fn rotate_bwd_compose_k(
+    k: Kernel,
+    q: &[f32],
+    dq: &[f32],
+    cos_c: &[f32],
+    sin_c: &[f32],
+    sign: f32,
+    scale: f32,
+    gsrc: &mut [f32],
+    grel: &mut [f32],
+) {
+    widths!(k, rotate_bwd_compose(q, dq, cos_c, sin_c, sign, scale, gsrc, grel))
+}
+
+/// ComplEx compose over re‖im halves (Hadamard product, conjugated for
+/// head queries).
+#[inline(always)]
+fn complex_compose<const DH: usize>(
+    src: &[f32],
+    rel: &[f32],
+    predict_head: bool,
+    out: &mut [f32],
+) {
+    let dh = if DH != 0 { DH } else { src.len() / 2 };
+    let (sre, sim) = src.split_at(dh);
+    let (rre, rim) = rel.split_at(dh);
+    let (ore, oim) = out.split_at_mut(dh);
+    let (sre, sim) = (&sre[..dh], &sim[..dh]);
+    let (rre, rim) = (&rre[..dh], &rim[..dh]);
+    let (ore, oim) = (&mut ore[..dh], &mut oim[..dh]);
+    if !predict_head {
+        for k in 0..dh {
+            ore[k] = sre[k] * rre[k] - sim[k] * rim[k];
+            oim[k] = sre[k] * rim[k] + sim[k] * rre[k];
+        }
+    } else {
+        for k in 0..dh {
+            ore[k] = rre[k] * sre[k] + rim[k] * sim[k];
+            oim[k] = rre[k] * sim[k] - rim[k] * sre[k];
+        }
+    }
+}
+
+#[inline]
+pub fn complex_compose_k(k: Kernel, src: &[f32], rel: &[f32], predict_head: bool, out: &mut [f32]) {
+    widths!(k, complex_compose(src, rel, predict_head, out))
+}
+
+/// ComplEx backward through compose into the source and relation rows.
+#[inline(always)]
+fn complex_bwd_compose<const DH: usize>(
+    src: &[f32],
+    rel: &[f32],
+    predict_head: bool,
+    dq: &[f32],
+    gsrc: &mut [f32],
+    grel: &mut [f32],
+) {
+    let dh = if DH != 0 { DH } else { src.len() / 2 };
+    let (sre, sim) = src.split_at(dh);
+    let (rre, rim) = rel.split_at(dh);
+    let (dqre, dqim) = dq.split_at(dh);
+    let (gsre, gsim) = gsrc.split_at_mut(dh);
+    let (grre, grim) = grel.split_at_mut(dh);
+    let (sre, sim) = (&sre[..dh], &sim[..dh]);
+    let (rre, rim) = (&rre[..dh], &rim[..dh]);
+    let (dqre, dqim) = (&dqre[..dh], &dqim[..dh]);
+    let (gsre, gsim) = (&mut gsre[..dh], &mut gsim[..dh]);
+    let (grre, grim) = (&mut grre[..dh], &mut grim[..dh]);
+    if !predict_head {
+        for k in 0..dh {
+            gsre[k] += dqre[k] * rre[k] + dqim[k] * rim[k];
+            gsim[k] += -dqre[k] * rim[k] + dqim[k] * rre[k];
+            grre[k] += dqre[k] * sre[k] + dqim[k] * sim[k];
+            grim[k] += -dqre[k] * sim[k] + dqim[k] * sre[k];
+        }
+    } else {
+        for k in 0..dh {
+            gsre[k] += dqre[k] * rre[k] - dqim[k] * rim[k];
+            gsim[k] += dqre[k] * rim[k] + dqim[k] * rre[k];
+            grre[k] += dqre[k] * sre[k] + dqim[k] * sim[k];
+            grim[k] += dqre[k] * sim[k] - dqim[k] * sre[k];
+        }
+    }
+}
+
+#[inline]
+pub fn complex_bwd_compose_k(
+    k: Kernel,
+    src: &[f32],
+    rel: &[f32],
+    predict_head: bool,
+    dq: &[f32],
+    gsrc: &mut [f32],
+    grel: &mut [f32],
+) {
+    widths!(k, complex_bwd_compose(src, rel, predict_head, dq, gsrc, grel))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn vecs(n: usize, seed: u64) -> (Vec<f32>, Vec<f32>) {
+        let mut rng = Rng::new(seed);
+        let a = (0..n).map(|_| rng.uniform(-1.0, 1.0)).collect();
+        let b = (0..n).map(|_| rng.uniform(-1.0, 1.0)).collect();
+        (a, b)
+    }
+
+    fn close(a: f32, b: f32, tol: f32) -> bool {
+        (a - b).abs() <= tol * (1.0 + b.abs())
+    }
+
+    #[test]
+    fn selection_table() {
+        assert_eq!(Kernel::select(64), Kernel::Fixed64);
+        assert_eq!(Kernel::select(128), Kernel::Fixed128);
+        assert_eq!(Kernel::select(256), Kernel::Fixed256);
+        assert_eq!(Kernel::select(100), Kernel::Lanes);
+        assert_eq!(Kernel::select(6), Kernel::Lanes);
+        let ks = KernelSet::select(128);
+        assert_eq!(ks, KernelSet { full: Kernel::Fixed128, half: Kernel::Fixed64 });
+        assert!(KernelSet::scalar().is_scalar());
+        assert!(!ks.is_scalar());
+    }
+
+    #[test]
+    fn reductions_match_reference_at_every_span() {
+        // fixed spans, lane-multiples, and remainder-carrying odd spans
+        for n in [3usize, 8, 25, 50, 64, 100, 128, 200, 256] {
+            let (a, b) = vecs(n, n as u64);
+            let k = Kernel::select(n);
+            let l1_ref: f32 = a.iter().zip(&b).map(|(x, y)| (x - y).abs()).sum();
+            assert!(close(l1_dist_k(k, &a, &b), l1_ref, 1e-5), "l1 n={n}");
+            assert!(close(l1_dist_k(Kernel::Lanes, &a, &b), l1_ref, 1e-5));
+            let dot_ref: f32 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+            assert!(close(dot_k(k, &a, &b), dot_ref, 1e-5), "dot n={n}");
+            assert!(close(sumsq_k(k, &a), a.iter().map(|x| x * x).sum(), 1e-5));
+        }
+        for dh in [3usize, 25, 64, 100, 128] {
+            let (a, b) = vecs(2 * dh, dh as u64);
+            let k = Kernel::select(dh);
+            let mut d_ref = 0.0f32;
+            for i in 0..dh {
+                let dre = a[i] - b[i];
+                let dim = a[dh + i] - b[dh + i];
+                d_ref += (dre * dre + dim * dim + MOD_EPS).sqrt();
+            }
+            assert!(close(rot_dist_k(k, &a, &b), d_ref, 1e-5), "rot dh={dh}");
+        }
+    }
+
+    #[test]
+    fn elementwise_kernels_match_reference() {
+        for n in [25usize, 64, 100] {
+            let (q, c) = vecs(n, 7 + n as u64);
+            let g = 0.37f32;
+            let k = Kernel::select(n);
+
+            let mut dq = vec![0.1f32; n];
+            let mut gc = vec![0.2f32; n];
+            transe_bwd_k(k, &q, &c, g, &mut dq, &mut gc);
+            for i in 0..n {
+                let s = (q[i] - c[i]).signum();
+                assert!(close(dq[i], 0.1 - g * s, 1e-6));
+                assert!(close(gc[i], 0.2 + g * s, 1e-6));
+            }
+
+            let mut y = vec![0.5f32; n];
+            axpy_k(k, 2.0, &q, &mut y);
+            for i in 0..n {
+                assert!(close(y[i], 0.5 + 2.0 * q[i], 1e-6));
+            }
+
+            let mut out = vec![0.0f32; n];
+            transe_compose_k(k, &q, &c, -1.0, &mut out);
+            for i in 0..n {
+                assert!(close(out[i], q[i] - c[i], 1e-6));
+            }
+        }
+    }
+
+    #[test]
+    fn rotate_cached_compose_matches_uncached_math() {
+        let dh = 25; // odd half-width → Lanes path downstream
+        let (src, rel_full) = vecs(2 * dh, 11);
+        let rel = &rel_full[..dh];
+        let (scale, sign) = (0.17f32, -1.0f32);
+        let mut cos_c = vec![0.0f32; dh];
+        let mut sin_c = vec![0.0f32; dh];
+        let mut out = vec![0.0f32; 2 * dh];
+        rotate_compose_cached(&src, rel, scale, sign, &mut cos_c, &mut sin_c, &mut out);
+        for k in 0..dh {
+            let theta = rel[k] * scale * sign;
+            assert_eq!(cos_c[k], theta.cos());
+            assert_eq!(sin_c[k], theta.sin());
+            let want_re = src[k] * theta.cos() - src[dh + k] * theta.sin();
+            let want_im = src[k] * theta.sin() + src[dh + k] * theta.cos();
+            assert!(close(out[k], want_re, 1e-6));
+            assert!(close(out[dh + k], want_im, 1e-6));
+        }
+    }
+}

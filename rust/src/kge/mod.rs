@@ -1,12 +1,17 @@
 //! Knowledge-graph embedding methods: shared definitions plus a pure-Rust
-//! reference implementation (`native`).
+//! reference implementation (`native`) and its width-dispatched inner-loop
+//! kernels (`kernels`).
 //!
 //! The production path executes the AOT-compiled JAX/Pallas artifacts via
 //! `crate::runtime`; the native implementation exists to (a) cross-check the
 //! artifact numerics step-for-step, (b) run artifact-free unit/property
 //! tests of the federated protocols, and (c) host the SVD+ baseline's
-//! low-rank-constrained local training (Appendix VI-B).
+//! low-rank-constrained local training (Appendix VI-B).  `kernels` holds the
+//! lane-friendly score/gradient primitives (monomorphized for common widths,
+//! generic remainder-tolerant fallback) that `native` dispatches onto once at
+//! model construction.
 
+pub mod kernels;
 pub mod native;
 
 use crate::util::rng::Rng;

@@ -10,21 +10,32 @@
 //! integration test (`rust/tests/xla_parity.rs`) checks native-vs-artifact
 //! agreement over a short, near-full-coverage run at 1e-3 tolerance.
 //!
-//! The training hot path is **sparse**: gradients accumulate into
-//! [`SparseGrad`] (an index map over the ≤ `3·batch + batch·negatives`
-//! rows a batch actually gathers) and the optimizer is the lazy row-wise
-//! [`LazyAdam`](super::LazyAdam), so a step costs O(touched·width) instead
-//! of O(rows·width).  The pre-sparse full-table engine survives as
-//! [`DenseOracle`] for parity tests and as the `train_hot_path` bench
-//! baseline.  `eval_ranks` chunks its O(rows) candidate scan across OS
-//! threads with bit-identical results for any thread count.
+//! The training hot path is **sparse** and **lane-parallel**: gradients
+//! accumulate into [`SparseGrad`] (an index map over the ≤
+//! `3·batch + batch·negatives` rows a batch actually gathers), the
+//! optimizer is the lazy row-wise [`LazyAdam`](super::LazyAdam), and the
+//! per-pair `logit` / candidate-backward / compose-backward math runs
+//! through the width-dispatched kernels of [`super::kernels`]
+//! ([`KernelSet::select`]ed once at construction).  The dispatched pass
+//! also **dedups repeated negative ids per positive** — duplicate
+//! candidates share one logit, one softmax weight (scaled by
+//! multiplicity), and one coalesced gradient accumulation, so
+//! [`SparseGrad`]/[`LazyAdam`] registration never pays per-duplicate
+//! `row_mut` churn — and reuses model-owned scratch buffers, so a step
+//! performs no heap allocation at all.
+//!
+//! Two reference engines are retained for parity: the element-at-a-time
+//! loops survive behind [`KernelSet::scalar`] (per-occurrence negatives,
+//! no dedup — the kernel oracle), and the pre-sparse full-table engine
+//! survives as [`DenseOracle`] (the optimizer oracle and `train_hot_path`
+//! bench baseline).  `eval_ranks` chunks its O(rows) candidate scan across
+//! OS threads with bit-identical results for any thread count.
 
 use crate::data::dataset::{Batch, EvalBatch};
 use crate::util::rng::Rng;
 
+use super::kernels::{self, KernelSet, MOD_EPS};
 use super::{Adam, Hyper, LazyAdam, Method, Table};
-
-const MOD_EPS: f32 = 1e-12;
 
 /// Below this many candidate·query scores, `eval_ranks` stays on the
 /// calling thread (thread spawn would dominate the scan).
@@ -107,6 +118,25 @@ impl SparseGrad {
     }
 }
 
+/// Model-owned step scratch: every buffer the gradient pass needs, reused
+/// across steps so the hot loop never allocates.  `neg_slot` is the
+/// per-positive negative-id dedup map (entity id → slot in `uniq_ids`,
+/// [`UNTOUCHED`] when absent — same idiom as [`SparseGrad`]); `cos`/`sin`
+/// cache RotatE's per-positive rotation so its compose backward needs no
+/// trigonometry.
+#[derive(Clone, Debug, Default)]
+struct StepScratch {
+    q: Vec<f32>,
+    dq: Vec<f32>,
+    logits: Vec<f32>,
+    probs: Vec<f32>,
+    cos: Vec<f32>,
+    sin: Vec<f32>,
+    uniq_ids: Vec<u32>,
+    uniq_cnt: Vec<f32>,
+    neg_slot: Vec<u32>,
+}
+
 /// Full native model state for one client (entity + relation tables +
 /// lazy row-wise Adam).
 #[derive(Clone, Debug)]
@@ -121,9 +151,17 @@ pub struct NativeModel {
     /// OS-thread cap for `eval_ranks` candidate chunking (0 = auto from
     /// `available_parallelism`).  Results are bit-identical for any value.
     pub eval_threads: usize,
+    /// Inner-loop dispatch, selected once at construction from the entity
+    /// row width ([`KernelSet::select`]).  Set to [`KernelSet::scalar`]
+    /// to run the retained element-at-a-time reference loops (the kernel
+    /// parity oracle); switching is safe at any step boundary — dispatch
+    /// is stateless.
+    pub kernels: KernelSet,
     // touched-row gradient accumulators (reused across steps)
     g_ent: SparseGrad,
     g_rel: SparseGrad,
+    // step-loop scratch (reused across steps; no per-positive allocation)
+    scratch: StepScratch,
 }
 
 impl NativeModel {
@@ -143,16 +181,29 @@ impl NativeModel {
         let rel_adam = LazyAdam::new(num_relations, wr);
         let g_ent = SparseGrad::new(num_entities, we);
         let g_rel = SparseGrad::new(num_relations, wr);
-        Self { method, hyper, ent, rel, ent_adam, rel_adam, step: 0, eval_threads: 0, g_ent, g_rel }
+        let kernels = KernelSet::select(we);
+        let scratch = StepScratch { neg_slot: vec![UNTOUCHED; num_entities], ..Default::default() };
+        Self {
+            method,
+            hyper,
+            ent,
+            rel,
+            ent_adam,
+            rel_adam,
+            step: 0,
+            eval_threads: 0,
+            kernels,
+            g_ent,
+            g_rel,
+            scratch,
+        }
     }
 
     /// One training step on a padded batch; returns the loss.  Work is
     /// O(touched·width): only rows gathered by the batch are visited, by
     /// the gradient pass and by the optimizer alike.
     pub fn train_batch(&mut self, batch: &Batch) -> f32 {
-        self.g_ent.clear();
-        self.g_rel.clear();
-        let loss = self.accumulate_grads(batch);
+        let loss = self.forward_backward(batch);
         self.step += 1;
         let we = self.ent.width;
         for (r, g) in self.g_ent.iter() {
@@ -169,8 +220,247 @@ impl NativeModel {
         loss
     }
 
-    /// Loss + gradient accumulation into the dense scratch buffers.
+    /// Forward + gradient accumulation only (no optimizer step): clears
+    /// the touched-row accumulators and returns the batch loss.  This is
+    /// the kernel-bench / parity-test entry point; [`Self::train_batch`]
+    /// is this plus the [`LazyAdam`] update.
+    pub fn forward_backward(&mut self, batch: &Batch) -> f32 {
+        self.g_ent.clear();
+        self.g_rel.clear();
+        self.accumulate_grads(batch)
+    }
+
+    /// Dense copies of the currently accumulated (entity, relation)
+    /// gradients — parity-test convenience.
+    pub fn grads_dense(&self) -> (Vec<f32>, Vec<f32>) {
+        (self.g_ent.to_dense(self.ent.rows), self.g_rel.to_dense(self.rel.rows))
+    }
+
+    /// Loss + gradient accumulation, routed through the selected kernels:
+    /// the width-dispatched deduping pass by default, the retained
+    /// element-at-a-time reference when `kernels` is scalar.
     fn accumulate_grads(&mut self, batch: &Batch) -> f32 {
+        if self.kernels.is_scalar() {
+            self.accumulate_scalar(batch)
+        } else {
+            self.accumulate_fast(batch)
+        }
+    }
+
+    /// The width-dispatched gradient pass: per positive, negative ids are
+    /// coalesced first (one logit, one softmax weight scaled by
+    /// multiplicity, one gradient accumulation per **unique** candidate),
+    /// then the lane kernels run over model-owned scratch.  RotatE's
+    /// rotation is computed once in the forward compose and cached for
+    /// the backward.
+    fn accumulate_fast(&mut self, batch: &Batch) -> f32 {
+        let b = batch.batch_size;
+        let n = batch.negatives;
+        let we = self.ent.width;
+        let dh = we / 2;
+        let ks = self.kernels;
+        let h = self.hyper.clone();
+        let denom: f32 = batch.mask.iter().sum::<f32>().max(1.0);
+        let mut total = 0.0f32;
+
+        let mut sc = std::mem::take(&mut self.scratch);
+        sc.q.resize(we, 0.0);
+        sc.dq.resize(we, 0.0);
+        sc.logits.resize(n, 0.0);
+        sc.probs.resize(n, 0.0);
+        if self.method == Method::RotatE {
+            sc.cos.resize(dh, 0.0);
+            sc.sin.resize(dh, 0.0);
+        }
+
+        for i in 0..b {
+            let (hid, rid, tid) = (
+                batch.pos[i * 3] as usize,
+                batch.pos[i * 3 + 1] as usize,
+                batch.pos[i * 3 + 2] as usize,
+            );
+            let corrupt_head = batch.neg_is_head[i] > 0.5;
+            let weight = batch.mask[i] / denom;
+            let sign = if corrupt_head { -1.0f32 } else { 1.0f32 };
+
+            // coalesce this positive's negative ids (first-occurrence order)
+            sc.uniq_ids.clear();
+            sc.uniq_cnt.clear();
+            for j in 0..n {
+                let cid = batch.neg[i * n + j] as usize;
+                let s = sc.neg_slot[cid];
+                if s == UNTOUCHED {
+                    sc.neg_slot[cid] = sc.uniq_ids.len() as u32;
+                    sc.uniq_ids.push(cid as u32);
+                    sc.uniq_cnt.push(1.0);
+                } else {
+                    sc.uniq_cnt[s as usize] += 1.0;
+                }
+            }
+            let nu = sc.uniq_ids.len();
+
+            if self.method == Method::ComplEx {
+                total += self.complex_reg_fast(i, batch, &sc.uniq_ids, &sc.uniq_cnt, ks);
+            }
+            if weight == 0.0 {
+                for &id in &sc.uniq_ids {
+                    sc.neg_slot[id as usize] = UNTOUCHED;
+                }
+                continue;
+            }
+
+            let src_id = if corrupt_head { tid } else { hid };
+            let true_id = if corrupt_head { hid } else { tid };
+
+            // forward: query (RotatE caches cos/sin for the backward)
+            {
+                let src = self.ent.row(src_id);
+                let rel = self.rel.row(rid);
+                match self.method {
+                    Method::TransE => kernels::transe_compose_k(ks.full, src, rel, sign, &mut sc.q),
+                    Method::RotatE => {
+                        let scale = std::f32::consts::PI / h.embedding_range();
+                        kernels::rotate_compose_cached(
+                            src, rel, scale, sign, &mut sc.cos, &mut sc.sin, &mut sc.q,
+                        );
+                    }
+                    Method::ComplEx => {
+                        kernels::complex_compose_k(ks.half, src, rel, corrupt_head, &mut sc.q)
+                    }
+                }
+            }
+
+            // forward: one logit per unique candidate
+            let pos_logit = ks.logit(self.method, h.gamma, &sc.q, self.ent.row(true_id));
+            for u in 0..nu {
+                let cid = sc.uniq_ids[u] as usize;
+                sc.logits[u] = ks.logit(self.method, h.gamma, &sc.q, self.ent.row(cid));
+            }
+
+            // self-adversarial weights over the multiset (duplicates share
+            // one bitwise-identical probability, counted by multiplicity)
+            let mut mx = f32::NEG_INFINITY;
+            for &l in &sc.logits[..nu] {
+                mx = mx.max(l);
+            }
+            let mut z = 0.0f32;
+            for u in 0..nu {
+                let e = ((sc.logits[u] - mx) * h.adv_temperature).exp();
+                sc.probs[u] = e;
+                z += sc.uniq_cnt[u] * e;
+            }
+
+            // loss
+            let l_pos = softplus(-pos_logit);
+            let mut l_neg = 0.0f32;
+            for u in 0..nu {
+                sc.probs[u] /= z;
+                l_neg += sc.uniq_cnt[u] * sc.probs[u] * softplus(sc.logits[u]);
+            }
+            total += 0.5 * (l_pos + l_neg) * weight;
+
+            // backward through logits, coalesced per unique candidate
+            let dpos = -0.5 * sigmoid(-pos_logit) * weight;
+            sc.dq.iter_mut().for_each(|x| *x = 0.0);
+            {
+                let cand = self.ent.row(true_id);
+                let gc = self.g_ent.row_mut(true_id);
+                ks.bwd_candidate(self.method, &sc.q, cand, dpos, &mut sc.dq, gc);
+            }
+            for u in 0..nu {
+                let cid = sc.uniq_ids[u] as usize;
+                let g = 0.5 * sc.uniq_cnt[u] * sc.probs[u] * sigmoid(sc.logits[u]) * weight;
+                let cand = self.ent.row(cid);
+                let gc = self.g_ent.row_mut(cid);
+                ks.bwd_candidate(self.method, &sc.q, cand, g, &mut sc.dq, gc);
+            }
+
+            // backward through compose into src entity + relation rows
+            match self.method {
+                Method::TransE => {
+                    let gsrc = self.g_ent.row_mut(src_id);
+                    let grel = self.g_rel.row_mut(rid);
+                    kernels::transe_bwd_compose_k(ks.full, &sc.dq, sign, gsrc, grel);
+                }
+                Method::RotatE => {
+                    let scale = std::f32::consts::PI / h.embedding_range();
+                    let gsrc = self.g_ent.row_mut(src_id);
+                    let grel = self.g_rel.row_mut(rid);
+                    kernels::rotate_bwd_compose_k(
+                        ks.half, &sc.q, &sc.dq, &sc.cos, &sc.sin, sign, scale, gsrc, grel,
+                    );
+                }
+                Method::ComplEx => {
+                    let src = self.ent.row(src_id);
+                    let rel = self.rel.row(rid);
+                    let gsrc = self.g_ent.row_mut(src_id);
+                    let grel = self.g_rel.row_mut(rid);
+                    kernels::complex_bwd_compose_k(
+                        ks.half, src, rel, corrupt_head, &sc.dq, gsrc, grel,
+                    );
+                }
+            }
+
+            // release the dedup slots in O(unique)
+            for &id in &sc.uniq_ids {
+                sc.neg_slot[id as usize] = UNTOUCHED;
+            }
+        }
+        self.scratch = sc;
+        total
+    }
+
+    /// ComplEx L2 regularizer for row i, candidate terms coalesced over
+    /// the positive's unique negative ids (duplicates contribute
+    /// `count ×` one term — same math, one `row_mut` registration).
+    fn complex_reg_fast(
+        &mut self,
+        i: usize,
+        batch: &Batch,
+        uniq_ids: &[u32],
+        uniq_cnt: &[f32],
+        ks: KernelSet,
+    ) -> f32 {
+        let we = self.ent.width;
+        let wr = self.rel.width;
+        let b = batch.batch_size;
+        let n = batch.negatives;
+        let lam = self.hyper.complex_reg;
+        let mut reg = 0.0f32;
+        for id in [batch.pos[i * 3] as usize, batch.pos[i * 3 + 2] as usize] {
+            let numel = (b * we) as f32;
+            let ss = kernels::sumsq_k(ks.full, self.ent.row(id));
+            reg += lam * ss / numel;
+            let coef = 2.0 * lam / numel;
+            let row = &self.ent.data[id * we..(id + 1) * we];
+            let g = self.g_ent.row_mut(id);
+            kernels::axpy_k(ks.full, coef, row, g);
+        }
+        let rid = batch.pos[i * 3 + 1] as usize;
+        let numel = (b * wr) as f32;
+        let ss = kernels::sumsq_k(ks.full, self.rel.row(rid));
+        reg += lam * ss / numel;
+        let coef = 2.0 * lam / numel;
+        let row = &self.rel.data[rid * wr..(rid + 1) * wr];
+        let gr = self.g_rel.row_mut(rid);
+        kernels::axpy_k(ks.full, coef, row, gr);
+        let numel = (b * n * we) as f32;
+        for (u, &id) in uniq_ids.iter().enumerate() {
+            let cid = id as usize;
+            let cnt = uniq_cnt[u];
+            let ss = kernels::sumsq_k(ks.full, self.ent.row(cid));
+            reg += cnt * (lam * ss / numel);
+            let coef = cnt * (2.0 * lam / numel);
+            let row = &self.ent.data[cid * we..(cid + 1) * we];
+            let gc = self.g_ent.row_mut(cid);
+            kernels::axpy_k(ks.full, coef, row, gc);
+        }
+        reg
+    }
+
+    /// The retained element-at-a-time reference pass (the kernel parity
+    /// oracle): per-occurrence negatives, no dedup, scalar inner loops.
+    fn accumulate_scalar(&mut self, batch: &Batch) -> f32 {
         let b = batch.batch_size;
         let n = batch.negatives;
         let we = self.ent.width;
@@ -261,8 +551,13 @@ impl NativeModel {
         total
     }
 
-    /// logit(q, cand) = γ − dist (TransE/RotatE) or dot (ComplEx)
+    /// logit(q, cand) = γ − dist (TransE/RotatE) or dot (ComplEx).
+    /// Routed through the width-dispatched kernels unless this model is
+    /// the scalar reference, which keeps the element-at-a-time loops.
     fn logit(&self, q: &[f32], cand: &[f32]) -> f32 {
+        if !self.kernels.is_scalar() {
+            return self.kernels.logit(self.method, self.hyper.gamma, q, cand);
+        }
         match self.method {
             Method::TransE => {
                 let mut d = 0.0;
@@ -333,9 +628,12 @@ impl NativeModel {
     ) {
         let we = self.ent.width;
         let wr = self.rel.width;
-        let src = self.ent.data[src_id * we..(src_id + 1) * we].to_vec();
-        let rel = self.rel.data[rel_id * wr..(rel_id + 1) * wr].to_vec();
         let emb_range = self.hyper.embedding_range();
+        // src/rel (ent, rel) and the gradient rows (g_ent, g_rel) live in
+        // disjoint fields, so no row copies are needed to satisfy the
+        // borrow checker — the step loop stays allocation-free.
+        let src = &self.ent.data[src_id * we..(src_id + 1) * we];
+        let rel = &self.rel.data[rel_id * wr..(rel_id + 1) * wr];
         let gsrc = self.g_ent.row_mut(src_id);
         let grel = self.g_rel.row_mut(rel_id);
         match self.method {
@@ -514,10 +812,12 @@ impl NativeModel {
     }
 }
 
-/// The pre-sparse reference engine: identical gradient math, but gradients
-/// scattered to dense scratch and applied by the retained full-table
-/// [`Adam::update`] — O(rows·width) per step, zero-grad drift included.
-/// Kept as the parity-test oracle and the `train_hot_path` bench baseline.
+/// The pre-sparse reference engine: identical gradient math (it shares the
+/// wrapped model's kernel dispatch), but gradients scattered to dense
+/// scratch and applied by the retained full-table [`Adam::update`] —
+/// O(rows·width) per step, zero-grad drift included.  Kept as the
+/// optimizer parity oracle and the `train_hot_path` bench baseline; the
+/// *kernel* parity oracle is a model with [`KernelSet::scalar`] dispatch.
 pub struct DenseOracle {
     pub model: NativeModel,
     ent_adam: Adam,
@@ -542,9 +842,7 @@ impl DenseOracle {
     /// One dense training step: the historical O(rows·width) path —
     /// zero the full scratch buffers, accumulate, full-table Adam.
     pub fn train_batch(&mut self, batch: &Batch) -> f32 {
-        self.model.g_ent.clear();
-        self.model.g_rel.clear();
-        let loss = self.model.accumulate_grads(batch);
+        let loss = self.model.forward_backward(batch);
         self.g_ent.iter_mut().for_each(|g| *g = 0.0);
         self.g_rel.iter_mut().for_each(|g| *g = 0.0);
         self.model.g_ent.scatter_into(&mut self.g_ent);
@@ -930,6 +1228,122 @@ mod tests {
         }
         m.eval_threads = 0; // auto
         assert_eq!(m.eval_ranks(&eb), seq);
+    }
+
+    /// Satellite: model construction picks the monomorphized kernels for
+    /// the common widths and the generic lane path elsewhere.
+    #[test]
+    fn model_selects_expected_kernels() {
+        use super::super::kernels::{Kernel, KernelSet};
+        let mut rng = Rng::new(1);
+        let m = |method, dim| {
+            NativeModel::new(method, Hyper { dim, ..Default::default() }, 8, 2, &mut rng).kernels
+        };
+        assert_eq!(m(Method::TransE, 64), KernelSet { full: Kernel::Fixed64, half: Kernel::Lanes });
+        assert_eq!(
+            m(Method::RotatE, 64),
+            KernelSet { full: Kernel::Fixed128, half: Kernel::Fixed64 }
+        );
+        assert_eq!(
+            m(Method::ComplEx, 128),
+            KernelSet { full: Kernel::Fixed256, half: Kernel::Fixed128 }
+        );
+        assert_eq!(m(Method::TransE, 100), KernelSet { full: Kernel::Lanes, half: Kernel::Lanes });
+    }
+
+    /// Tentpole parity: the width-dispatched dedup pass must match the
+    /// retained scalar oracle at the existing 1e-4 tolerance — including
+    /// widths not divisible by the lane count (d=100) and an odd RotatE
+    /// half-width (d=25), plus the monomorphized fixed spans (d=64/128).
+    #[test]
+    fn dispatched_kernels_match_scalar_oracle() {
+        for method in Method::ALL {
+            for dim in [4usize, 25, 64, 100, 128] {
+                let mut rng = Rng::new(dim as u64);
+                let hyper = Hyper { dim, ..Default::default() };
+                let mut fast = NativeModel::new(method, hyper, 32, 4, &mut rng);
+                let mut scalar = fast.clone();
+                scalar.kernels = KernelSet::scalar();
+                assert!(!fast.kernels.is_scalar());
+
+                let mut brng = rng.fork(3);
+                for step in 0..5 {
+                    let batch = toy_batch(8, 6, 32, 4, &mut brng);
+                    let lf = fast.forward_backward(&batch);
+                    let ls = scalar.forward_backward(&batch);
+                    assert!(
+                        (lf - ls).abs() <= 1e-5 * (1.0 + ls.abs()),
+                        "{method:?} d={dim} step {step}: loss {lf} vs {ls}"
+                    );
+                    let (ge_f, gr_f) = fast.grads_dense();
+                    let (ge_s, gr_s) = scalar.grads_dense();
+                    for (i, (a, b)) in ge_f.iter().zip(&ge_s).enumerate() {
+                        assert!(
+                            (a - b).abs() < 1e-4 * (1.0 + b.abs()),
+                            "{method:?} d={dim} g_ent[{i}]: {a} vs {b}"
+                        );
+                    }
+                    for (i, (a, b)) in gr_f.iter().zip(&gr_s).enumerate() {
+                        assert!(
+                            (a - b).abs() < 1e-4 * (1.0 + b.abs()),
+                            "{method:?} d={dim} g_rel[{i}]: {a} vs {b}"
+                        );
+                    }
+                    // advance with the dispatched engine and re-sync the
+                    // oracle, so every step compares gradients on evolved
+                    // tables without compounding reassociation drift
+                    // through Adam's normalization
+                    fast.train_batch(&batch);
+                    scalar = fast.clone();
+                    scalar.kernels = KernelSet::scalar();
+                }
+            }
+        }
+    }
+
+    /// Satellite: a duplicate-heavy negatives batch — the dedup pass must
+    /// leave loss and gradients identical to the per-occurrence scalar
+    /// reference (duplicates share bitwise-equal terms, so coalescing
+    /// only re-associates sums).
+    #[test]
+    fn duplicate_heavy_negatives_dedup_is_exact() {
+        for method in Method::ALL {
+            let mut rng = Rng::new(13);
+            let mut fast = model(method, &mut rng);
+            let mut scalar = fast.clone();
+            scalar.kernels = KernelSet::scalar();
+            let (b, n) = (8usize, 16usize);
+            let mut brng = rng.fork(7);
+            let mut batch = toy_batch(b, n, 32, 4, &mut brng);
+            // draw all negatives from 3 entities → ~5 duplicates per id
+            for i in 0..b {
+                for j in 0..n {
+                    batch.neg[i * n + j] = ((i + j) % 3) as i32;
+                }
+            }
+            let lf = fast.forward_backward(&batch);
+            let ls = scalar.forward_backward(&batch);
+            assert!(
+                (lf - ls).abs() <= 1e-5 * (1.0 + ls.abs()),
+                "{method:?}: loss {lf} vs {ls}"
+            );
+            let (ge_f, gr_f) = fast.grads_dense();
+            let (ge_s, gr_s) = scalar.grads_dense();
+            for (i, (a, b)) in ge_f.iter().zip(&ge_s).enumerate() {
+                assert!(
+                    (a - b).abs() < 1e-5 * (1.0 + b.abs()),
+                    "{method:?} g_ent[{i}]: {a} vs {b}"
+                );
+            }
+            for (i, (a, b)) in gr_f.iter().zip(&gr_s).enumerate() {
+                assert!(
+                    (a - b).abs() < 1e-5 * (1.0 + b.abs()),
+                    "{method:?} g_rel[{i}]: {a} vs {b}"
+                );
+            }
+            // each unique candidate registered once: ≤ 3·b + 3 entity rows
+            assert!(fast.g_ent.len() <= 3 * b + 3, "{} rows", fast.g_ent.len());
+        }
     }
 
     fn mean_rank(m: &NativeModel, triples: &[Triple]) -> f32 {

@@ -21,11 +21,15 @@
 //!   where each variant carries only its own knobs); `Session::build`
 //!   turns specs into executable `Run` handles.
 //! * [`kge`] — method/table/optimizer definitions and the pure-Rust
-//!   reference engine (`kge::native`).  The training hot path is sparse:
-//!   touched-row gradients (`SparseGrad`) + lazy row-wise Adam
-//!   (`LazyAdam`) make a step O(touched·width); the pre-sparse engine is
-//!   retained as `DenseOracle` for parity tests and benches, and
-//!   `eval_ranks` chunks its candidate scan across OS threads with
+//!   reference engine (`kge::native`).  The training hot path is sparse
+//!   **and lane-parallel**: touched-row gradients (`SparseGrad`) + lazy
+//!   row-wise Adam (`LazyAdam`) make a step O(touched·width), and the
+//!   per-pair score/gradient math runs through width-dispatched
+//!   autovectorizing kernels (`kge::kernels`, selected once at
+//!   construction) with per-positive negative-id dedup.  Two reference
+//!   engines are retained for parity — the element-at-a-time loops
+//!   behind `KernelSet::scalar()` and the pre-sparse `DenseOracle` —
+//!   and `eval_ranks` chunks its candidate scan across OS threads with
 //!   bit-identical results (see PERF.md).
 //! * [`trainer`] — the `LocalTrainer` seam the federated layer drives:
 //!   native oracle, PJRT-backed XLA trainers, and the KD transport.

@@ -1,6 +1,12 @@
-//! `LocalTrainer` over the pure-Rust oracle (`kge::native::NativeModel`).
+//! `LocalTrainer` over the pure-Rust engine (`kge::native::NativeModel`).
 //! Used for artifact-free protocol tests, numerics cross-checks, and the
 //! SVD+ baseline's constrained local training.
+//!
+//! Constructing the trainer fixes the model's kernel dispatch for the whole
+//! run: `NativeModel::new` selects width-specialized inner-loop kernels
+//! (`kge::kernels::KernelSet`) from the method/dimension, so every
+//! `train_batch` call goes through the monomorphized fast path without
+//! per-step dispatch.
 
 use anyhow::Result;
 
@@ -157,6 +163,27 @@ mod tests {
     fn size_mismatch_errors() {
         let mut t = trainer();
         assert!(t.set_entity_rows(&[1, 2], &[0.0; 3]).is_err());
+    }
+
+    #[test]
+    fn construction_fixes_kernel_dispatch() {
+        use crate::kge::kernels::Kernel;
+        // RotatE at dim 64 → entity width 128: full span Fixed128, re‖im
+        // half span Fixed64. Selected once here, never re-dispatched.
+        let mut rng = Rng::new(2);
+        let t = NativeTrainer::new(
+            Method::RotatE,
+            Hyper { dim: 64, ..Default::default() },
+            16,
+            2,
+            8,
+            &mut rng,
+        );
+        assert_eq!(t.model.kernels.full, Kernel::Fixed128);
+        assert_eq!(t.model.kernels.half, Kernel::Fixed64);
+        assert!(!t.model.kernels.is_scalar());
+        // the odd dim-4 fixture falls back to the lane-generic path
+        assert_eq!(trainer().model.kernels.full, Kernel::Lanes);
     }
 
     #[test]

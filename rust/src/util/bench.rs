@@ -129,6 +129,32 @@ impl Bench {
     }
 }
 
+/// Write a bench trajectory point as `<name>.json` in the working directory
+/// (the `rust/` crate root under `cargo bench`, where CI picks it up as an
+/// artifact) and, when `FEDS_BENCH_SNAPSHOT=1` and the repo root is visible
+/// one level up, refresh the committed root copy too.
+///
+/// The env gate matters: CI smoke runs produce fast-mode numbers and must
+/// not clobber the committed baseline that `scripts/bench_gate.py` compares
+/// them against. Only `scripts/bench_snapshot.sh` (a deliberate full-length
+/// run) sets the variable.
+pub fn write_trajectory(name: &str, json: &Json) {
+    let body = json.to_string_pretty();
+    let file = format!("{name}.json");
+    if let Err(e) = std::fs::write(&file, &body) {
+        eprintln!("warning: could not write {file}: {e}");
+    }
+    if std::env::var("FEDS_BENCH_SNAPSHOT").as_deref() == Ok("1") {
+        let root = std::path::Path::new("..");
+        if root.join("ROADMAP.md").is_file() {
+            let dst = root.join(&file);
+            if let Err(e) = std::fs::write(&dst, &body) {
+                eprintln!("warning: could not write {}: {e}", dst.display());
+            }
+        }
+    }
+}
+
 pub fn fmt_ns(ns: f64) -> String {
     if ns < 1e3 {
         format!("{ns:.1} ns")

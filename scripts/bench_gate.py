@@ -1,0 +1,105 @@
+#!/usr/bin/env python3
+"""Perf regression gate: compare a fresh bench trajectory point against the
+committed baseline and fail on regression.
+
+Usage (CI runs this from rust/ right after the train-bench smoke step):
+
+    python3 ../scripts/bench_gate.py \
+        --baseline ../BENCH_train.json --fresh BENCH_train.json
+
+Gated keys are the speedup ratios (`train_speedup`, `kernel_speedup_*`):
+ratios of two timings taken on the same machine in the same run, so they
+are comparable across hosts in a way raw milliseconds are not.
+
+Two kinds of checks:
+
+* **Absolute floors** — always enforced.  The sparse engine must beat the
+  dense baseline by `--train-floor` (default 5x; the full-length
+  acceptance target is 10x, but CI smoke runs measure with
+  FEDS_BENCH_FAST's short sampling windows, so the floor leaves noise
+  margin), and every dispatched kernel must at least match the scalar
+  oracle (`--kernel-floor`, default 1.0).
+* **Relative band vs the baseline** — each fresh speedup must be at least
+  `--band` (default 0.5) times the committed value.  Skipped for any key
+  the baseline lacks, and skipped entirely when the baseline is marked
+  `"bootstrap": true` (a placeholder committed before the first measured
+  snapshot — floors still apply).
+
+Exit code 0 = pass, 1 = regression, 2 = usage/IO error.
+"""
+
+import argparse
+import json
+import sys
+
+
+def load(path):
+    try:
+        with open(path) as f:
+            return json.load(f)
+    except (OSError, ValueError) as e:
+        print(f"bench_gate: cannot read {path}: {e}", file=sys.stderr)
+        sys.exit(2)
+
+
+def speedup_keys(point):
+    keys = [k for k in point if k == "train_speedup" or k.startswith("kernel_speedup_")]
+    return sorted(keys)
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--baseline", required=True, help="committed trajectory point")
+    ap.add_argument("--fresh", required=True, help="just-measured trajectory point")
+    ap.add_argument("--band", type=float, default=0.5,
+                    help="fresh speedup must be >= band * baseline (default 0.5)")
+    ap.add_argument("--train-floor", type=float, default=5.0,
+                    help="absolute floor for train_speedup (default 5.0)")
+    ap.add_argument("--kernel-floor", type=float, default=1.0,
+                    help="absolute floor for each kernel_speedup_* (default 1.0)")
+    args = ap.parse_args()
+
+    baseline = load(args.baseline)
+    fresh = load(args.fresh)
+    bootstrap = bool(baseline.get("bootstrap"))
+
+    keys = speedup_keys(fresh)
+    if "train_speedup" not in keys:
+        print("bench_gate: fresh point has no train_speedup — wrong file?", file=sys.stderr)
+        sys.exit(2)
+
+    failures = []
+    for key in keys:
+        val = float(fresh[key])
+        floor = args.train_floor if key == "train_speedup" else args.kernel_floor
+        verdicts = []
+        if val < floor:
+            failures.append(f"{key} = {val:.2f}x is below the absolute floor {floor:.2f}x")
+            verdicts.append("FLOOR FAIL")
+        else:
+            verdicts.append("floor ok")
+        if not bootstrap and key in baseline:
+            want = args.band * float(baseline[key])
+            if val < want:
+                failures.append(
+                    f"{key} = {val:.2f}x regressed below {args.band:.2f} x "
+                    f"baseline {float(baseline[key]):.2f}x (= {want:.2f}x)")
+                verdicts.append("BAND FAIL")
+            else:
+                verdicts.append(f"band ok vs {float(baseline[key]):.2f}x")
+        elif bootstrap:
+            verdicts.append("band skipped (bootstrap baseline)")
+        else:
+            verdicts.append("band skipped (key not in baseline)")
+        print(f"bench_gate: {key:28s} {val:8.2f}x  [{'; '.join(verdicts)}]")
+
+    if failures:
+        print("bench_gate: FAIL", file=sys.stderr)
+        for f in failures:
+            print(f"  - {f}", file=sys.stderr)
+        sys.exit(1)
+    print(f"bench_gate: PASS ({len(keys)} speedup keys checked)")
+
+
+if __name__ == "__main__":
+    main()
