@@ -53,6 +53,7 @@ fn main() -> anyhow::Result<()> {
         exec: ExecMode::Sequential,
         transport: Default::default(),
         shards: 0,
+        participation: Default::default(),
     };
     let mut session = Session::with_runtime(rt);
 

@@ -64,6 +64,7 @@ fn main() -> anyhow::Result<()> {
         exec: ExecMode::Sequential,
         transport: Default::default(),
         shards: 0,
+        participation: Default::default(),
     };
     // every spec is JSON-serializable: println!("{}", spec.to_json()) is a
     // ready-made `feds run --spec` file

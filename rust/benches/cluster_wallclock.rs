@@ -55,13 +55,14 @@ fn bench_spec(rounds: usize) -> ExperimentSpec {
         exec: Default::default(),
         transport: Default::default(),
         shards: 0,
+        participation: Default::default(),
     }
 }
 
 /// One full cluster run over loopback TCP: the server in this thread,
 /// every client as its own thread speaking the cluster protocol.
 fn cluster_run(spec: &ExperimentSpec, bandwidth: Option<BandwidthModel>) -> ClusterOutcome {
-    let opts = ServeOpts { deadline: Duration::from_secs(60), bandwidth, expect: 0 };
+    let opts = ServeOpts { deadline: Duration::from_secs(60), bandwidth, ..ServeOpts::default() };
     let server = ClusterServer::bind("127.0.0.1:0", spec, opts).expect("bind loopback");
     let addr = server.addr().to_string();
     let handles: Vec<_> = (0..spec.data.clients)

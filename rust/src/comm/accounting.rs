@@ -72,6 +72,25 @@ impl Accounting {
         self.messages.load(Ordering::Relaxed)
     }
 
+    /// Checkpoint restore: seed every counter to an exact prior
+    /// snapshot (unlike [`record`], no message increment happens).
+    ///
+    /// [`record`]: Accounting::record
+    pub fn preload(
+        &self,
+        up_params: u64,
+        down_params: u64,
+        up_bytes: u64,
+        down_bytes: u64,
+        messages: u64,
+    ) {
+        self.up_params.store(up_params, Ordering::Relaxed);
+        self.down_params.store(down_params, Ordering::Relaxed);
+        self.up_bytes.store(up_bytes, Ordering::Relaxed);
+        self.down_bytes.store(down_bytes, Ordering::Relaxed);
+        self.messages.store(messages, Ordering::Relaxed);
+    }
+
     pub fn reset(&self) {
         self.up_params.store(0, Ordering::Relaxed);
         self.down_params.store(0, Ordering::Relaxed);

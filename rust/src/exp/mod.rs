@@ -127,6 +127,7 @@ impl Ctx {
             exec: self.exec,
             transport: crate::comm::transport::TransportSpec::Mpsc,
             shards: 0,
+            participation: Default::default(),
         }
     }
 

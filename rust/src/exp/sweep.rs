@@ -445,6 +445,7 @@ mod tests {
             exec: ExecMode::Sequential,
             transport: Default::default(),
             shards: 0,
+            participation: Default::default(),
         }
     }
 

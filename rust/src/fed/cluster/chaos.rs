@@ -1,0 +1,68 @@
+//! Fault injection for cluster drills: the small set of primitives the
+//! robustness tests compose into crash/restore scenarios.
+//!
+//! Everything here either *causes* a fault at a deterministic point
+//! (self-SIGKILL at a round boundary, a connection cut after round N, a
+//! truncated checkpoint file) or *shapes* the link so faults get time to
+//! land (added latency).  The invariant the test-suite drives with these:
+//! every injected fault either recovers bit-identically (checkpoint
+//! restore, reconnect backoff) or fails loudly with a typed error —
+//! never a hang, never silently wrong numbers.
+
+use std::io;
+use std::path::Path;
+use std::time::Duration;
+
+use crate::comm::bandwidth::BandwidthModel;
+
+use super::checkpoint::checkpoint_path;
+use super::client::ClientOpts;
+use super::server::ServeOpts;
+
+/// SIGKILL the current process.  Unlike a panic or `process::exit`, no
+/// destructor, socket shutdown, or flush runs — the peer observes an
+/// abrupt mid-stream death, exactly what the crash-recovery drills need.
+/// Used by [`ServeOpts::kill_after_checkpoint`] so the kill lands at an
+/// exact round boundary instead of racing the round loop from outside.
+pub fn sigkill_self() -> ! {
+    let _ = std::process::Command::new("kill")
+        .args(["-9", &std::process::id().to_string()])
+        .status();
+    // the signal is delivered asynchronously; never execute past here
+    loop {
+        std::thread::sleep(Duration::from_secs(1));
+    }
+}
+
+/// Truncate the checkpoint in `dir` to its first `keep` bytes, returning
+/// the original size.  Restore from the mangled file must fail with
+/// `CheckpointError::Corrupt` — the checkpoint decoder's torn-write
+/// drill.
+pub fn truncate_checkpoint(dir: &Path, keep: u64) -> io::Result<u64> {
+    let path = checkpoint_path(dir);
+    let len = std::fs::metadata(&path)?.len();
+    let f = std::fs::OpenOptions::new().write(true).open(&path)?;
+    f.set_len(keep.min(len))?;
+    Ok(len)
+}
+
+/// A link model that delays every frame by `latency` without limiting
+/// throughput: pure added latency, for tests that need a window to
+/// inject a fault while frames are in flight.
+pub fn delay_frames(latency: Duration) -> BandwidthModel {
+    BandwidthModel { bytes_per_sec: f64::INFINITY, latency_s: latency.as_secs_f64() }
+}
+
+/// Arrange for this client's connection to die abruptly (mid-frame)
+/// right after it completes `round`.
+pub fn cut_connection_after(opts: &mut ClientOpts, round: usize) {
+    opts.fail_after = Some(round);
+}
+
+/// Arrange for the coordinator to halt with a typed
+/// [`CoordinatorHalted`](super::CoordinatorHalted) error right after it
+/// writes the round-`round` checkpoint (requires `checkpoint` to be set
+/// and `round` to be a checkpoint round).
+pub fn halt_coordinator_at(opts: &mut ServeOpts, round: u32) {
+    opts.halt_after_checkpoint = Some(round);
+}

@@ -1,0 +1,368 @@
+//! Coordinator checkpoints: atomic round-boundary snapshots of the
+//! cluster server's cross-round state.
+//!
+//! A checkpoint is everything `drive_cluster` carries **between** rounds
+//! — accounting totals, the early-stop tracker, evaluated records,
+//! measured round times, the fleet's resync caches and carried uploads,
+//! and the exchange strategy's stream state (sync-schedule position and
+//! the FedS priority RNG).  Per-round server state (shard accumulators,
+//! upload row stores) is deliberately absent: `Server::begin_round`
+//! clears all of it, so a restored coordinator rebuilds it by simply
+//! running the next round.
+//!
+//! Writes are atomic: the snapshot is encoded to `coordinator.ckpt.tmp`,
+//! fsynced, then renamed over `coordinator.ckpt` — a crash mid-write
+//! leaves the previous checkpoint intact, and a truncated or tampered
+//! file fails loudly as [`CheckpointError::Corrupt`] at load (the decoder
+//! is strict: every field bounds-checked, no trailing bytes).
+
+use std::fmt;
+use std::fs;
+use std::io::Write as _;
+use std::path::{Path, PathBuf};
+
+use crate::comm::wire::{WireReader, WireWriter};
+use crate::metrics::tracker::RoundRecord;
+use crate::metrics::RankMetrics;
+
+/// `"FEDSCKP1"` as a little-endian u64 — the first eight bytes of every
+/// checkpoint file.
+const MAGIC: u64 = u64::from_le_bytes(*b"FEDSCKP1");
+/// Bump on any layout change; old files are refused, never misread.
+const VERSION: u16 = 1;
+/// The snapshot file inside a checkpoint directory.
+const FILE: &str = "coordinator.ckpt";
+
+/// Why a checkpoint could not be written or restored.
+#[derive(Debug)]
+pub enum CheckpointError {
+    /// Filesystem failure (create, write, fsync, rename, read).
+    Io(std::io::Error),
+    /// The file exists but does not decode: bad magic, truncation,
+    /// trailing bytes, or an out-of-range field.
+    Corrupt(String),
+    /// The file is a checkpoint of a different experiment spec.
+    SpecMismatch { expected: u64, found: u64 },
+    /// The file is a checkpoint layout this build does not speak.
+    Version(u16),
+}
+
+impl fmt::Display for CheckpointError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            CheckpointError::Io(e) => write!(f, "checkpoint io failure: {e}"),
+            CheckpointError::Corrupt(why) => write!(f, "corrupt checkpoint: {why}"),
+            CheckpointError::SpecMismatch { expected, found } => write!(
+                f,
+                "checkpoint belongs to a different spec (digest {found:#018x}, \
+                 this server runs {expected:#018x})"
+            ),
+            CheckpointError::Version(v) => {
+                write!(f, "checkpoint layout version {v} is not supported (this build: {VERSION})")
+            }
+        }
+    }
+}
+
+impl std::error::Error for CheckpointError {}
+
+impl From<std::io::Error> for CheckpointError {
+    fn from(e: std::io::Error) -> Self {
+        CheckpointError::Io(e)
+    }
+}
+
+/// One coordinator snapshot: the state of a run whose rounds
+/// `1..=round` have fully completed (downloads sent and metered).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Checkpoint {
+    /// FNV-1a digest of the spec this run trains (refused on mismatch).
+    pub spec_digest: u64,
+    /// The last fully completed round; the restored loop resumes at
+    /// `round + 1`.
+    pub round: u32,
+    /// Early-stop tracker position: `(best, best_index, declines, n_seen)`.
+    pub early_stop: (f64, usize, usize, usize),
+    /// Accounting totals at the boundary, by direction.
+    pub up_params: u64,
+    pub down_params: u64,
+    pub up_bytes: u64,
+    pub down_bytes: u64,
+    pub messages: u64,
+    /// Measured wall-clock of each completed round.
+    pub secs: Vec<f64>,
+    /// Every evaluated record so far (the restored run appends to these
+    /// instead of re-evaluating completed rounds).
+    pub records: Vec<RoundRecord>,
+    /// Per client id: the last personalized download frame, replayed as
+    /// the rejoin resync.
+    pub last_download: Vec<Option<Vec<u8>>>,
+    /// Uploads salvaged from clients cut during `round`, to fold into
+    /// round `round + 1`: `(client id, encoded Upload frame)`.
+    pub carried: Vec<(u16, Vec<u8>)>,
+    /// The exchange strategy's cross-round state
+    /// (`Exchange::save_state`), absent for `Single`.
+    pub exchange: Option<Vec<u8>>,
+}
+
+fn write_metrics(w: &mut WireWriter, m: &RankMetrics) {
+    w.u64(m.n as u64).f64(m.mrr).f64(m.hits1).f64(m.hits3).f64(m.hits10);
+}
+
+fn read_metrics(r: &mut WireReader) -> anyhow::Result<RankMetrics> {
+    Ok(RankMetrics {
+        n: r.u64()? as usize,
+        mrr: r.f64()?,
+        hits1: r.f64()?,
+        hits3: r.f64()?,
+        hits10: r.f64()?,
+    })
+}
+
+impl Checkpoint {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut w = WireWriter::new();
+        w.u64(MAGIC).u16(VERSION).u64(self.spec_digest).u32(self.round);
+        let (best, best_index, declines, n_seen) = self.early_stop;
+        w.f64(best).u64(best_index as u64).u64(declines as u64).u64(n_seen as u64);
+        w.u64(self.up_params)
+            .u64(self.down_params)
+            .u64(self.up_bytes)
+            .u64(self.down_bytes)
+            .u64(self.messages);
+        w.u32(self.secs.len() as u32);
+        for s in &self.secs {
+            w.f64(*s);
+        }
+        w.u32(self.records.len() as u32);
+        for rec in &self.records {
+            w.u64(rec.round as u64).u64(rec.params_cum).u64(rec.bytes_cum).f64(rec.mean_loss);
+            write_metrics(&mut w, &rec.valid);
+            write_metrics(&mut w, &rec.test);
+        }
+        w.u32(self.last_download.len() as u32);
+        for d in &self.last_download {
+            match d {
+                Some(frame) => {
+                    w.u8(1).blob(frame);
+                }
+                None => {
+                    w.u8(0);
+                }
+            }
+        }
+        w.u32(self.carried.len() as u32);
+        for (client, frame) in &self.carried {
+            w.u16(*client).blob(frame);
+        }
+        match &self.exchange {
+            Some(state) => {
+                w.u8(1).blob(state);
+            }
+            None => {
+                w.u8(0);
+            }
+        }
+        w.finish()
+    }
+
+    /// Strict decode; `expected_digest` is this server's spec digest.
+    pub fn decode(buf: &[u8], expected_digest: u64) -> Result<Checkpoint, CheckpointError> {
+        Self::decode_inner(buf, expected_digest).map_err(|e| {
+            // the digest/version arms carry their own typed error through
+            match e.downcast::<CheckpointError>() {
+                Ok(typed) => typed,
+                Err(e) => CheckpointError::Corrupt(e.to_string()),
+            }
+        })
+    }
+
+    fn decode_inner(buf: &[u8], expected_digest: u64) -> anyhow::Result<Checkpoint> {
+        let mut r = WireReader::new(buf);
+        anyhow::ensure!(r.u64()? == MAGIC, "bad magic (not a coordinator checkpoint)");
+        let version = r.u16()?;
+        if version != VERSION {
+            return Err(CheckpointError::Version(version).into());
+        }
+        let spec_digest = r.u64()?;
+        if spec_digest != expected_digest {
+            return Err(
+                CheckpointError::SpecMismatch { expected: expected_digest, found: spec_digest }
+                    .into(),
+            );
+        }
+        let round = r.u32()?;
+        let early_stop = (r.f64()?, r.u64()? as usize, r.u64()? as usize, r.u64()? as usize);
+        let (up_params, down_params) = (r.u64()?, r.u64()?);
+        let (up_bytes, down_bytes, messages) = (r.u64()?, r.u64()?, r.u64()?);
+        let n_secs = r.u32()? as usize;
+        let mut secs = Vec::with_capacity(n_secs.min(1 << 20));
+        for _ in 0..n_secs {
+            secs.push(r.f64()?);
+        }
+        let n_records = r.u32()? as usize;
+        let mut records = Vec::with_capacity(n_records.min(1 << 20));
+        for _ in 0..n_records {
+            let (round, params_cum, bytes_cum) = (r.u64()? as usize, r.u64()?, r.u64()?);
+            let mean_loss = r.f64()?;
+            let valid = read_metrics(&mut r)?;
+            let test = read_metrics(&mut r)?;
+            records.push(RoundRecord { round, params_cum, bytes_cum, valid, test, mean_loss });
+        }
+        let n_clients = r.u32()? as usize;
+        let mut last_download = Vec::with_capacity(n_clients.min(1 << 20));
+        for _ in 0..n_clients {
+            last_download.push(match r.u8()? {
+                0 => None,
+                1 => Some(r.blob()?),
+                other => anyhow::bail!("bad download marker {other}"),
+            });
+        }
+        let n_carried = r.u32()? as usize;
+        let mut carried = Vec::with_capacity(n_carried.min(1 << 20));
+        for _ in 0..n_carried {
+            carried.push((r.u16()?, r.blob()?));
+        }
+        let exchange = match r.u8()? {
+            0 => None,
+            1 => Some(r.blob()?),
+            other => anyhow::bail!("bad exchange marker {other}"),
+        };
+        anyhow::ensure!(r.remaining() == 0, "trailing bytes after checkpoint");
+        Ok(Checkpoint {
+            spec_digest,
+            round,
+            early_stop,
+            up_params,
+            down_params,
+            up_bytes,
+            down_bytes,
+            messages,
+            secs,
+            records,
+            last_download,
+            carried,
+            exchange,
+        })
+    }
+}
+
+/// The snapshot file's path inside `dir`.
+pub fn checkpoint_path(dir: &Path) -> PathBuf {
+    dir.join(FILE)
+}
+
+/// Atomically persist `ckpt` into `dir` (write temp → fsync → rename).
+/// Returns the snapshot size in bytes.
+pub fn save(dir: &Path, ckpt: &Checkpoint) -> Result<u64, CheckpointError> {
+    fs::create_dir_all(dir)?;
+    let bytes = ckpt.encode();
+    let tmp = dir.join(format!("{FILE}.tmp"));
+    {
+        let mut f = fs::File::create(&tmp)?;
+        f.write_all(&bytes)?;
+        f.sync_all()?;
+    }
+    fs::rename(&tmp, checkpoint_path(dir))?;
+    Ok(bytes.len() as u64)
+}
+
+/// Load and validate the snapshot in `dir` against this server's spec
+/// digest.  A missing file is [`CheckpointError::Io`]; anything that does
+/// not decode exactly is [`CheckpointError::Corrupt`].
+pub fn load(dir: &Path, expected_digest: u64) -> Result<Checkpoint, CheckpointError> {
+    let bytes = fs::read(checkpoint_path(dir))?;
+    Checkpoint::decode(&bytes, expected_digest)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn metrics(mrr: f64) -> RankMetrics {
+        RankMetrics { n: 9, mrr, hits1: 0.1, hits3: 0.3, hits10: 0.9 }
+    }
+
+    fn sample() -> Checkpoint {
+        Checkpoint {
+            spec_digest: 0xDEAD_BEEF,
+            round: 6,
+            early_stop: (0.42, 1, 2, 3),
+            up_params: 100,
+            down_params: 200,
+            up_bytes: 400,
+            down_bytes: 800,
+            messages: 12,
+            secs: vec![0.5, 0.25],
+            records: vec![RoundRecord {
+                round: 4,
+                params_cum: 77,
+                bytes_cum: 308,
+                valid: metrics(0.42),
+                test: metrics(0.40),
+                mean_loss: 1.5,
+            }],
+            last_download: vec![Some(vec![1, 2, 3]), None, Some(vec![])],
+            carried: vec![(2, vec![9, 9])],
+            exchange: Some(vec![4, 5, 6]),
+        }
+    }
+
+    #[test]
+    fn round_trips_exactly() {
+        let ckpt = sample();
+        let decoded = Checkpoint::decode(&ckpt.encode(), ckpt.spec_digest).unwrap();
+        assert_eq!(ckpt, decoded);
+    }
+
+    #[test]
+    fn save_load_round_trips_on_disk() {
+        let dir = std::env::temp_dir().join(format!("feds-ckpt-test-{}", std::process::id()));
+        let _ = fs::remove_dir_all(&dir);
+        let ckpt = sample();
+        let bytes = save(&dir, &ckpt).unwrap();
+        assert!(bytes > 0);
+        assert_eq!(load(&dir, ckpt.spec_digest).unwrap(), ckpt);
+        assert!(!checkpoint_path(&dir).with_extension("ckpt.tmp").exists(), "temp file renamed");
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn spec_mismatch_is_typed() {
+        let ckpt = sample();
+        match Checkpoint::decode(&ckpt.encode(), ckpt.spec_digest ^ 1) {
+            Err(CheckpointError::SpecMismatch { .. }) => {}
+            other => panic!("expected SpecMismatch, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn truncation_anywhere_is_corrupt_never_a_panic() {
+        let ckpt = sample();
+        let buf = ckpt.encode();
+        for cut in 0..buf.len() {
+            match Checkpoint::decode(&buf[..cut], ckpt.spec_digest) {
+                Err(CheckpointError::Corrupt(_)) => {}
+                other => panic!("cut at {cut}/{}: expected Corrupt, got {other:?}", buf.len()),
+            }
+        }
+        // trailing garbage is a desync, not data
+        let mut long = buf.clone();
+        long.push(0);
+        assert!(matches!(
+            Checkpoint::decode(&long, ckpt.spec_digest),
+            Err(CheckpointError::Corrupt(_))
+        ));
+    }
+
+    #[test]
+    fn unknown_version_is_typed() {
+        let ckpt = sample();
+        let mut buf = ckpt.encode();
+        buf[8] = 99; // the version u16 follows the 8-byte magic
+        match Checkpoint::decode(&buf, ckpt.spec_digest) {
+            Err(CheckpointError::Version(99)) => {}
+            other => panic!("expected Version, got {other:?}"),
+        }
+    }
+}

@@ -13,12 +13,30 @@
 //! shared rows missed while away; the stateful sync schedule is
 //! fast-forwarded through the missed rounds.
 //!
+//! **Reconnect**: when the coordinator vanishes mid-run (crash, restart,
+//! network cut) the client does not die — it re-dials with capped
+//! exponential backoff ([`ReconnectPolicy`], deterministic jitter) and
+//! re-registers at its current round.  Local training is never repeated:
+//! each round's report and encoded upload frame are built once and
+//! cached, so a redone round resends the exact same bytes (`make_upload`
+//! mutates the FedS history table and is not idempotent).  The welcome
+//! round then says where the coordinator stands — behind us is a loud
+//! error (a restore lost rounds), at us redoes the round's protocol
+//! phases, ahead of us fast-forwards the schedule through the missed
+//! rounds and folds the resync replay.
+//!
+//! **Sampled participation**: when the spec's participation policy is
+//! not `Full`, every round opens with a [`ClusterMsg::RoundCall`]; a
+//! non-sampled client skips the round's report/upload/download but still
+//! advances its exchange schedule so sparse/dense parity holds.
+//!
 //! Failure injection for tests and drills: `leave_after` closes the
 //! socket cleanly after a round's exchange; `fail_after` dies mid-frame
 //! instead, which the server classifies as an abrupt crash.
 
 use std::net::TcpStream;
 use std::sync::Arc;
+use std::time::Duration;
 
 use anyhow::Result;
 
@@ -27,11 +45,37 @@ use crate::comm::bandwidth::{BandwidthModel, Throttle};
 use crate::comm::transport::Endpoint;
 use crate::fed::orchestrator::client::ClientRunner;
 use crate::fed::orchestrator::RoundParams;
-use crate::spec::ExperimentSpec;
+use crate::fed::protocol::Download;
+use crate::metrics::RankMetrics;
+use crate::spec::{ExperimentSpec, ParticipationSpec};
+use crate::util::rng::Rng;
 
 use super::conn::Conn;
 use super::native_backend;
 use super::proto::{spec_digest, ClusterMsg, PROTO_VERSION};
+
+/// Keys the backoff jitter stream; mixed with the seed, client id, and
+/// attempt number so every delay is reproducible yet clients never
+/// thundering-herd the restarted coordinator in lockstep.
+const BACKOFF_SALT: u64 = 0x0BAC_C0FF;
+
+/// Capped exponential backoff for re-dialing a lost coordinator.
+#[derive(Clone, Copy, Debug)]
+pub struct ReconnectPolicy {
+    /// Re-dial at most this many times per disconnect before giving up
+    /// with an error (0 = fail on the first lost connection).
+    pub attempts: u32,
+    /// Delay before the first retry; doubles each attempt.
+    pub base: Duration,
+    /// Ceiling on the per-attempt delay.
+    pub cap: Duration,
+}
+
+impl Default for ReconnectPolicy {
+    fn default() -> Self {
+        Self { attempts: 8, base: Duration::from_millis(50), cap: Duration::from_secs(2) }
+    }
+}
 
 /// How this client process joins and (optionally) leaves the federation.
 #[derive(Clone, Debug)]
@@ -46,6 +90,8 @@ pub struct ClientOpts {
     pub join_round: u32,
     /// Rate-limit this client's uplink to the model.
     pub bandwidth: Option<BandwidthModel>,
+    /// How hard to try re-dialing a vanished coordinator.
+    pub reconnect: ReconnectPolicy,
     /// Failure injection: leave cleanly after completing this round.
     pub leave_after: Option<usize>,
     /// Failure injection: die mid-frame after completing this round (the
@@ -60,16 +106,191 @@ impl ClientOpts {
             id,
             join_round: 0,
             bandwidth: None,
+            reconnect: ReconnectPolicy::default(),
             leave_after: None,
             fail_after: None,
         }
     }
 }
 
+/// One round's locally computed work, cached so a reconnect redoes the
+/// protocol phases with the exact bytes of the first attempt instead of
+/// re-training (the upload builder is not idempotent).
+struct RoundWork {
+    round: usize,
+    loss: f32,
+    batches: u64,
+    eval: Option<(RankMetrics, RankMetrics)>,
+    /// `None` when this client exchanges nothing (no shared entities or
+    /// a no-exchange algorithm).
+    upload: Option<(Vec<u8>, u64)>,
+}
+
+/// How a round's protocol phases ended.
+enum Outcome {
+    /// Everything delivered; move to the next round.
+    Continue,
+    /// The server's verdict said stop: the run is over.
+    Stop,
+    /// The connection died mid-phase; reconnect and redo the round.
+    Lost,
+}
+
+/// The round a download frame belongs to.
+fn frame_round(frame: &[u8]) -> Result<usize> {
+    Ok(match Download::decode(frame)? {
+        Download::Full { round, .. } | Download::Sparse { round, .. } => round as usize,
+    })
+}
+
+/// One dial + handshake.  `Err` is a transient transport failure (retry);
+/// an explicit server rejection is terminal and surfaces as `Rejected`.
+enum Dial {
+    Admitted(Conn, usize, Option<Vec<u8>>),
+    Rejected(String),
+}
+
+fn dial(spec: &ExperimentSpec, opts: &ClientOpts, join_round: u32) -> Result<Dial> {
+    let sock = TcpStream::connect(&opts.connect)?;
+    let conn = Conn::new(sock, opts.bandwidth.map(Throttle::new))?;
+    conn.send(&ClusterMsg::Hello {
+        version: PROTO_VERSION,
+        client: opts.id,
+        spec_digest: spec_digest(spec),
+        join_round,
+    })?;
+    match conn.recv()? {
+        ClusterMsg::Welcome { round, resync } => {
+            Ok(Dial::Admitted(conn, round.max(1) as usize, resync))
+        }
+        ClusterMsg::Reject { reason } => Ok(Dial::Rejected(reason)),
+        other => anyhow::bail!("unexpected handshake reply: {other:?}"),
+    }
+}
+
+/// Dial until admitted, backing off exponentially (with deterministic
+/// jitter) between attempts.  A [`ClusterMsg::Reject`] is terminal: the
+/// server answered and said no, so retrying cannot help.
+fn connect_with_backoff(
+    spec: &ExperimentSpec,
+    opts: &ClientOpts,
+    params: &RoundParams,
+    join_round: u32,
+) -> Result<(Conn, usize, Option<Vec<u8>>)> {
+    let policy = opts.reconnect;
+    let mut last_err = None;
+    for attempt in 0..=policy.attempts {
+        if attempt > 0 {
+            let exp = policy.base.as_secs_f64() * (1u64 << (attempt - 1).min(20)) as f64;
+            let capped = exp.min(policy.cap.as_secs_f64());
+            let salt = params.seed ^ BACKOFF_SALT ^ ((opts.id as u64) << 32) ^ attempt as u64;
+            let mut rng = Rng::new(salt);
+            std::thread::sleep(Duration::from_secs_f64(capped * (0.5 + rng.f64())));
+        }
+        match dial(spec, opts, join_round) {
+            Ok(Dial::Admitted(conn, round, resync)) => return Ok((conn, round, resync)),
+            Ok(Dial::Rejected(reason)) => {
+                anyhow::bail!("server refused the handshake: {reason}")
+            }
+            Err(e) => last_err = Some(e),
+        }
+    }
+    Err(last_err.expect("at least one dial attempt ran").context(format!(
+        "coordinator unreachable after {} reconnect attempts",
+        policy.attempts + 1
+    )))
+}
+
+/// Re-dial after a lost coordinator, re-seat the runner on the fresh
+/// link, and reconcile positions.  Returns the round to resume at
+/// (`>= round`; a coordinator behind us is a loud error).
+#[allow(clippy::too_many_arguments)]
+fn reconnect(
+    spec: &ExperimentSpec,
+    opts: &ClientOpts,
+    params: &RoundParams,
+    acct: &Arc<Accounting>,
+    runner: &mut ClientRunner<'_>,
+    conn: &mut Conn,
+    round: usize,
+    done_round: &mut usize,
+) -> Result<usize> {
+    let (mut fresh, w, resync) = connect_with_backoff(spec, opts, params, round as u32)?;
+    anyhow::ensure!(
+        w >= round,
+        "the coordinator was restored behind this client (welcome round {w}, local round \
+         {round}); restart the client to rejoin from scratch"
+    );
+    runner.set_link(Box::new(fresh.data_endpoint(acct.clone())) as Box<dyn Endpoint>);
+    *conn = fresh;
+    // rounds the coordinator completed without us: advance the stateful
+    // exchange schedule (idempotent for the round already begun locally)
+    for missed in round..w {
+        runner.skip_round(missed as u32);
+    }
+    // the resync replay is the server's last download for this id; it may
+    // predate our position (we already applied it) — fold it only if new
+    if let Some(frame) = resync {
+        if frame_round(&frame)? > *done_round {
+            runner.apply_resync(&frame)?;
+        }
+    }
+    if w > round {
+        *done_round = w - 1;
+    }
+    Ok(w)
+}
+
+/// The round's protocol phases over an established connection: report →
+/// (verdict on eval rounds) → upload → download.  Transport failures are
+/// an [`Outcome::Lost`] (the caller reconnects and redoes the round);
+/// protocol violations are hard errors.
+fn run_round(
+    conn: &Conn,
+    runner: &mut ClientRunner<'_>,
+    work: &RoundWork,
+    eval_round: bool,
+    done_round: &mut usize,
+) -> Result<Outcome> {
+    let round = work.round;
+    let report = ClusterMsg::Report {
+        round: round as u32,
+        loss: work.loss,
+        batches: work.batches,
+        eval: work.eval,
+    };
+    if conn.send(&report).is_err() {
+        return Ok(Outcome::Lost);
+    }
+    if eval_round {
+        match conn.recv() {
+            Ok(ClusterMsg::Verdict { stop }) => {
+                if stop {
+                    return Ok(Outcome::Stop);
+                }
+            }
+            Ok(other) => anyhow::bail!("expected a verdict, got {other:?}"),
+            Err(_) => return Ok(Outcome::Lost),
+        }
+    }
+    if let Some((frame, params)) = &work.upload {
+        if runner.send_frame(frame.clone(), *params).is_err() {
+            return Ok(Outcome::Lost);
+        }
+        let reply = match runner.recv_frame() {
+            Ok(f) => f,
+            Err(_) => return Ok(Outcome::Lost),
+        };
+        runner.apply_download_frame(&reply)?;
+        *done_round = round;
+    }
+    Ok(Outcome::Continue)
+}
+
 /// Connect, register, and run this client's rounds to completion.
 /// Returns once the run converges, `max_rounds` completes, an injected
-/// failure triggers, or the server cuts the connection (deadline missed,
-/// duplicate id, shutdown) — the last case is an error.
+/// failure triggers, or the coordinator stays unreachable through a full
+/// backoff cycle — the last case is an error.
 pub fn run_client(spec: &ExperimentSpec, opts: &ClientOpts) -> Result<()> {
     let backend = native_backend(spec)?;
     let data = spec.data.build();
@@ -81,26 +302,16 @@ pub fn run_client(spec: &ExperimentSpec, opts: &ClientOpts) -> Result<()> {
     );
     let params = RoundParams::from_spec(spec, &backend);
     let (batch_size, negatives) = backend.batch_shape();
-
-    let sock = TcpStream::connect(&opts.connect)?;
-    let mut conn = Conn::new(sock, opts.bandwidth.map(Throttle::new))?;
-    conn.send(&ClusterMsg::Hello {
-        version: PROTO_VERSION,
-        client: opts.id,
-        spec_digest: spec_digest(spec),
-        join_round: opts.join_round,
-    })?;
-    let (start_round, resync) = match conn.recv()? {
-        ClusterMsg::Welcome { round, resync } => (round.max(1) as usize, resync),
-        ClusterMsg::Reject { reason } => anyhow::bail!("server refused the handshake: {reason}"),
-        other => anyhow::bail!("unexpected handshake reply: {other:?}"),
-    };
+    let sampled_mode = params.participation != ParticipationSpec::Full;
 
     // This process's own view of the metered traffic; the server's
     // accounting is the authoritative one for the run.
     let acct: Arc<Accounting> = Accounting::new();
+    let (mut conn, start_round, resync) =
+        connect_with_backoff(spec, opts, &params, opts.join_round)?;
+
     let trainer = backend.make_trainer(&params, data.num_entities, data.num_relations)?;
-    let link = Box::new(conn.data_endpoint(acct)) as Box<dyn Endpoint>;
+    let link = Box::new(conn.data_endpoint(acct.clone())) as Box<dyn Endpoint>;
     let mut runner =
         ClientRunner::build(&data, opts.id, &params, trainer, link, batch_size, negatives)?;
     if start_round > 1 {
@@ -109,36 +320,100 @@ pub fn run_client(spec: &ExperimentSpec, opts: &ClientOpts) -> Result<()> {
     if let Some(frame) = resync {
         runner.apply_resync(&frame)?;
     }
+    // the last round whose download (or resync) this process folded;
+    // everything before `start_round` is covered by the fast-forward
+    let mut done_round: usize = start_round.saturating_sub(1);
 
-    for round in start_round..=params.max_rounds {
+    let mut cache: Option<RoundWork> = None;
+    let mut round = start_round;
+    'rounds: while round <= params.max_rounds {
         let eval_round = round % params.eval_every == 0;
-        let report = runner.local_round(round, eval_round)?;
-        conn.send(&ClusterMsg::Report {
-            round: round as u32,
-            loss: report.loss,
-            batches: report.batches as u64,
-            eval: report.eval,
-        })?;
-        if eval_round {
-            match conn.recv().map_err(|_| anyhow::anyhow!("server hung up before the verdict"))? {
-                ClusterMsg::Verdict { stop } => {
-                    if stop {
-                        break;
-                    }
+
+        // --- round call: sampled-participation gate ---------------------
+        let mut participate = true;
+        if sampled_mode {
+            match conn.recv() {
+                Ok(ClusterMsg::RoundCall { round: rr, participate: p }) => {
+                    anyhow::ensure!(
+                        rr as usize == round,
+                        "round call for round {rr} arrived while in round {round}"
+                    );
+                    participate = p;
                 }
-                other => anyhow::bail!("expected a verdict, got {other:?}"),
+                // the run converged in a round we sat out
+                Ok(ClusterMsg::Verdict { stop: true }) => break 'rounds,
+                Ok(other) => anyhow::bail!("expected a round call, got {other:?}"),
+                Err(_) => {
+                    let w = reconnect(
+                        spec,
+                        opts,
+                        &params,
+                        &acct,
+                        &mut runner,
+                        &mut conn,
+                        round,
+                        &mut done_round,
+                    )?;
+                    if w > round {
+                        cache = None;
+                        round = w;
+                    }
+                    continue 'rounds;
+                }
             }
         }
-        runner.send_upload(round as u32)?;
-        runner.recv_download()?;
+
+        if participate {
+            // --- local work, computed exactly once per round ------------
+            if cache.as_ref().map(|w| w.round) != Some(round) {
+                let report = runner.local_round(round, eval_round)?;
+                let upload = runner.upload_frame(round as u32)?;
+                cache = Some(RoundWork {
+                    round,
+                    loss: report.loss,
+                    batches: report.batches as u64,
+                    eval: report.eval,
+                    upload,
+                });
+            }
+            let work = cache.as_ref().expect("round work cached above");
+
+            // --- protocol phases, redone verbatim after a reconnect -----
+            match run_round(&conn, &mut runner, work, eval_round, &mut done_round)? {
+                Outcome::Continue => {}
+                Outcome::Stop => break 'rounds,
+                Outcome::Lost => {
+                    let w = reconnect(
+                        spec,
+                        opts,
+                        &params,
+                        &acct,
+                        &mut runner,
+                        &mut conn,
+                        round,
+                        &mut done_round,
+                    )?;
+                    if w > round {
+                        cache = None;
+                        round = w;
+                    }
+                    continue 'rounds;
+                }
+            }
+        } else {
+            // sat out: keep the exchange schedule's parity advancing
+            runner.skip_round(round as u32);
+        }
+
         if opts.fail_after == Some(round) {
             drop(runner); // release the endpoint's outbox clone
             conn.fail_abruptly();
             return Ok(());
         }
         if opts.leave_after == Some(round) {
-            break;
+            break 'rounds;
         }
+        round += 1;
     }
     // flush the final frames before the process exits: the runner holds a
     // clone of the outbox, so it must go first

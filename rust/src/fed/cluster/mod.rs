@@ -19,9 +19,20 @@
 //!   clean/abrupt disconnect classification, and welcomes rejoining ids
 //!   back with a **resync** replay of their last personalized download.
 //! * [`run_client`] — one client process: handshake, then the ordinary
-//!   `ClientRunner` round loop over the connection's data plane, with
-//!   optional failure injection (`leave_after` / `fail_after`) for
-//!   drills and tests.
+//!   `ClientRunner` round loop over the connection's data plane.  When
+//!   the coordinator vanishes it re-dials with capped exponential
+//!   backoff ([`ReconnectPolicy`]) and redoes the interrupted round from
+//!   cached frames — never re-training.  Optional failure injection
+//!   (`leave_after` / `fail_after`) for drills and tests.
+//! * [`checkpoint`] — atomic round-boundary snapshots of the
+//!   coordinator's cross-round state (`--checkpoint DIR`); `--restore
+//!   DIR` resumes at the snapshot's round + 1, bit-identical to a run
+//!   that never stopped, and refuses mismatched or tampered snapshots
+//!   loudly at bind.
+//! * [`chaos`] — fault-injection primitives (self-SIGKILL at a round
+//!   boundary, typed coordinator halts, checkpoint truncation, frame
+//!   delays) composed by the crash/restore drills in `tests/cluster.rs`
+//!   and `tests/cluster_process.rs`.
 //!
 //! Guarantee: with no failures injected, a cluster run over N processes
 //! is bit-identical — accounting, round records, convergence — to the
@@ -29,21 +40,27 @@
 //! bar, `tests/cluster.rs` the cross-process one).  Under failures the
 //! run still terminates: every round ends by deadline, partial rounds
 //! aggregate whoever reported, and `RunEvent::{ClientJoined,
-//! ClientDropped, PartialRound}` record the membership history.
+//! ClientDropped, PartialRound}` record the membership history.  A
+//! non-`Full` participation policy samples a seeded per-round cohort
+//! ([`ClusterMsg::RoundCall`], `RunEvent::ClientSampled`); sitting a
+//! round out is not a dropout.
 //!
 //! Wall-clock: [`ClusterOutcome::times`] measures real seconds per round
 //! (training + transfer), the dynamic counterpart of the static
 //! `comm::bandwidth` byte model — on a throttled link the two are
 //! directly comparable (see `benches/cluster_wallclock.rs`).
 
+pub mod chaos;
+pub mod checkpoint;
 mod client;
 mod conn;
 pub mod proto;
 mod server;
 
-pub use client::{run_client, ClientOpts};
+pub use checkpoint::{Checkpoint, CheckpointError};
+pub use client::{run_client, ClientOpts, ReconnectPolicy};
 pub use proto::{spec_digest, ClusterMsg, PROTO_VERSION};
-pub use server::{ClusterOutcome, ClusterServer, ServeOpts};
+pub use server::{ClusterOutcome, ClusterServer, CoordinatorHalted, ServeOpts};
 
 use anyhow::Result;
 

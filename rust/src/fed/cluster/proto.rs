@@ -17,7 +17,8 @@ use crate::spec::ExperimentSpec;
 
 /// Version of this control-plane protocol.  A [`ClusterMsg::Hello`] with
 /// any other version is rejected before the client enters the federation.
-pub const PROTO_VERSION: u16 = 1;
+/// v2 added [`ClusterMsg::RoundCall`] (sampled participation).
+pub const PROTO_VERSION: u16 = 2;
 
 /// FNV-1a digest of the spec's canonical JSON form.  Server and clients
 /// each hash their own copy; a mismatch at handshake time means the two
@@ -69,6 +70,11 @@ pub enum ClusterMsg {
     Upload(Vec<u8>),
     /// Server → client data plane: an encoded `fed::protocol::Download`.
     Download(Vec<u8>),
+    /// Server → client at a round start, only when the spec's
+    /// participation policy is not `Full`: whether this client is sampled
+    /// into `round`.  Non-sampled clients skip the round's report,
+    /// upload, and download but keep their exchange schedule advancing.
+    RoundCall { round: u32, participate: bool },
 }
 
 const TAG_HELLO: u8 = 0;
@@ -78,6 +84,7 @@ const TAG_REPORT: u8 = 3;
 const TAG_VERDICT: u8 = 4;
 const TAG_UPLOAD: u8 = 5;
 const TAG_DOWNLOAD: u8 = 6;
+const TAG_ROUND_CALL: u8 = 7;
 
 fn write_metrics(w: &mut WireWriter, m: &RankMetrics) {
     w.u64(m.n as u64).f64(m.mrr).f64(m.hits1).f64(m.hits3).f64(m.hits10);
@@ -136,6 +143,9 @@ impl ClusterMsg {
             ClusterMsg::Download(frame) => {
                 w.u8(TAG_DOWNLOAD).blob(frame);
             }
+            ClusterMsg::RoundCall { round, participate } => {
+                w.u8(TAG_ROUND_CALL).u32(*round).u8(*participate as u8);
+            }
         }
         w.finish()
     }
@@ -176,6 +186,15 @@ impl ClusterMsg {
             TAG_VERDICT => ClusterMsg::Verdict { stop: r.u8()? != 0 },
             TAG_UPLOAD => ClusterMsg::Upload(r.blob()?),
             TAG_DOWNLOAD => ClusterMsg::Download(r.blob()?),
+            TAG_ROUND_CALL => {
+                let round = r.u32()?;
+                let participate = match r.u8()? {
+                    0 => false,
+                    1 => true,
+                    other => anyhow::bail!("bad participate marker {other}"),
+                };
+                ClusterMsg::RoundCall { round, participate }
+            }
             other => anyhow::bail!("unknown cluster message tag {other}"),
         };
         anyhow::ensure!(r.remaining() == 0, "trailing bytes after cluster message");
@@ -200,7 +219,7 @@ mod tests {
     }
 
     fn arb_msg(rng: &mut Rng) -> ClusterMsg {
-        match rng.below(7) {
+        match rng.below(8) {
             0 => ClusterMsg::Hello {
                 version: rng.below(1 << 16) as u16,
                 client: rng.below(64) as u16,
@@ -221,7 +240,11 @@ mod tests {
             },
             4 => ClusterMsg::Verdict { stop: rng.below(2) == 1 },
             5 => ClusterMsg::Upload((0..rng.below(64)).map(|_| rng.below(256) as u8).collect()),
-            _ => ClusterMsg::Download((0..rng.below(64)).map(|_| rng.below(256) as u8).collect()),
+            6 => ClusterMsg::Download((0..rng.below(64)).map(|_| rng.below(256) as u8).collect()),
+            _ => ClusterMsg::RoundCall {
+                round: rng.below(100) as u32,
+                participate: rng.below(2) == 1,
+            },
         }
     }
 
@@ -248,5 +271,16 @@ mod tests {
         let mut buf = ClusterMsg::Verdict { stop: true }.encode();
         buf.push(0);
         assert!(ClusterMsg::decode(&buf).is_err(), "trailing bytes");
+    }
+
+    #[test]
+    fn round_call_decodes_strictly() {
+        // the participate flag is a strict 0/1 marker, not a truthy byte
+        let mut buf = ClusterMsg::RoundCall { round: 9, participate: true }.encode();
+        *buf.last_mut().unwrap() = 2;
+        assert!(ClusterMsg::decode(&buf).is_err(), "participate marker 2");
+        let mut trailing = ClusterMsg::RoundCall { round: 9, participate: false }.encode();
+        trailing.push(0);
+        assert!(ClusterMsg::decode(&trailing).is_err(), "trailing bytes after round call");
     }
 }

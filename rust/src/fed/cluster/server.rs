@@ -30,7 +30,9 @@
 //! client-id order, metering points match the in-process driver's, and
 //! every scalar crosses the wire in exact little-endian bits.
 
+use std::fmt;
 use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError};
 use std::sync::Arc;
@@ -42,7 +44,7 @@ use anyhow::Result;
 use crate::comm::accounting::{Accounting, Direction};
 use crate::comm::bandwidth::{BandwidthModel, RoundTimes, Throttle};
 use crate::comm::transport::Disconnect;
-use crate::comm::wire::{read_frame, write_frame};
+use crate::comm::wire::{read_frame, write_frame, WireReader, WireWriter};
 use crate::data::partition::FedDataset;
 use crate::fed::orchestrator::client::{initial_table, Report};
 use crate::fed::orchestrator::{
@@ -55,12 +57,18 @@ use crate::kge::Table;
 use crate::metrics::observe::{emit, HistoryObserver, RunEvent, RunObserver};
 use crate::metrics::tracker::RoundRecord;
 use crate::metrics::{EarlyStop, RankMetrics};
-use crate::spec::ExperimentSpec;
+use crate::spec::{ExperimentSpec, ParticipationSpec};
 use crate::util::rng::Rng;
 
+use super::checkpoint::{self, Checkpoint};
 use super::conn::Conn;
 use super::native_backend;
 use super::proto::{spec_digest, ClusterMsg, PROTO_VERSION};
+
+/// Keys the per-round participation sampling stream: the draw for round
+/// `r` comes from `Rng::new(seed ^ SAMPLE_SALT ^ r)`, so a restored
+/// coordinator reproduces every sample without checkpointing RNG state.
+const SAMPLE_SALT: u64 = 0x5A39_17;
 
 /// How the coordinator handles its fleet.
 #[derive(Clone, Debug)]
@@ -74,13 +82,61 @@ pub struct ServeOpts {
     /// How many clients must register before round 1 starts
     /// (0 = every client in the spec).
     pub expect: usize,
+    /// Write a round-boundary checkpoint into this directory (atomic
+    /// write-temp + rename) every [`checkpoint_every`] rounds.
+    ///
+    /// [`checkpoint_every`]: ServeOpts::checkpoint_every
+    pub checkpoint: Option<PathBuf>,
+    /// Rounds between snapshots (≥ 1; read only when `checkpoint` is
+    /// set).  Snapshots land after rounds `every, 2·every, …`.
+    pub checkpoint_every: u32,
+    /// Resume from the snapshot in this directory instead of round 1.
+    /// The snapshot must belong to the same spec (digest-checked) and
+    /// the run continues at its round + 1, bit-identical to a run that
+    /// never stopped.
+    pub restore: Option<PathBuf>,
+    /// Fault injection: return [`CoordinatorHalted`] immediately after
+    /// writing this round's checkpoint — the in-test stand-in for a
+    /// coordinator crash at an exact round boundary.
+    pub halt_after_checkpoint: Option<u32>,
+    /// Fault injection: SIGKILL this whole process immediately after
+    /// writing this round's checkpoint (the multi-process crash drill;
+    /// see [`super::chaos::sigkill_self`]).
+    pub kill_after_checkpoint: Option<u32>,
 }
 
 impl Default for ServeOpts {
     fn default() -> Self {
-        Self { deadline: Duration::from_secs(30), bandwidth: None, expect: 0 }
+        Self {
+            deadline: Duration::from_secs(30),
+            bandwidth: None,
+            expect: 0,
+            checkpoint: None,
+            checkpoint_every: 1,
+            restore: None,
+            halt_after_checkpoint: None,
+            kill_after_checkpoint: None,
+        }
     }
 }
+
+/// The typed error a fault-injected coordinator halt surfaces: the
+/// round-`round` checkpoint was written and then the round loop stopped
+/// cold, exactly as a crash at the boundary would.  Restore from the
+/// checkpoint directory to continue the run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CoordinatorHalted {
+    /// The round whose checkpoint landed immediately before the halt.
+    pub round: usize,
+}
+
+impl fmt::Display for CoordinatorHalted {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "coordinator halted by fault injection after the round-{} checkpoint", self.round)
+    }
+}
+
+impl std::error::Error for CoordinatorHalted {}
 
 /// A cluster run's result: the engine outcome plus measured wall-clock
 /// per round — the dynamic counterpart of the static
@@ -108,6 +164,10 @@ pub struct ClusterServer {
     pending: Receiver<Join>,
     stop: Arc<AtomicBool>,
     acceptor: Option<JoinHandle<()>>,
+    digest: u64,
+    /// The validated snapshot to resume from (loaded at bind, so a
+    /// corrupt or mismatched checkpoint fails before any client joins).
+    restore: Option<Checkpoint>,
 }
 
 impl ClusterServer {
@@ -125,6 +185,10 @@ impl ClusterServer {
         let n = data.clients.len();
         let digest = spec_digest(spec);
         let throttle = opts.bandwidth.map(Throttle::new);
+        let restore = match &opts.restore {
+            Some(dir) => Some(checkpoint::load(dir, digest)?),
+            None => None,
+        };
 
         let listener = TcpListener::bind(addr)?;
         let local = listener.local_addr()?;
@@ -159,6 +223,8 @@ impl ClusterServer {
             pending: pending_rx,
             stop,
             acceptor: Some(acceptor),
+            digest,
+            restore,
         })
     }
 
@@ -196,6 +262,8 @@ impl ClusterServer {
                 &acct,
                 &mut times,
                 &mut observers,
+                self.digest,
+                self.restore.as_ref(),
             )
         };
         // stop the acceptor whatever happened: raise the flag, then
@@ -208,8 +276,16 @@ impl ClusterServer {
         let width = width_res?;
         let eq5 = matches!(self.params.algo, Algo::FedS { .. })
             .then(|| comm_ratio(self.params.sparsity, self.params.sync_interval, width));
+        let mut history = hist.take();
+        if let Some(ckpt) = &self.restore {
+            // restored records are not re-emitted as events; the final
+            // history is checkpointed rounds followed by resumed ones
+            let mut records = ckpt.records.clone();
+            records.append(&mut history.records);
+            history.records = records;
+        }
         Ok(ClusterOutcome {
-            run: RunOutcome { history: hist.take(), acct, eq5_ratio: eq5 },
+            run: RunOutcome { history, acct, eq5_ratio: eq5 },
             times,
         })
     }
@@ -298,6 +374,9 @@ impl Fleet {
         if join.conn.send(&welcome).is_ok() {
             self.members[id] = Some(join.conn);
             emit(observers, &RunEvent::ClientJoined { round, client: id, rejoin });
+            if rejoin {
+                emit(observers, &RunEvent::ClientReconnected { round, client: id });
+            }
         }
     }
 
@@ -327,6 +406,54 @@ impl Fleet {
     }
 }
 
+/// What to do with a registration arriving while the coordinator is at
+/// `round`.  A future `join_round` from a *fresh* id is the documented
+/// deferred-join feature and is held; the same claim from an id that
+/// already dropped means the peer is ahead of this coordinator — only
+/// possible when a restore lost rounds relative to the fleet — and is
+/// refused with a reason the client surfaces verbatim.
+enum Intake {
+    Due(Join),
+    Hold(Join),
+}
+
+fn intake(fleet: &Fleet, j: Join, round: usize) -> Option<Intake> {
+    if (j.join_round as usize) <= round {
+        return Some(Intake::Due(j));
+    }
+    if fleet.dropped_before[j.client as usize] {
+        let reason = format!(
+            "join round {} is ahead of the coordinator (round {round}): the coordinator \
+             was restored from a checkpoint older than this client's position",
+            j.join_round
+        );
+        let _ = j.conn.send(&ClusterMsg::Reject { reason });
+        j.conn.finish();
+        return None;
+    }
+    Some(Intake::Hold(j))
+}
+
+/// The ids participating in `round`: everyone live under `Full`,
+/// otherwise a seeded draw keyed only by `(seed, round)` — see
+/// [`SAMPLE_SALT`] — of [`ParticipationSpec::sample_size`] ids, in
+/// ascending order.
+fn sample_round(params: &RoundParams, live: &[usize], round: usize) -> Vec<usize> {
+    if params.participation == ParticipationSpec::Full {
+        return live.to_vec();
+    }
+    let k = params.participation.sample_size(live.len());
+    let mut pool = live.to_vec();
+    let mut rng = Rng::new(params.seed ^ SAMPLE_SALT ^ round as u64);
+    for i in 0..k {
+        let j = i + rng.usize_below(pool.len() - i);
+        pool.swap(i, j);
+    }
+    pool.truncate(k);
+    pool.sort_unstable();
+    pool
+}
+
 /// Fold a carried upload outside the exchange's round-parity guards: the
 /// rows merge into the current round's aggregation exactly as if the
 /// (now gone) client had sent them this round.
@@ -350,7 +477,9 @@ fn fold_carried(server: &mut Server, client: u16, up: &Upload) {
 /// The cluster round loop.  Mirrors `orchestrator::drive` exactly on the
 /// happy path (same event sequence, same metering points, same
 /// id-ordered aggregation) and layers membership/deadline semantics on
-/// top.
+/// top.  With `restore` set, the loop resumes at the snapshot's round + 1
+/// with every cross-round structure seeded from the snapshot, so the
+/// continuation is bit-identical to a run that never stopped.
 #[allow(clippy::too_many_arguments)]
 fn drive_cluster(
     data: &FedDataset,
@@ -361,6 +490,8 @@ fn drive_cluster(
     acct: &Arc<Accounting>,
     times: &mut RoundTimes,
     observers: &mut [&mut dyn RunObserver],
+    digest: u64,
+    restore: Option<&Checkpoint>,
 ) -> Result<usize> {
     const POLL: Duration = Duration::from_millis(20);
     let Backend::Native { hyper, eval_batch, .. } = backend else {
@@ -404,23 +535,75 @@ fn drive_cluster(
     let mut held: Vec<Join> = Vec::new();
     let expect = if opts.expect == 0 { n } else { opts.expect.min(n) };
 
-    // --- initial fleet barrier: wait for `expect` round-1 registrations ---
+    // --- restore: seed every cross-round structure from the snapshot ----
+    let mut es = EarlyStop::new(params.patience);
+    let mut records: Vec<RoundRecord> = Vec::new();
+    let start_round = match restore {
+        Some(ckpt) => {
+            anyhow::ensure!(
+                ckpt.last_download.len() == n,
+                "checkpoint is for {} clients, the spec has {n}",
+                ckpt.last_download.len()
+            );
+            debug_assert_eq!(ckpt.spec_digest, digest);
+            acct.preload(
+                ckpt.up_params,
+                ckpt.down_params,
+                ckpt.up_bytes,
+                ckpt.down_bytes,
+                ckpt.messages,
+            );
+            times.secs = ckpt.secs.clone();
+            es = EarlyStop::from_state(params.patience, ckpt.early_stop);
+            records = ckpt.records.clone();
+            fleet.last_download = ckpt.last_download.clone();
+            // everyone in the old fleet is gone; whoever re-registers is
+            // a rejoin and gets the resync replay
+            fleet.dropped_before = vec![true; n];
+            for (client, frame) in &ckpt.carried {
+                let up = Upload::decode(frame)
+                    .map_err(|e| anyhow::anyhow!("corrupt carried upload in checkpoint: {e}"))?;
+                fleet.carried.push((*client, up));
+            }
+            match (&ckpt.exchange, side.exchange.as_mut()) {
+                (Some(state), Some(ex)) => {
+                    let mut r = WireReader::new(state);
+                    ex.load_state(&mut r)?;
+                    anyhow::ensure!(
+                        r.remaining() == 0,
+                        "trailing bytes after checkpoint exchange state"
+                    );
+                }
+                (None, None) => {}
+                _ => anyhow::bail!("checkpoint exchange state does not match this algorithm"),
+            }
+            ckpt.round as usize
+        }
+        None => 0,
+    };
+
+    // --- initial fleet barrier: wait for `expect` due registrations ----
     while fleet.live() < expect {
         match pending.recv_timeout(Duration::from_millis(50)) {
-            Ok(j) if j.join_round <= 1 => fleet.admit(j, 1, observers),
-            Ok(j) => held.push(j),
+            Ok(j) => match intake(&fleet, j, start_round + 1) {
+                Some(Intake::Due(j)) => fleet.admit(j, start_round + 1, observers),
+                Some(Intake::Hold(j)) => held.push(j),
+                None => {}
+            },
             Err(RecvTimeoutError::Timeout) => {}
             Err(RecvTimeoutError::Disconnected) => anyhow::bail!("accept loop terminated"),
         }
     }
 
-    let mut es = EarlyStop::new(params.patience);
-    let mut n_records = 0usize;
     let mut converged_emitted = false;
-    'rounds: for round in 1..=params.max_rounds {
+    'rounds: for round in (start_round + 1)..=params.max_rounds {
         // --- 0. membership: admit pending registrations due this round --
+        // new arrivals are vetted once at intake; entries already held
+        // for a future join round are never re-vetted
         while let Ok(j) = pending.try_recv() {
-            held.push(j);
+            if let Some(Intake::Due(j) | Intake::Hold(j)) = intake(&fleet, j, round) {
+                held.push(j);
+            }
         }
         let (due, later): (Vec<Join>, Vec<Join>) =
             held.drain(..).partition(|j| (j.join_round as usize) <= round);
@@ -432,8 +615,11 @@ fn drive_cluster(
             // the whole fleet is gone: hold the round open for one
             // deadline in case a dropout rejoins, then give up
             match pending.recv_timeout(opts.deadline) {
-                Ok(j) if (j.join_round as usize) <= round => fleet.admit(j, round, observers),
-                Ok(j) => held.push(j),
+                Ok(j) => match intake(&fleet, j, round) {
+                    Some(Intake::Due(j)) => fleet.admit(j, round, observers),
+                    Some(Intake::Hold(j)) => held.push(j),
+                    None => {}
+                },
                 Err(_) => anyhow::bail!(
                     "every client disconnected and none rejoined within {:?} (round {round})",
                     opts.deadline
@@ -445,13 +631,37 @@ fn drive_cluster(
         emit(observers, &RunEvent::RoundStart { round });
         let eval_round = round % params.eval_every == 0;
 
+        // --- 0b. participation: sample the round's cohort ---------------
+        // under `Full` no RoundCall is sent and the wire traffic is
+        // byte-identical to protocol v1 runs
+        let live_ids: Vec<usize> = (0..n).filter(|&id| fleet.conn(id).is_some()).collect();
+        let sampled = sample_round(params, &live_ids, round);
+        if params.participation != ParticipationSpec::Full {
+            for &id in &live_ids {
+                let call = ClusterMsg::RoundCall {
+                    round: round as u32,
+                    participate: sampled.binary_search(&id).is_ok(),
+                };
+                let lost = match fleet.conn(id) {
+                    Some(conn) => conn.send(&call).is_err(),
+                    None => false,
+                };
+                if lost {
+                    fleet.cut(id, round, acct, observers);
+                }
+            }
+            for &id in &sampled {
+                emit(observers, &RunEvent::ClientSampled { round, client: id });
+            }
+        }
+
         // --- 1. collect reports, bounded by the round deadline ----------
-        let expected = fleet.live();
+        let expected = sampled.len();
         let mut reports: Vec<Option<Report>> = (0..n).map(|_| None).collect();
         let deadline_at = Instant::now() + opts.deadline;
         loop {
             let mut waiting = 0usize;
-            for id in 0..n {
+            for &id in &sampled {
                 if reports[id].is_some() {
                     continue;
                 }
@@ -476,8 +686,9 @@ fn drive_cluster(
                 break;
             }
             if Instant::now() >= deadline_at {
-                // deadline: cut every straggler, aggregate partially
-                for id in 0..n {
+                // deadline: cut every sampled straggler, aggregate
+                // partially (non-sampled members are left untouched)
+                for &id in &sampled {
                     if reports[id].is_none() && fleet.conn(id).is_some() {
                         fleet.cut(id, round, acct, observers);
                     }
@@ -519,7 +730,7 @@ fn drive_cluster(
                 test,
                 mean_loss,
             };
-            n_records += 1;
+            records.push(record.clone());
             emit(observers, &RunEvent::Evaluated { record });
             let stop = es.update(valid.mrr);
             for &id in &reported {
@@ -532,6 +743,16 @@ fn drive_cluster(
                 }
             }
             if stop {
+                // non-sampled members are parked waiting for the next
+                // round call; tell them the run is over (no-op under
+                // `Full`, where every live member reported)
+                for id in 0..n {
+                    if reports[id].is_none() {
+                        if let Some(conn) = fleet.conn(id) {
+                            let _ = conn.send(&ClusterMsg::Verdict { stop: true });
+                        }
+                    }
+                }
                 emit(observers, &RunEvent::Converged { record_index: es.best_index() });
                 converged_emitted = true;
                 times.stop();
@@ -599,10 +820,43 @@ fn drive_cluster(
             );
         }
         times.stop();
+
+        // --- 4. round-boundary checkpoint + fault injection -------------
+        if let Some(dir) = &opts.checkpoint {
+            if round % opts.checkpoint_every.max(1) as usize == 0 {
+                let ckpt = Checkpoint {
+                    spec_digest: digest,
+                    round: round as u32,
+                    early_stop: es.state(),
+                    up_params: acct.params_dir(Direction::Upload),
+                    down_params: acct.params_dir(Direction::Download),
+                    up_bytes: acct.bytes_dir(Direction::Upload),
+                    down_bytes: acct.bytes_dir(Direction::Download),
+                    messages: acct.messages(),
+                    secs: times.secs.clone(),
+                    records: records.clone(),
+                    last_download: fleet.last_download.clone(),
+                    carried: fleet.carried.iter().map(|(c, up)| (*c, up.encode())).collect(),
+                    exchange: side.exchange.as_ref().map(|ex| {
+                        let mut w = WireWriter::new();
+                        ex.save_state(&mut w);
+                        w.finish()
+                    }),
+                };
+                let bytes = checkpoint::save(dir, &ckpt)?;
+                emit(observers, &RunEvent::CheckpointWritten { round, bytes });
+                if opts.halt_after_checkpoint == Some(round as u32) {
+                    return Err(CoordinatorHalted { round }.into());
+                }
+                if opts.kill_after_checkpoint == Some(round as u32) {
+                    super::chaos::sigkill_self();
+                }
+            }
+        }
     }
 
-    if !converged_emitted && n_records > 0 {
-        let idx = es.best_index().min(n_records - 1);
+    if !converged_emitted && !records.is_empty() {
+        let idx = es.best_index().min(records.len() - 1);
         emit(observers, &RunEvent::Converged { record_index: idx });
     }
     emit(

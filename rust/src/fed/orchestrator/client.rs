@@ -146,6 +146,13 @@ impl<'d> ClientRunner<'d> {
         self.ctx.svd_ref.clone()
     }
 
+    /// Cluster reconnect: swap in a freshly connected metered link.  All
+    /// local state (trainer, history, schedule position) is untouched —
+    /// only the transport underneath changes.
+    pub fn set_link(&mut self, link: Box<dyn Endpoint>) {
+        self.link = link;
+    }
+
     /// One round of local work: `local_epochs` of training (plus the SVD+
     /// low-rank projection) and, on eval rounds, both eval splits.
     pub fn local_round(&mut self, round: usize, eval: bool) -> Result<Report> {
@@ -193,28 +200,65 @@ impl<'d> ClientRunner<'d> {
         Ok((valid, test))
     }
 
-    /// Client half of the upload phase: frame this round's upload and put
-    /// it on the metered link.
-    pub fn send_upload(&mut self, round: u32) -> Result<()> {
-        let Some(ex) = self.exchange.as_mut() else { return Ok(()) };
+    /// Build (but do not send) this round's upload: advance the exchange
+    /// to `round` and return the encoded frame plus its parameter count,
+    /// or `None` when this client exchanges nothing.  `make_upload`
+    /// mutates the FedS history table, so the frame is built **once** per
+    /// round; a reconnecting cluster client resends this exact cached
+    /// frame rather than rebuilding it.
+    pub fn upload_frame(&mut self, round: u32) -> Result<Option<(Vec<u8>, u64)>> {
+        let Some(ex) = self.exchange.as_mut() else { return Ok(None) };
         ex.begin_round(round);
         if self.ctx.shared.is_empty() {
-            return Ok(());
+            return Ok(None);
         }
         let msg = ex.make_upload(round, &mut self.ctx)?;
         let params = msg.params();
-        self.link.send(msg.encode(), params)
+        Ok(Some((msg.encode(), params)))
+    }
+
+    /// Put an already-built upload frame on the metered link.
+    pub fn send_frame(&mut self, frame: Vec<u8>, params: u64) -> Result<()> {
+        self.link.send(frame, params)
+    }
+
+    /// Block for the server's reply frame on the metered link.
+    pub fn recv_frame(&mut self) -> Result<Vec<u8>> {
+        self.link.recv()
+    }
+
+    /// Fold a download frame into local state through the exchange.
+    pub fn apply_download_frame(&mut self, frame: &[u8]) -> Result<()> {
+        let Some(ex) = self.exchange.as_mut() else { return Ok(()) };
+        ex.apply_download(&mut self.ctx, Download::decode(frame)?)
+    }
+
+    /// Advance the exchange schedule through a round this client sits out
+    /// (not sampled into the cluster round's cohort).  Idempotent for a
+    /// round already begun, so redoing a round after a reconnect is safe.
+    pub fn skip_round(&mut self, round: u32) {
+        if let Some(ex) = self.exchange.as_mut() {
+            ex.begin_round(round);
+        }
+    }
+
+    /// Client half of the upload phase: frame this round's upload and put
+    /// it on the metered link.
+    pub fn send_upload(&mut self, round: u32) -> Result<()> {
+        match self.upload_frame(round)? {
+            Some((frame, params)) => self.send_frame(frame, params),
+            None => Ok(()),
+        }
     }
 
     /// Client half of the download phase: block for the server's reply
     /// frame and fold it into local state.
     pub fn recv_download(&mut self) -> Result<()> {
-        let Some(ex) = self.exchange.as_mut() else { return Ok(()) };
-        if self.ctx.shared.is_empty() {
+        if self.exchange.is_none() || self.ctx.shared.is_empty() {
             return Ok(());
         }
-        let msg = Download::decode(&self.link.recv()?)?;
-        ex.apply_download(&mut self.ctx, msg)
+        let frame = self.link.recv()?;
+        self.apply_download_frame(&frame)
     }
 
     /// Cluster rejoin: advance the client half of the exchange through

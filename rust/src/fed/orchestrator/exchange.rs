@@ -11,6 +11,7 @@
 
 use anyhow::Result;
 
+use crate::comm::wire::{WireReader, WireWriter};
 use crate::fed::compression::SvdCodec;
 use crate::fed::protocol::{Download, Upload};
 use crate::fed::server::Server;
@@ -44,6 +45,19 @@ pub trait Exchange {
     /// Server: build the personalized reply for `client`.
     fn server_download(&mut self, round: u32, server: &mut Server, client: u16)
         -> Result<Download>;
+
+    /// Serialize this half's cross-round state (schedule position, RNG
+    /// stream, reference mirrors) into a coordinator checkpoint.  The
+    /// default covers stateless strategies.
+    fn save_state(&self, _w: &mut WireWriter) {}
+
+    /// Restore state written by [`save_state`] — the strategy must have
+    /// been freshly built from the same `RoundParams`.
+    ///
+    /// [`save_state`]: Exchange::save_state
+    fn load_state(&mut self, _r: &mut WireReader<'_>) -> Result<()> {
+        Ok(())
+    }
 }
 
 /// The client-side strategy instance for `params` (`None`: no
@@ -78,6 +92,7 @@ fn build_half(
                 sparsity: params.sparsity,
                 schedule,
                 sync_now: false,
+                last_round: None,
                 rng,
             }))
         }
@@ -134,12 +149,21 @@ pub struct FedSExchange {
     sparsity: f64,
     schedule: SyncSchedule,
     sync_now: bool,
+    /// the round `begin_round` last advanced to, making it idempotent per
+    /// round: a reconnecting client re-entering the same round must keep
+    /// the schedule's verdict instead of stepping it a second time (which
+    /// would flip a sync round back to sparse)
+    last_round: Option<u32>,
     /// server side only: the §III-D priority tie-break stream
     rng: Option<Rng>,
 }
 
 impl Exchange for FedSExchange {
     fn begin_round(&mut self, round: u32) {
+        if self.last_round == Some(round) {
+            return;
+        }
+        self.last_round = Some(round);
         self.sync_now = self.schedule.step(round as usize);
     }
 
@@ -251,6 +275,49 @@ impl Exchange for FedSExchange {
         let (sign, emb, prio) = server.feds_download(client, k, rng);
         Ok(Download::Sparse { round, sign, emb, prio })
     }
+
+    fn save_state(&self, w: &mut WireWriter) {
+        w.u64(self.schedule.last_sync() as u64);
+        w.u8(self.sync_now as u8);
+        match self.last_round {
+            Some(r) => w.u8(1).u32(r),
+            None => w.u8(0),
+        };
+        match &self.rng {
+            Some(rng) => {
+                w.u8(1);
+                for s in rng.state() {
+                    w.u64(s);
+                }
+            }
+            None => {
+                w.u8(0);
+            }
+        }
+    }
+
+    fn load_state(&mut self, r: &mut WireReader<'_>) -> Result<()> {
+        let last_sync = r.u64()? as usize;
+        self.schedule = SyncSchedule::restore(self.schedule.interval, last_sync);
+        self.sync_now = r.u8()? != 0;
+        self.last_round = match r.u8()? {
+            0 => None,
+            1 => Some(r.u32()?),
+            m => anyhow::bail!("bad option marker {m} in FedS exchange state"),
+        };
+        match r.u8()? {
+            0 => self.rng = None,
+            1 => {
+                let mut s = [0u64; 4];
+                for x in &mut s {
+                    *x = r.u64()?;
+                }
+                self.rng = Some(Rng::from_state(s));
+            }
+            m => anyhow::bail!("bad rng marker {m} in FedS exchange state"),
+        }
+        Ok(())
+    }
 }
 
 /// FedE-SVD / FedE-SVD+ (Appendix VI-B): rank-k factorized *updates*
@@ -346,6 +413,30 @@ impl Exchange for SvdExchange {
         }
         Ok(Download::Full { round, emb: packed })
     }
+
+    fn save_state(&self, w: &mut WireWriter) {
+        w.u32(self.refs.len() as u32);
+        for t in &self.refs {
+            w.u32(t.rows as u32).u32(t.width as u32).f32s(&t.data);
+        }
+    }
+
+    fn load_state(&mut self, r: &mut WireReader<'_>) -> Result<()> {
+        let n = r.u32()? as usize;
+        let mut refs = Vec::with_capacity(n);
+        for _ in 0..n {
+            let rows = r.u32()? as usize;
+            let width = r.u32()? as usize;
+            let data = r.f32s()?;
+            anyhow::ensure!(
+                data.len() == rows * width,
+                "SVD reference table shape mismatch in checkpoint"
+            );
+            refs.push(Table { rows, width, data });
+        }
+        self.refs = refs;
+        Ok(())
+    }
 }
 
 #[cfg(test)]
@@ -382,7 +473,8 @@ mod tests {
         hist.set_row(5, &[-3.0, 3.0]);
 
         let schedule = SyncSchedule::new(None);
-        let mut ex = FedSExchange { sparsity: 0.7, schedule, sync_now: false, rng: None };
+        let mut ex =
+            FedSExchange { sparsity: 0.7, schedule, sync_now: false, last_round: None, rng: None };
         ex.begin_round(2);
         let (filters, valid_set, test_set) = empty_ctx_parts(e);
         let mut ctx = ClientCtx {
@@ -413,6 +505,7 @@ mod tests {
             sparsity: 0.7,
             schedule: SyncSchedule::new(None),
             sync_now: false,
+            last_round: None,
             rng: Some(Rng::new(1)),
         };
         sx.begin_round(2);

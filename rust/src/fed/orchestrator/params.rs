@@ -11,7 +11,7 @@
 
 use crate::comm::transport::TransportSpec;
 use crate::kge::Method;
-use crate::spec::{AlgoSpec, ExperimentSpec};
+use crate::spec::{AlgoSpec, ExperimentSpec, ParticipationSpec};
 
 use super::{Algo, Backend, ExecMode};
 
@@ -54,6 +54,9 @@ pub struct RoundParams {
     /// server aggregation shard count (≥ 1; results are bit-identical
     /// for any value)
     pub shards: usize,
+    /// per-round client sampling policy — enforced by the cluster
+    /// coordinator only; the in-process engine always runs every client
+    pub participation: ParticipationSpec,
 }
 
 impl RoundParams {
@@ -97,6 +100,7 @@ impl RoundParams {
             exec,
             transport: spec.transport,
             shards: if spec.shards > 0 { spec.shards } else { auto_shards() },
+            participation: spec.participation,
         }
     }
 }
@@ -134,6 +138,7 @@ mod tests {
             exec: ExecMode::Threaded,
             transport: TransportSpec::Mpsc,
             shards: 0,
+            participation: Default::default(),
         }
     }
 

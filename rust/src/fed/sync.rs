@@ -34,6 +34,20 @@ impl SyncSchedule {
         self.last_sync = round;
     }
 
+    /// The round of the most recent synchronization (0 before the first).
+    pub fn last_sync(&self) -> usize {
+        self.last_sync
+    }
+
+    /// Rebuild a schedule at an exact position saved via [`last_sync`].
+    ///
+    /// [`last_sync`]: SyncSchedule::last_sync
+    pub fn restore(interval: Option<usize>, last_sync: usize) -> Self {
+        let mut s = Self::new(interval);
+        s.last_sync = last_sync;
+        s
+    }
+
     /// Convenience: check-and-mark in one step.
     pub fn step(&mut self, round: usize) -> bool {
         if self.is_sync(round) {

@@ -44,7 +44,10 @@
 //!   results inline.  `fed::cluster` deploys the same engine across OS
 //!   processes — `feds serve` + N `feds client` — with a versioned
 //!   handshake, round deadlines with partial aggregation, dropout
-//!   detection and rejoin-with-resync.
+//!   detection, rejoin-with-resync, atomic coordinator checkpoints with
+//!   bit-identical crash restore (`--checkpoint` / `--restore`), client
+//!   reconnect backoff, seeded participation sampling, and a
+//!   fault-injection toolkit (`fed::cluster::chaos`).
 //! * [`comm`] — the transport trait hierarchy and accounting:
 //!   `comm::transport::Endpoint` is the metered link seam with two
 //!   implementations — in-process mpsc duplexes (`transport::mpsc`) and

@@ -16,7 +16,7 @@
 //! relevant `--help` text; runtime failures exit with code 1.
 
 use std::io::Write as _;
-use std::path::Path;
+use std::path::{Path, PathBuf};
 use std::time::Duration;
 
 use anyhow::Result;
@@ -160,6 +160,8 @@ const OVERRIDE_FLAGS: &[(&str, &str)] = &[
     ("exec", "exec"),
     ("transport", "transport"),
     ("shards", "shards"),
+    ("participation-fraction", "participation.fraction"),
+    ("participation-k", "participation.k"),
 ];
 
 fn override_opts(mut cli: Cli) -> Cli {
@@ -185,7 +187,9 @@ fn override_opts(mut cli: Cli) -> Cli {
         .opt("seed", "64501", "experiment seed")
         .opt("exec", "seq", "client execution: seq|threaded (threaded is native-only)")
         .opt("transport", "mpsc", "frame transport: mpsc|tcp (loopback sockets)")
-        .opt("shards", "0", "server aggregation shards (0 = auto: one per core, capped)");
+        .opt("shards", "0", "server aggregation shards (0 = auto: one per core, capped)")
+        .opt("participation-fraction", "1.0", "sample ⌈f·live⌉ clients/round (cluster serve)")
+        .opt("participation-k", "0", "sample k clients per round (cluster serve)");
     cli
 }
 
@@ -216,6 +220,7 @@ fn default_spec() -> ExperimentSpec {
         exec: ExecMode::Sequential,
         transport: TransportSpec::Mpsc,
         shards: 0,
+        participation: Default::default(),
     }
 }
 
@@ -370,11 +375,23 @@ fn cmd_sweep(args: &[String]) -> Result<(), Failure> {
 }
 
 /// `--rate-mbps`/`--latency-ms` → the per-link rate model shared by
-/// `serve` and `client` (`None` = unthrottled loopback).
+/// `serve` and `client` (`None` = unthrottled loopback).  Both values
+/// are validated up front: a NaN, infinite, or negative rate/latency is
+/// a usage error, never a silently-unthrottled link.
 fn bandwidth_model(m: &feds::util::cli::Matches) -> Result<Option<BandwidthModel>, Failure> {
     let mbps = m.f64("rate-mbps").map_err(Failure::Usage)?;
     let latency_ms = m.f64("latency-ms").map_err(Failure::Usage)?;
-    if mbps <= 0.0 {
+    if !mbps.is_finite() || mbps < 0.0 {
+        return Err(Failure::Usage(format!(
+            "--rate-mbps must be a finite rate >= 0 (0 = unthrottled), got {mbps}"
+        )));
+    }
+    if !latency_ms.is_finite() || latency_ms < 0.0 {
+        return Err(Failure::Usage(format!(
+            "--latency-ms must be a finite delay >= 0, got {latency_ms}"
+        )));
+    }
+    if mbps == 0.0 {
         return Ok(None);
     }
     Ok(Some(BandwidthModel { bytes_per_sec: mbps * 1e6 / 8.0, latency_s: latency_ms / 1e3 }))
@@ -388,7 +405,12 @@ fn serve_cli() -> Cli {
         .opt("expect", "0", "clients required before round 1 starts (0 = every client)")
         .opt("rate-mbps", "0", "rate-limit every link to this many Mbit/s (0 = unthrottled)")
         .opt("latency-ms", "0", "per-message link latency for the rate model")
-        .opt("jsonl", "", "stream run events to this JSONL file")
+        .opt("checkpoint", "", "write round-boundary checkpoints into this directory")
+        .opt("checkpoint-every", "1", "rounds between checkpoints (requires --checkpoint)")
+        .opt("restore", "", "resume from the checkpoint in this directory")
+        .opt("chaos-halt-at", "0", "fault drill: halt after this round's checkpoint (0 = never)")
+        .opt("chaos-kill-at", "0", "fault drill: SIGKILL after this round's checkpoint (0 = never)")
+        .opt("jsonl", "", "stream run events to this JSONL file (appended when restoring)")
         .flag("quiet", "suppress console progress")
 }
 
@@ -400,10 +422,33 @@ fn cmd_serve(args: &[String]) -> Result<(), Failure> {
         return Err(Failure::Usage(format!("--spec is required\n\n{}", cli.usage())));
     }
     let spec = ExperimentSpec::load(Path::new(spec_path))?;
+    let deadline_ms = m.u64("deadline-ms").map_err(Failure::Usage)?;
+    if deadline_ms == 0 {
+        return Err(Failure::Usage("--deadline-ms must be a positive duration".into()));
+    }
+    let every = m.u64("checkpoint-every").map_err(Failure::Usage)? as u32;
+    if every == 0 {
+        return Err(Failure::Usage("--checkpoint-every must be >= 1".into()));
+    }
+    let ckpt_dir = m.get("checkpoint").map_err(Failure::Usage)?;
+    let restore_dir = m.get("restore").map_err(Failure::Usage)?;
+    let halt = m.u64("chaos-halt-at").map_err(Failure::Usage)? as u32;
+    let kill = m.u64("chaos-kill-at").map_err(Failure::Usage)? as u32;
+    if (halt > 0 || kill > 0) && ckpt_dir.is_empty() {
+        let why = "--chaos-halt-at/--chaos-kill-at require --checkpoint (the drill crashes \
+                   at a checkpoint boundary)";
+        return Err(Failure::Usage(why.into()));
+    }
+    let restoring = !restore_dir.is_empty();
     let opts = ServeOpts {
-        deadline: Duration::from_millis(m.u64("deadline-ms").map_err(Failure::Usage)?),
+        deadline: Duration::from_millis(deadline_ms),
         bandwidth: bandwidth_model(&m)?,
         expect: m.usize("expect").map_err(Failure::Usage)?,
+        checkpoint: (!ckpt_dir.is_empty()).then(|| PathBuf::from(ckpt_dir)),
+        checkpoint_every: every,
+        restore: restoring.then(|| PathBuf::from(restore_dir)),
+        halt_after_checkpoint: (halt > 0).then_some(halt),
+        kill_after_checkpoint: (kill > 0).then_some(kill),
     };
     let server = ClusterServer::bind(m.get("bind").map_err(Failure::Usage)?, &spec, opts)?;
     // harnesses parse this line to learn an ephemeral port; flush
@@ -415,7 +460,13 @@ fn cmd_serve(args: &[String]) -> Result<(), Failure> {
     let mut sink = None;
     let jsonl = m.get("jsonl").map_err(Failure::Usage)?;
     if !jsonl.is_empty() {
-        sink = Some(JsonlSink::create(Path::new(jsonl))?);
+        // a restored run continues the interrupted run's event stream in
+        // place, so the final file reads as one contiguous history
+        sink = Some(if restoring {
+            JsonlSink::append(Path::new(jsonl))?
+        } else {
+            JsonlSink::create(Path::new(jsonl))?
+        });
     }
     let mut observers: Vec<&mut dyn RunObserver> = Vec::new();
     if !m.flag("quiet") {
@@ -445,6 +496,7 @@ fn client_cli() -> Cli {
         .opt("join-at", "0", "defer participation until this round (0 = join immediately)")
         .opt("rate-mbps", "0", "rate-limit the uplink to this many Mbit/s (0 = unthrottled)")
         .opt("latency-ms", "0", "per-message link latency for the rate model")
+        .opt("reconnect-attempts", "8", "re-dials per lost connection before giving up")
         .opt("leave-after", "0", "failure drill: leave cleanly after this round (0 = never)")
         .opt("fail-after", "0", "failure drill: crash mid-frame after this round (0 = never)")
 }
@@ -461,6 +513,7 @@ fn cmd_client(args: &[String]) -> Result<(), Failure> {
     let mut opts = ClientOpts::new(m.get("connect").map_err(Failure::Usage)?, id);
     opts.join_round = m.usize("join-at").map_err(Failure::Usage)? as u32;
     opts.bandwidth = bandwidth_model(&m)?;
+    opts.reconnect.attempts = m.u64("reconnect-attempts").map_err(Failure::Usage)? as u32;
     let leave = m.usize("leave-after").map_err(Failure::Usage)?;
     opts.leave_after = (leave > 0).then_some(leave);
     let fail = m.usize("fail-after").map_err(Failure::Usage)?;
@@ -522,6 +575,7 @@ fn cmd_train(args: &[String]) -> Result<(), Failure> {
         exec: ExecMode::parse(m.get("exec").map_err(Failure::Usage)?)?,
         transport: TransportSpec::Mpsc,
         shards: 0,
+        participation: Default::default(),
     };
     let mut session = match &ctx.backend {
         Backend::Xla(rt) => Session::with_runtime(rt.clone()),

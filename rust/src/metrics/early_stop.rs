@@ -41,6 +41,19 @@ impl EarlyStop {
     pub fn evaluations(&self) -> usize {
         self.n_seen
     }
+
+    /// Snapshot `(best, best_index, declines, n_seen)` for checkpointing.
+    pub fn state(&self) -> (f64, usize, usize, usize) {
+        (self.best, self.best_index, self.declines, self.n_seen)
+    }
+
+    /// Rebuild a tracker at an exact position saved by [`state`].
+    ///
+    /// [`state`]: EarlyStop::state
+    pub fn from_state(patience: usize, state: (f64, usize, usize, usize)) -> Self {
+        let (best, best_index, declines, n_seen) = state;
+        Self { patience, best, best_index, declines, n_seen }
+    }
 }
 
 #[cfg(test)]

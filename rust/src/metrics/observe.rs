@@ -75,6 +75,15 @@ pub enum RunEvent {
         reported: usize,
         expected: usize,
     },
+    /// The coordinator sampled this client into the round (emitted only
+    /// when the spec's participation policy is not `Full`).
+    ClientSampled { round: usize, client: usize },
+    /// The coordinator wrote a round-boundary checkpoint (`bytes` is the
+    /// snapshot file size after the atomic rename).
+    CheckpointWritten { round: usize, bytes: u64 },
+    /// A previously admitted client re-registered on a fresh socket after
+    /// losing its connection (reconnect backoff path, not a new join).
+    ClientReconnected { round: usize, client: usize },
     /// The convergence point is known (index into the evaluated records —
     /// the best validation MRR so far, exactly the legacy early-stop rule).
     Converged { record_index: usize },
@@ -142,6 +151,18 @@ impl RunEvent {
                 .set("round", *round)
                 .set("reported", *reported)
                 .set("expected", *expected),
+            RunEvent::ClientSampled { round, client } => Json::obj()
+                .set("event", "client_sampled")
+                .set("round", *round)
+                .set("client", *client),
+            RunEvent::CheckpointWritten { round, bytes } => Json::obj()
+                .set("event", "checkpoint_written")
+                .set("round", *round)
+                .set("bytes", *bytes),
+            RunEvent::ClientReconnected { round, client } => Json::obj()
+                .set("event", "client_reconnected")
+                .set("round", *round)
+                .set("client", *client),
             RunEvent::Converged { record_index } => Json::obj()
                 .set("event", "converged")
                 .set("record_index", *record_index),
@@ -248,6 +269,17 @@ impl RunObserver for ConsoleObserver {
                     expected
                 );
             }
+            RunEvent::CheckpointWritten { round, bytes } => {
+                crate::info!(
+                    "{} round {}: checkpoint written ({} bytes)",
+                    self.label,
+                    round,
+                    bytes
+                );
+            }
+            RunEvent::ClientReconnected { round, client } => {
+                crate::info!("{} round {}: client {} reconnected", self.label, round, client);
+            }
             _ => {}
         }
     }
@@ -326,7 +358,10 @@ impl<W: Write> JsonlSink<W> {
 impl<W: Write> RunObserver for JsonlSink<W> {
     fn on_event(&mut self, ev: &RunEvent) {
         self.write_line(ev.to_json().to_string());
-        if matches!(ev, RunEvent::RunEnd { .. }) && !self.failed {
+        // checkpoint lines flush eagerly so an external watcher (the
+        // crash drills) sees the boundary before any kill lands
+        let boundary = matches!(ev, RunEvent::RunEnd { .. } | RunEvent::CheckpointWritten { .. });
+        if boundary && !self.failed {
             if let Err(e) = self.w.flush() {
                 crate::warn_!("jsonl sink flush failed ({e})");
                 self.failed = true;
@@ -410,6 +445,9 @@ mod tests {
             RunEvent::ClientJoined { round: 3, client: 1, rejoin: true },
             RunEvent::ClientDropped { round: 2, client: 0, clean: false },
             RunEvent::PartialRound { round: 2, reported: 2, expected: 3 },
+            RunEvent::ClientSampled { round: 4, client: 2 },
+            RunEvent::CheckpointWritten { round: 4, bytes: 4096 },
+            RunEvent::ClientReconnected { round: 5, client: 1 },
             RunEvent::Converged { record_index: 0 },
             RunEvent::RunEnd { params: 8, bytes: 9, messages: 10 },
         ];

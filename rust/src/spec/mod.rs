@@ -206,6 +206,90 @@ impl AlgoSpec {
     }
 }
 
+/// Per-round client participation policy: which live clients the cluster
+/// coordinator samples into each communication round.  Stragglers become
+/// a *policy* (the paper's unreliable-link regime) instead of only a
+/// failure mode; non-sampled rounds reuse the `PartialRound`
+/// aggregation/renormalization machinery.  The in-process engine always
+/// runs `Full`; sampling is enforced by `feds serve`.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub enum ParticipationSpec {
+    /// every live client, every round (the default)
+    #[default]
+    Full,
+    /// each round samples ⌈fraction × live⌉ clients, fraction ∈ (0, 1]
+    Fraction(f64),
+    /// each round samples min(k, live) clients, k ≥ 1
+    KofN(usize),
+}
+
+impl ParticipationSpec {
+    pub fn validate(&self) -> Result<()> {
+        match self {
+            ParticipationSpec::Full => {}
+            ParticipationSpec::Fraction(f) => ensure!(
+                f.is_finite() && *f > 0.0 && *f <= 1.0,
+                "participation fraction must lie in (0, 1], got {f}"
+            ),
+            ParticipationSpec::KofN(k) => {
+                ensure!(*k >= 1, "participation.k must be ≥ 1, got 0")
+            }
+        }
+        Ok(())
+    }
+
+    /// How many of `live` clients a round samples (`live` when full).
+    pub fn sample_size(&self, live: usize) -> usize {
+        match self {
+            ParticipationSpec::Full => live,
+            ParticipationSpec::Fraction(f) => {
+                let k = (*f * live as f64).ceil() as usize;
+                k.clamp(usize::from(live > 0), live)
+            }
+            ParticipationSpec::KofN(k) => (*k).min(live),
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        match self {
+            ParticipationSpec::Full => Json::from("full"),
+            ParticipationSpec::Fraction(f) => {
+                Json::obj().set("kind", "fraction").set("fraction", *f)
+            }
+            ParticipationSpec::KofN(k) => Json::obj().set("kind", "k_of_n").set("k", *k),
+        }
+    }
+
+    /// Accepts the bare label `"full"` or the tagged object form.
+    pub fn from_json(v: &Json) -> Result<ParticipationSpec> {
+        if let Some(label) = v.as_str() {
+            ensure!(
+                label == "full",
+                "unknown participation label '{label}' (full, or an object with kind \
+                 fraction|k_of_n)"
+            );
+            return Ok(ParticipationSpec::Full);
+        }
+        let kind = v
+            .req("kind")?
+            .as_str()
+            .ok_or_else(|| anyhow::anyhow!("participation.kind must be a string"))?;
+        let spec = match kind {
+            "full" => ParticipationSpec::Full,
+            "fraction" => ParticipationSpec::Fraction(
+                opt_f64(v, "fraction")?
+                    .ok_or_else(|| anyhow::anyhow!("participation.fraction is required"))?,
+            ),
+            "k_of_n" => ParticipationSpec::KofN(
+                opt_count(v, "k")?.ok_or_else(|| anyhow::anyhow!("participation.k is required"))?,
+            ),
+            other => bail!("unknown participation kind '{other}' (full|fraction|k_of_n)"),
+        };
+        spec.validate()?;
+        Ok(spec)
+    }
+}
+
 /// The dataset of a run: synthetic-KG generation plus relation
 /// partitioning, deterministic in `seed`.
 #[derive(Clone, Debug, PartialEq)]
@@ -475,6 +559,8 @@ pub struct ExperimentSpec {
     /// server aggregation shards (0 = auto: one per core, capped);
     /// results are bit-identical for any value
     pub shards: usize,
+    /// per-round client sampling policy (cluster coordinator only)
+    pub participation: ParticipationSpec,
 }
 
 impl ExperimentSpec {
@@ -483,6 +569,14 @@ impl ExperimentSpec {
         self.data.validate()?;
         self.backend.validate()?;
         self.budget.validate()?;
+        self.participation.validate()?;
+        if let ParticipationSpec::KofN(k) = self.participation {
+            ensure!(
+                k <= self.data.clients,
+                "participation.k ({k}) must be ≤ data.clients ({})",
+                self.data.clients
+            );
+        }
         if self.algo == AlgoSpec::Kd {
             ensure!(
                 self.backend == BackendSpec::Xla,
@@ -510,6 +604,7 @@ impl ExperimentSpec {
             .set("exec", self.exec.label())
             .set("transport", self.transport.label())
             .set("shards", self.shards)
+            .set("participation", self.participation.to_json())
     }
 
     pub fn from_json(v: &Json) -> Result<ExperimentSpec> {
@@ -545,6 +640,10 @@ impl ExperimentSpec {
                 None => TransportSpec::Mpsc,
             },
             shards: opt_count(v, "shards")?.unwrap_or(0),
+            participation: match v.get("participation") {
+                Some(p) => ParticipationSpec::from_json(p)?,
+                None => ParticipationSpec::Full,
+            },
         };
         spec.validate()?;
         Ok(spec)
@@ -592,6 +691,13 @@ impl ExperimentSpec {
             }
             "shards" => self.shards = count_of(value, key)?,
             "seed" => self.seed = count_of(value, key)? as u64,
+            "participation" => self.participation = ParticipationSpec::from_json(value)?,
+            "participation.fraction" => {
+                self.participation = ParticipationSpec::Fraction(f64_of(value, key)?);
+            }
+            "participation.k" => {
+                self.participation = ParticipationSpec::KofN(count_of(value, key)?);
+            }
             "algo" => self.algo = AlgoSpec::from_json(value)?,
             "algo.sparsity" => match &mut self.algo {
                 AlgoSpec::FedS { sparsity, .. } => *sparsity = f64_of(value, key)?,
@@ -742,6 +848,7 @@ mod tests {
             exec: ExecMode::Sequential,
             transport: TransportSpec::Mpsc,
             shards: 0,
+            participation: Default::default(),
         }
     }
 

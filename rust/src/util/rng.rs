@@ -41,6 +41,18 @@ impl Rng {
         Rng::new(self.next_u64() ^ stream.wrapping_mul(0x9E3779B97F4A7C15))
     }
 
+    /// Snapshot the generator state (for checkpointing a stream position).
+    pub fn state(&self) -> [u64; 4] {
+        self.s
+    }
+
+    /// Rebuild a generator at an exact stream position saved by [`state`].
+    ///
+    /// [`state`]: Rng::state
+    pub fn from_state(s: [u64; 4]) -> Self {
+        Self { s }
+    }
+
     pub fn next_u64(&mut self) -> u64 {
         let r = self.s[1]
             .wrapping_mul(5)

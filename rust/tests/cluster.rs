@@ -11,23 +11,35 @@
 //! * Handover: a clean leave and a mid-frame crash at the same round,
 //!   each followed by a rejoin with resync, yield bit-identical runs —
 //!   failure *classification* differs, failure *semantics* don't.
+//! * Crash recovery: a coordinator halted right after a checkpoint is
+//!   restored on the same address; the clients ride through the outage
+//!   on reconnect backoff and the stitched run is **bit-identical** to
+//!   one that never stopped.  Tampered or mismatched snapshots are
+//!   refused loudly at bind, never silently restarted.
+//! * Sampled participation: a non-`Full` policy draws a seeded cohort
+//!   every round (deterministically — two runs agree bit-for-bit), and a
+//!   salvaged upload still folds exactly once even when its sender is
+//!   never sampled again.
 //!
 //! ¹ client processes are OS threads here (same sockets, same protocol);
 //!   `tests/cluster_process.rs` runs the real multi-process drill.
 
+use std::fs;
 use std::net::TcpStream;
+use std::path::PathBuf;
 use std::thread;
 
 use feds::comm::accounting::Direction;
 use feds::comm::wire::{read_frame, write_frame};
 use feds::fed::cluster::{
-    run_client, spec_digest, ClientOpts, ClusterMsg, ClusterOutcome, ClusterServer, ServeOpts,
-    PROTO_VERSION,
+    chaos, checkpoint, run_client, spec_digest, Checkpoint, ClientOpts, ClusterMsg, ClusterOutcome,
+    ClusterServer, CoordinatorHalted, ServeOpts, PROTO_VERSION,
 };
+use feds::fed::protocol::Upload;
 use feds::fed::{run_params, Backend, RoundParams, RunOutcome};
 use feds::kge::{Hyper, Method};
 use feds::metrics::observe::{RunEvent, RunObserver};
-use feds::spec::{AlgoSpec, BackendSpec, BudgetSpec, DataSpec, ExperimentSpec};
+use feds::spec::{AlgoSpec, BackendSpec, BudgetSpec, DataSpec, ExperimentSpec, ParticipationSpec};
 
 fn tiny_spec(algo: AlgoSpec, max_rounds: usize) -> ExperimentSpec {
     ExperimentSpec {
@@ -60,6 +72,7 @@ fn tiny_spec(algo: AlgoSpec, max_rounds: usize) -> ExperimentSpec {
         exec: Default::default(),
         transport: Default::default(),
         shards: 0,
+        participation: Default::default(),
     }
 }
 
@@ -275,4 +288,247 @@ fn clean_leave_and_crash_handover_are_bit_identical_with_rejoin() {
         assert!(partial, "round 4 must aggregate partially: {events:?}");
     }
     assert_eq!(clean.run.history.records.len(), 4, "evaluations at rounds 2, 4, 6, 8");
+}
+
+/// A fresh per-test scratch directory under the system temp dir.
+fn scratch(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("feds-{tag}-{}", std::process::id()));
+    let _ = fs::remove_dir_all(&dir);
+    dir
+}
+
+/// A minimal hand-crafted snapshot: rounds 1..=2 "completed" with nothing
+/// metered and nothing cached — just enough state for a coordinator to
+/// restore at round 3 and welcome a fresh fleet.
+fn crafted_checkpoint(spec: &ExperimentSpec, carried: Vec<(u16, Vec<u8>)>) -> Checkpoint {
+    Checkpoint {
+        spec_digest: spec_digest(spec),
+        round: 2,
+        early_stop: (f64::NEG_INFINITY, 0, 0, 0),
+        up_params: 0,
+        down_params: 0,
+        up_bytes: 0,
+        down_bytes: 0,
+        messages: 0,
+        secs: vec![0.0, 0.0],
+        records: Vec::new(),
+        last_download: vec![None; 3],
+        carried,
+        exchange: Some(Vec::new()),
+    }
+}
+
+/// The crash-recovery drill: the coordinator checkpoints every round and
+/// halts (typed fault injection) right after the round-3 snapshot; a
+/// replacement coordinator restores the snapshot on the same address.
+/// The clients ride through the outage on reconnect backoff alone, and
+/// the stitched run is bit-identical to one that never stopped.
+#[test]
+fn halted_coordinator_restores_bit_identically_and_clients_reconnect() {
+    let spec = tiny_spec(AlgoSpec::feds(), 8);
+    let direct = direct_run(&spec);
+    let dir = scratch("restore-drill");
+
+    let mut opts = ServeOpts { checkpoint: Some(dir.clone()), ..ServeOpts::default() };
+    chaos::halt_coordinator_at(&mut opts, 3);
+    let server = ClusterServer::bind("127.0.0.1:0", &spec, opts).expect("bind");
+    let addr = server.addr().to_string();
+    let handles: Vec<_> = (0..3u16)
+        .map(|id| {
+            let spec = spec.clone();
+            let opts = ClientOpts::new(addr.clone(), id);
+            thread::spawn(move || {
+                run_client(&spec, &opts).expect("client rides through the coordinator outage")
+            })
+        })
+        .collect();
+    let mut log = EventLog::default();
+    let err = server.run(&mut [&mut log]).err().expect("the injected halt must surface");
+    let halted = err.downcast_ref::<CoordinatorHalted>().expect("the halt error is typed");
+    assert_eq!(halted.round, 3, "the halt lands right after the round-3 checkpoint");
+    let snapshot = log.0.iter().any(|e| matches!(e, RunEvent::CheckpointWritten { round: 3, .. }));
+    assert!(snapshot, "the round-3 snapshot must be announced: {:?}", log.0);
+
+    // the replacement coordinator binds the same address the clients are
+    // re-dialing with backoff right now
+    let ropts = ServeOpts { restore: Some(dir.clone()), ..ServeOpts::default() };
+    let server = ClusterServer::bind(&addr, &spec, ropts).expect("rebind with restore");
+    let mut rlog = EventLog::default();
+    let out = server.run(&mut [&mut rlog]).expect("restored run completes");
+    for h in handles {
+        h.join().expect("client thread");
+    }
+
+    assert_equivalent("restored vs never-stopped", &direct, &out.run);
+    assert_eq!(out.times.secs.len(), 8, "3 checkpointed + 5 resumed wall-clock samples");
+    let is_rejoin = |e: &&RunEvent| matches!(e, RunEvent::ClientReconnected { .. });
+    let reconnects = rlog.0.iter().filter(is_rejoin).count();
+    assert_eq!(reconnects, 3, "every client re-registers after the outage: {:?}", rlog.0);
+    let _ = fs::remove_dir_all(&dir);
+}
+
+/// A restore refuses — loudly, at bind time — a checkpoint that belongs
+/// to a different spec or that lost bytes to a torn write.  Neither case
+/// may quietly start a fresh run.
+#[test]
+fn restore_refuses_mismatched_or_tampered_checkpoints() {
+    let spec = tiny_spec(AlgoSpec::FedEP, 4);
+    let dir = scratch("ckpt-refusal");
+    checkpoint::save(&dir, &crafted_checkpoint(&spec, Vec::new())).expect("write the snapshot");
+    let restore_opts = || ServeOpts { restore: Some(dir.clone()), ..ServeOpts::default() };
+
+    // the matching spec loads (the round loop is never started here)
+    ClusterServer::bind("127.0.0.1:0", &spec, restore_opts()).expect("valid restore binds");
+    // another spec's server must not adopt this run
+    let other = tiny_spec(AlgoSpec::FedEP, 5);
+    let err = ClusterServer::bind("127.0.0.1:0", &other, restore_opts())
+        .err()
+        .expect("a mismatched snapshot must be refused");
+    assert!(format!("{err}").contains("different spec"), "unexpected reason: {err}");
+    // a torn write is corruption, not a quiet fresh start
+    chaos::truncate_checkpoint(&dir, 9).expect("truncate the snapshot");
+    let err = ClusterServer::bind("127.0.0.1:0", &spec, restore_opts())
+        .err()
+        .expect("a truncated snapshot must be refused");
+    assert!(format!("{err}").contains("corrupt checkpoint"), "unexpected reason: {err}");
+    let _ = fs::remove_dir_all(&dir);
+}
+
+/// Sampled participation: every round draws exactly k live clients from
+/// a stream keyed only by (seed, round), so two runs of the same spec
+/// are bit-identical, sitting a round out is not a dropout, and the run
+/// still completes every round.
+#[test]
+fn sampled_participation_draws_k_per_round_and_is_deterministic() {
+    let mut spec = tiny_spec(AlgoSpec::feds(), 6);
+    spec.participation = ParticipationSpec::KofN(2);
+    let (a, ev_a) = cluster_run(&spec, fleet(3));
+    let (b, _ev_b) = cluster_run(&spec, fleet(3));
+
+    assert_equivalent("two sampled runs", &a.run, &b.run);
+    for round in 1..=6usize {
+        let drawn: Vec<usize> = ev_a
+            .iter()
+            .filter_map(|e| match e {
+                RunEvent::ClientSampled { round: r, client } if *r == round => Some(*client),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(drawn.len(), 2, "round {round} samples exactly 2 of 3: {drawn:?}");
+    }
+    let failures = ev_a.iter().any(|e| {
+        matches!(e, RunEvent::ClientDropped { .. } | RunEvent::PartialRound { .. })
+    });
+    assert!(!failures, "sitting a round out must not classify as a failure: {ev_a:?}");
+    assert_eq!(a.times.secs.len(), 6, "the run completes every round");
+    assert_eq!(a.run.history.records.len(), 3, "evaluations at rounds 2, 4, 6");
+}
+
+/// The carried-upload × participation regression: a snapshot carries an
+/// upload salvaged from a client that never comes back — so it is in no
+/// later round's cohort — and the restored coordinator must fold it
+/// exactly once (deterministically, and observably: the aggregation it
+/// folds into shifts relative to a restore that carried nothing).
+#[test]
+fn carried_upload_folds_exactly_once_even_when_its_sender_is_never_sampled() {
+    let mut spec = tiny_spec(AlgoSpec::FedEP, 4);
+    spec.participation = ParticipationSpec::KofN(2);
+    let data = spec.data.build();
+    let rows = data.shared_entities_of(2).len();
+    let upload = Upload::Full { round: 2, client: 2, emb: vec![0.25; rows * 16] };
+
+    let resume = |tag: &str, carried: Vec<(u16, Vec<u8>)>| {
+        let dir = scratch(tag);
+        checkpoint::save(&dir, &crafted_checkpoint(&spec, carried)).expect("write the snapshot");
+        // client 2 is gone for good; only 0 and 1 greet the restored
+        // coordinator
+        let opts = ServeOpts { restore: Some(dir.clone()), expect: 2, ..ServeOpts::default() };
+        let server = ClusterServer::bind("127.0.0.1:0", &spec, opts).expect("bind");
+        let addr = server.addr().to_string();
+        let handles: Vec<_> = (0..2u16)
+            .map(|id| {
+                let spec = spec.clone();
+                let opts = ClientOpts::new(addr.clone(), id);
+                thread::spawn(move || run_client(&spec, &opts).expect("client run"))
+            })
+            .collect();
+        let mut log = EventLog::default();
+        let out = server.run(&mut [&mut log]).expect("restored run completes");
+        for h in handles {
+            h.join().expect("client thread");
+        }
+        let _ = fs::remove_dir_all(&dir);
+        (out, log.0)
+    };
+
+    let (with, ev) = resume("carried-a", vec![(2, upload.encode())]);
+    let (again, _) = resume("carried-b", vec![(2, upload.encode())]);
+    let (without, _) = resume("carried-none", Vec::new());
+
+    // deterministic: the carried rows fold once, the same way, every time
+    assert_equivalent("carried fold determinism", &with.run, &again.run);
+    // the dead sender is in no cohort (sampling draws from live ids only)
+    let ghost = ev.iter().any(|e| matches!(e, RunEvent::ClientSampled { client: 2, .. }));
+    assert!(!ghost, "a gone client must never be sampled: {ev:?}");
+    // and the fold really happened: the aggregation (and everything
+    // downstream of it) shifts relative to a restore that carried nothing
+    let (ra, rb) = (&with.run.history.records, &without.run.history.records);
+    assert_eq!(ra.len(), rb.len(), "same evaluation schedule either way");
+    let moved = ra.iter().zip(rb.iter()).any(|(x, y)| {
+        x.mean_loss.to_bits() != y.mean_loss.to_bits()
+            || x.valid.mrr.to_bits() != y.valid.mrr.to_bits()
+    });
+    assert!(moved, "the carried upload must fold into the round-3 aggregation");
+    // folding is unmetered at restore time: the salvage was already
+    // accounted when the client was cut, before the snapshot
+    assert_eq!(with.run.acct.params(), without.run.acct.params(), "fold is not re-metered");
+}
+
+/// A restored coordinator knows it may be behind the fleet: an id that
+/// already dropped claiming a join round ahead of the coordinator's
+/// position is refused with the reason spelled out (satellite of the
+/// restore work: never silently rewind a client).
+#[test]
+fn restored_coordinator_rejects_clients_from_its_future() {
+    let spec = tiny_spec(AlgoSpec::FedEP, 4);
+    let dir = scratch("reject-ahead");
+    checkpoint::save(&dir, &crafted_checkpoint(&spec, Vec::new())).expect("write the snapshot");
+    let opts = ServeOpts { restore: Some(dir.clone()), expect: 2, ..ServeOpts::default() };
+    let server = ClusterServer::bind("127.0.0.1:0", &spec, opts).expect("bind");
+    let addr = server.addr().to_string();
+
+    // a peer from the coordinator's future registers first, while the
+    // barrier is still waiting — it must be turned away, not held
+    let sock = TcpStream::connect(&addr).expect("connect");
+    let hello = ClusterMsg::Hello {
+        version: PROTO_VERSION,
+        client: 2,
+        spec_digest: spec_digest(&spec),
+        join_round: 40,
+    };
+    write_frame(&mut (&sock), &hello.encode()).expect("send hello");
+
+    let handles: Vec<_> = (0..2u16)
+        .map(|id| {
+            let spec = spec.clone();
+            let opts = ClientOpts::new(addr.clone(), id);
+            thread::spawn(move || run_client(&spec, &opts).expect("client run"))
+        })
+        .collect();
+
+    let frame = read_frame(&mut (&sock)).expect("read reply").expect("reply before close");
+    match ClusterMsg::decode(&frame).expect("decode reply") {
+        ClusterMsg::Reject { reason } => {
+            assert!(
+                reason.contains("ahead of the coordinator"),
+                "reason {reason:?} must name the restore skew"
+            );
+        }
+        other => panic!("expected a reject, got {other:?}"),
+    }
+    server.run(&mut []).expect("the run completes without the rejected peer");
+    for h in handles {
+        h.join().expect("client thread");
+    }
+    let _ = fs::remove_dir_all(&dir);
 }

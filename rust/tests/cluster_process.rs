@@ -1,11 +1,19 @@
-//! The real multi-process drill: the `feds` binary serving three client
-//! *processes* over loopback, one of which dies mid-frame partway in.
-//! The server must cut the crashed process, finish the run on partial
-//! aggregation, and stream the membership history to the JSONL sink.
+//! The real multi-process drills: the `feds` binary serving client
+//! *processes* over loopback.
+//!
+//! * One client dies mid-frame partway in: the server must cut the
+//!   crashed process, finish the run on partial aggregation, and stream
+//!   the membership history to the JSONL sink.
+//! * The **coordinator** dies — a true SIGKILL, injected right after a
+//!   round checkpoint — and a replacement process restores the snapshot
+//!   on the same address.  The clients ride through the outage on
+//!   reconnect backoff, the stitched event stream is contiguous, and the
+//!   evaluated records and final accounting are bit-identical to an
+//!   uninterrupted run.
 //!
 //! This is the process-isolation counterpart of `tests/cluster.rs`
-//! (which runs the same protocol on threads); CI additionally runs a
-//! SIGKILL variant of this drill from the workflow.
+//! (which runs the same protocol on threads); CI runs a chaos smoke of
+//! the SIGKILL drill from the workflow as well.
 
 use std::io::{BufRead, BufReader};
 use std::process::{Command, Stdio};
@@ -44,6 +52,7 @@ fn drill_spec() -> ExperimentSpec {
         exec: Default::default(),
         transport: Default::default(),
         shards: 0,
+        participation: Default::default(),
     }
 }
 
@@ -99,4 +108,121 @@ fn three_processes_one_dying_mid_run_complete_via_partial_aggregation() {
     for needle in needles {
         assert!(text.contains(needle), "{needle} missing from the event stream:\n{text}");
     }
+}
+
+/// The coordinator-crash drill: a true SIGKILL (fault-injected right
+/// after the round-3 checkpoint lands), a replacement process restoring
+/// the snapshot on the same address, and three client processes that
+/// ride through the outage on reconnect backoff alone.
+#[test]
+fn sigkilled_coordinator_restores_on_the_same_address_and_completes() {
+    let dir = std::env::temp_dir().join("feds_cluster_sigkill_test");
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    let spec_path = dir.join("spec.json");
+    std::fs::write(&spec_path, drill_spec().to_json().to_string_pretty()).unwrap();
+    let bin = env!("CARGO_BIN_EXE_feds");
+
+    // spawn a coordinator and parse the address it announces
+    let serve = |args: &[&str]| {
+        let mut cmd = Command::new(bin);
+        cmd.args(["serve", "--spec", spec_path.to_str().unwrap()]);
+        cmd.args(args);
+        cmd.args(["--deadline-ms", "20000", "--quiet"]);
+        cmd.stdout(Stdio::piped());
+        let mut child = cmd.spawn().expect("spawn server");
+        let stdout = child.stdout.take().expect("server stdout piped");
+        let mut lines = BufReader::new(stdout).lines();
+        let first = lines.next().expect("server prints its address").expect("read listen line");
+        let addr = first.strip_prefix("listening on ").expect("listen-line prefix").to_string();
+        (child, lines, addr)
+    };
+    let client = |addr: &str, id: usize| {
+        let mut cmd = Command::new(bin);
+        cmd.args(["client", "--spec", spec_path.to_str().unwrap()]);
+        cmd.args(["--connect", addr, "--id", &id.to_string()]);
+        cmd.stdout(Stdio::null()).spawn().expect("spawn client")
+    };
+
+    // the reference: the same spec, never interrupted
+    let ref_jsonl = dir.join("reference.jsonl");
+    let (mut rserver, mut rlines, raddr) =
+        serve(&["--bind", "127.0.0.1:0", "--jsonl", ref_jsonl.to_str().unwrap()]);
+    let mut rclients: Vec<_> = (0..3).map(|id| client(&raddr, id)).collect();
+    for c in &mut rclients {
+        assert!(c.wait().expect("wait client").success(), "reference client completes");
+    }
+    for line in rlines.by_ref() {
+        let _ = line;
+    }
+    assert!(rserver.wait().expect("wait server").success(), "reference run completes");
+
+    // the crash run: checkpoint every round, SIGKILL right after round 3's
+    let ckpt = dir.join("ckpt");
+    let jsonl = dir.join("events.jsonl");
+    let (mut server, mut lines, addr) = serve(&[
+        "--bind",
+        "127.0.0.1:0",
+        "--jsonl",
+        jsonl.to_str().unwrap(),
+        "--checkpoint",
+        ckpt.to_str().unwrap(),
+        "--chaos-kill-at",
+        "3",
+    ]);
+    let mut clients: Vec<_> = (0..3).map(|id| client(&addr, id)).collect();
+    for line in lines.by_ref() {
+        let _ = line; // drain until the SIGKILL severs the pipe
+    }
+    let status = server.wait().expect("wait killed server");
+    assert!(!status.success(), "the coordinator must die by signal, not exit cleanly");
+
+    // the replacement restores the snapshot on the address the clients
+    // are re-dialing with backoff right now
+    let (mut server2, mut lines2, addr2) = serve(&[
+        "--bind",
+        &addr,
+        "--jsonl",
+        jsonl.to_str().unwrap(),
+        "--restore",
+        ckpt.to_str().unwrap(),
+    ]);
+    assert_eq!(addr2, addr, "the replacement binds the clients' address");
+    for c in &mut clients {
+        assert!(c.wait().expect("wait client").success(), "clients ride through the outage");
+    }
+    for line in lines2.by_ref() {
+        let _ = line;
+    }
+    assert!(server2.wait().expect("wait restored server").success(), "restored run completes");
+
+    // contiguous stream: the first segment survives up to its checkpoint
+    // (the sink flushes on checkpoint boundaries), the second finishes
+    let text = std::fs::read_to_string(&jsonl).expect("events.jsonl written");
+    let ckpt_line = text.lines().any(|l| {
+        l.contains(r#""event": "checkpoint_written""#) && l.contains(r#""round": 3"#)
+    });
+    assert!(ckpt_line, "the round-3 checkpoint must be on record:\n{text}");
+    let starts = text.matches(r#""event": "run_start""#).count();
+    assert_eq!(starts, 2, "one run_start per coordinator process:\n{text}");
+    let last = text.trim_end().lines().last().expect("stream is non-empty");
+    assert!(last.contains(r#""event": "run_end""#), "the stream must end closed:\n{text}");
+
+    // bit-identical where it counts: the restored run re-evaluates
+    // nothing, and every evaluated record and the final accounting line
+    // match the uninterrupted reference byte for byte
+    let reference = std::fs::read_to_string(&ref_jsonl).expect("reference.jsonl written");
+    let pick = |t: &str, needle: &str| -> Vec<String> {
+        t.lines().filter(|l| l.contains(needle)).map(str::to_string).collect()
+    };
+    assert_eq!(
+        pick(&text, r#""event": "evaluated""#),
+        pick(&reference, r#""event": "evaluated""#),
+        "evaluated records diverged across the crash/restore boundary"
+    );
+    assert_eq!(
+        pick(&text, r#""event": "run_end""#),
+        pick(&reference, r#""event": "run_end""#),
+        "final params/bytes/messages accounting diverged"
+    );
 }

@@ -44,6 +44,7 @@ fn tiny_spec(algo: AlgoSpec, exec: ExecMode) -> ExperimentSpec {
         exec,
         transport: Default::default(),
         shards: 0,
+        participation: Default::default(),
     }
 }
 

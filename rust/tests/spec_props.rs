@@ -4,7 +4,9 @@
 
 use feds::fed::ExecMode;
 use feds::kge::Method;
-use feds::spec::{AlgoSpec, BackendSpec, BudgetSpec, DataSpec, ExperimentSpec, TransportSpec};
+use feds::spec::{
+    AlgoSpec, BackendSpec, BudgetSpec, DataSpec, ExperimentSpec, ParticipationSpec, TransportSpec,
+};
 use feds::util::json::Json;
 use feds::util::prop;
 use feds::util::rng::Rng;
@@ -74,6 +76,11 @@ fn random_spec(rng: &mut Rng) -> ExperimentSpec {
         exec: if rng.bool(0.5) { ExecMode::Sequential } else { ExecMode::Threaded },
         transport: if rng.bool(0.5) { TransportSpec::Mpsc } else { TransportSpec::Tcp },
         shards: rng.usize_below(17),
+        participation: match rng.usize_below(3) {
+            0 => ParticipationSpec::Full,
+            1 => ParticipationSpec::Fraction(rng.uniform(1e-3, 1.0) as f64),
+            _ => ParticipationSpec::KofN(1 + rng.usize_below(clients)),
+        },
     }
 }
 
