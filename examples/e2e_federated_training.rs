@@ -54,6 +54,7 @@ fn main() -> anyhow::Result<()> {
         transport: Default::default(),
         shards: 0,
         participation: Default::default(),
+        storage: Default::default(),
     };
     let mut session = Session::with_runtime(rt);
 

@@ -57,6 +57,8 @@ fn main() -> anyhow::Result<()> {
                 exec: ExecMode::Sequential,
                 transport: TransportSpec::Mpsc,
                 shards: 1,
+                participation: Default::default(),
+                storage: Default::default(),
             };
             run_params(&data, &cfg, &backend, &mut [])
         };

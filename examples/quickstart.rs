@@ -65,6 +65,7 @@ fn main() -> anyhow::Result<()> {
         transport: Default::default(),
         shards: 0,
         participation: Default::default(),
+        storage: Default::default(),
     };
     // every spec is JSON-serializable: println!("{}", spec.to_json()) is a
     // ready-made `feds run --spec` file

@@ -56,6 +56,7 @@ fn bench_spec(rounds: usize) -> ExperimentSpec {
         transport: Default::default(),
         shards: 0,
         participation: Default::default(),
+        storage: Default::default(),
     }
 }
 

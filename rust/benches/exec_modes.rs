@@ -47,6 +47,8 @@ fn main() {
             exec: ExecMode::Sequential,
             transport: TransportSpec::Mpsc,
             shards: auto_shards(),
+            participation: Default::default(),
+            storage: Default::default(),
         };
         let name = algo.label();
 

@@ -8,8 +8,9 @@ use std::rc::Rc;
 
 use feds::data::dataset::{BatchIter, EvalSet, FilterIndex};
 use feds::data::generator::{generate, GeneratorConfig};
-use feds::kge::{Method, Table};
+use feds::kge::Method;
 use feds::runtime::Runtime;
+use feds::store::StoreTable;
 use feds::trainer::{LocalTrainer, XlaTrainer};
 use feds::util::bench::{bb, Bench};
 use feds::util::rng::Rng;
@@ -71,7 +72,7 @@ fn main() {
         });
 
         let we = t.entity_width();
-        let hist = Table::zeros(m.num_entities, we);
+        let hist = StoreTable::zeros(m.num_entities, we);
         let ids: Vec<u32> = (0..m.num_entities as u32).collect();
         b.bench(&format!("change_scores/{}", method.name()), || {
             bb(t.change_scores(&ids, &hist).unwrap())

@@ -1,0 +1,172 @@
+//! Million-entity scale trajectory (the storage subsystem's cap):
+//! `cargo bench --bench scale` (`FEDS_BENCH_FAST=1` for the CI smoke run).
+//!
+//! Two claims, one trajectory point (`BENCH_scale.json`):
+//!
+//! 1. **Per-round server cost is O(touched rows), not O(E).**  A full
+//!    communication phase (`begin_round` + `receive` + `fede_download`)
+//!    against an mmap-backed accumulator is timed at E = 100k and
+//!    E = 1M with the *same* K touched rows; `scale_round_ratio` is the
+//!    large/small time ratio, which stays near 1 when the round never
+//!    walks the table (`scripts/bench_gate.py` caps it).
+//!
+//! 2. **A million-entity federated run fits in a fraction of its dense
+//!    table footprint.**  An end-to-end FedS run at E = 1M on the mmap
+//!    backend is driven through `spec::Session`; `rss_fraction` is the
+//!    process peak RSS over the summed dense size of every
+//!    O(entities × width) table the run owns (per-client model + Adam
+//!    moments + history, plus the server accumulator).  Only touched
+//!    pages of the mmap-backed tables ever become resident, so the
+//!    fraction stays well below 1 (gated at 0.75).
+
+use std::time::Instant;
+
+use feds::fed::{ExecMode, Server};
+use feds::kge::Method;
+use feds::spec::{AlgoSpec, BackendSpec, BudgetSpec, DataSpec, ExperimentSpec, Session};
+use feds::store::StorageSpec;
+use feds::util::bench::{bb, peak_rss_bytes, write_trajectory, Bench};
+use feds::util::json::Json;
+
+/// Touched rows per round in the server sweep — fixed across E.
+const TOUCHED_K: usize = 2048;
+const SWEEP_WIDTH: usize = 64;
+const SWEEP_CLIENTS: usize = 2;
+
+const RUN_ENTITIES: usize = 1_000_000;
+const RUN_DIM: usize = 32;
+const RUN_CLIENTS: usize = 3;
+
+/// One timed server round at `num_entities` with K touched rows: the
+/// upload ids are spread evenly over the whole id space so every shard
+/// participates, and both clients share the same list so aggregation
+/// actually averages.
+fn server_round_ms(b: &mut Bench, num_entities: usize, label: &str) -> f64 {
+    let ids: Vec<u32> = (0..TOUCHED_K)
+        .map(|i| (i as u64 * num_entities as u64 / TOUCHED_K as u64) as u32)
+        .collect();
+    let rows = vec![0.01f32; TOUCHED_K * SWEEP_WIDTH];
+    let shared = vec![ids.clone(); SWEEP_CLIENTS];
+    let mut server = Server::with_store(
+        num_entities,
+        SWEEP_WIDTH,
+        shared,
+        4,
+        &StorageSpec::Mmap { dir: None },
+    )
+    .expect("mmap store");
+    let stats = b.bench(&format!("round/mmap_{label}_k{TOUCHED_K}"), || {
+        server.begin_round();
+        for c in 0..SWEEP_CLIENTS as u16 {
+            server.receive(c, &ids, &rows);
+        }
+        bb(server.fede_download(0).len())
+    });
+    stats.mean_ns / 1e6
+}
+
+fn main() {
+    let fast = std::env::var("FEDS_BENCH_FAST").as_deref() == Ok("1");
+    let mut b = Bench::from_env("scale");
+
+    // -- claim 1: round time vs E at fixed K --------------------------------
+    let round_small_ms = server_round_ms(&mut b, 100_000, "e100k");
+    let round_large_ms = server_round_ms(&mut b, RUN_ENTITIES, "e1m");
+    let scale_round_ratio = round_large_ms / round_small_ms.max(1e-9);
+    b.report_value("scale_round_ratio", scale_round_ratio, "x (1M / 100k)");
+
+    // -- claim 2: end-to-end E = 1M run on the mmap backend -----------------
+    // Entity coverage in the generator emits one triple per otherwise-
+    // unseen entity, so the KG carries ~E triples regardless of
+    // `triples`; one local epoch then touches every local entity.  The
+    // RSS saving is the non-local rows of each client's full-width
+    // tables plus the never-touched rows of history and accumulator.
+    let rounds = if fast { 1 } else { 2 };
+    let spec = ExperimentSpec {
+        name: "scale_e1m".to_string(),
+        method: Method::TransE,
+        algo: AlgoSpec::FedS { sparsity: 0.2, sync_interval: 2, sync: true },
+        data: DataSpec {
+            entities: RUN_ENTITIES,
+            relations: 64,
+            triples: 200_000,
+            clusters: 16,
+            clients: RUN_CLIENTS,
+            seed: 11,
+        },
+        backend: BackendSpec::Native {
+            dim: RUN_DIM,
+            learning_rate: 3e-3,
+            batch: 512,
+            negatives: 16,
+            // one query per eval batch keeps the O(eval_batch × E)
+            // rank filter at 4 MB instead of swamping the RSS claim
+            eval_batch: 1,
+        },
+        budget: BudgetSpec {
+            max_rounds: rounds,
+            local_epochs: 1,
+            eval_every: rounds,
+            patience: 3,
+            eval_cap: 4,
+        },
+        seed: 7,
+        exec: ExecMode::Sequential,
+        transport: Default::default(),
+        shards: 0,
+        participation: Default::default(),
+        storage: StorageSpec::Mmap { dir: None },
+    };
+
+    let wall = Instant::now();
+    let mut run = Session::new().build(&spec).expect("build E=1M run");
+    run.quiet();
+    let out = run.execute().expect("execute E=1M run");
+    let run_wall_s = wall.elapsed().as_secs_f64();
+    assert!(!out.history.records.is_empty(), "run produced no history");
+    b.report_value("run_e1m_wall", run_wall_s, "s");
+
+    // every full-size table the run owns, at dense (all-resident) size:
+    // per client ent + Adam m + Adam v + FedS history, plus the server
+    // accumulator — relation tables are O(R) and negligible.
+    let width = Method::TransE.entity_width(RUN_DIM);
+    let row_bytes = (RUN_ENTITIES * width * std::mem::size_of::<f32>()) as u64;
+    let dense_table_bytes = (4 * RUN_CLIENTS as u64 + 1) * row_bytes;
+
+    let mut point = Json::obj()
+        .set("suite", "scale")
+        .set("entities_small", 100_000u64)
+        .set("entities_large", RUN_ENTITIES as u64)
+        .set("width", SWEEP_WIDTH as u64)
+        .set("touched_k", TOUCHED_K as u64)
+        .set("round_small_ms", round_small_ms)
+        .set("round_large_ms", round_large_ms)
+        .set("scale_round_ratio", scale_round_ratio)
+        .set("run_entities", RUN_ENTITIES as u64)
+        .set("run_dim", RUN_DIM as u64)
+        .set("run_clients", RUN_CLIENTS as u64)
+        .set("run_rounds", rounds as u64)
+        .set("run_wall_s", run_wall_s)
+        .set("dense_table_bytes", dense_table_bytes);
+    match peak_rss_bytes() {
+        Some(peak) => {
+            let rss_fraction = peak as f64 / dense_table_bytes as f64;
+            assert!(
+                rss_fraction < 1.0,
+                "peak RSS {peak} reached dense table size {dense_table_bytes}: \
+                 the mmap backend is no longer O(touched rows)"
+            );
+            b.report_value("peak_rss", peak as f64 / (1024.0 * 1024.0), "MiB");
+            b.report_value("rss_fraction", rss_fraction, "of dense tables");
+            point = point.set("peak_rss_bytes", peak).set("rss_fraction", rss_fraction);
+        }
+        // off-Linux: no procfs — the ratio claim still gates
+        None => eprintln!("warning: peak RSS unavailable; rss_fraction omitted"),
+    }
+    write_trajectory("BENCH_scale", &point);
+    println!(
+        "scale: round {round_small_ms:.2} ms @100k vs {round_large_ms:.2} ms @1M \
+         (ratio {scale_round_ratio:.2}), E=1M run {run_wall_s:.1} s"
+    );
+    b.finish();
+}

@@ -5,14 +5,19 @@
 //! entity usage, relation-typed structure), and `partition` applies the same
 //! relation-partitioning pipeline the paper used to build
 //! FB15k-237-R10/R5/R3 (DESIGN.md §5).
+//!
+//! Both ends stream: `generator::stream` yields triples one at a time
+//! (bit-identical to collecting `generate`), and `partition_stream`
+//! routes them straight into per-client splits — a million-entity KG is
+//! partitioned without ever holding the full triple list in one buffer.
 
 pub mod dataset;
 pub mod generator;
 pub mod partition;
 
 pub use dataset::{Batch, BatchIter, ClientData, EvalBatch, EvalSet, FilterIndex};
-pub use generator::{generate, GeneratorConfig, Kg};
-pub use partition::{partition, FedDataset};
+pub use generator::{generate, stream, GeneratorConfig, Kg};
+pub use partition::{partition, partition_stream, FedDataset};
 
 /// A (head, relation, tail) triple over global ids.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]

@@ -27,24 +27,45 @@ pub struct FedDataset {
 /// Partition a KG into `num_clients` clients by relation (even split),
 /// then split each client 0.8/0.1/0.1.
 pub fn partition(kg: &Kg, num_clients: usize, seed: u64) -> FedDataset {
+    partition_stream(
+        kg.num_entities,
+        kg.num_relations,
+        kg.triples.iter().copied(),
+        num_clients,
+        seed,
+    )
+}
+
+/// [`partition`] over a triple stream: rows are routed into per-client
+/// splits as they arrive, so the full KG is never materialized in one
+/// list.  Identical RNG schedule (and therefore bit-identical output)
+/// to partitioning a collected [`Kg`] — the relation split draws before
+/// any triple is consumed, the per-client shuffles after all are.
+pub fn partition_stream(
+    num_entities: usize,
+    num_relations: usize,
+    triples: impl IntoIterator<Item = Triple>,
+    num_clients: usize,
+    seed: u64,
+) -> FedDataset {
     assert!(num_clients >= 2);
     assert!(
-        kg.num_relations >= num_clients,
+        num_relations >= num_clients,
         "need at least one relation per client"
     );
     let mut rng = Rng::new(seed ^ 0x9A27_1EED);
 
     // Even relation split (shuffled round-robin, like the paper's datasets).
-    let mut rels: Vec<u32> = (0..kg.num_relations as u32).collect();
+    let mut rels: Vec<u32> = (0..num_relations as u32).collect();
     rng.shuffle(&mut rels);
-    let mut rel_owner = vec![0u16; kg.num_relations];
+    let mut rel_owner = vec![0u16; num_relations];
     for (i, r) in rels.iter().enumerate() {
         rel_owner[*r as usize] = (i % num_clients) as u16;
     }
 
     let mut per_client: Vec<Vec<Triple>> = vec![Vec::new(); num_clients];
-    for t in &kg.triples {
-        per_client[rel_owner[t.r as usize] as usize].push(*t);
+    for t in triples {
+        per_client[rel_owner[t.r as usize] as usize].push(t);
     }
 
     let mut clients = Vec::with_capacity(num_clients);
@@ -54,25 +75,27 @@ pub fn partition(kg: &Kg, num_clients: usize, seed: u64) -> FedDataset {
         let n_test = n / 10;
         let n_valid = n / 10;
         let n_train = n - n_test - n_valid;
-        let train = triples[..n_train].to_vec();
-        let valid = triples[n_train..n_train + n_valid].to_vec();
-        let test = triples[n_train + n_valid..].to_vec();
-        clients.push(ClientData::new(id as u16, train, valid, test, kg.num_entities));
+        // split off back-to-front so each piece drops to its final
+        // capacity instead of cloning out of one long-lived buffer
+        let test = triples.split_off(n_train + n_valid);
+        let valid = triples.split_off(n_train);
+        let train = triples;
+        clients.push(ClientData::new(id as u16, train, valid, test, num_entities));
     }
 
-    let mut owners: Vec<Vec<u16>> = vec![Vec::new(); kg.num_entities];
+    let mut owners: Vec<Vec<u16>> = vec![Vec::new(); num_entities];
     for c in &clients {
         for &e in &c.entities {
             owners[e as usize].push(c.id);
         }
     }
-    let shared: Vec<u32> = (0..kg.num_entities as u32)
+    let shared: Vec<u32> = (0..num_entities as u32)
         .filter(|&e| owners[e as usize].len() >= 2)
         .collect();
 
     FedDataset {
-        num_entities: kg.num_entities,
-        num_relations: kg.num_relations,
+        num_entities,
+        num_relations,
         clients,
         owners,
         shared,
@@ -194,6 +217,30 @@ mod tests {
             total as f64 / f.num_entities as f64
         };
         assert!(avg_owners(&f6) >= avg_owners(&f3));
+    }
+
+    #[test]
+    fn streamed_partition_matches_materialized() {
+        let cfg = GeneratorConfig {
+            num_entities: 256,
+            num_relations: 12,
+            num_triples: 3000,
+            num_clusters: 4,
+            seed: 3,
+            ..Default::default()
+        };
+        let batch = partition(&generate(&cfg), 3, 9);
+        let s = crate::data::generator::stream(&cfg);
+        let streamed = partition_stream(cfg.num_entities, cfg.num_relations, s, 3, 9);
+        assert_eq!(streamed.num_entities, batch.num_entities);
+        assert_eq!(streamed.shared, batch.shared);
+        assert_eq!(streamed.owners, batch.owners);
+        for (s, b) in streamed.clients.iter().zip(&batch.clients) {
+            assert_eq!(s.train, b.train);
+            assert_eq!(s.valid, b.valid);
+            assert_eq!(s.test, b.test);
+            assert_eq!(s.entities, b.entities);
+        }
     }
 
     #[test]

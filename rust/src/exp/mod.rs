@@ -128,6 +128,7 @@ impl Ctx {
             transport: crate::comm::transport::TransportSpec::Mpsc,
             shards: 0,
             participation: Default::default(),
+            storage: Default::default(),
         }
     }
 

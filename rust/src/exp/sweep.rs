@@ -446,6 +446,7 @@ mod tests {
             transport: Default::default(),
             shards: 0,
             participation: Default::default(),
+            storage: Default::default(),
         }
     }
 

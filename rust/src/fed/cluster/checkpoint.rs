@@ -18,7 +18,6 @@
 
 use std::fmt;
 use std::fs;
-use std::io::Write as _;
 use std::path::{Path, PathBuf};
 
 use crate::comm::wire::{WireReader, WireWriter};
@@ -256,15 +255,7 @@ pub fn checkpoint_path(dir: &Path) -> PathBuf {
 /// Returns the snapshot size in bytes.
 pub fn save(dir: &Path, ckpt: &Checkpoint) -> Result<u64, CheckpointError> {
     fs::create_dir_all(dir)?;
-    let bytes = ckpt.encode();
-    let tmp = dir.join(format!("{FILE}.tmp"));
-    {
-        let mut f = fs::File::create(&tmp)?;
-        f.write_all(&bytes)?;
-        f.sync_all()?;
-    }
-    fs::rename(&tmp, checkpoint_path(dir))?;
-    Ok(bytes.len() as u64)
+    Ok(crate::util::fsio::atomic_write(&checkpoint_path(dir), &ckpt.encode())?)
 }
 
 /// Load and validate the snapshot in `dir` against this server's spec

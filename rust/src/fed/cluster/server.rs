@@ -527,7 +527,7 @@ fn drive_cluster(
     } else {
         Vec::new()
     };
-    let mut side: ServerSide = server_side(data, params, width, refs);
+    let mut side: ServerSide = server_side(data, params, width, refs)?;
     let n = data.clients.len();
     emit(observers, &RunEvent::RunStart { label: side.label.clone(), clients: n, width });
 

@@ -28,7 +28,11 @@
 //!
 //! Entry points: describe runs with [`crate::spec::ExperimentSpec`] and
 //! execute them through [`crate::spec::Session`], which derives the
-//! resolved [`RoundParams`] and drives the engine ([`run_params`]).  The
+//! resolved [`RoundParams`] and drives the engine ([`run_params`]).
+//! Every O(entities × width) table the loop owns — client models, Adam
+//! moments, FedS history, the server accumulator — is hosted on a
+//! [`crate::store::EmbedStore`] backend chosen by `RoundParams::storage`
+//! (in-RAM or mmap-backed files, bit-identical results).  The
 //! `cluster` module deploys the same engine across OS processes: a
 //! routable TCP server plus independent client processes, with round
 //! deadlines, partial aggregation and rejoin-with-resync semantics.

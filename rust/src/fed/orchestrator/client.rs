@@ -19,6 +19,7 @@ use crate::fed::compression::SvdCodec;
 use crate::fed::protocol::Download;
 use crate::kge::Table;
 use crate::metrics::RankMetrics;
+use crate::store::{StorageSpec, StoreTable};
 use crate::trainer::{evaluate, LocalTrainer};
 use crate::util::rng::Rng;
 
@@ -31,8 +32,10 @@ pub struct ClientCtx {
     pub trainer: Box<dyn LocalTrainer>,
     /// shared entities (sorted global ids) — the communicated set N_c
     pub shared: Vec<u32>,
-    /// FedS history table E^h (full-size; only shared rows meaningful)
-    pub hist: Option<Table>,
+    /// FedS history table E^h (full-size; only shared rows meaningful).
+    /// Storage-backed: on the mmap backend only touched pages of this
+    /// O(entities × width) table become resident.
+    pub hist: Option<StoreTable>,
     /// SVD variants: the client's copy of the agreed reference state
     pub svd_ref: Option<Table>,
     pub filters: FilterIndex,
@@ -57,6 +60,25 @@ pub(crate) fn initial_table(
     width: usize,
 ) -> Result<Table> {
     let mut t = Table::zeros(num_entities, width);
+    let rows = trainer.get_entity_rows(shared)?;
+    for (k, &id) in shared.iter().enumerate() {
+        t.set_row(id as usize, &rows[k * width..(k + 1) * width]);
+    }
+    Ok(t)
+}
+
+/// [`initial_table`] on a pluggable storage backend: the FedS history
+/// table E^h lives wherever the run's `StorageSpec` says.  Only the
+/// shared rows are ever written, so an mmap-backed table stays sparse
+/// on disk and in RSS.
+pub(crate) fn initial_store(
+    trainer: &mut dyn LocalTrainer,
+    shared: &[u32],
+    num_entities: usize,
+    width: usize,
+    storage: &StorageSpec,
+) -> Result<StoreTable> {
+    let mut t = StoreTable::zeros_in(storage, num_entities, width)?;
     let rows = trainer.get_entity_rows(shared)?;
     for (k, &id) in shared.iter().enumerate() {
         t.set_row(id as usize, &rows[k * width..(k + 1) * width]);
@@ -105,7 +127,13 @@ impl<'d> ClientRunner<'d> {
         let mut hist = None;
         let mut svd_ref = None;
         if matches!(params.algo, Algo::FedS { .. }) {
-            hist = Some(initial_table(trainer.as_mut(), &shared, data.num_entities, width)?);
+            hist = Some(initial_store(
+                trainer.as_mut(),
+                &shared,
+                data.num_entities,
+                width,
+                &params.storage,
+            )?);
         } else if matches!(params.algo, Algo::FedSvd { .. }) {
             svd_ref = Some(initial_table(trainer.as_mut(), &shared, data.num_entities, width)?);
         }

@@ -445,6 +445,7 @@ mod tests {
     use crate::data::Triple;
     use crate::data::dataset::{EvalSet, FilterIndex};
     use crate::kge::Hyper;
+    use crate::store::StoreTable;
     use crate::trainer::{LocalTrainer, NativeTrainer};
 
     fn empty_ctx_parts(e: usize) -> (FilterIndex, EvalSet, EvalSet) {
@@ -467,7 +468,7 @@ mod tests {
         let width = trainer.entity_width();
         trainer.set_entity_rows(&shared, &[1.0, 0.0, 0.0, 2.0, 3.0, 3.0]).unwrap();
         // history: cos(cur, hist) = 1, 0.707, 0 → change scores 0 < 0.3 < 1
-        let mut hist = Table::zeros(e, width);
+        let mut hist = StoreTable::zeros(e, width);
         hist.set_row(1, &[1.0, 0.0]);
         hist.set_row(3, &[2.0, 2.0]);
         hist.set_row(5, &[-3.0, 3.0]);

@@ -187,7 +187,15 @@ pub(crate) fn native_trainer(
     } else {
         hyper.clone()
     };
-    Ok(NativeTrainer::new(params.method, hyper, num_entities, num_relations, eval_batch, rng))
+    NativeTrainer::with_store(
+        params.method,
+        hyper,
+        num_entities,
+        num_relations,
+        eval_batch,
+        &params.storage,
+        rng,
+    )
 }
 
 /// How client-side work executes within a round.
@@ -311,10 +319,11 @@ pub(crate) fn server_side(
     params: &RoundParams,
     width: usize,
     refs: Vec<Table>,
-) -> ServerSide {
+) -> Result<ServerSide> {
     let shared: Vec<Vec<u32>> =
         data.clients.iter().map(|c| data.shared_entities_of(c.id)).collect();
-    let server = Server::with_shards(data.num_entities, width, shared, params.shards);
+    let server =
+        Server::with_store(data.num_entities, width, shared, params.shards, &params.storage)?;
     let exchange = exchange::server_half(params, width, refs);
     let label = format!(
         "{}-{}-{}c",
@@ -335,7 +344,7 @@ pub(crate) fn server_side(
         params.transport.label(),
         server.num_shards()
     );
-    ServerSide { server, exchange, weights: data.test_weights(), label }
+    Ok(ServerSide { server, exchange, weights: data.test_weights(), label })
 }
 
 /// The driver's view of the client fleet.  The server-side round loop is
@@ -568,7 +577,7 @@ fn run_sequential(
     } else {
         Vec::new()
     };
-    let mut side = server_side(data, params, width, refs);
+    let mut side = server_side(data, params, width, refs)?;
     emit(
         observers,
         &RunEvent::RunStart {
@@ -623,7 +632,7 @@ fn run_threaded(
     } else {
         Vec::new()
     };
-    let mut side = server_side(data, params, width, refs);
+    let mut side = server_side(data, params, width, refs)?;
     emit(
         observers,
         &RunEvent::RunStart {

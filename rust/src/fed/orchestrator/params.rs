@@ -12,6 +12,7 @@
 use crate::comm::transport::TransportSpec;
 use crate::kge::Method;
 use crate::spec::{AlgoSpec, ExperimentSpec, ParticipationSpec};
+use crate::store::StorageSpec;
 
 use super::{Algo, Backend, ExecMode};
 
@@ -57,6 +58,10 @@ pub struct RoundParams {
     /// per-round client sampling policy — enforced by the cluster
     /// coordinator only; the in-process engine always runs every client
     pub participation: ParticipationSpec,
+    /// backend for every O(entities × width) table (server shard
+    /// accumulators, entity embeddings, Adam moments, FedS history) —
+    /// results are bit-identical across backends
+    pub storage: StorageSpec,
 }
 
 impl RoundParams {
@@ -101,6 +106,7 @@ impl RoundParams {
             transport: spec.transport,
             shards: if spec.shards > 0 { spec.shards } else { auto_shards() },
             participation: spec.participation,
+            storage: spec.storage.clone(),
         }
     }
 }
@@ -139,6 +145,7 @@ mod tests {
             transport: TransportSpec::Mpsc,
             shards: 0,
             participation: Default::default(),
+            storage: Default::default(),
         }
     }
 

@@ -23,6 +23,7 @@
 
 use std::collections::HashMap;
 
+use crate::store::{StorageSpec, StoreTable};
 use crate::util::rng::Rng;
 
 use super::topk::select_by_priority;
@@ -54,10 +55,13 @@ fn split_segments<'a, T>(
 struct Shard {
     lo: usize,
     hi: usize,
-    /// Σ of all uploads this round for entities in range ((hi-lo) × W).
-    /// Invariant: entities not in `dirty` have an all-zero sum row and a
-    /// zero count, so per-round reset work scales with what was uploaded.
-    sum: Vec<f32>,
+    /// Σ of all uploads this round for entities in range ((hi-lo) × W),
+    /// on the run's storage backend ([`StoreTable`] — under mmap the
+    /// zero-initialized accumulator is a sparse file, so only uploaded
+    /// rows ever become resident).  Invariant: entities not in `dirty`
+    /// have an all-zero sum row and a zero count, so per-round reset work
+    /// scales with what was uploaded.
+    sum: StoreTable,
     /// number of uploaders this round, per in-range entity
     count: Vec<u32>,
     /// in-range entities (global ids) with ≥1 upload this round, in
@@ -70,10 +74,10 @@ struct Shard {
 }
 
 impl Shard {
-    fn begin_round(&mut self, w: usize) {
+    fn begin_round(&mut self, _w: usize) {
         for &id in &self.dirty {
             let e = id as usize - self.lo;
-            self.sum[e * w..(e + 1) * w].fill(0.0);
+            self.sum.row_mut(e).fill(0.0);
             self.count[e] = 0;
         }
         self.dirty.clear();
@@ -94,7 +98,7 @@ impl Shard {
                 self.dirty.push(id);
             }
             self.count[e] += 1;
-            let dst = &mut self.sum[e * w..(e + 1) * w];
+            let dst = self.sum.row_mut(e);
             for (d, &v) in dst.iter_mut().zip(row) {
                 *d += v;
             }
@@ -108,7 +112,7 @@ impl Shard {
         for (k, &id) in ids.iter().enumerate() {
             let e = id as usize - self.lo;
             let n = self.count[e].max(1) as f32;
-            let src = &self.sum[e * w..(e + 1) * w];
+            let src = self.sum.row(e);
             for (o, &s) in out[k * w..(k + 1) * w].iter_mut().zip(src) {
                 *o = s / n;
             }
@@ -143,7 +147,7 @@ impl Shard {
             }
             let e = id as usize - self.lo;
             let out = &mut rows_out[j * w..(j + 1) * w];
-            out.copy_from_slice(&self.sum[e * w..(e + 1) * w]);
+            out.copy_from_slice(self.sum.row(e));
             if let Some(&off) = self.uploaded[client].get(&id) {
                 let own = &self.rows[client][off..off + w];
                 for (o, &v) in out.iter_mut().zip(own) {
@@ -181,24 +185,40 @@ impl Server {
         shared: Vec<Vec<u32>>,
         n_shards: usize,
     ) -> Self {
+        Self::with_store(num_entities, width, shared, n_shards, &StorageSpec::Ram)
+            .expect("in-RAM storage is infallible")
+    }
+
+    /// [`Server::with_shards`] with the per-shard accumulators on the
+    /// selected storage backend.  The shard decomposition doubles as the
+    /// store decomposition: one store per shard, mutated only by its own
+    /// scoped thread, so the concurrency story is unchanged.  Results
+    /// are bit-identical across backends.
+    pub fn with_store(
+        num_entities: usize,
+        width: usize,
+        shared: Vec<Vec<u32>>,
+        n_shards: usize,
+        storage: &StorageSpec,
+    ) -> anyhow::Result<Self> {
         let n = n_shards.clamp(1, num_entities.max(1));
         let n_clients = shared.len();
         let shards = (0..n)
             .map(|s| {
                 let lo = s * num_entities / n;
                 let hi = (s + 1) * num_entities / n;
-                Shard {
+                Ok(Shard {
                     lo,
                     hi,
-                    sum: vec![0.0; (hi - lo) * width],
+                    sum: StoreTable::zeros_in(storage, hi - lo, width)?,
                     count: vec![0; hi - lo],
                     dirty: Vec::new(),
                     uploaded: vec![HashMap::new(); n_clients],
                     rows: vec![Vec::new(); n_clients],
-                }
+                })
             })
-            .collect();
-        Self { num_entities, width, shared, shards, par_min_work: PAR_MIN_WORK }
+            .collect::<anyhow::Result<Vec<_>>>()?;
+        Ok(Self { num_entities, width, shared, shards, par_min_work: PAR_MIN_WORK })
     }
 
     pub fn n_clients(&self) -> usize {
@@ -529,6 +549,32 @@ mod tests {
             assert_eq!(prev_hi, e);
             assert_eq!(covered, e);
         }
+    }
+
+    /// The shard accumulator must behave bit-identically whether it lives
+    /// in RAM or in an mmap-backed store (ISSUE 9 acceptance).
+    #[test]
+    fn mmap_accumulator_matches_ram_bit_exactly() {
+        let dir = std::env::temp_dir().join(format!("feds-server-store-{}", std::process::id()));
+        let mmap = StorageSpec::Mmap { dir: Some(dir.to_string_lossy().into_owned()) };
+        let shared = vec![vec![0u32, 1, 2], vec![0, 1, 2]];
+        let run = |storage: &StorageSpec| {
+            let mut s = Server::with_store(4, 2, shared.clone(), 3, storage).unwrap();
+            s.begin_round();
+            s.receive(0, &[0, 2], &[1.5, -1.0, 3.0, 0.25]);
+            s.receive(1, &[0, 1], &[2.5, 2.0, -0.5, 4.0]);
+            let mut rng = Rng::new(7);
+            (s.fede_download(0), s.feds_download(0, 2, &mut rng), s.dirty_len())
+        };
+        let ram = run(&StorageSpec::Ram);
+        let via_mmap = run(&mmap);
+        let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        assert_eq!(bits(&ram.0), bits(&via_mmap.0));
+        assert_eq!(ram.1 .0, via_mmap.1 .0);
+        assert_eq!(bits(&ram.1 .1), bits(&via_mmap.1 .1));
+        assert_eq!(ram.1 .2, via_mmap.1 .2);
+        assert_eq!(ram.2, via_mmap.2);
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     /// Property: for random upload patterns, every shard count — inline

@@ -14,6 +14,7 @@
 pub mod kernels;
 pub mod native;
 
+use crate::store::{StorageSpec, StoreTable};
 use crate::util::rng::Rng;
 
 /// The three KGE methods from the paper's experiments (§IV-B).
@@ -197,8 +198,13 @@ fn powu(b: f32, n: u64) -> f32 {
 /// `lazy_adam_catch_up_matches_dense_zero_grad_steps`.
 #[derive(Clone, Debug)]
 pub struct LazyAdam {
-    pub m: Vec<f32>,
-    pub v: Vec<f32>,
+    /// First moments, one row per table row ([`StoreTable`] so huge-table
+    /// runs keep moments on the same backend as the embeddings — sparse
+    /// zeros under mmap mean a row's moments only become resident once it
+    /// is touched).
+    pub m: StoreTable,
+    /// Second moments, same layout as `m`.
+    pub v: StoreTable,
     /// 1-based step at which each row's moments were last advanced
     /// (0 = never touched).
     pub last_step: Vec<u64>,
@@ -207,12 +213,17 @@ pub struct LazyAdam {
 
 impl LazyAdam {
     pub fn new(rows: usize, width: usize) -> Self {
-        Self {
-            m: vec![0.0; rows * width],
-            v: vec![0.0; rows * width],
+        Self::new_in(&StorageSpec::Ram, rows, width).expect("in-RAM storage is infallible")
+    }
+
+    /// Moment state on the selected storage backend.
+    pub fn new_in(spec: &StorageSpec, rows: usize, width: usize) -> anyhow::Result<Self> {
+        Ok(Self {
+            m: StoreTable::zeros_in(spec, rows, width)?,
+            v: StoreTable::zeros_in(spec, rows, width)?,
             last_step: vec![0; rows],
             width,
-        }
+        })
     }
 
     pub fn width(&self) -> usize {
@@ -229,10 +240,11 @@ impl LazyAdam {
         let gap = step - last;
         let d1 = powu(h.adam_beta1, gap);
         let d2 = powu(h.adam_beta2, gap);
-        let off = row * self.width;
-        for k in off..off + self.width {
-            self.m[k] *= d1;
-            self.v[k] *= d2;
+        for x in self.m.row_mut(row) {
+            *x *= d1;
+        }
+        for x in self.v.row_mut(row) {
+            *x *= d2;
         }
         self.last_step[row] = step;
     }
@@ -249,12 +261,13 @@ impl LazyAdam {
         let b2 = h.adam_beta2;
         let bc1 = 1.0 - b1.powi(step as i32);
         let bc2 = 1.0 - b2.powi(step as i32);
-        let off = row * self.width;
-        for k in 0..self.width {
-            let m = b1 * self.m[off + k] + (1.0 - b1) * g[k];
-            let v = b2 * self.v[off + k] + (1.0 - b2) * g[k] * g[k];
-            self.m[off + k] = m;
-            self.v[off + k] = v;
+        let mr = self.m.row_mut(row);
+        let vr = self.v.row_mut(row);
+        for k in 0..g.len() {
+            let m = b1 * mr[k] + (1.0 - b1) * g[k];
+            let v = b2 * vr[k] + (1.0 - b2) * g[k] * g[k];
+            mr[k] = m;
+            vr[k] = v;
             let mh = m / bc1;
             let vh = v / bc2;
             p[k] -= h.learning_rate * mh / (vh.sqrt() + h.adam_eps);

@@ -32,6 +32,7 @@
 //! OS threads with bit-identical results for any thread count.
 
 use crate::data::dataset::{Batch, EvalBatch};
+use crate::store::{StorageSpec, StoreTable};
 use crate::util::rng::Rng;
 
 use super::kernels::{self, KernelSet, MOD_EPS};
@@ -143,7 +144,10 @@ struct StepScratch {
 pub struct NativeModel {
     pub method: Method,
     pub hyper: Hyper,
-    pub ent: Table,
+    /// Entity table on the run's storage backend ([`StoreTable`]): the
+    /// O(E·width) state that moves to mmap for million-entity runs.  The
+    /// relation table stays a plain [`Table`] — R is small.
+    pub ent: StoreTable,
     pub rel: Table,
     pub ent_adam: LazyAdam,
     pub rel_adam: LazyAdam,
@@ -172,18 +176,34 @@ impl NativeModel {
         num_relations: usize,
         rng: &mut Rng,
     ) -> Self {
+        Self::with_store(method, hyper, num_entities, num_relations, &StorageSpec::Ram, rng)
+            .expect("in-RAM storage is infallible")
+    }
+
+    /// Like [`NativeModel::new`] with the entity-scaled state (entity
+    /// table + its Adam moments) on the selected storage backend.  The
+    /// RNG draw order is backend-independent, so results are
+    /// bit-identical across backends.
+    pub fn with_store(
+        method: Method,
+        hyper: Hyper,
+        num_entities: usize,
+        num_relations: usize,
+        storage: &StorageSpec,
+        rng: &mut Rng,
+    ) -> anyhow::Result<Self> {
         let we = method.entity_width(hyper.dim);
         let wr = method.relation_width(hyper.dim);
         let range = hyper.embedding_range();
-        let ent = Table::init_uniform(num_entities, we, range, rng);
+        let ent = StoreTable::init_uniform_in(storage, num_entities, we, range, rng)?;
         let rel = Table::init_uniform(num_relations, wr, range, rng);
-        let ent_adam = LazyAdam::new(num_entities, we);
+        let ent_adam = LazyAdam::new_in(storage, num_entities, we)?;
         let rel_adam = LazyAdam::new(num_relations, wr);
         let g_ent = SparseGrad::new(num_entities, we);
         let g_rel = SparseGrad::new(num_relations, wr);
         let kernels = KernelSet::select(we);
         let scratch = StepScratch { neg_slot: vec![UNTOUCHED; num_entities], ..Default::default() };
-        Self {
+        Ok(Self {
             method,
             hyper,
             ent,
@@ -196,7 +216,7 @@ impl NativeModel {
             g_ent,
             g_rel,
             scratch,
-        }
+        })
     }
 
     /// One training step on a padded batch; returns the loss.  Work is
@@ -205,10 +225,9 @@ impl NativeModel {
     pub fn train_batch(&mut self, batch: &Batch) -> f32 {
         let loss = self.forward_backward(batch);
         self.step += 1;
-        let we = self.ent.width;
         for (r, g) in self.g_ent.iter() {
             let r = r as usize;
-            let p = &mut self.ent.data[r * we..(r + 1) * we];
+            let p = self.ent.row_mut(r);
             self.ent_adam.update_row(p, g, r, self.step, &self.hyper);
         }
         let wr = self.rel.width;
@@ -432,7 +451,7 @@ impl NativeModel {
             let ss = kernels::sumsq_k(ks.full, self.ent.row(id));
             reg += lam * ss / numel;
             let coef = 2.0 * lam / numel;
-            let row = &self.ent.data[id * we..(id + 1) * we];
+            let row = self.ent.row(id);
             let g = self.g_ent.row_mut(id);
             kernels::axpy_k(ks.full, coef, row, g);
         }
@@ -451,7 +470,7 @@ impl NativeModel {
             let ss = kernels::sumsq_k(ks.full, self.ent.row(cid));
             reg += cnt * (lam * ss / numel);
             let coef = cnt * (2.0 * lam / numel);
-            let row = &self.ent.data[cid * we..(cid + 1) * we];
+            let row = self.ent.row(cid);
             let gc = self.g_ent.row_mut(cid);
             kernels::axpy_k(ks.full, coef, row, gc);
         }
@@ -584,7 +603,7 @@ impl NativeModel {
     /// and the candidate's touched gradient row.
     fn backward_candidate(&mut self, q: &[f32], cand_id: usize, g: f32, dq: &mut [f32]) {
         let we = self.ent.width;
-        let cand = &self.ent.data[cand_id * we..(cand_id + 1) * we];
+        let cand = self.ent.row(cand_id);
         let gc = self.g_ent.row_mut(cand_id);
         match self.method {
             Method::TransE => {
@@ -632,7 +651,7 @@ impl NativeModel {
         // src/rel (ent, rel) and the gradient rows (g_ent, g_rel) live in
         // disjoint fields, so no row copies are needed to satisfy the
         // borrow checker — the step loop stays allocation-free.
-        let src = &self.ent.data[src_id * we..(src_id + 1) * we];
+        let src = self.ent.row(src_id);
         let rel = &self.rel.data[rel_id * wr..(rel_id + 1) * wr];
         let gsrc = self.g_ent.row_mut(src_id);
         let grel = self.g_rel.row_mut(rel_id);
@@ -695,18 +714,15 @@ impl NativeModel {
         let lam = self.hyper.complex_reg;
         let mut reg = 0.0f32;
         // h, t: mean over (B, We); r over (B, Wr); cand over (B, N, We)
-        let ids = [
-            (batch.pos[i * 3] as usize, b * we, true),
-            (batch.pos[i * 3 + 2] as usize, b * we, true),
-        ];
-        for (id, numel, is_ent) in ids {
-            let row = if is_ent { self.ent.row(id) } else { self.rel.row(id) };
+        let ids = [(batch.pos[i * 3] as usize, b * we), (batch.pos[i * 3 + 2] as usize, b * we)];
+        for (id, numel) in ids {
+            let row = self.ent.row(id);
             let ss: f32 = row.iter().map(|x| x * x).sum();
             reg += lam * ss / numel as f32;
             let coef = 2.0 * lam / numel as f32;
             let g = self.g_ent.row_mut(id);
             for k in 0..we {
-                g[k] += coef * self.ent.data[id * we + k];
+                g[k] += coef * row[k];
             }
         }
         let rid = batch.pos[i * 3 + 1] as usize;
@@ -719,12 +735,13 @@ impl NativeModel {
         }
         for j in 0..n {
             let cid = batch.neg[i * n + j] as usize;
-            let ss: f32 = self.ent.row(cid).iter().map(|x| x * x).sum();
+            let row = self.ent.row(cid);
+            let ss: f32 = row.iter().map(|x| x * x).sum();
             reg += lam * ss / (b * n * we) as f32;
             let coef = 2.0 * lam / (b * n * we) as f32;
             let gc = self.g_ent.row_mut(cid);
             for k in 0..we {
-                gc[k] += coef * self.ent.data[cid * we + k];
+                gc[k] += coef * row[k];
             }
         }
         reg
@@ -832,9 +849,9 @@ impl DenseOracle {
     /// ignored; the oracle owns dense optimizer state instead — do not mix
     /// `model.train_batch` calls with oracle steps).
     pub fn new(model: NativeModel) -> Self {
-        let g_ent = vec![0.0; model.ent.data.len()];
+        let g_ent = vec![0.0; model.ent.len()];
         let g_rel = vec![0.0; model.rel.data.len()];
-        let ent_adam = Adam::new(model.ent.data.len());
+        let ent_adam = Adam::new(model.ent.len());
         let rel_adam = Adam::new(model.rel.data.len());
         Self { model, ent_adam, rel_adam, g_ent, g_rel, step: 0 }
     }
@@ -848,7 +865,12 @@ impl DenseOracle {
         self.model.g_ent.scatter_into(&mut self.g_ent);
         self.model.g_rel.scatter_into(&mut self.g_rel);
         self.step += 1;
-        self.ent_adam.update(&mut self.model.ent.data, &self.g_ent, self.step, &self.model.hyper);
+        self.ent_adam.update(
+            self.model.ent.as_mut_slice(),
+            &self.g_ent,
+            self.step,
+            &self.model.hyper,
+        );
         self.rel_adam.update(&mut self.model.rel.data, &self.g_rel, self.step, &self.model.hyper);
         loss
     }
@@ -970,9 +992,9 @@ mod tests {
             let mut m = model(method, &mut rng);
             let mut batch = toy_batch(8, 4, 32, 4, &mut rng);
             batch.mask.iter_mut().for_each(|x| *x = 0.0);
-            let before = m.ent.data.clone();
+            let before = m.ent.to_vec();
             m.train_batch(&batch);
-            assert_eq!(m.ent.data, before, "{method:?}");
+            assert_eq!(m.ent, before, "{method:?}");
         }
     }
 
@@ -1008,13 +1030,13 @@ mod tests {
                 let eps = 1e-3f32;
                 // probe a handful of random coordinates in each table
                 for _ in 0..6 {
-                    let i = rng.usize_below(m.ent.data.len());
-                    let orig = m.ent.data[i];
-                    m.ent.data[i] = orig + eps;
+                    let i = rng.usize_below(m.ent.len());
+                    let orig = m.ent[i];
+                    m.ent.as_mut_slice()[i] = orig + eps;
                     let lp = loss_at(&mut m);
-                    m.ent.data[i] = orig - eps;
+                    m.ent.as_mut_slice()[i] = orig - eps;
                     let lm = loss_at(&mut m);
-                    m.ent.data[i] = orig;
+                    m.ent.as_mut_slice()[i] = orig;
                     let fd = (lp - lm) / (2.0 * eps);
                     assert!(
                         (fd - ga[i]).abs() < 2e-2 * (1.0 + fd.abs()),
@@ -1194,7 +1216,7 @@ mod tests {
                     "{method:?} step {step}: loss {ls} vs {ld}"
                 );
             }
-            for (i, (a, b)) in sparse.ent.data.iter().zip(&dense.model.ent.data).enumerate() {
+            for (i, (a, b)) in sparse.ent.iter().zip(dense.model.ent.iter()).enumerate() {
                 assert!((a - b).abs() < 1e-4, "{method:?} ent[{i}]: {a} vs {b}");
             }
             for (i, (a, b)) in sparse.rel.data.iter().zip(&dense.model.rel.data).enumerate() {

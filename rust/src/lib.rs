@@ -55,7 +55,16 @@
 //!   per run by `TransportSpec` (`--transport`), with byte/parameter
 //!   accounting bit-identical across transports; plus the wire codec
 //!   (`comm::wire`, stream framing included) and bandwidth models.
-//! * [`data`] — KG generation, federated partitioning, batch/eval sets.
+//! * [`store`] — pluggable embedding storage: the `EmbedStore` trait
+//!   (row-addressable f32 tables with shard-range views) with in-RAM
+//!   (`VecStore`) and file-backed memory-mapped (`MmapStore`) backends,
+//!   selected per run by `StorageSpec` (`--store`).  Zero-initialized
+//!   mmap tables are sparse, so resident memory tracks **touched** rows —
+//!   the storage seam behind the million-entity scale trajectory
+//!   (`benches/scale.rs`) — and backends are bit-identical.
+//! * [`data`] — KG generation (streaming — `TripleStream` yields triples
+//!   without materializing the graph), federated partitioning (including
+//!   the stream-routing `partition_stream`), batch/eval sets.
 //! * [`metrics`] — rank metrics, early stopping, run history, and the
 //!   observer pipeline (`metrics::observe`): `RunEvent`/`RunObserver`
 //!   with the in-memory `HistoryObserver`, console progress, and the
@@ -80,6 +89,7 @@ pub mod linalg;
 pub mod metrics;
 pub mod runtime;
 pub mod spec;
+pub mod store;
 pub mod trainer;
 pub mod util;
 

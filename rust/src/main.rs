@@ -162,6 +162,7 @@ const OVERRIDE_FLAGS: &[(&str, &str)] = &[
     ("shards", "shards"),
     ("participation-fraction", "participation.fraction"),
     ("participation-k", "participation.k"),
+    ("store", "storage"),
 ];
 
 fn override_opts(mut cli: Cli) -> Cli {
@@ -189,7 +190,8 @@ fn override_opts(mut cli: Cli) -> Cli {
         .opt("transport", "mpsc", "frame transport: mpsc|tcp (loopback sockets)")
         .opt("shards", "0", "server aggregation shards (0 = auto: one per core, capped)")
         .opt("participation-fraction", "1.0", "sample ⌈f·live⌉ clients/round (cluster serve)")
-        .opt("participation-k", "0", "sample k clients per round (cluster serve)");
+        .opt("participation-k", "0", "sample k clients per round (cluster serve)")
+        .opt("store", "ram", "embedding storage backend: ram|mmap|mmap:<dir>");
     cli
 }
 
@@ -221,6 +223,7 @@ fn default_spec() -> ExperimentSpec {
         transport: TransportSpec::Mpsc,
         shards: 0,
         participation: Default::default(),
+        storage: Default::default(),
     }
 }
 
@@ -576,6 +579,7 @@ fn cmd_train(args: &[String]) -> Result<(), Failure> {
         transport: TransportSpec::Mpsc,
         shards: 0,
         participation: Default::default(),
+        storage: Default::default(),
     };
     let mut session = match &ctx.backend {
         Backend::Xla(rt) => Session::with_runtime(rt.clone()),

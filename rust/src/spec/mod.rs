@@ -22,10 +22,11 @@ pub use session::{Run, Session};
 
 use anyhow::{bail, ensure, Result};
 
-use crate::data::generator::{generate, GeneratorConfig};
-use crate::data::partition::{partition, FedDataset};
+use crate::data::generator::{stream, GeneratorConfig};
+use crate::data::partition::{partition_stream, FedDataset};
 use crate::fed::{Algo, ExecMode};
 use crate::kge::Method;
+use crate::store::StorageSpec;
 use crate::util::json::Json;
 
 pub use crate::comm::transport::TransportSpec;
@@ -316,9 +317,12 @@ impl DataSpec {
         }
     }
 
-    /// Generate and partition the federated dataset.
+    /// Generate and partition the federated dataset.  Streams triples
+    /// straight from the generator into the per-client splits — the
+    /// full triple list is never materialized in one place.
     pub fn build(&self) -> FedDataset {
-        partition(&generate(&self.generator()), self.clients, self.seed)
+        let cfg = self.generator();
+        partition_stream(cfg.num_entities, cfg.num_relations, stream(&cfg), self.clients, self.seed)
     }
 
     pub fn validate(&self) -> Result<()> {
@@ -561,6 +565,9 @@ pub struct ExperimentSpec {
     pub shards: usize,
     /// per-round client sampling policy (cluster coordinator only)
     pub participation: ParticipationSpec,
+    /// backend for every O(entities × width) table ("ram", "mmap", or
+    /// "mmap:<dir>") — results are bit-identical across backends
+    pub storage: StorageSpec,
 }
 
 impl ExperimentSpec {
@@ -605,6 +612,7 @@ impl ExperimentSpec {
             .set("transport", self.transport.label())
             .set("shards", self.shards)
             .set("participation", self.participation.to_json())
+            .set("storage", self.storage.label().as_str())
     }
 
     pub fn from_json(v: &Json) -> Result<ExperimentSpec> {
@@ -643,6 +651,12 @@ impl ExperimentSpec {
             participation: match v.get("participation") {
                 Some(p) => ParticipationSpec::from_json(p)?,
                 None => ParticipationSpec::Full,
+            },
+            storage: match v.get("storage") {
+                Some(s) => StorageSpec::parse(
+                    s.as_str().ok_or_else(|| anyhow::anyhow!("storage must be a string"))?,
+                )?,
+                None => StorageSpec::Ram,
             },
         };
         spec.validate()?;
@@ -691,6 +705,11 @@ impl ExperimentSpec {
             }
             "shards" => self.shards = count_of(value, key)?,
             "seed" => self.seed = count_of(value, key)? as u64,
+            "storage" => {
+                self.storage = StorageSpec::parse(
+                    value.as_str().ok_or_else(|| anyhow::anyhow!("storage must be a string"))?,
+                )?;
+            }
             "participation" => self.participation = ParticipationSpec::from_json(value)?,
             "participation.fraction" => {
                 self.participation = ParticipationSpec::Fraction(f64_of(value, key)?);
@@ -849,6 +868,7 @@ mod tests {
             transport: TransportSpec::Mpsc,
             shards: 0,
             participation: Default::default(),
+            storage: Default::default(),
         }
     }
 
@@ -959,6 +979,27 @@ mod tests {
         let rt = ExperimentSpec::from_json(&trimmed).unwrap();
         assert_eq!(rt.transport, TransportSpec::Mpsc);
         assert_eq!(rt.shards, 0);
+    }
+
+    #[test]
+    fn storage_round_trips_and_overrides() {
+        let mut spec = tiny_spec();
+        assert_eq!(spec.storage, StorageSpec::Ram, "ram is the default");
+        spec.storage = StorageSpec::Mmap { dir: Some("/tmp/feds".into()) };
+        let rt = ExperimentSpec::parse(&spec.to_json().to_string()).unwrap();
+        assert_eq!(rt.storage, spec.storage);
+        assert_eq!(spec, rt);
+
+        let mut spec = tiny_spec();
+        spec.apply("storage", &Json::from("mmap")).unwrap();
+        assert_eq!(spec.storage, StorageSpec::Mmap { dir: None });
+        assert!(spec.apply("storage", &Json::from("floppy")).is_err());
+
+        // a spec file without the key parses to the in-RAM default
+        let j = tiny_spec().to_json();
+        let Json::Obj(entries) = j else { panic!() };
+        let trimmed = Json::Obj(entries.into_iter().filter(|(k, _)| k != "storage").collect());
+        assert_eq!(ExperimentSpec::from_json(&trimmed).unwrap().storage, StorageSpec::Ram);
     }
 
     #[test]

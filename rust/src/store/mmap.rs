@@ -1,0 +1,499 @@
+//! File-backed embedding storage via `mmap`.
+//!
+//! Layout: one 4096-byte header page (magic `FEDSSTO1`, rows, width as
+//! little-endian u64) followed by `rows × width` native-endian f32s, so
+//! row data starts page-aligned.  Files are single-host artifacts (the
+//! map reinterprets process memory), hence native data endianness.
+//!
+//! Two lifetimes:
+//!
+//! * **Scratch** stores ([`MmapStore::scratch`] / `scratch_init`) back
+//!   run-time tables.  The file is created, sized with `set_len` (a
+//!   sparse file — untouched pages read as zeros and cost nothing on
+//!   disk or in RSS), mapped, then **unlinked**: the mapping keeps it
+//!   alive, and the kernel reclaims it the moment the process exits,
+//!   crashed or not.  Streaming init writes rows through a `BufWriter`
+//!   *before* mapping, so initialization lands in page cache without
+//!   making the table resident in this process.
+//! * **Named** stores ([`MmapStore::create`] / [`MmapStore::open`])
+//!   persist across drops.  [`MmapStore::flush`] is msync + fsync;
+//!   [`MmapStore::save_copy`] snapshots atomically through the same
+//!   write-tmp → fsync → rename discipline as coordinator checkpoints
+//!   ([`crate::util::fsio::atomic_write`]).
+//!
+//! The real mapping is Linux-only (raw `mmap`/`munmap`/`msync` FFI — no
+//! external crates are available).  Other platforms get a portable
+//! file-loaded `Vec` backing with identical semantics minus the residency
+//! savings.
+
+use std::fs::{self, File, OpenOptions};
+use std::io::{BufWriter, Write as _};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use anyhow::{Context, Result};
+
+use super::EmbedStore;
+use crate::util::fsio;
+
+/// `"FEDSSTO1"` as a little-endian u64 — the first eight bytes on disk.
+const MAGIC: u64 = u64::from_le_bytes(*b"FEDSSTO1");
+/// One page: keeps the f32 data region page-aligned.
+const HEADER_BYTES: usize = 4096;
+
+/// Distinguishes concurrently created scratch files within one process.
+static SCRATCH_SEQ: AtomicU64 = AtomicU64::new(0);
+
+fn header(rows: usize, width: usize) -> Box<[u8; HEADER_BYTES]> {
+    let mut h = Box::new([0u8; HEADER_BYTES]);
+    h[..8].copy_from_slice(&MAGIC.to_le_bytes());
+    h[8..16].copy_from_slice(&(rows as u64).to_le_bytes());
+    h[16..24].copy_from_slice(&(width as u64).to_le_bytes());
+    h
+}
+
+fn total_bytes(rows: usize, width: usize) -> u64 {
+    HEADER_BYTES as u64 + (rows * width * 4) as u64
+}
+
+#[cfg(target_os = "linux")]
+mod backing {
+    //! A shared writable mapping of an open file (raw libc FFI).
+
+    use std::fs::File;
+    use std::os::raw::{c_int, c_void};
+    use std::os::unix::io::AsRawFd;
+
+    use anyhow::{bail, Result};
+
+    use super::HEADER_BYTES;
+
+    const PROT_READ: c_int = 1;
+    const PROT_WRITE: c_int = 2;
+    const MAP_SHARED: c_int = 1;
+    /// Linux value; macOS uses 0x0010 — one reason this module is gated.
+    const MS_SYNC: c_int = 4;
+
+    extern "C" {
+        fn mmap(
+            addr: *mut c_void,
+            len: usize,
+            prot: c_int,
+            flags: c_int,
+            fd: c_int,
+            offset: i64,
+        ) -> *mut c_void;
+        fn munmap(addr: *mut c_void, len: usize) -> c_int;
+        fn msync(addr: *mut c_void, len: usize, flags: c_int) -> c_int;
+    }
+
+    pub struct Backing {
+        /// Keeps the (possibly unlinked) file alive alongside the map.
+        file: File,
+        ptr: *mut u8,
+        byte_len: usize,
+        elems: usize,
+    }
+
+    // Safety: the mapping is exclusively owned; all access goes through
+    // `&self`/`&mut self` methods, so the borrow checker polices aliasing.
+    unsafe impl Send for Backing {}
+    unsafe impl Sync for Backing {}
+
+    impl Backing {
+        /// Map `file`, already sized to header + `elems` f32s.
+        pub fn over_file(file: File, elems: usize) -> Result<Self> {
+            let byte_len = HEADER_BYTES + elems * 4;
+            let ptr = unsafe {
+                mmap(
+                    std::ptr::null_mut(),
+                    byte_len,
+                    PROT_READ | PROT_WRITE,
+                    MAP_SHARED,
+                    file.as_raw_fd(),
+                    0,
+                )
+            };
+            if ptr == usize::MAX as *mut c_void {
+                bail!("mmap of {byte_len} bytes failed: {}", std::io::Error::last_os_error());
+            }
+            Ok(Self { file, ptr: ptr as *mut u8, byte_len, elems })
+        }
+
+        pub fn as_f32(&self) -> &[f32] {
+            unsafe {
+                std::slice::from_raw_parts(self.ptr.add(HEADER_BYTES) as *const f32, self.elems)
+            }
+        }
+
+        pub fn as_f32_mut(&mut self) -> &mut [f32] {
+            unsafe {
+                std::slice::from_raw_parts_mut(self.ptr.add(HEADER_BYTES) as *mut f32, self.elems)
+            }
+        }
+
+        pub fn flush(&mut self) -> Result<()> {
+            let rc = unsafe { msync(self.ptr as *mut c_void, self.byte_len, MS_SYNC) };
+            if rc != 0 {
+                bail!("msync failed: {}", std::io::Error::last_os_error());
+            }
+            self.file.sync_all()?;
+            Ok(())
+        }
+    }
+
+    impl Drop for Backing {
+        fn drop(&mut self) {
+            unsafe {
+                munmap(self.ptr as *mut c_void, self.byte_len);
+            }
+        }
+    }
+}
+
+#[cfg(not(target_os = "linux"))]
+mod backing {
+    //! Portable fallback: the table lives in a `Vec`, loaded from and
+    //! flushed back to the file.  Same durability contract, no residency
+    //! savings.
+
+    use std::fs::File;
+    use std::io::{Read as _, Seek as _, SeekFrom, Write as _};
+
+    use anyhow::Result;
+
+    use super::HEADER_BYTES;
+
+    pub struct Backing {
+        file: File,
+        data: Vec<f32>,
+    }
+
+    impl Backing {
+        pub fn over_file(mut file: File, elems: usize) -> Result<Self> {
+            file.seek(SeekFrom::Start(HEADER_BYTES as u64))?;
+            let mut bytes = vec![0u8; elems * 4];
+            file.read_exact(&mut bytes)?;
+            let data = bytes
+                .chunks_exact(4)
+                .map(|b| f32::from_ne_bytes([b[0], b[1], b[2], b[3]]))
+                .collect();
+            Ok(Self { file, data })
+        }
+
+        pub fn as_f32(&self) -> &[f32] {
+            &self.data
+        }
+
+        pub fn as_f32_mut(&mut self) -> &mut [f32] {
+            &mut self.data
+        }
+
+        pub fn flush(&mut self) -> Result<()> {
+            self.file.seek(SeekFrom::Start(HEADER_BYTES as u64))?;
+            let mut bytes = Vec::with_capacity(self.data.len() * 4);
+            for x in &self.data {
+                bytes.extend_from_slice(&x.to_ne_bytes());
+            }
+            self.file.write_all(&bytes)?;
+            self.file.sync_all()?;
+            Ok(())
+        }
+    }
+}
+
+use backing::Backing;
+
+/// A file-backed `rows × width` f32 table (see module docs).
+pub struct MmapStore {
+    rows: usize,
+    width: usize,
+    /// `Some` for named (durable) stores, `None` for unlinked scratch.
+    path: Option<PathBuf>,
+    /// Where sibling scratch stores (clones) are created.
+    dir: PathBuf,
+    backing: Backing,
+}
+
+impl MmapStore {
+    fn scratch_file(dir: &Path) -> Result<(File, PathBuf)> {
+        fs::create_dir_all(dir)
+            .with_context(|| format!("creating store scratch dir {}", dir.display()))?;
+        let name = format!(
+            "feds-embed-{}-{}.bin",
+            std::process::id(),
+            SCRATCH_SEQ.fetch_add(1, Ordering::Relaxed)
+        );
+        let path = dir.join(name);
+        let file = OpenOptions::new()
+            .read(true)
+            .write(true)
+            .create_new(true)
+            .open(&path)
+            .with_context(|| format!("creating scratch store {}", path.display()))?;
+        Ok((file, path))
+    }
+
+    /// Finish a fully written scratch file: unlink it (the map keeps it
+    /// alive; the kernel reclaims it on process exit) and map it.
+    fn seal_scratch(
+        file: File,
+        path: PathBuf,
+        dir: &Path,
+        rows: usize,
+        width: usize,
+    ) -> Result<Self> {
+        #[cfg(target_os = "linux")]
+        fs::remove_file(&path)
+            .with_context(|| format!("unlinking scratch store {}", path.display()))?;
+        // The portable backing reads the file contents at map time, so the
+        // unlink must come after `over_file` there; keep the file and let
+        // Drop leak it rather than complicating the fallback.
+        let backing = Backing::over_file(file, rows * width)?;
+        #[cfg(not(target_os = "linux"))]
+        let _ = fs::remove_file(&path);
+        Ok(Self { rows, width, path: None, dir: dir.to_path_buf(), backing })
+    }
+
+    /// An all-zero scratch store: sparse file, no page resident until a
+    /// row is touched.
+    pub fn scratch(dir: &Path, rows: usize, width: usize) -> Result<Self> {
+        let (mut file, path) = Self::scratch_file(dir)?;
+        file.write_all(&header(rows, width)[..])?;
+        file.set_len(total_bytes(rows, width))?;
+        Self::seal_scratch(file, path, dir, rows, width)
+    }
+
+    /// A scratch store initialized row-by-row by `fill` (row order),
+    /// streamed through buffered file writes before mapping.
+    pub fn scratch_init(
+        dir: &Path,
+        rows: usize,
+        width: usize,
+        fill: &mut dyn FnMut(usize, &mut [f32]),
+    ) -> Result<Self> {
+        let (file, path) = Self::scratch_file(dir)?;
+        {
+            let mut w = BufWriter::with_capacity(1 << 20, &file);
+            w.write_all(&header(rows, width)[..])?;
+            let mut row = vec![0.0f32; width];
+            let mut bytes = vec![0u8; width * 4];
+            for r in 0..rows {
+                fill(r, &mut row);
+                for (b, x) in bytes.chunks_exact_mut(4).zip(&row) {
+                    b.copy_from_slice(&x.to_ne_bytes());
+                }
+                w.write_all(&bytes)?;
+            }
+            w.flush()?;
+        }
+        Self::seal_scratch(file, path, dir, rows, width)
+    }
+
+    /// Create (or truncate) a named durable store, all zeros.
+    pub fn create(path: &Path, rows: usize, width: usize) -> Result<Self> {
+        if let Some(parent) = path.parent() {
+            if !parent.as_os_str().is_empty() {
+                fs::create_dir_all(parent)?;
+            }
+        }
+        let mut file = OpenOptions::new()
+            .read(true)
+            .write(true)
+            .create(true)
+            .truncate(true)
+            .open(path)
+            .with_context(|| format!("creating store {}", path.display()))?;
+        file.write_all(&header(rows, width)[..])?;
+        file.set_len(total_bytes(rows, width))?;
+        let backing = Backing::over_file(file, rows * width)?;
+        let dir = path.parent().map(Path::to_path_buf).unwrap_or_else(std::env::temp_dir);
+        Ok(Self { rows, width, path: Some(path.to_path_buf()), dir, backing })
+    }
+
+    /// Reopen a named store written by [`MmapStore::create`] (+ flush).
+    pub fn open(path: &Path) -> Result<Self> {
+        let file = OpenOptions::new()
+            .read(true)
+            .write(true)
+            .open(path)
+            .with_context(|| format!("opening store {}", path.display()))?;
+        let mut head = [0u8; 24];
+        {
+            use std::io::Read as _;
+            (&file).read_exact(&mut head).context("store header truncated")?;
+        }
+        let magic = u64::from_le_bytes(head[..8].try_into().unwrap());
+        anyhow::ensure!(magic == MAGIC, "{} is not an embedding store", path.display());
+        let rows = u64::from_le_bytes(head[8..16].try_into().unwrap()) as usize;
+        let width = u64::from_le_bytes(head[16..24].try_into().unwrap()) as usize;
+        let want = total_bytes(rows, width);
+        let got = file.metadata()?.len();
+        anyhow::ensure!(
+            got == want,
+            "store {} truncated: {got} bytes on disk, header claims {want}",
+            path.display()
+        );
+        let backing = Backing::over_file(file, rows * width)?;
+        let dir = path.parent().map(Path::to_path_buf).unwrap_or_else(std::env::temp_dir);
+        Ok(Self { rows, width, path: Some(path.to_path_buf()), dir, backing })
+    }
+
+    /// Atomic point-in-time snapshot to `path` (write-tmp → fsync →
+    /// rename, like coordinator checkpoints).  The result reopens with
+    /// [`MmapStore::open`].
+    pub fn save_copy(&self, path: &Path) -> Result<()> {
+        let data = self.backing.as_f32();
+        let mut bytes = Vec::with_capacity(HEADER_BYTES + data.len() * 4);
+        bytes.extend_from_slice(&header(self.rows, self.width)[..]);
+        // same-host snapshot: native endianness, matching the map
+        let view =
+            unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4) };
+        bytes.extend_from_slice(view);
+        fsio::atomic_write(path, &bytes)
+            .with_context(|| format!("snapshotting store to {}", path.display()))?;
+        Ok(())
+    }
+
+    /// The named file this store persists to (`None` for scratch).
+    pub fn file_path(&self) -> Option<&Path> {
+        self.path.as_deref()
+    }
+}
+
+impl EmbedStore for MmapStore {
+    fn rows(&self) -> usize {
+        self.rows
+    }
+
+    fn width(&self) -> usize {
+        self.width
+    }
+
+    fn as_slice(&self) -> &[f32] {
+        self.backing.as_f32()
+    }
+
+    fn as_mut_slice(&mut self) -> &mut [f32] {
+        self.backing.as_f32_mut()
+    }
+
+    fn flush(&mut self) -> Result<()> {
+        self.backing.flush()
+    }
+
+    fn backend(&self) -> &'static str {
+        "mmap"
+    }
+
+    fn clone_store(&self) -> Box<dyn EmbedStore> {
+        let mut copy = MmapStore::scratch(&self.dir, self.rows, self.width)
+            .expect("cloning an mmap store requires a writable scratch dir");
+        copy.as_mut_slice().copy_from_slice(self.as_slice());
+        Box::new(copy)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn test_dir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("feds-mmap-{tag}-{}", std::process::id()));
+        let _ = fs::remove_dir_all(&d);
+        fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn scratch_reads_zero_and_round_trips_writes() {
+        let dir = test_dir("scratch");
+        let mut s = MmapStore::scratch(&dir, 100, 8).unwrap();
+        assert!(s.as_slice().iter().all(|&x| x == 0.0));
+        s.row_mut(42)[3] = 7.5;
+        assert_eq!(s.row(42)[3], 7.5);
+        assert_eq!(s.row(41), &[0.0; 8]);
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[cfg(target_os = "linux")]
+    #[test]
+    fn scratch_file_is_unlinked_immediately() {
+        let dir = test_dir("unlink");
+        let _s = MmapStore::scratch(&dir, 16, 4).unwrap();
+        let leftovers: Vec<_> = fs::read_dir(&dir).unwrap().collect();
+        assert!(leftovers.is_empty(), "scratch files must not outlive creation: {leftovers:?}");
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn named_store_survives_drop_and_reopen() {
+        let dir = test_dir("durable");
+        let path = dir.join("ent.store");
+        {
+            let mut s = MmapStore::create(&path, 9, 3).unwrap();
+            for r in 0..9 {
+                let row: Vec<f32> = (0..3).map(|k| (r * 3 + k) as f32 * 0.5).collect();
+                s.row_mut(r).copy_from_slice(&row);
+            }
+            s.flush().unwrap();
+        }
+        let s = MmapStore::open(&path).unwrap();
+        assert_eq!((s.rows(), s.width()), (9, 3));
+        for r in 0..9 {
+            let want: Vec<f32> = (0..3).map(|k| (r * 3 + k) as f32 * 0.5).collect();
+            assert_eq!(s.row(r), &want[..], "row {r}");
+        }
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn open_rejects_foreign_and_truncated_files() {
+        let dir = test_dir("reject");
+        let bogus = dir.join("bogus.store");
+        fs::write(&bogus, b"not a store at all").unwrap();
+        assert!(MmapStore::open(&bogus).is_err());
+        let path = dir.join("short.store");
+        {
+            let mut s = MmapStore::create(&path, 4, 4).unwrap();
+            s.flush().unwrap();
+        }
+        let full = fs::read(&path).unwrap();
+        fs::write(&path, &full[..full.len() - 4]).unwrap();
+        assert!(MmapStore::open(&path).is_err(), "truncated store must be refused");
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn save_copy_snapshots_atomically() {
+        let dir = test_dir("snap");
+        let mut s = MmapStore::scratch(&dir, 5, 2).unwrap();
+        s.row_mut(4).copy_from_slice(&[1.25, -2.0]);
+        let snap = dir.join("snap.store");
+        s.save_copy(&snap).unwrap();
+        assert!(!fsio::tmp_path(&snap).exists());
+        let back = MmapStore::open(&snap).unwrap();
+        assert_eq!(back.as_slice(), s.as_slice());
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn clone_store_is_independent() {
+        let dir = test_dir("clone");
+        let mut s = MmapStore::scratch(&dir, 3, 2).unwrap();
+        s.row_mut(1).copy_from_slice(&[3.0, 4.0]);
+        let mut c = s.clone_store();
+        assert_eq!(c.as_slice(), s.as_slice());
+        c.row_mut(1)[0] = 99.0;
+        assert_eq!(s.row(1), &[3.0, 4.0], "clone writes must not alias the source");
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn zero_row_store_maps_header_only() {
+        let dir = test_dir("empty");
+        let s = MmapStore::scratch(&dir, 0, 16).unwrap();
+        assert!(s.as_slice().is_empty());
+        let _ = fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,542 @@
+//! Pluggable embedding storage: the seam that decouples every
+//! O(entities × width) f32 table from `Vec<f32>`.
+//!
+//! The paper's scaling argument (§III, Eq. 5) is that FedS's per-round
+//! cost tracks the Top-K **touched** entities, not the table size — but a
+//! `Vec`-backed table still pins O(E·W) resident memory per replica, which
+//! caps experiments near E = 50k.  [`EmbedStore`] abstracts a
+//! row-addressable f32 table behind two backends:
+//!
+//! * [`VecStore`] — the historical in-RAM table (the default; bit-identical
+//!   to the pre-store engine by construction).
+//! * [`MmapStore`] — a file-backed memory mapping.  Zero-initialized
+//!   tables are sparse files, so a page becomes resident only when a row
+//!   is actually read or written through the map: resident memory scales
+//!   with the **touched** rows, matching the paper's cost model.  Flushes
+//!   follow the coordinator-checkpoint discipline (msync + fsync; atomic
+//!   snapshots via write-tmp → fsync → rename).
+//!
+//! [`StoreTable`] wraps a boxed store behind the same `row`/`row_mut`/
+//! `set_row` surface as [`crate::kge::Table`], caching the store's stable
+//! buffer pointer so hot-path row access costs exactly a bounds check plus
+//! a slice construction — no virtual dispatch per row.  Both backends
+//! expose the same contiguous row-major buffer, so results are
+//! **bit-identical** across backends for every algorithm.
+//!
+//! Concurrency matches the scoped-thread model of [`crate::fed::server`]:
+//! a store is `Sync` (shared reads) and disjoint shard ranges can be
+//! mutated in parallel through [`EmbedStore::ranges_mut`] /
+//! `split_at_mut`-style views.
+//!
+//! [`StorageSpec`] is the serializable selector carried by
+//! `ExperimentSpec` (`--store ram|mmap|mmap:<dir>`).
+
+pub mod mmap;
+
+use std::path::PathBuf;
+
+use anyhow::Result;
+
+use crate::util::rng::Rng;
+
+pub use mmap::MmapStore;
+
+/// A row-addressable f32 table: `rows × width`, contiguous row-major.
+///
+/// Implementations own a stable buffer — the pointer returned by
+/// `as_slice`/`as_mut_slice` must not move for the lifetime of the store
+/// (no reallocation), which is what lets [`StoreTable`] cache it.
+pub trait EmbedStore: Send + Sync {
+    /// Number of rows.
+    fn rows(&self) -> usize;
+
+    /// Row width in f32 elements.
+    fn width(&self) -> usize;
+
+    /// The whole table as one contiguous row-major slice.
+    fn as_slice(&self) -> &[f32];
+
+    /// Mutable view of the whole table.
+    fn as_mut_slice(&mut self) -> &mut [f32];
+
+    /// Make written data durable (no-op for RAM; msync + fsync for mmap).
+    fn flush(&mut self) -> Result<()>;
+
+    /// Backend name for logs and bench points.
+    fn backend(&self) -> &'static str;
+
+    /// An independent copy of this store's contents on the same backend.
+    /// Panics on backend I/O failure (cloning is infallible by signature
+    /// because model state derives `Clone`).
+    fn clone_store(&self) -> Box<dyn EmbedStore>;
+
+    /// Row `id` (panics when `id >= rows`).
+    fn row(&self, id: usize) -> &[f32] {
+        let w = self.width();
+        assert!(id < self.rows(), "row {id} out of range ({} rows)", self.rows());
+        &self.as_slice()[id * w..(id + 1) * w]
+    }
+
+    /// Mutable row `id` (panics when `id >= rows`).
+    fn row_mut(&mut self, id: usize) -> &mut [f32] {
+        let w = self.width();
+        assert!(id < self.rows(), "row {id} out of range ({} rows)", self.rows());
+        &mut self.as_mut_slice()[id * w..(id + 1) * w]
+    }
+
+    /// Scatter `data` (concatenated rows, `ids.len() × width`) into the
+    /// table.  Panics on id out of range or size mismatch.
+    fn write_rows(&mut self, ids: &[u32], data: &[f32]) {
+        let w = self.width();
+        assert_eq!(data.len(), ids.len() * w, "write_rows size mismatch");
+        for (k, &id) in ids.iter().enumerate() {
+            self.row_mut(id as usize).copy_from_slice(&data[k * w..(k + 1) * w]);
+        }
+    }
+
+    /// Disjoint mutable row-range views, one per consecutive pair of
+    /// `cuts` (row indices, ascending, first 0 and last `rows`) — the
+    /// shard-range decomposition used for safe concurrent writes from
+    /// scoped threads.
+    fn ranges_mut(&mut self, cuts: &[usize]) -> Vec<&mut [f32]> {
+        let w = self.width();
+        assert!(cuts.first() == Some(&0) && cuts.last() == Some(&self.rows()));
+        let mut rest = self.as_mut_slice();
+        let mut segs = Vec::with_capacity(cuts.len().saturating_sub(1));
+        for s in 0..cuts.len() - 1 {
+            assert!(cuts[s] <= cuts[s + 1], "range cuts must ascend");
+            let (seg, tail) = std::mem::take(&mut rest).split_at_mut((cuts[s + 1] - cuts[s]) * w);
+            segs.push(seg);
+            rest = tail;
+        }
+        segs
+    }
+}
+
+/// The historical in-RAM backend: a plain `Vec<f32>`.
+pub struct VecStore {
+    rows: usize,
+    width: usize,
+    data: Vec<f32>,
+}
+
+impl VecStore {
+    pub fn zeros(rows: usize, width: usize) -> Self {
+        Self { rows, width, data: vec![0.0; rows * width] }
+    }
+
+    pub fn from_vec(rows: usize, width: usize, data: Vec<f32>) -> Self {
+        assert_eq!(data.len(), rows * width, "VecStore shape mismatch");
+        Self { rows, width, data }
+    }
+}
+
+impl EmbedStore for VecStore {
+    fn rows(&self) -> usize {
+        self.rows
+    }
+
+    fn width(&self) -> usize {
+        self.width
+    }
+
+    fn as_slice(&self) -> &[f32] {
+        &self.data
+    }
+
+    fn as_mut_slice(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    fn flush(&mut self) -> Result<()> {
+        Ok(())
+    }
+
+    fn backend(&self) -> &'static str {
+        "ram"
+    }
+
+    fn clone_store(&self) -> Box<dyn EmbedStore> {
+        Box::new(VecStore { rows: self.rows, width: self.width, data: self.data.clone() })
+    }
+}
+
+/// Which backend a run's O(entities × width) tables live on.  Serialized
+/// as a label: `"ram"`, `"mmap"`, or `"mmap:<dir>"`.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub enum StorageSpec {
+    /// In-RAM `Vec<f32>` tables (the default, and the historical behavior).
+    #[default]
+    Ram,
+    /// File-backed memory-mapped tables; scratch files live in `dir`
+    /// (the system temp directory when `None`).
+    Mmap { dir: Option<String> },
+}
+
+impl StorageSpec {
+    pub fn parse(s: &str) -> Result<StorageSpec> {
+        let lower = s.to_ascii_lowercase();
+        if let Some(dir) = lower.strip_prefix("mmap:") {
+            anyhow::ensure!(!dir.is_empty(), "empty mmap directory in '--store {s}'");
+            // preserve the caller's casing for the path itself
+            return Ok(StorageSpec::Mmap { dir: Some(s["mmap:".len()..].to_string()) });
+        }
+        match lower.as_str() {
+            "ram" | "mem" | "vec" => Ok(StorageSpec::Ram),
+            "mmap" => Ok(StorageSpec::Mmap { dir: None }),
+            other => anyhow::bail!("unknown storage backend '{other}' (ram|mmap|mmap:<dir>)"),
+        }
+    }
+
+    pub fn label(&self) -> String {
+        match self {
+            StorageSpec::Ram => "ram".to_string(),
+            StorageSpec::Mmap { dir: None } => "mmap".to_string(),
+            StorageSpec::Mmap { dir: Some(d) } => format!("mmap:{d}"),
+        }
+    }
+
+    pub fn is_mmap(&self) -> bool {
+        matches!(self, StorageSpec::Mmap { .. })
+    }
+
+    /// Directory scratch stores are created in.
+    pub fn dir(&self) -> PathBuf {
+        match self {
+            StorageSpec::Mmap { dir: Some(d) } => PathBuf::from(d),
+            _ => std::env::temp_dir(),
+        }
+    }
+
+    /// An all-zero `rows × width` store on this backend.  Mmap stores are
+    /// sparse: no page is resident (or on disk) until a row is touched.
+    pub fn open_zeroed(&self, rows: usize, width: usize) -> Result<Box<dyn EmbedStore>> {
+        Ok(match self {
+            StorageSpec::Ram => Box::new(VecStore::zeros(rows, width)),
+            StorageSpec::Mmap { .. } => Box::new(MmapStore::scratch(&self.dir(), rows, width)?),
+        })
+    }
+
+    /// A store initialized row-by-row by `fill` (called once per row, in
+    /// row order).  The mmap backend streams rows through buffered file
+    /// writes **before** mapping, so initialization lands in the page
+    /// cache without making the table resident in this process.
+    pub fn open_init(
+        &self,
+        rows: usize,
+        width: usize,
+        fill: &mut dyn FnMut(usize, &mut [f32]),
+    ) -> Result<Box<dyn EmbedStore>> {
+        Ok(match self {
+            StorageSpec::Ram => {
+                let mut data = vec![0.0f32; rows * width];
+                for (r, chunk) in data.chunks_exact_mut(width).enumerate() {
+                    fill(r, chunk);
+                }
+                Box::new(VecStore::from_vec(rows, width, data))
+            }
+            StorageSpec::Mmap { .. } => {
+                Box::new(MmapStore::scratch_init(&self.dir(), rows, width, fill)?)
+            }
+        })
+    }
+}
+
+/// A `Table`-shaped wrapper over a boxed [`EmbedStore`]: same
+/// `row`/`row_mut`/`set_row` surface, plus a cached pointer to the store's
+/// stable buffer so per-row access involves no virtual dispatch — the
+/// training hot path pays exactly what it paid with `Vec`-backed tables.
+pub struct StoreTable {
+    pub rows: usize,
+    pub width: usize,
+    store: Box<dyn EmbedStore>,
+    /// cached `store` buffer; stable because stores never reallocate
+    ptr: *mut f32,
+    len: usize,
+}
+
+// Safety: `ptr` aliases only the buffer owned by `store` (which is
+// `Send + Sync`); `&self` methods read, `&mut self` methods write, so the
+// usual reference rules police all access.
+unsafe impl Send for StoreTable {}
+unsafe impl Sync for StoreTable {}
+
+impl StoreTable {
+    pub fn from_store(mut store: Box<dyn EmbedStore>) -> Self {
+        let (rows, width) = (store.rows(), store.width());
+        let buf = store.as_mut_slice();
+        let (ptr, len) = (buf.as_mut_ptr(), buf.len());
+        Self { rows, width, store, ptr, len }
+    }
+
+    /// In-RAM zero table — drop-in for `Table::zeros`.
+    pub fn zeros(rows: usize, width: usize) -> Self {
+        Self::from_store(Box::new(VecStore::zeros(rows, width)))
+    }
+
+    /// Zero table on the selected backend (sparse for mmap).
+    pub fn zeros_in(spec: &StorageSpec, rows: usize, width: usize) -> Result<Self> {
+        Ok(Self::from_store(spec.open_zeroed(rows, width)?))
+    }
+
+    /// In-RAM table over an existing buffer.
+    pub fn from_vec(rows: usize, width: usize, data: Vec<f32>) -> Self {
+        Self::from_store(Box::new(VecStore::from_vec(rows, width, data)))
+    }
+
+    /// Uniform init in ±range on the selected backend.  Draws from `rng`
+    /// element-by-element in row-major order — the exact sequence of
+    /// `Table::init_uniform` — so backends are bit-identical.
+    pub fn init_uniform_in(
+        spec: &StorageSpec,
+        rows: usize,
+        width: usize,
+        range: f32,
+        rng: &mut Rng,
+    ) -> Result<Self> {
+        let mut fill = |_r: usize, row: &mut [f32]| {
+            for x in row.iter_mut() {
+                *x = rng.uniform(-range, range);
+            }
+        };
+        Ok(Self::from_store(spec.open_init(rows, width, &mut fill)?))
+    }
+
+    /// Total element count (`rows * width`).
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f32] {
+        assert!(i < self.rows, "row {i} out of range ({} rows)", self.rows);
+        unsafe { std::slice::from_raw_parts(self.ptr.add(i * self.width), self.width) }
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        assert!(i < self.rows, "row {i} out of range ({} rows)", self.rows);
+        unsafe { std::slice::from_raw_parts_mut(self.ptr.add(i * self.width), self.width) }
+    }
+
+    pub fn set_row(&mut self, i: usize, v: &[f32]) {
+        self.row_mut(i).copy_from_slice(v);
+    }
+
+    #[inline]
+    pub fn as_slice(&self) -> &[f32] {
+        unsafe { std::slice::from_raw_parts(self.ptr, self.len) }
+    }
+
+    #[inline]
+    pub fn as_mut_slice(&mut self) -> &mut [f32] {
+        unsafe { std::slice::from_raw_parts_mut(self.ptr, self.len) }
+    }
+
+    pub fn iter(&self) -> std::slice::Iter<'_, f32> {
+        self.as_slice().iter()
+    }
+
+    pub fn to_vec(&self) -> Vec<f32> {
+        self.as_slice().to_vec()
+    }
+
+    pub fn flush(&mut self) -> Result<()> {
+        self.store.flush()
+    }
+
+    pub fn backend(&self) -> &'static str {
+        self.store.backend()
+    }
+}
+
+impl Clone for StoreTable {
+    fn clone(&self) -> Self {
+        Self::from_store(self.store.clone_store())
+    }
+}
+
+impl std::fmt::Debug for StoreTable {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("StoreTable")
+            .field("rows", &self.rows)
+            .field("width", &self.width)
+            .field("backend", &self.store.backend())
+            .finish()
+    }
+}
+
+impl std::ops::Index<usize> for StoreTable {
+    type Output = f32;
+
+    fn index(&self, i: usize) -> &f32 {
+        &self.as_slice()[i]
+    }
+}
+
+impl PartialEq for StoreTable {
+    fn eq(&self, other: &Self) -> bool {
+        self.rows == other.rows && self.width == other.width && self.as_slice() == other.as_slice()
+    }
+}
+
+impl PartialEq<Vec<f32>> for StoreTable {
+    fn eq(&self, other: &Vec<f32>) -> bool {
+        self.as_slice() == other.as_slice()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn scratch_dir() -> PathBuf {
+        let d = std::env::temp_dir().join(format!("feds-store-test-{}", std::process::id()));
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    fn backends() -> Vec<StorageSpec> {
+        vec![
+            StorageSpec::Ram,
+            StorageSpec::Mmap { dir: Some(scratch_dir().to_string_lossy().into_owned()) },
+        ]
+    }
+
+    #[test]
+    fn spec_parse_and_label_round_trip() {
+        assert_eq!(StorageSpec::parse("ram").unwrap(), StorageSpec::Ram);
+        assert_eq!(StorageSpec::parse("mmap").unwrap(), StorageSpec::Mmap { dir: None });
+        assert_eq!(
+            StorageSpec::parse("mmap:/tmp/x").unwrap(),
+            StorageSpec::Mmap { dir: Some("/tmp/x".to_string()) }
+        );
+        for s in ["ram", "mmap", "mmap:/tmp/x"] {
+            assert_eq!(StorageSpec::parse(s).unwrap().label(), s);
+        }
+        assert!(StorageSpec::parse("tape").is_err());
+        assert!(StorageSpec::parse("mmap:").is_err());
+    }
+
+    /// Contract: zeroed stores read back zero, writes read back exactly,
+    /// and both backends agree bit-for-bit.
+    #[test]
+    fn contract_zeroed_write_read_all_backends() {
+        for spec in backends() {
+            let mut t = StoreTable::zeros_in(&spec, 7, 3).unwrap();
+            assert_eq!(t.rows, 7);
+            assert_eq!(t.width, 3);
+            assert!(t.as_slice().iter().all(|&x| x == 0.0), "{}", t.backend());
+            t.set_row(2, &[1.0, 2.0, 3.0]);
+            t.row_mut(6)[1] = -4.5;
+            assert_eq!(t.row(2), &[1.0, 2.0, 3.0]);
+            assert_eq!(t.row(6), &[0.0, -4.5, 0.0]);
+            assert_eq!(t.row(0), &[0.0, 0.0, 0.0]);
+            let copy = t.clone();
+            assert_eq!(copy, t, "{}", t.backend());
+        }
+    }
+
+    #[test]
+    fn contract_init_uniform_identical_across_backends() {
+        let (rows, width, range) = (13, 5, 0.25f32);
+        let mut tables = Vec::new();
+        for spec in backends() {
+            let mut rng = Rng::new(99);
+            tables.push(StoreTable::init_uniform_in(&spec, rows, width, range, &mut rng).unwrap());
+        }
+        let bits = |t: &StoreTable| t.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        assert_eq!(bits(&tables[0]), bits(&tables[1]));
+        assert!(tables[0].iter().all(|&x| (-range..range).contains(&x)));
+    }
+
+    #[test]
+    fn contract_out_of_range_row_panics() {
+        for spec in backends() {
+            let t = StoreTable::zeros_in(&spec, 4, 2).unwrap();
+            let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| t.row(4).len()));
+            assert!(r.is_err(), "row(4) of a 4-row {} store must panic", t.backend());
+        }
+    }
+
+    #[test]
+    fn contract_out_of_range_write_rows_panics() {
+        for spec in backends() {
+            let mut store = spec.open_zeroed(4, 2).unwrap();
+            let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                store.write_rows(&[9], &[1.0, 2.0]);
+            }));
+            assert!(r.is_err(), "write_rows(9) on a 4-row store must panic");
+        }
+    }
+
+    /// Contract: disjoint shard ranges of one store can be mutated from
+    /// scoped threads — the `fed::server` concurrency model.
+    #[test]
+    fn contract_disjoint_shard_ranges_mutate_concurrently() {
+        for spec in backends() {
+            let rows = 64;
+            let width = 4;
+            let mut store = spec.open_zeroed(rows, width).unwrap();
+            let cuts = [0usize, 17, 40, 64];
+            {
+                let segs = store.ranges_mut(&cuts);
+                std::thread::scope(|s| {
+                    for (shard, seg) in segs.into_iter().enumerate() {
+                        s.spawn(move || {
+                            for x in seg.iter_mut() {
+                                *x = (shard + 1) as f32;
+                            }
+                        });
+                    }
+                });
+            }
+            for r in 0..rows {
+                let shard = cuts.iter().position(|&c| r < c).unwrap(); // 1-based
+                let want = shard as f32;
+                assert!(
+                    store.row(r).iter().all(|&x| x == want),
+                    "row {r}: {:?} want {want} ({})",
+                    store.row(r),
+                    store.backend()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn write_rows_scatter_matches_set_row() {
+        for spec in backends() {
+            let mut a = spec.open_zeroed(10, 2).unwrap();
+            let mut b = StoreTable::zeros_in(&spec, 10, 2).unwrap();
+            let ids = [1u32, 4, 9];
+            let data = [1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0];
+            a.write_rows(&ids, &data);
+            for (k, &id) in ids.iter().enumerate() {
+                b.set_row(id as usize, &data[k * 2..(k + 1) * 2]);
+            }
+            assert_eq!(a.as_slice(), b.as_slice());
+        }
+    }
+
+    #[test]
+    fn store_table_partial_eq_vec() {
+        let mut t = StoreTable::zeros(2, 2);
+        t.set_row(1, &[3.0, 4.0]);
+        assert_eq!(t, vec![0.0, 0.0, 3.0, 4.0]);
+        assert_eq!(t[3], 4.0);
+    }
+
+    #[test]
+    fn empty_table_is_safe() {
+        for spec in backends() {
+            let t = StoreTable::zeros_in(&spec, 0, 4).unwrap();
+            assert!(t.is_empty());
+            assert!(t.as_slice().is_empty());
+        }
+    }
+}

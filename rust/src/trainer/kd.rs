@@ -18,6 +18,7 @@ use crate::runtime::{
     lit_f32, lit_i32, lit_scalar_f32, read_f32_into, scalar_f32, to_vec_f32, write_f32,
     ArtifactMeta, Role, Runtime,
 };
+use crate::store::StoreTable;
 use crate::util::rng::Rng;
 
 use super::LocalTrainer;
@@ -245,7 +246,7 @@ impl LocalTrainer for KdXlaTrainer {
         Ok(())
     }
 
-    fn change_scores(&mut self, _ids: &[u32], _hist: &Table) -> Result<Vec<f32>> {
+    fn change_scores(&mut self, _ids: &[u32], _hist: &StoreTable) -> Result<Vec<f32>> {
         anyhow::bail!("FedE-KD does not sparsify; change scores are undefined")
     }
 }

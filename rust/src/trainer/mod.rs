@@ -15,8 +15,9 @@ pub mod xla;
 use anyhow::Result;
 
 use crate::data::dataset::{Batch, EvalBatch, EvalSet, FilterIndex};
-use crate::kge::{Method, Table};
+use crate::kge::Method;
 use crate::metrics::RankMetrics;
+use crate::store::StoreTable;
 
 pub use kd::KdXlaTrainer;
 pub use native::NativeTrainer;
@@ -63,7 +64,9 @@ pub trait LocalTrainer {
     fn set_entity_rows(&mut self, ids: &[u32], rows: &[f32]) -> Result<()>;
 
     /// Eq. 1 change scores (1 − cosine vs. the history table) for `ids`.
-    fn change_scores(&mut self, ids: &[u32], hist: &Table) -> Result<Vec<f32>>;
+    /// The history rides a [`StoreTable`] so E-scaled clients can keep it
+    /// on the run's storage backend.
+    fn change_scores(&mut self, ids: &[u32], hist: &StoreTable) -> Result<Vec<f32>>;
 }
 
 /// Evaluate a trainer over a full query set; returns filtered-rank metrics.

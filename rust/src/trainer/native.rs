@@ -12,7 +12,8 @@ use anyhow::Result;
 
 use crate::data::dataset::{Batch, EvalBatch};
 use crate::kge::native::NativeModel;
-use crate::kge::{Hyper, Method, Table};
+use crate::kge::{Hyper, Method};
+use crate::store::{StorageSpec, StoreTable};
 use crate::util::rng::Rng;
 
 use super::LocalTrainer;
@@ -35,6 +36,30 @@ impl NativeTrainer {
             model: NativeModel::new(method, hyper, num_entities, num_relations, rng),
             eval_batch,
         }
+    }
+
+    /// Like [`NativeTrainer::new`] with entity-scaled model state on the
+    /// selected storage backend (bit-identical across backends).
+    pub fn with_store(
+        method: Method,
+        hyper: Hyper,
+        num_entities: usize,
+        num_relations: usize,
+        eval_batch: usize,
+        storage: &StorageSpec,
+        rng: &mut Rng,
+    ) -> Result<Self> {
+        Ok(Self {
+            model: NativeModel::with_store(
+                method,
+                hyper,
+                num_entities,
+                num_relations,
+                storage,
+                rng,
+            )?,
+            eval_batch,
+        })
     }
 }
 
@@ -85,7 +110,7 @@ impl LocalTrainer for NativeTrainer {
         Ok(())
     }
 
-    fn change_scores(&mut self, ids: &[u32], hist: &Table) -> Result<Vec<f32>> {
+    fn change_scores(&mut self, ids: &[u32], hist: &StoreTable) -> Result<Vec<f32>> {
         anyhow::ensure!(hist.width == self.model.ent.width, "hist width mismatch");
         Ok(ids
             .iter()
@@ -132,11 +157,7 @@ mod tests {
     #[test]
     fn change_scores_zero_for_identical() {
         let mut t = trainer();
-        let hist = Table {
-            rows: 16,
-            width: t.entity_width(),
-            data: t.model.ent.data.clone(),
-        };
+        let hist = StoreTable::from_vec(16, t.entity_width(), t.model.ent.to_vec());
         let scores = t.change_scores(&[0, 5, 9], &hist).unwrap();
         for s in scores {
             assert!(s.abs() < 1e-6);
@@ -146,11 +167,7 @@ mod tests {
     #[test]
     fn change_scores_positive_after_modification() {
         let mut t = trainer();
-        let hist = Table {
-            rows: 16,
-            width: t.entity_width(),
-            data: t.model.ent.data.clone(),
-        };
+        let hist = StoreTable::from_vec(16, t.entity_width(), t.model.ent.to_vec());
         let w = t.entity_width();
         let newrow: Vec<f32> = (0..w).map(|i| (i as f32) - 3.0).collect();
         t.set_entity_rows(&[5], &newrow).unwrap();

@@ -16,6 +16,7 @@ use crate::runtime::{
     lit_f32, lit_i32, lit_scalar_f32, read_f32_into, scalar_f32, to_vec_f32, write_f32,
     ArtifactMeta, Role, Runtime,
 };
+use crate::store::StoreTable;
 use crate::util::rng::Rng;
 
 use super::LocalTrainer;
@@ -277,7 +278,7 @@ impl LocalTrainer for XlaTrainer {
         Ok(())
     }
 
-    fn change_scores(&mut self, ids: &[u32], hist: &Table) -> Result<Vec<f32>> {
+    fn change_scores(&mut self, ids: &[u32], hist: &StoreTable) -> Result<Vec<f32>> {
         let meta = self
             .change_meta
             .as_ref()
@@ -287,7 +288,7 @@ impl LocalTrainer for XlaTrainer {
         self.flush_host()?;
         let e = self.num_entities as i64;
         let w = self.entity_width as i64;
-        let hist_lit = lit_f32(&hist.data, &[e, w])?;
+        let hist_lit = lit_f32(hist.as_slice(), &[e, w])?;
         let inputs = [&self.state[0], &hist_lit];
         let out = self.rt.execute_refs(&meta, &inputs)?;
         let all = to_vec_f32(&out[0])?;

@@ -155,6 +155,31 @@ pub fn write_trajectory(name: &str, json: &Json) {
     }
 }
 
+/// Peak resident-set size of this process in bytes (`VmHWM` from
+/// `/proc/self/status`), or `None` where procfs is unavailable.  This is
+/// the high-water mark since process start — the number the scale
+/// benchmark gates on to show mmap-backed tables stay O(touched rows).
+pub fn peak_rss_bytes() -> Option<u64> {
+    proc_status_kib("VmHWM:").map(|kib| kib * 1024)
+}
+
+/// Current resident-set size in bytes (`VmRSS`), or `None` off-Linux.
+pub fn current_rss_bytes() -> Option<u64> {
+    proc_status_kib("VmRSS:").map(|kib| kib * 1024)
+}
+
+/// A `kB` field from `/proc/self/status` (Linux only; `None` elsewhere).
+fn proc_status_kib(field: &str) -> Option<u64> {
+    let status = std::fs::read_to_string("/proc/self/status").ok()?;
+    let line = status.lines().find(|l| l.starts_with(field))?;
+    line[field.len()..]
+        .trim()
+        .trim_end_matches("kB")
+        .trim()
+        .parse::<u64>()
+        .ok()
+}
+
 pub fn fmt_ns(ns: f64) -> String {
     if ns < 1e3 {
         format!("{ns:.1} ns")
@@ -179,6 +204,18 @@ mod tests {
         let s = b.bench("noop_sum", || (0..100u64).sum::<u64>());
         assert!(s.mean_ns > 0.0);
         assert!(s.iters > 0);
+    }
+
+    #[test]
+    fn rss_readings_are_sane_on_linux() {
+        if !std::path::Path::new("/proc/self/status").exists() {
+            assert!(peak_rss_bytes().is_none());
+            assert!(current_rss_bytes().is_none());
+            return;
+        }
+        let cur = current_rss_bytes().expect("VmRSS must parse on Linux");
+        let peak = peak_rss_bytes().expect("VmHWM must parse on Linux");
+        assert!(cur > 0 && peak >= cur, "peak {peak} must be ≥ current {cur} > 0");
     }
 
     #[test]

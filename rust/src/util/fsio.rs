@@ -1,0 +1,48 @@
+//! Durable filesystem primitives shared by coordinator checkpoints and
+//! mmap-backed embedding stores.
+//!
+//! One discipline everywhere: a snapshot is written to `<file>.tmp`,
+//! fsynced, then renamed over the target.  A crash mid-write leaves the
+//! previous file intact; readers never observe a torn write.
+
+use std::fs;
+use std::io::Write as _;
+use std::path::{Path, PathBuf};
+
+/// The temp sibling a file is staged through: `<path>.tmp`.
+pub fn tmp_path(path: &Path) -> PathBuf {
+    let mut name = path.file_name().map(|n| n.to_os_string()).unwrap_or_default();
+    name.push(".tmp");
+    path.with_file_name(name)
+}
+
+/// Atomically replace `path` with `bytes`: write `<path>.tmp`, fsync,
+/// rename.  Returns the byte count written.
+pub fn atomic_write(path: &Path, bytes: &[u8]) -> std::io::Result<u64> {
+    let tmp = tmp_path(path);
+    {
+        let mut f = fs::File::create(&tmp)?;
+        f.write_all(bytes)?;
+        f.sync_all()?;
+    }
+    fs::rename(&tmp, path)?;
+    Ok(bytes.len() as u64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn atomic_write_replaces_without_leaving_tmp() {
+        let dir = std::env::temp_dir().join(format!("feds-fsio-test-{}", std::process::id()));
+        fs::create_dir_all(&dir).unwrap();
+        let target = dir.join("state.bin");
+        assert_eq!(atomic_write(&target, b"first").unwrap(), 5);
+        assert_eq!(fs::read(&target).unwrap(), b"first");
+        assert_eq!(atomic_write(&target, b"second!").unwrap(), 7);
+        assert_eq!(fs::read(&target).unwrap(), b"second!");
+        assert!(!tmp_path(&target).exists(), "temp staged file must be renamed away");
+        let _ = fs::remove_dir_all(&dir);
+    }
+}

@@ -4,6 +4,7 @@
 
 pub mod bench;
 pub mod cli;
+pub mod fsio;
 pub mod json;
 pub mod logging;
 pub mod prop;

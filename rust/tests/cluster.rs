@@ -73,6 +73,7 @@ fn tiny_spec(algo: AlgoSpec, max_rounds: usize) -> ExperimentSpec {
         transport: Default::default(),
         shards: 0,
         participation: Default::default(),
+        storage: Default::default(),
     }
 }
 

@@ -53,6 +53,7 @@ fn drill_spec() -> ExperimentSpec {
         transport: Default::default(),
         shards: 0,
         participation: Default::default(),
+        storage: Default::default(),
     }
 }
 

@@ -47,6 +47,8 @@ fn base_cfg(algo: Algo, rounds: usize) -> RoundParams {
         exec: ExecMode::Sequential,
         transport: TransportSpec::Mpsc,
         shards: 1,
+        participation: Default::default(),
+        storage: Default::default(),
     }
 }
 

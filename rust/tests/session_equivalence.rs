@@ -45,6 +45,7 @@ fn tiny_spec(algo: AlgoSpec, exec: ExecMode) -> ExperimentSpec {
         transport: Default::default(),
         shards: 0,
         participation: Default::default(),
+        storage: Default::default(),
     }
 }
 

@@ -7,6 +7,7 @@ use feds::kge::Method;
 use feds::spec::{
     AlgoSpec, BackendSpec, BudgetSpec, DataSpec, ExperimentSpec, ParticipationSpec, TransportSpec,
 };
+use feds::store::StorageSpec;
 use feds::util::json::Json;
 use feds::util::prop;
 use feds::util::rng::Rng;
@@ -80,6 +81,11 @@ fn random_spec(rng: &mut Rng) -> ExperimentSpec {
             0 => ParticipationSpec::Full,
             1 => ParticipationSpec::Fraction(rng.uniform(1e-3, 1.0) as f64),
             _ => ParticipationSpec::KofN(1 + rng.usize_below(clients)),
+        },
+        storage: match rng.usize_below(3) {
+            0 => StorageSpec::Ram,
+            1 => StorageSpec::Mmap { dir: None },
+            _ => StorageSpec::Mmap { dir: Some(format!("/tmp/feds-{}", rng.below(100))) },
         },
     }
 }

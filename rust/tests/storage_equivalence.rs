@@ -1,0 +1,127 @@
+//! The storage subsystem's correctness bar: a run whose O(entities ×
+//! width) tables live in mmap-backed files must be **bit-identical** —
+//! same accounting, same losses, same ranks — to the same run on the
+//! in-RAM backend, for every algorithm and both execution modes.  The
+//! backend may only change *where* rows live, never a single bit of
+//! what the protocol computes.
+
+use feds::comm::accounting::Direction;
+use feds::fed::{run_params, Backend, ExecMode, RoundParams, RunOutcome};
+use feds::kge::{Hyper, Method};
+use feds::spec::{AlgoSpec, BackendSpec, BudgetSpec, DataSpec, ExperimentSpec};
+use feds::store::StorageSpec;
+
+fn tiny_spec(algo: AlgoSpec, exec: ExecMode) -> ExperimentSpec {
+    ExperimentSpec {
+        name: String::new(),
+        method: Method::TransE,
+        algo,
+        data: DataSpec {
+            entities: 192,
+            relations: 12,
+            triples: 2400,
+            clusters: 4,
+            clients: 3,
+            seed: 11,
+        },
+        backend: BackendSpec::Native {
+            dim: 16,
+            learning_rate: 5e-3,
+            batch: 64,
+            negatives: 16,
+            eval_batch: 32,
+        },
+        budget: BudgetSpec {
+            max_rounds: 4,
+            local_epochs: 1,
+            eval_every: 2,
+            patience: 3,
+            eval_cap: 64,
+        },
+        seed: 7,
+        exec,
+        transport: Default::default(),
+        shards: 0,
+        participation: Default::default(),
+        storage: Default::default(),
+    }
+}
+
+fn run_with(algo: AlgoSpec, exec: ExecMode, storage: StorageSpec) -> RunOutcome {
+    let spec = tiny_spec(algo, exec);
+    let data = spec.data.build();
+    let BackendSpec::Native { dim, learning_rate, batch, negatives, eval_batch } = &spec.backend
+    else {
+        unreachable!()
+    };
+    let backend = Backend::Native {
+        hyper: Hyper { dim: *dim, learning_rate: *learning_rate, ..Default::default() },
+        batch: *batch,
+        negatives: *negatives,
+        eval_batch: *eval_batch,
+    };
+    let mut params = RoundParams::from_spec(&spec, &backend);
+    params.storage = storage;
+    run_params(&data, &params, &backend, &mut []).unwrap()
+}
+
+fn assert_bit_identical(tag: &str, ram: &RunOutcome, mmap: &RunOutcome) {
+    for dir in [Direction::Upload, Direction::Download] {
+        assert_eq!(ram.acct.params_dir(dir), mmap.acct.params_dir(dir), "{tag}: params {dir:?}");
+        assert_eq!(ram.acct.bytes_dir(dir), mmap.acct.bytes_dir(dir), "{tag}: bytes {dir:?}");
+    }
+    assert_eq!(ram.acct.messages(), mmap.acct.messages(), "{tag}: messages");
+    assert_eq!(ram.eq5_ratio, mmap.eq5_ratio, "{tag}: eq5");
+    let (a, b) = (&ram.history.records, &mmap.history.records);
+    assert_eq!(a.len(), b.len(), "{tag}: record count");
+    assert_eq!(ram.history.converged_idx, mmap.history.converged_idx, "{tag}: convergence");
+    for (x, y) in a.iter().zip(b.iter()) {
+        assert_eq!(x.round, y.round, "{tag}");
+        assert_eq!(x.params_cum, y.params_cum, "{tag}: params@{}", x.round);
+        assert_eq!(x.bytes_cum, y.bytes_cum, "{tag}: bytes@{}", x.round);
+        assert_eq!(x.mean_loss.to_bits(), y.mean_loss.to_bits(), "{tag}: loss@{}", x.round);
+        assert_eq!(x.valid.mrr.to_bits(), y.valid.mrr.to_bits(), "{tag}: valid MRR@{}", x.round);
+        assert_eq!(x.test.mrr.to_bits(), y.test.mrr.to_bits(), "{tag}: test MRR@{}", x.round);
+        assert_eq!(x.test.hits10.to_bits(), y.test.hits10.to_bits(), "{tag}: hits@{}", x.round);
+    }
+}
+
+/// Every algorithm × both exec modes: the mmap backend reproduces the
+/// in-RAM run bit for bit.
+#[test]
+fn mmap_backend_matches_ram_for_every_algo_and_exec_mode() {
+    let algos = [
+        AlgoSpec::Single,
+        AlgoSpec::FedEP,
+        AlgoSpec::FedEPL,
+        AlgoSpec::FedS { sparsity: 0.4, sync_interval: 4, sync: true },
+        AlgoSpec::FedS { sparsity: 0.4, sync_interval: 4, sync: false },
+        AlgoSpec::Svd { cols: 8, plus: false },
+        AlgoSpec::Svd { cols: 8, plus: true },
+    ];
+    for algo in algos {
+        for exec in [ExecMode::Sequential, ExecMode::Threaded] {
+            let ram = run_with(algo.clone(), exec, StorageSpec::Ram);
+            let mmap = run_with(algo.clone(), exec, StorageSpec::Mmap { dir: None });
+            assert_bit_identical(&format!("{algo:?}/{exec:?}"), &ram, &mmap);
+        }
+    }
+}
+
+/// An explicit scratch directory is honored and left usable: the run
+/// completes against it and its files never outlive their stores on
+/// platforms with unlink-after-map (elsewhere they are plain files in
+/// the chosen directory, not strewn into the global temp dir).
+#[test]
+fn mmap_backend_honors_explicit_directory() {
+    let dir = std::env::temp_dir().join("feds_storage_equiv_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let storage = StorageSpec::Mmap { dir: Some(dir.to_string_lossy().into_owned()) };
+    let ram = run_with(AlgoSpec::feds(), ExecMode::Sequential, StorageSpec::Ram);
+    let mmap = run_with(AlgoSpec::feds(), ExecMode::Sequential, storage);
+    assert_bit_identical("feds/explicit-dir", &ram, &mmap);
+    if cfg!(target_os = "linux") {
+        let left: Vec<_> = std::fs::read_dir(&dir).unwrap().flatten().collect();
+        assert!(left.is_empty(), "scratch files must not accumulate: {left:?}");
+    }
+}

@@ -43,6 +43,8 @@ fn tiny_spec(algo: AlgoSpec, exec: ExecMode, transport: TransportSpec) -> Experi
         transport,
         // exercise sharded aggregation on both transports too
         shards: 4,
+        participation: Default::default(),
+        storage: Default::default(),
     }
 }
 

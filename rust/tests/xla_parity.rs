@@ -124,15 +124,12 @@ fn change_scores_parity() {
     let ids: Vec<u32> = (0..m.num_entities as u32).collect();
     let cur = xla_t.get_entity_rows(&ids).unwrap();
     let we = xla_t.entity_width();
-    let mut hist = feds::kge::Table {
-        rows: m.num_entities,
-        width: we,
-        data: cur.clone(),
-    };
+    let mut hist_data = cur.clone();
     let mut prng = Rng::new(6);
-    for v in hist.data.iter_mut() {
+    for v in hist_data.iter_mut() {
         *v += prng.uniform(-0.01, 0.01);
     }
+    let hist = feds::store::StoreTable::from_vec(m.num_entities, we, hist_data);
 
     let probe: Vec<u32> = (0..200).map(|i| i * 7 % m.num_entities as u32).collect();
     let got = xla_t.change_scores(&probe, &hist).unwrap();

@@ -2,28 +2,42 @@
 """Perf regression gate: compare a fresh bench trajectory point against the
 committed baseline and fail on regression.
 
-Usage (CI runs this from rust/ right after the train-bench smoke step):
+Usage (CI runs this from rust/ right after each bench smoke step):
 
     python3 ../scripts/bench_gate.py \
         --baseline ../BENCH_train.json --fresh BENCH_train.json
 
-Gated keys are the speedup ratios (`train_speedup`, `kernel_speedup_*`):
-ratios of two timings taken on the same machine in the same run, so they
-are comparable across hosts in a way raw milliseconds are not.
+Two point shapes are understood, detected from the fresh file:
 
-Two kinds of checks:
+* **Speedup points** (BENCH_train.json) gate the speedup ratios
+  (`train_speedup`, `kernel_speedup_*`): ratios of two timings taken on
+  the same machine in the same run, so they are comparable across hosts
+  in a way raw milliseconds are not.  Bigger is better; checks are
+  **floors**.
+* **Scale points** (BENCH_scale.json, recognized by `scale_round_ratio`)
+  gate cost ratios where *smaller* is better; checks are **ceilings**:
+  `scale_round_ratio` (server round time at E=1M over E=100k at fixed
+  touched-K — near 1 when per-round cost is O(touched), not O(E)) and
+  `rss_fraction` (peak RSS of an E=1M mmap run over its dense table
+  bytes — well below 1 when only touched pages go resident; skipped
+  when the fresh point lacks it, e.g. off-Linux).
 
-* **Absolute floors** — always enforced.  The sparse engine must beat the
-  dense baseline by `--train-floor` (default 5x; the full-length
-  acceptance target is 10x, but CI smoke runs measure with
-  FEDS_BENCH_FAST's short sampling windows, so the floor leaves noise
-  margin), and every dispatched kernel must at least match the scalar
-  oracle (`--kernel-floor`, default 1.0).
-* **Relative band vs the baseline** — each fresh speedup must be at least
-  `--band` (default 0.5) times the committed value.  Skipped for any key
-  the baseline lacks, and skipped entirely when the baseline is marked
-  `"bootstrap": true` (a placeholder committed before the first measured
-  snapshot — floors still apply).
+Two kinds of checks in either mode:
+
+* **Absolute floors/ceilings** — always enforced.  The sparse engine
+  must beat the dense baseline by `--train-floor` (default 5x; the
+  full-length acceptance target is 10x, but CI smoke runs measure with
+  FEDS_BENCH_FAST's short sampling windows, so the bound leaves noise
+  margin), every dispatched kernel must at least match the scalar
+  oracle (`--kernel-floor`, default 1.0), the scale round ratio must
+  stay under `--scale-ratio-max` (default 3.0) and the RSS fraction
+  under `--rss-frac-max` (default 0.75).
+* **Relative band vs the baseline** — each fresh speedup must be at
+  least `--band` (default 0.5) times the committed value; each fresh
+  cost ratio must be at most the committed value divided by `--band`.
+  Skipped for any key the baseline lacks, and skipped entirely when the
+  baseline is marked `"bootstrap": true` (a placeholder committed
+  before the first measured snapshot — absolute bounds still apply).
 
 Exit code 0 = pass, 1 = regression, 2 = usage/IO error.
 """
@@ -47,22 +61,8 @@ def speedup_keys(point):
     return sorted(keys)
 
 
-def main():
-    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
-    ap.add_argument("--baseline", required=True, help="committed trajectory point")
-    ap.add_argument("--fresh", required=True, help="just-measured trajectory point")
-    ap.add_argument("--band", type=float, default=0.5,
-                    help="fresh speedup must be >= band * baseline (default 0.5)")
-    ap.add_argument("--train-floor", type=float, default=5.0,
-                    help="absolute floor for train_speedup (default 5.0)")
-    ap.add_argument("--kernel-floor", type=float, default=1.0,
-                    help="absolute floor for each kernel_speedup_* (default 1.0)")
-    args = ap.parse_args()
-
-    baseline = load(args.baseline)
-    fresh = load(args.fresh)
-    bootstrap = bool(baseline.get("bootstrap"))
-
+def gate_speedups(args, baseline, fresh, bootstrap):
+    """Floor checks: bigger is better. Returns (failures, checked)."""
     keys = speedup_keys(fresh)
     if "train_speedup" not in keys:
         print("bench_gate: fresh point has no train_speedup — wrong file?", file=sys.stderr)
@@ -92,13 +92,82 @@ def main():
         else:
             verdicts.append("band skipped (key not in baseline)")
         print(f"bench_gate: {key:28s} {val:8.2f}x  [{'; '.join(verdicts)}]")
+    return failures, len(keys)
+
+
+def gate_scale(args, baseline, fresh, bootstrap):
+    """Ceiling checks: smaller is better. Returns (failures, checked)."""
+    ceilings = [("scale_round_ratio", args.scale_ratio_max),
+                ("rss_fraction", args.rss_frac_max)]
+    failures = []
+    checked = 0
+    for key, ceiling in ceilings:
+        if key not in fresh:
+            # rss_fraction is absent when the bench ran without procfs
+            print(f"bench_gate: {key:28s} {'—':>8}   [skipped (not in fresh point)]")
+            continue
+        checked += 1
+        val = float(fresh[key])
+        verdicts = []
+        if val > ceiling:
+            failures.append(f"{key} = {val:.3f} is above the absolute ceiling {ceiling:.3f}")
+            verdicts.append("CEILING FAIL")
+        else:
+            verdicts.append("ceiling ok")
+        if not bootstrap and key in baseline:
+            allow = float(baseline[key]) / args.band
+            if val > allow:
+                failures.append(
+                    f"{key} = {val:.3f} regressed above baseline "
+                    f"{float(baseline[key]):.3f} / {args.band:.2f} (= {allow:.3f})")
+                verdicts.append("BAND FAIL")
+            else:
+                verdicts.append(f"band ok vs {float(baseline[key]):.3f}")
+        elif bootstrap:
+            verdicts.append("band skipped (bootstrap baseline)")
+        else:
+            verdicts.append("band skipped (key not in baseline)")
+        print(f"bench_gate: {key:28s} {val:8.3f}   [{'; '.join(verdicts)}]")
+    if checked == 0:
+        print("bench_gate: fresh scale point has no gateable keys", file=sys.stderr)
+        sys.exit(2)
+    return failures, checked
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--baseline", required=True, help="committed trajectory point")
+    ap.add_argument("--fresh", required=True, help="just-measured trajectory point")
+    ap.add_argument("--band", type=float, default=0.5,
+                    help="fresh speedup must be >= band * baseline; "
+                         "fresh cost ratio must be <= baseline / band (default 0.5)")
+    ap.add_argument("--train-floor", type=float, default=5.0,
+                    help="absolute floor for train_speedup (default 5.0)")
+    ap.add_argument("--kernel-floor", type=float, default=1.0,
+                    help="absolute floor for each kernel_speedup_* (default 1.0)")
+    ap.add_argument("--scale-ratio-max", type=float, default=3.0,
+                    help="absolute ceiling for scale_round_ratio (default 3.0)")
+    ap.add_argument("--rss-frac-max", type=float, default=0.75,
+                    help="absolute ceiling for rss_fraction (default 0.75)")
+    args = ap.parse_args()
+
+    baseline = load(args.baseline)
+    fresh = load(args.fresh)
+    bootstrap = bool(baseline.get("bootstrap"))
+
+    if "scale_round_ratio" in fresh:
+        failures, checked = gate_scale(args, baseline, fresh, bootstrap)
+        what = "scale keys"
+    else:
+        failures, checked = gate_speedups(args, baseline, fresh, bootstrap)
+        what = "speedup keys"
 
     if failures:
         print("bench_gate: FAIL", file=sys.stderr)
         for f in failures:
             print(f"  - {f}", file=sys.stderr)
         sys.exit(1)
-    print(f"bench_gate: PASS ({len(keys)} speedup keys checked)")
+    print(f"bench_gate: PASS ({checked} {what} checked)")
 
 
 if __name__ == "__main__":

@@ -1,7 +1,7 @@
 #!/usr/bin/env bash
 # Refresh the committed bench trajectory points at the repo root.
 #
-# Runs the three bench suites full-length (no FEDS_BENCH_FAST) with
+# Runs the bench suites full-length (no FEDS_BENCH_FAST) with
 # FEDS_BENCH_SNAPSHOT=1, which makes `util::bench::write_trajectory`
 # mirror each rust/BENCH_*.json into the repo root — the copies
 # scripts/bench_gate.py treats as the baseline.  Commit the updated root
@@ -16,5 +16,6 @@ unset FEDS_BENCH_FAST || true
 cargo bench --bench train_hot_path
 cargo bench --bench server_shards
 cargo bench --bench cluster_wallclock
+cargo bench --bench scale
 
 echo "bench_snapshot: refreshed $(ls ../BENCH_*.json | tr '\n' ' ')"
