@@ -55,6 +55,7 @@ fn main() -> anyhow::Result<()> {
         shards: 0,
         participation: Default::default(),
         storage: Default::default(),
+        compression: Default::default(),
     };
     let mut session = Session::with_runtime(rt);
 

@@ -59,6 +59,7 @@ fn main() -> anyhow::Result<()> {
                 shards: 1,
                 participation: Default::default(),
                 storage: Default::default(),
+                compression: Default::default(),
             };
             run_params(&data, &cfg, &backend, &mut [])
         };

@@ -66,6 +66,7 @@ fn main() -> anyhow::Result<()> {
         shards: 0,
         participation: Default::default(),
         storage: Default::default(),
+        compression: Default::default(),
     };
     // every spec is JSON-serializable: println!("{}", spec.to_json()) is a
     // ready-made `feds run --spec` file

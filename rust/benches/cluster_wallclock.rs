@@ -57,6 +57,7 @@ fn bench_spec(rounds: usize) -> ExperimentSpec {
         shards: 0,
         participation: Default::default(),
         storage: Default::default(),
+        compression: Default::default(),
     }
 }
 

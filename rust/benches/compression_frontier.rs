@@ -1,0 +1,126 @@
+//! Bytes-vs-accuracy frontier of the `--compress` stage stacks:
+//! `cargo bench --bench compression_frontier` (`FEDS_BENCH_FAST=1` for
+//! the CI smoke run).
+//!
+//! One FedEP configuration is trained to the same round budget under a
+//! sweep of compression stacks (none / topk / topk,int8 / topk,fp16 /
+//! topk,svd / topk,int8:ef).  Every run meters its actual packed frame
+//! bytes through the transport `Accounting`, so `bytes_per_round_<stack>`
+//! is what really crossed the simulated wire, not an analytic estimate.
+//! The trajectory point (`BENCH_bytes.json`) carries, per stack, bytes
+//! per round and converged test MRR, plus the gated frontier claim:
+//!
+//! * `bytes_reduction_topk_int8` — bytes-per-round ratio of `topk` over
+//!   `topk,int8`; quantizing the kept rows to int8 must cut at least 3×
+//!   more bytes (`scripts/bench_gate.py` floors it).
+//! * `mrr_degradation_topk_int8` — relative MRR loss of `topk,int8`
+//!   against `topk` (clamped at 0), gated at ≤ 1%.
+
+use feds::fed::compression::PipelineSpec;
+use feds::fed::ExecMode;
+use feds::kge::Method;
+use feds::spec::{AlgoSpec, BackendSpec, BudgetSpec, DataSpec, ExperimentSpec, Session};
+use feds::util::bench::{write_trajectory, Bench};
+use feds::util::json::Json;
+
+/// The sweep: `(json key suffix, stack label)`.
+const STACKS: &[(&str, &str)] = &[
+    ("none", ""),
+    ("topk", "topk"),
+    ("topk_int8", "topk,int8"),
+    ("topk_fp16", "topk,fp16"),
+    ("topk_svd", "topk,svd@8"),
+    ("topk_int8_ef", "topk,int8:ef"),
+];
+
+fn spec_for(stack: &str, rounds: usize) -> ExperimentSpec {
+    ExperimentSpec {
+        name: format!("frontier_{}", if stack.is_empty() { "none" } else { stack }),
+        method: Method::TransE,
+        algo: AlgoSpec::FedEP,
+        data: DataSpec {
+            entities: 512,
+            relations: 24,
+            triples: 8_000,
+            clusters: 8,
+            clients: 3,
+            seed: 64501,
+        },
+        backend: BackendSpec::Native {
+            dim: 32,
+            learning_rate: 5e-3,
+            batch: 128,
+            negatives: 16,
+            eval_batch: 64,
+        },
+        budget: BudgetSpec {
+            max_rounds: rounds,
+            local_epochs: 1,
+            // evaluate only at the end: every stack pays the same round
+            // budget, so bytes-per-round comparisons are like-for-like
+            eval_every: rounds,
+            patience: rounds,
+            eval_cap: 256,
+        },
+        seed: 64501,
+        exec: ExecMode::Sequential,
+        transport: Default::default(),
+        shards: 0,
+        participation: Default::default(),
+        storage: Default::default(),
+        compression: PipelineSpec::parse(stack).expect("frontier stacks parse"),
+    }
+}
+
+fn main() {
+    let fast = std::env::var("FEDS_BENCH_FAST").as_deref() == Ok("1");
+    let rounds = if fast { 4 } else { 12 };
+    let mut b = Bench::from_env("compression_frontier");
+
+    let mut point = Json::obj()
+        .set("suite", "compression_frontier")
+        .set("rounds", rounds as u64)
+        .set("entities", 512u64)
+        .set("dim", 32u64)
+        .set("clients", 3u64);
+
+    let mut bytes_per_round = Vec::new();
+    let mut mrrs = Vec::new();
+    for (key, stack) in STACKS {
+        let spec = spec_for(stack, rounds);
+        let mut run = Session::new().build(&spec).expect("build frontier run");
+        run.quiet();
+        let out = run.execute().expect("execute frontier run");
+        let executed = out.history.records.last().map(|r| r.round).unwrap_or(rounds);
+        let bpr = out.acct.bytes() as f64 / executed.max(1) as f64;
+        let mrr = out.history.mrr_cg();
+        b.report_value(&format!("bytes_per_round_{key}"), bpr, "B/round");
+        b.report_value(&format!("mrr_{key}"), mrr, "test MRR");
+        point = point
+            .set(format!("bytes_per_round_{key}").as_str(), bpr)
+            .set(format!("mrr_{key}").as_str(), mrr);
+        bytes_per_round.push((*key, bpr));
+        mrrs.push((*key, mrr));
+        println!("frontier: {:<14} {bpr:>12.0} B/round  MRR {mrr:.4}", format!("[{stack}]"));
+    }
+
+    let bpr_of = |k: &str| bytes_per_round.iter().find(|(key, _)| *key == k).unwrap().1;
+    let mrr_of = |k: &str| mrrs.iter().find(|(key, _)| *key == k).unwrap().1;
+
+    let reduction = bpr_of("topk") / bpr_of("topk_int8").max(1e-9);
+    let degradation =
+        ((mrr_of("topk") - mrr_of("topk_int8")) / mrr_of("topk").max(1e-9)).max(0.0);
+    b.report_value("bytes_reduction_topk_int8", reduction, "x (topk / topk,int8)");
+    b.report_value("mrr_degradation_topk_int8", degradation, "rel. MRR loss");
+    point = point
+        .set("bytes_reduction_topk_int8", reduction)
+        .set("mrr_degradation_topk_int8", degradation);
+
+    write_trajectory("BENCH_bytes", &point);
+    println!(
+        "frontier: topk,int8 transmits {reduction:.2}x fewer bytes than topk \
+         at {:.2}% relative MRR loss",
+        degradation * 100.0
+    );
+    b.finish();
+}

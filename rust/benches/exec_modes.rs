@@ -49,6 +49,7 @@ fn main() {
             shards: auto_shards(),
             participation: Default::default(),
             storage: Default::default(),
+            compression: Default::default(),
         };
         let name = algo.label();
 

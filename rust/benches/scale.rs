@@ -116,6 +116,7 @@ fn main() {
         shards: 0,
         participation: Default::default(),
         storage: StorageSpec::Mmap { dir: None },
+        compression: Default::default(),
     };
 
     let wall = Instant::now();

@@ -129,6 +129,7 @@ impl Ctx {
             shards: 0,
             participation: Default::default(),
             storage: Default::default(),
+            compression: Default::default(),
         }
     }
 

@@ -447,6 +447,7 @@ mod tests {
             shards: 0,
             participation: Default::default(),
             storage: Default::default(),
+            compression: Default::default(),
         }
     }
 

@@ -139,7 +139,9 @@ enum Outcome {
 /// The round a download frame belongs to.
 fn frame_round(frame: &[u8]) -> Result<usize> {
     Ok(match Download::decode(frame)? {
-        Download::Full { round, .. } | Download::Sparse { round, .. } => round as usize,
+        Download::Full { round, .. }
+        | Download::Sparse { round, .. }
+        | Download::Packed { round, .. } => round as usize,
     })
 }
 

@@ -17,8 +17,10 @@ use crate::spec::ExperimentSpec;
 
 /// Version of this control-plane protocol.  A [`ClusterMsg::Hello`] with
 /// any other version is rejected before the client enters the federation.
-/// v2 added [`ClusterMsg::RoundCall`] (sampled participation).
-pub const PROTO_VERSION: u16 = 2;
+/// v2 added [`ClusterMsg::RoundCall`] (sampled participation).  v3 added
+/// the packed compression frames (`--compress` stage stacks) to the data
+/// plane; a run with an empty pipeline emits exactly the v2 frame bytes.
+pub const PROTO_VERSION: u16 = 3;
 
 /// FNV-1a digest of the spec's canonical JSON form.  Server and clients
 /// each hash their own copy; a mismatch at handshake time means the two

@@ -471,6 +471,12 @@ fn fold_carried(server: &mut Server, client: u16, up: &Upload) {
             };
             server.receive(client, &ids, emb);
         }
+        // packed uploads must decode against the exchange's per-client
+        // reference mirror — routed through `Exchange::server_receive`
+        // at the call site, never here
+        Upload::Packed { .. } => {
+            unreachable!("packed carried uploads fold through the exchange")
+        }
     }
 }
 
@@ -503,10 +509,10 @@ fn drive_cluster(
         hyper.dim
     };
     let width = params.method.entity_width(dim);
-    let refs: Vec<Table> = if matches!(params.algo, Algo::FedSvd { .. }) {
+    let refs: Vec<Table> = if params.wants_refs() {
         // same probe-trainer trick as the threaded driver: every client
         // seeds from `params.seed`, so one throwaway trainer yields the
-        // agreed initial SVD reference state
+        // agreed initial reference state (SVD or pipeline transport)
         let mut probe_rng = Rng::new(params.seed);
         let mut probe = native_trainer(
             hyper,
@@ -768,7 +774,11 @@ fn drive_cluster(
             // never depend on when a dropout was detected
             fleet.carried.sort_by_key(|(c, _)| *c);
             for (c, up) in std::mem::take(&mut fleet.carried) {
-                fold_carried(&mut side.server, c, &up);
+                if matches!(up, Upload::Packed { .. }) {
+                    ex.server_receive(&mut side.server, c, up)?;
+                } else {
+                    fold_carried(&mut side.server, c, &up);
+                }
             }
             for &id in &reported {
                 if side.server.shared[id].is_empty() || fleet.conn(id).is_none() {

@@ -7,12 +7,19 @@
 //! * `sync`         — Intermittent Synchronization Mechanism (§III-E)
 //! * `server`       — personalized aggregation (Eq. 3) + dense aggregation
 //! * `protocol`     — wire messages with paper-parameter accounting (§III-F)
-//! * `compression`  — SVD/SVD+ transport codec (Appendix VI-B)
+//! * `compression`  — the stage algebra behind `--compress`: composable
+//!                    `CompressionStage`s (entity-wise Top-K, int8/fp16
+//!                    row quantizers, rank-k SVD — Appendix VI-B) stacked
+//!                    by a `PipelineSpec` with optional per-stage error
+//!                    feedback, packed into self-describing `PackedBlock`
+//!                    wire payloads
 //! * `orchestrator` — the message-driven round loop for FedS, FedEP,
 //!                    FedEPL, Single, FedE-KD, FedE-SVD, FedE-SVD+:
 //!   * `orchestrator::exchange` — per-algorithm `Exchange` strategies
-//!     (`DenseExchange`, `FedSExchange`, `SvdExchange`), each with a
-//!     client half and a server half
+//!     (`DenseExchange`, `FedSExchange`, `SvdExchange`, and the
+//!     `PipelineExchange` that carries any non-empty `--compress` stack
+//!     as reference-mirrored deltas), each with a client half and a
+//!     server half
 //!   * `orchestrator::client`   — `ClientRunner`s that own their local
 //!     state and exchange only framed `Upload`/`Download` messages over
 //!     metered `comm::transport` links (in-process mpsc or TCP loopback,

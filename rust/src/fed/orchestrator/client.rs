@@ -36,8 +36,9 @@ pub struct ClientCtx {
     /// Storage-backed: on the mmap backend only touched pages of this
     /// O(entities × width) table become resident.
     pub hist: Option<StoreTable>,
-    /// SVD variants: the client's copy of the agreed reference state
-    pub svd_ref: Option<Table>,
+    /// Reference-delta transports (the SVD variants and `--compress`
+    /// pipelines): the client's copy of the agreed reference state
+    pub ref_state: Option<Table>,
     pub filters: FilterIndex,
     pub valid_set: EvalSet,
     pub test_set: EvalSet,
@@ -125,7 +126,7 @@ impl<'d> ClientRunner<'d> {
 
         let width = trainer.entity_width();
         let mut hist = None;
-        let mut svd_ref = None;
+        let mut ref_state = None;
         if matches!(params.algo, Algo::FedS { .. }) {
             hist = Some(initial_store(
                 trainer.as_mut(),
@@ -134,10 +135,10 @@ impl<'d> ClientRunner<'d> {
                 width,
                 &params.storage,
             )?);
-        } else if matches!(params.algo, Algo::FedSvd { .. }) {
-            svd_ref = Some(initial_table(trainer.as_mut(), &shared, data.num_entities, width)?);
+        } else if params.wants_refs() {
+            ref_state = Some(initial_table(trainer.as_mut(), &shared, data.num_entities, width)?);
         }
-        let exchange = exchange::client_half(params, width);
+        let exchange = exchange::client_half(params, width, data.num_entities)?;
         let svd_plus = (params.algo == (Algo::FedSvd { constrained: true }))
             .then(|| SvdCodec::for_width(width, params.svd_cols.min(width)));
 
@@ -147,7 +148,7 @@ impl<'d> ClientRunner<'d> {
                 trainer,
                 shared,
                 hist,
-                svd_ref,
+                ref_state,
                 filters,
                 valid_set,
                 test_set,
@@ -168,10 +169,10 @@ impl<'d> ClientRunner<'d> {
         self.ctx.trainer.entity_width()
     }
 
-    /// A copy of the SVD reference state (the server seeds its mirror
-    /// from this in sequential mode).
+    /// A copy of the reference state (the server seeds its per-client
+    /// mirror from this in sequential mode — SVD and pipeline transports).
     pub fn reference_table(&self) -> Option<Table> {
-        self.ctx.svd_ref.clone()
+        self.ctx.ref_state.clone()
     }
 
     /// Cluster reconnect: swap in a freshly connected metered link.  All
@@ -204,7 +205,7 @@ impl<'d> ClientRunner<'d> {
         // SVD+ low-rank constraint: project this round's local update
         if let Some(codec) = &self.svd_plus {
             let width = self.ctx.trainer.entity_width();
-            let refs = self.ctx.svd_ref.as_ref().unwrap();
+            let refs = self.ctx.ref_state.as_ref().unwrap();
             let cur = self.ctx.trainer.get_entity_rows(&self.ctx.shared)?;
             let mut projected = Vec::with_capacity(cur.len());
             for (k, &id) in self.ctx.shared.iter().enumerate() {
@@ -344,6 +345,11 @@ impl<'d> ClientRunner<'d> {
                 }
                 self.ctx.trainer.set_entity_rows(&ids, &merged)
             }
+            Download::Packed { .. } => anyhow::bail!(
+                "resync of a packed (compressed-pipeline) download is not supported: \
+                 replaying it would advance the reference mirror a second time — \
+                 rejoin instead restarts the client from a checkpoint"
+            ),
         }
     }
 

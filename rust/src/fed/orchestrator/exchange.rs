@@ -12,12 +12,13 @@
 use anyhow::Result;
 
 use crate::comm::wire::{WireReader, WireWriter};
-use crate::fed::compression::SvdCodec;
+use crate::fed::compression::{Pipeline, SvdCodec};
 use crate::fed::protocol::{Download, Upload};
 use crate::fed::server::Server;
 use crate::fed::sync::SyncSchedule;
 use crate::fed::topk::{select_by_change, top_k_count};
 use crate::kge::Table;
+use crate::store::{StorageSpec, StoreTable};
 use crate::util::rng::Rng;
 
 use super::client::ClientCtx;
@@ -61,30 +62,50 @@ pub trait Exchange {
 }
 
 /// The client-side strategy instance for `params` (`None`: no
-/// communication).
-pub fn client_half(params: &RoundParams, width: usize) -> Option<Box<dyn Exchange>> {
-    build_half(params, width, None)
+/// communication).  `num_entities` sizes error-feedback residual tables
+/// when a `--compress` pipeline is active.
+pub fn client_half(
+    params: &RoundParams,
+    width: usize,
+    num_entities: usize,
+) -> Result<Option<Box<dyn Exchange>>> {
+    build_half(params, width, num_entities, None)
 }
 
 /// The server-side strategy instance.  `refs` carries the per-client
-/// initial reference tables the SVD transport needs (empty for all other
-/// algorithms).
+/// initial reference tables the SVD and pipeline transports need (empty
+/// for all other algorithms).
 pub fn server_half(
     params: &RoundParams,
     width: usize,
+    num_entities: usize,
     refs: Vec<Table>,
-) -> Option<Box<dyn Exchange>> {
-    build_half(params, width, Some(refs))
+) -> Result<Option<Box<dyn Exchange>>> {
+    build_half(params, width, num_entities, Some(refs))
 }
 
 fn build_half(
     params: &RoundParams,
     width: usize,
+    num_entities: usize,
     server_refs: Option<Vec<Table>>,
-) -> Option<Box<dyn Exchange>> {
-    match params.algo {
+) -> Result<Option<Box<dyn Exchange>>> {
+    Ok(match params.algo {
         Algo::Single => None,
-        Algo::FedEP | Algo::FedEPL | Algo::FedKd => Some(Box::new(DenseExchange)),
+        Algo::FedEP | Algo::FedEPL | Algo::FedKd => {
+            if params.compression.is_empty() {
+                Some(Box::new(DenseExchange))
+            } else {
+                // the dense family is the pipeline's substrate: the
+                // stack compresses its delta stream
+                Some(Box::new(PipelineExchange::build(
+                    params,
+                    width,
+                    num_entities,
+                    server_refs,
+                )?))
+            }
+        }
         Algo::FedS { sync } => {
             let schedule = SyncSchedule::new(sync.then_some(params.sync_interval));
             let rng = server_refs.is_some().then(|| Rng::new(params.seed ^ 0x5E4E4));
@@ -101,7 +122,7 @@ fn build_half(
             width,
             refs: server_refs.unwrap_or_default(),
         })),
-    }
+    })
 }
 
 /// Dense FedE-style exchange (FedEP, FedEPL, FedE-KD): every shared-entity
@@ -236,6 +257,9 @@ impl Exchange for FedSExchange {
                 }
                 ctx.trainer.set_entity_rows(&ids, &merged)
             }
+            Download::Packed { .. } => {
+                anyhow::bail!("FedS exchange cannot apply a packed download")
+            }
         }
     }
 
@@ -256,6 +280,9 @@ impl Exchange for FedSExchange {
                         .collect()
                 };
                 server.receive(client, &ids, &emb);
+            }
+            Upload::Packed { .. } => {
+                anyhow::bail!("FedS exchange cannot fold a packed upload")
             }
         }
         Ok(())
@@ -329,14 +356,14 @@ pub struct SvdExchange {
     codec: SvdCodec,
     width: usize,
     /// server side: per-client reference mirrors (client side: empty —
-    /// the client's reference lives in `ClientCtx::svd_ref`)
+    /// the client's reference lives in `ClientCtx::ref_state`)
     refs: Vec<Table>,
 }
 
 impl Exchange for SvdExchange {
     fn make_upload(&mut self, round: u32, ctx: &mut ClientCtx) -> Result<Upload> {
         let width = self.width;
-        let refs = ctx.svd_ref.as_ref().unwrap();
+        let refs = ctx.ref_state.as_ref().unwrap();
         let cur = ctx.trainer.get_entity_rows(&ctx.shared)?;
         let mut updates = Vec::with_capacity(cur.len());
         for (k, &id) in ctx.shared.iter().enumerate() {
@@ -355,7 +382,7 @@ impl Exchange for SvdExchange {
         };
         let width = self.width;
         let approx = self.codec.decode_rows(&packed, width, ctx.shared.len());
-        let refs = ctx.svd_ref.as_mut().unwrap();
+        let refs = ctx.ref_state.as_mut().unwrap();
         let mut new_rows = Vec::with_capacity(approx.len());
         for (k, &id) in ctx.shared.iter().enumerate() {
             let mut row = refs.row(id as usize).to_vec();
@@ -439,6 +466,227 @@ impl Exchange for SvdExchange {
     }
 }
 
+/// A `--compress` stage stack over the dense family's exchange
+/// (FedEP/FedEPL/FedE-KD): both directions transmit *deltas against
+/// reference mirrors* — the generalization of [`SvdExchange`]'s
+/// reference scheme to arbitrary [`Pipeline`] stacks.  The client's
+/// reference lives in `ClientCtx::ref_state` and advances only on
+/// decoded downloads; the server keeps one mirror per client, advanced
+/// by lossy-decoding its own encoded downloads, so both copies stay
+/// bit-identical without extra traffic.  Upload receives reconstruct
+/// client state as `ref + decoded delta` *without* advancing the mirror.
+/// Error-feedback residuals (stage `:ef`) live on `store::EmbedStore`
+/// tables and ride through `save_state`, keeping checkpoint/restore
+/// bit-identical.
+pub struct PipelineExchange {
+    pipeline: Pipeline,
+    width: usize,
+    storage: StorageSpec,
+    /// server side: per-client reference mirrors (client side: empty —
+    /// the client's reference lives in `ClientCtx::ref_state`)
+    refs: Vec<Table>,
+    /// this half's *encoder* residuals: one set on the client (upstream),
+    /// one set per client on the server (downstream personalized
+    /// encoders); each set has one optional table per pipeline stage
+    res: Vec<Vec<Option<StoreTable>>>,
+}
+
+impl PipelineExchange {
+    fn build(
+        params: &RoundParams,
+        width: usize,
+        num_entities: usize,
+        server_refs: Option<Vec<Table>>,
+    ) -> Result<Self> {
+        let pipeline = Pipeline::new(&params.compression, width)?;
+        let storage = params.storage.clone();
+        let (refs, res) = match server_refs {
+            Some(refs) => {
+                let res = (0..refs.len())
+                    .map(|_| pipeline.make_residuals(&storage, num_entities))
+                    .collect::<Result<Vec<_>>>()?;
+                (refs, res)
+            }
+            None => {
+                let res = vec![pipeline.make_residuals(&storage, num_entities)?];
+                (Vec::new(), res)
+            }
+        };
+        Ok(Self { pipeline, width, storage, refs, res })
+    }
+}
+
+impl Exchange for PipelineExchange {
+    fn make_upload(&mut self, round: u32, ctx: &mut ClientCtx) -> Result<Upload> {
+        let width = self.width;
+        let refs = ctx.ref_state.as_ref().unwrap();
+        let cur = ctx.trainer.get_entity_rows(&ctx.shared)?;
+        let mut deltas = Vec::with_capacity(cur.len());
+        for (k, &id) in ctx.shared.iter().enumerate() {
+            deltas.extend_from_slice(&crate::linalg::sub(
+                &cur[k * width..(k + 1) * width],
+                refs.row(id as usize),
+            ));
+        }
+        let block = self.pipeline.encode(&ctx.shared, &deltas, None, &mut self.res[0]);
+        Ok(Upload::Packed { round, client: ctx.id, block })
+    }
+
+    fn apply_download(&mut self, ctx: &mut ClientCtx, msg: Download) -> Result<()> {
+        let Download::Packed { block, .. } = msg else {
+            anyhow::bail!("pipeline exchange expects a packed download");
+        };
+        anyhow::ensure!(
+            block.n_in as usize == ctx.shared.len(),
+            "packed download covers {} rows, client has {} shared entities",
+            block.n_in,
+            ctx.shared.len()
+        );
+        let width = self.width;
+        let (idx, rows) = self.pipeline.decode(&block)?;
+        let refs = ctx.ref_state.as_mut().unwrap();
+        let ids: Vec<u32> = idx.iter().map(|&i| ctx.shared[i]).collect();
+        let mut new_rows = Vec::with_capacity(ids.len() * width);
+        for (j, &id) in ids.iter().enumerate() {
+            let mut row = refs.row(id as usize).to_vec();
+            crate::linalg::axpy(1.0, &rows[j * width..(j + 1) * width], &mut row);
+            refs.set_row(id as usize, &row);
+            new_rows.extend_from_slice(&row);
+        }
+        if ids.is_empty() {
+            return Ok(());
+        }
+        ctx.trainer.set_entity_rows(&ids, &new_rows)
+    }
+
+    fn server_receive(&mut self, server: &mut Server, client: u16, msg: Upload) -> Result<()> {
+        let Upload::Packed { block, .. } = msg else {
+            anyhow::bail!("pipeline exchange expects a packed upload");
+        };
+        let shared_len = server.shared[client as usize].len();
+        anyhow::ensure!(
+            block.n_in as usize == shared_len,
+            "packed upload covers {} rows, client {client} shares {shared_len} entities",
+            block.n_in
+        );
+        let width = self.width;
+        let (idx, rows) = self.pipeline.decode(&block)?;
+        // reconstruct the client's (approximate) state for the rows that
+        // traveled — against the mirror, which does NOT advance here
+        let refs = &self.refs[client as usize];
+        let ids: Vec<u32> = {
+            let shared = &server.shared[client as usize];
+            idx.iter().map(|&i| shared[i]).collect()
+        };
+        let mut state = Vec::with_capacity(ids.len() * width);
+        for (j, &id) in ids.iter().enumerate() {
+            let mut row = refs.row(id as usize).to_vec();
+            crate::linalg::axpy(1.0, &rows[j * width..(j + 1) * width], &mut row);
+            state.extend_from_slice(&row);
+        }
+        server.receive(client, &ids, &state);
+        Ok(())
+    }
+
+    fn server_download(
+        &mut self,
+        round: u32,
+        server: &mut Server,
+        client: u16,
+    ) -> Result<Download> {
+        let width = self.width;
+        let agg = server.fede_download(client);
+        // rows nobody uploaded this round aggregate to 0.0, not to a real
+        // state — mask them out before the Top-K stage ever sees them
+        let present = server.uploaded_mask(client);
+        let shared = &server.shared[client as usize];
+        let refs = &mut self.refs[client as usize];
+        let mut deltas = Vec::with_capacity(agg.len());
+        for (k, &id) in shared.iter().enumerate() {
+            deltas.extend_from_slice(&crate::linalg::sub(
+                &agg[k * width..(k + 1) * width],
+                refs.row(id as usize),
+            ));
+        }
+        let block =
+            self.pipeline.encode(shared, &deltas, Some(&present), &mut self.res[client as usize]);
+        // advance the mirror by the same lossy update the client will
+        // decode, keeping both reference copies bit-identical
+        let (idx, rows) = self.pipeline.decode(&block)?;
+        for (j, &i) in idx.iter().enumerate() {
+            let id = shared[i] as usize;
+            let mut row = refs.row(id).to_vec();
+            crate::linalg::axpy(1.0, &rows[j * width..(j + 1) * width], &mut row);
+            refs.set_row(id, &row);
+        }
+        Ok(Download::Packed { round, block })
+    }
+
+    fn save_state(&self, w: &mut WireWriter) {
+        w.u32(self.refs.len() as u32);
+        for t in &self.refs {
+            w.u32(t.rows as u32).u32(t.width as u32).f32s(&t.data);
+        }
+        w.u32(self.res.len() as u32);
+        for set in &self.res {
+            w.u32(set.len() as u32);
+            for entry in set {
+                match entry {
+                    Some(t) => {
+                        w.u8(1).u32(t.rows as u32).u32(t.width as u32).f32s(t.as_slice());
+                    }
+                    None => {
+                        w.u8(0);
+                    }
+                }
+            }
+        }
+    }
+
+    fn load_state(&mut self, r: &mut WireReader<'_>) -> Result<()> {
+        let n = r.u32()? as usize;
+        let mut refs = Vec::with_capacity(n);
+        for _ in 0..n {
+            let rows = r.u32()? as usize;
+            let width = r.u32()? as usize;
+            let data = r.f32s()?;
+            anyhow::ensure!(
+                data.len() == rows * width,
+                "pipeline reference table shape mismatch in checkpoint"
+            );
+            refs.push(Table { rows, width, data });
+        }
+        self.refs = refs;
+        let n_sets = r.u32()? as usize;
+        let mut res = Vec::with_capacity(n_sets);
+        for _ in 0..n_sets {
+            let n_entries = r.u32()? as usize;
+            let mut set = Vec::with_capacity(n_entries);
+            for _ in 0..n_entries {
+                match r.u8()? {
+                    0 => set.push(None),
+                    1 => {
+                        let rows = r.u32()? as usize;
+                        let width = r.u32()? as usize;
+                        let data = r.f32s()?;
+                        anyhow::ensure!(
+                            data.len() == rows * width,
+                            "pipeline residual table shape mismatch in checkpoint"
+                        );
+                        let mut t = StoreTable::zeros_in(&self.storage, rows, width)?;
+                        t.as_mut_slice().copy_from_slice(&data);
+                        set.push(Some(t));
+                    }
+                    m => anyhow::bail!("bad residual marker {m} in pipeline exchange state"),
+                }
+            }
+            res.push(set);
+        }
+        self.res = res;
+        Ok(())
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -483,7 +731,7 @@ mod tests {
             trainer: Box::new(trainer),
             shared: shared.clone(),
             hist: Some(hist),
-            svd_ref: None,
+            ref_state: None,
             filters,
             valid_set,
             test_set,
@@ -516,5 +764,94 @@ mod tests {
         assert_eq!(&down[..width], &[0.0, 0.0], "entity 1 was not uploaded");
         assert_eq!(&down[width..2 * width], &r3[..]);
         assert_eq!(&down[2 * width..], &r5[..]);
+    }
+
+    /// One full compressed round: the client's reference table and the
+    /// server's per-client mirror must end the round bit-identical, with
+    /// the trainer's shared rows equal to the (lossily) agreed state.
+    #[test]
+    fn pipeline_exchange_keeps_reference_mirrors_aligned() {
+        use crate::fed::compression::PipelineSpec;
+
+        let e = 6usize;
+        let mut rng = Rng::new(4);
+        let hyper = Hyper { dim: 2, ..Default::default() };
+        let mut trainer = NativeTrainer::new(crate::kge::Method::TransE, hyper, e, 2, 4, &mut rng);
+        let shared: Vec<u32> = vec![1, 3, 5];
+        let width = trainer.entity_width();
+        trainer.set_entity_rows(&shared, &[1.0, 0.0, 0.0, 2.0, 3.0, 3.0]).unwrap();
+
+        let spec = PipelineSpec::parse("topk@0.7,int8:ef").unwrap();
+        let storage = StorageSpec::Ram;
+        let mk = || Pipeline::new(&spec, width).unwrap();
+        let zeros = || Table { rows: e, width, data: vec![0.0; e * width] };
+        let mut cx = PipelineExchange {
+            pipeline: mk(),
+            width,
+            storage: storage.clone(),
+            refs: Vec::new(),
+            res: vec![mk().make_residuals(&storage, e).unwrap()],
+        };
+        let mut sx = PipelineExchange {
+            pipeline: mk(),
+            width,
+            storage: storage.clone(),
+            refs: vec![zeros()],
+            res: vec![mk().make_residuals(&storage, e).unwrap()],
+        };
+
+        let (filters, valid_set, test_set) = empty_ctx_parts(e);
+        let mut ctx = ClientCtx {
+            id: 0,
+            trainer: Box::new(trainer),
+            shared: shared.clone(),
+            hist: None,
+            ref_state: Some(zeros()),
+            filters,
+            valid_set,
+            test_set,
+            rng: Rng::new(9),
+        };
+        let mut server = Server::new(e, width, vec![shared.clone()]);
+
+        for round in 0..3u32 {
+            let up = cx.make_upload(round, &mut ctx).unwrap();
+            if let Upload::Packed { block, .. } = &up {
+                // K = ⌊3·0.7⌋ = 2 rows travel, int8-packed
+                assert_eq!(block.n_rows(), 2);
+                assert_eq!(block.body.len(), 2 * (4 + width));
+            } else {
+                panic!("expected a packed upload");
+            }
+            server.begin_round();
+            sx.server_receive(&mut server, 0, up).unwrap();
+            let down = sx.server_download(round, &mut server, 0).unwrap();
+            cx.apply_download(&mut ctx, down).unwrap();
+            let cref = ctx.ref_state.as_ref().unwrap();
+            assert_eq!(cref.data, sx.refs[0].data, "round {round}: mirrors diverged");
+        }
+
+        // checkpoint round-trip: refs + residuals survive bit-exactly
+        let mut w = WireWriter::new();
+        sx.save_state(&mut w);
+        let buf = w.finish();
+        let mut fresh = PipelineExchange {
+            pipeline: mk(),
+            width,
+            storage: storage.clone(),
+            refs: vec![zeros()],
+            res: vec![mk().make_residuals(&storage, e).unwrap()],
+        };
+        fresh.load_state(&mut WireReader::new(&buf)).unwrap();
+        assert_eq!(fresh.refs[0].data, sx.refs[0].data);
+        let (a, b) = (&fresh.res[0], &sx.res[0]);
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(b) {
+            match (x, y) {
+                (None, None) => {}
+                (Some(t), Some(u)) => assert_eq!(t.as_slice(), u.as_slice()),
+                _ => panic!("residual presence diverged after restore"),
+            }
+        }
     }
 }

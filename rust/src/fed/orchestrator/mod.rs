@@ -324,7 +324,7 @@ pub(crate) fn server_side(
         data.clients.iter().map(|c| data.shared_entities_of(c.id)).collect();
     let server =
         Server::with_store(data.num_entities, width, shared, params.shards, &params.storage)?;
-    let exchange = exchange::server_half(params, width, refs);
+    let exchange = exchange::server_half(params, width, data.num_entities, refs)?;
     let label = format!(
         "{}-{}-{}c",
         params.algo.label(),
@@ -569,10 +569,13 @@ fn run_sequential(
         links.push(server_end);
     }
     let width = runners[0].width();
-    let refs: Vec<Table> = if matches!(params.algo, Algo::FedSvd { .. }) {
+    let refs: Vec<Table> = if params.wants_refs() {
         runners
             .iter()
-            .map(|r| r.reference_table().expect("SVD runner carries a reference table"))
+            .map(|r| {
+                r.reference_table()
+                    .expect("a reference-delta transport's runner carries a reference table")
+            })
             .collect()
     } else {
         Vec::new()
@@ -607,11 +610,11 @@ fn run_threaded(
         hyper.dim
     };
     let width = params.method.entity_width(dim);
-    let refs: Vec<Table> = if matches!(params.algo, Algo::FedSvd { .. }) {
+    let refs: Vec<Table> = if params.wants_refs() {
         // Probe trainer: every client initializes from the same
         // `params.seed` stream, so one throwaway trainer yields the
-        // agreed initial SVD reference state without touching any
-        // client's RNG.
+        // agreed initial reference state (SVD or pipeline transport)
+        // without touching any client's RNG.
         let mut probe_rng = Rng::new(params.seed);
         let mut probe = native_trainer(
             hyper,

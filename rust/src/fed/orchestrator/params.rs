@@ -10,6 +10,7 @@
 //! knob is the one the run will actually honor.
 
 use crate::comm::transport::TransportSpec;
+use crate::fed::compression::PipelineSpec;
 use crate::kge::Method;
 use crate::spec::{AlgoSpec, ExperimentSpec, ParticipationSpec};
 use crate::store::StorageSpec;
@@ -62,6 +63,10 @@ pub struct RoundParams {
     /// accumulators, entity embeddings, Adam moments, FedS history) —
     /// results are bit-identical across backends
     pub storage: StorageSpec,
+    /// `--compress` stage stack over the dense family's delta stream
+    /// (empty: plain dense frames, byte-identical to runs without the
+    /// knob)
+    pub compression: PipelineSpec,
 }
 
 impl RoundParams {
@@ -107,6 +112,19 @@ impl RoundParams {
             shards: if spec.shards > 0 { spec.shards } else { auto_shards() },
             participation: spec.participation,
             storage: spec.storage.clone(),
+            compression: spec.compression.clone(),
+        }
+    }
+
+    /// Whether clients (and the sequential/threaded drivers) must build
+    /// initial reference tables: the SVD transport always transmits
+    /// deltas against references, and the dense family does too once a
+    /// `--compress` pipeline is active.
+    pub fn wants_refs(&self) -> bool {
+        match self.algo {
+            Algo::FedSvd { .. } => true,
+            Algo::FedEP | Algo::FedEPL | Algo::FedKd => !self.compression.is_empty(),
+            _ => false,
         }
     }
 }
@@ -146,6 +164,7 @@ mod tests {
             shards: 0,
             participation: Default::default(),
             storage: Default::default(),
+            compression: Default::default(),
         }
     }
 
@@ -178,5 +197,21 @@ mod tests {
         assert_eq!(p.sync_interval, DEFAULT_SYNC_INTERVAL);
         assert_eq!(p.shards, 3, "explicit shard counts pass through");
         assert_eq!(p.transport, TransportSpec::Tcp);
+    }
+
+    #[test]
+    fn wants_refs_scopes_to_svd_and_compressed_dense() {
+        let backend = crate::exp::native_backend();
+        let mut s = spec();
+        let p = RoundParams::from_spec(&s, &backend);
+        assert!(!p.wants_refs(), "FedS never carries reference tables");
+        s.algo = AlgoSpec::Svd { cols: 8, plus: false };
+        assert!(RoundParams::from_spec(&s, &backend).wants_refs());
+        s.algo = AlgoSpec::FedEP;
+        assert!(!RoundParams::from_spec(&s, &backend).wants_refs());
+        s.compression = PipelineSpec::parse("topk,int8:ef").unwrap();
+        let p = RoundParams::from_spec(&s, &backend);
+        assert!(p.wants_refs(), "a compressed dense run transmits deltas vs refs");
+        assert_eq!(p.compression.label(), "topk@0.4,int8:ef");
     }
 }

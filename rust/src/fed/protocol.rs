@@ -1,15 +1,23 @@
 //! Wire protocol between clients and the server.
 //!
-//! Two message kinds per direction (dense/full vs. sparsified), encoded via
-//! the byte-exact `comm::wire` codec.  Every message also reports its
-//! **paper-parameter count** (§III-F convention: each embedding float, each
-//! sign-vector element and each priority entry counts as one parameter),
-//! which is what Tables I/III/IV meter; the byte size of the encoded frame
-//! is metered separately by the transport/accounting layer.
+//! Three message kinds per direction (dense/full, sparsified, and
+//! stage-tagged packed), encoded via the byte-exact `comm::wire` codec.
+//! Every message also reports its **paper-parameter count** (§III-F
+//! convention: each embedding float, each sign-vector element and each
+//! priority entry counts as one parameter), which is what Tables I/III/IV
+//! meter; the byte size of the encoded frame is metered separately by the
+//! transport/accounting layer.  `Packed` frames carry a
+//! [`compression::PackedBlock`] — the output of a `--compress` pipeline —
+//! whose byte size reflects the *actual packed payload* (quantized codes,
+//! factor floats, bit-packed selection), so transport metering prices the
+//! compression stack for free.
+//!
+//! [`compression::PackedBlock`]: crate::fed::compression::PackedBlock
 
 use anyhow::Result;
 
 use crate::comm::wire::{WireReader, WireWriter};
+use crate::fed::compression::PackedBlock;
 
 /// client → server
 #[derive(Clone, Debug, PartialEq)]
@@ -24,6 +32,9 @@ pub enum Upload {
         sign: Vec<bool>,
         emb: Vec<f32>,
     },
+    /// Compression-pipeline output: a self-describing stage-tagged block
+    /// (selection bitmap + byte-packed rows).
+    Packed { round: u32, client: u16, block: PackedBlock },
 }
 
 /// server → client
@@ -39,10 +50,13 @@ pub enum Download {
         emb: Vec<f32>,
         prio: Vec<u32>,
     },
+    /// Compression-pipeline output for the downstream direction.
+    Packed { round: u32, block: PackedBlock },
 }
 
 const TAG_FULL: u8 = 0;
 const TAG_SPARSE: u8 = 1;
+const TAG_PACKED: u8 = 2;
 
 impl Upload {
     pub fn encode(&self) -> Vec<u8> {
@@ -53,6 +67,10 @@ impl Upload {
             }
             Upload::Sparse { round, client, sign, emb } => {
                 w.u8(TAG_SPARSE).u32(*round).u16(*client).bits(sign).f32s(emb);
+            }
+            Upload::Packed { round, client, block } => {
+                w.u8(TAG_PACKED).u32(*round).u16(*client);
+                block.write(&mut w);
             }
         }
         w.finish()
@@ -70,6 +88,7 @@ impl Upload {
                 let emb = r.f32s()?;
                 Upload::Sparse { round, client, sign, emb }
             }
+            TAG_PACKED => Upload::Packed { round, client, block: PackedBlock::read(&mut r)? },
             t => anyhow::bail!("bad upload tag {t}"),
         })
     }
@@ -79,6 +98,7 @@ impl Upload {
         match self {
             Upload::Full { emb, .. } => emb.len() as u64,
             Upload::Sparse { sign, emb, .. } => sign.len() as u64 + emb.len() as u64,
+            Upload::Packed { block, .. } => block.params(),
         }
     }
 }
@@ -92,6 +112,10 @@ impl Download {
             }
             Download::Sparse { round, sign, emb, prio } => {
                 w.u8(TAG_SPARSE).u32(*round).bits(sign).f32s(emb).u32s(prio);
+            }
+            Download::Packed { round, block } => {
+                w.u8(TAG_PACKED).u32(*round);
+                block.write(&mut w);
             }
         }
         w.finish()
@@ -109,6 +133,7 @@ impl Download {
                 let prio = r.u32s()?;
                 Download::Sparse { round, sign, emb, prio }
             }
+            TAG_PACKED => Download::Packed { round, block: PackedBlock::read(&mut r)? },
             t => anyhow::bail!("bad download tag {t}"),
         })
     }
@@ -119,6 +144,7 @@ impl Download {
             Download::Sparse { sign, emb, prio, .. } => {
                 sign.len() as u64 + emb.len() as u64 + prio.len() as u64
             }
+            Download::Packed { block, .. } => block.params(),
         }
     }
 }
@@ -197,5 +223,51 @@ mod tests {
     #[test]
     fn bad_tag_errors() {
         assert!(Upload::decode(&[7, 0, 0, 0, 0, 0, 0]).is_err());
+    }
+
+    #[test]
+    fn packed_roundtrip_and_params() {
+        use crate::fed::compression::{PackedBlock, StageSpec};
+        let block = PackedBlock {
+            stages: vec![StageSpec::TopK { ratio: 0.5, ef: true }, StageSpec::Int8 { ef: false }],
+            n_in: 4,
+            sel: vec![true, false, true, false],
+            width: 8,
+            body: vec![0u8; 2 * (4 + 8)],
+        };
+        let up = Upload::Packed { round: 5, client: 2, block: block.clone() };
+        assert_eq!(Upload::decode(&up.encode()).unwrap(), up);
+        // 4 sel bits + 2 rows × (8 codes + 1 scale)
+        assert_eq!(up.params(), 4 + 2 * 9);
+        let down = Download::Packed { round: 5, block };
+        assert_eq!(Download::decode(&down.encode()).unwrap(), down);
+        assert_eq!(down.params(), 4 + 2 * 9);
+    }
+
+    #[test]
+    fn legacy_tags_encode_unchanged() {
+        // adding TAG_PACKED must not perturb the v2 byte layout of the
+        // existing frames — spot-check the exact prefix bytes
+        let up = Upload::Full { round: 1, client: 2, emb: vec![1.0] };
+        let buf = up.encode();
+        assert_eq!(&buf[..7], &[0, 1, 0, 0, 0, 2, 0], "tag, round LE, client LE");
+        let down = Download::Sparse { round: 3, sign: vec![true], emb: vec![], prio: vec![] };
+        assert_eq!(down.encode()[0], 1);
+    }
+
+    #[test]
+    fn truncated_packed_is_error_not_panic() {
+        use crate::fed::compression::{PackedBlock, StageSpec};
+        let block = PackedBlock {
+            stages: vec![StageSpec::Fp16 { ef: false }],
+            n_in: 2,
+            sel: vec![true, true],
+            width: 4,
+            body: vec![0u8; 16],
+        };
+        let buf = Upload::Packed { round: 0, client: 0, block }.encode();
+        for cut in 0..buf.len() {
+            assert!(Upload::decode(&buf[..cut]).is_err(), "cut {cut} must error");
+        }
     }
 }

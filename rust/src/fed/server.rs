@@ -339,6 +339,22 @@ impl Server {
         self.shared[client as usize] = ids;
     }
 
+    /// Which of client `c`'s shared entities received at least one upload
+    /// this round (shared-list order).  `fede_download` returns 0.0 rows
+    /// for the others — downstream compression pipelines use this mask so
+    /// those rows are never mistaken for real aggregated state.
+    pub fn uploaded_mask(&self, c: u16) -> Vec<bool> {
+        let ids = &self.shared[c as usize];
+        let cuts = self.cuts(ids);
+        let mut out = vec![false; ids.len()];
+        for (s, shard) in self.shards.iter().enumerate() {
+            for i in cuts[s]..cuts[s + 1] {
+                out[i] = shard.count[ids[i] as usize - shard.lo] > 0;
+            }
+        }
+        out
+    }
+
     /// Dense FedE aggregation for client `c`: the average over ALL
     /// uploaders of each of c's shared entities (c included), computed
     /// per shard into disjoint output slices.
@@ -473,6 +489,18 @@ mod tests {
         assert_eq!(sign, vec![false, false, true]);
         assert_eq!(rows, vec![7.0, 8.0]);
         assert_eq!(prio, vec![1]);
+    }
+
+    #[test]
+    fn uploaded_mask_tracks_per_round_uploads() {
+        let mut s = server2();
+        s.begin_round();
+        s.receive(1, &[0, 2], &[1.0, 1.0, 2.0, 2.0]);
+        assert_eq!(s.uploaded_mask(0), vec![true, false, true]);
+        s.receive(0, &[1], &[3.0, 3.0]);
+        assert_eq!(s.uploaded_mask(0), vec![true, true, true]);
+        s.begin_round();
+        assert_eq!(s.uploaded_mask(0), vec![false, false, false], "mask resets each round");
     }
 
     #[test]

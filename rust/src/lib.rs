@@ -36,7 +36,10 @@
 //! * [`fed`] — the federated layer: Entity-Wise Top-K (`fed::topk`,
 //!   partial selection both directions), dirty-entity-tracked server
 //!   aggregation sharded by entity range (`fed::server`, bit-identical
-//!   for any shard count), wire protocol (`fed::protocol`), and the
+//!   for any shard count), wire protocol (`fed::protocol`), the
+//!   composable compression algebra (`fed::compression`: Top-K /
+//!   quantize / low-rank stages stacked by `--compress` with per-stage
+//!   error feedback, carried as packed delta frames), and the
 //!   message-driven orchestrator (`fed::orchestrator`) with its
 //!   per-algorithm `Exchange` strategies, sequential/threaded drivers,
 //!   and the resolved per-run `RoundParams` its internals consume.

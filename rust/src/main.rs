@@ -163,6 +163,7 @@ const OVERRIDE_FLAGS: &[(&str, &str)] = &[
     ("participation-fraction", "participation.fraction"),
     ("participation-k", "participation.k"),
     ("store", "storage"),
+    ("compress", "compression"),
 ];
 
 fn override_opts(mut cli: Cli) -> Cli {
@@ -191,7 +192,13 @@ fn override_opts(mut cli: Cli) -> Cli {
         .opt("shards", "0", "server aggregation shards (0 = auto: one per core, capped)")
         .opt("participation-fraction", "1.0", "sample ⌈f·live⌉ clients/round (cluster serve)")
         .opt("participation-k", "0", "sample k clients per round (cluster serve)")
-        .opt("store", "ram", "embedding storage backend: ram|mmap|mmap:<dir>");
+        .opt("store", "ram", "embedding storage backend: ram|mmap|mmap:<dir>")
+        .opt(
+            "compress",
+            "",
+            "delta compression stack, e.g. topk,int8:ef (stages topk[@p]|int8|fp16|svd[@c], \
+             :ef = error feedback; dense algos only)",
+        );
     cli
 }
 
@@ -224,6 +231,7 @@ fn default_spec() -> ExperimentSpec {
         shards: 0,
         participation: Default::default(),
         storage: Default::default(),
+        compression: Default::default(),
     }
 }
 
@@ -580,6 +588,7 @@ fn cmd_train(args: &[String]) -> Result<(), Failure> {
         shards: 0,
         participation: Default::default(),
         storage: Default::default(),
+        compression: Default::default(),
     };
     let mut session = match &ctx.backend {
         Backend::Xla(rt) => Session::with_runtime(rt.clone()),

@@ -24,6 +24,7 @@ use anyhow::{bail, ensure, Result};
 
 use crate::data::generator::{stream, GeneratorConfig};
 use crate::data::partition::{partition_stream, FedDataset};
+use crate::fed::compression::PipelineSpec;
 use crate::fed::{Algo, ExecMode};
 use crate::kge::Method;
 use crate::store::StorageSpec;
@@ -568,6 +569,10 @@ pub struct ExperimentSpec {
     /// backend for every O(entities × width) table ("ram", "mmap", or
     /// "mmap:<dir>") — results are bit-identical across backends
     pub storage: StorageSpec,
+    /// `--compress` stage stack (e.g. "topk,int8:ef") over the dense
+    /// family's delta stream; empty = plain dense frames, byte-identical
+    /// to runs without the knob
+    pub compression: PipelineSpec,
 }
 
 impl ExperimentSpec {
@@ -594,6 +599,21 @@ impl ExperimentSpec {
             self.seed <= MAX_JSON_SEED,
             "seed must be ≤ 2^53 (JSON numbers cannot represent it exactly)"
         );
+        self.compression.validate()?;
+        if !self.compression.is_empty() {
+            match &self.algo {
+                AlgoSpec::FedEP | AlgoSpec::FedEPL | AlgoSpec::Kd => {}
+                AlgoSpec::Single => {
+                    bail!("compression requires a communicating algorithm (fedep|fedepl|kd), not 'single'")
+                }
+                AlgoSpec::FedS { .. } => {
+                    bail!("compression does not apply to feds (it carries its own Top-K transport)")
+                }
+                AlgoSpec::Svd { .. } => {
+                    bail!("compression does not apply to svd (it carries its own low-rank transport)")
+                }
+            }
+        }
         Ok(())
     }
 
@@ -602,7 +622,8 @@ impl ExperimentSpec {
         if !self.name.is_empty() {
             j = j.set("name", self.name.as_str());
         }
-        j.set("method", self.method.name())
+        j = j
+            .set("method", self.method.name())
             .set("algo", self.algo.to_json())
             .set("data", self.data.to_json())
             .set("backend", self.backend.to_json())
@@ -612,7 +633,11 @@ impl ExperimentSpec {
             .set("transport", self.transport.label())
             .set("shards", self.shards)
             .set("participation", self.participation.to_json())
-            .set("storage", self.storage.label().as_str())
+            .set("storage", self.storage.label().as_str());
+        if !self.compression.is_empty() {
+            j = j.set("compression", self.compression.label().as_str());
+        }
+        j
     }
 
     pub fn from_json(v: &Json) -> Result<ExperimentSpec> {
@@ -657,6 +682,12 @@ impl ExperimentSpec {
                     s.as_str().ok_or_else(|| anyhow::anyhow!("storage must be a string"))?,
                 )?,
                 None => StorageSpec::Ram,
+            },
+            compression: match v.get("compression") {
+                Some(c) => PipelineSpec::parse(
+                    c.as_str().ok_or_else(|| anyhow::anyhow!("compression must be a string"))?,
+                )?,
+                None => PipelineSpec::default(),
             },
         };
         spec.validate()?;
@@ -708,6 +739,13 @@ impl ExperimentSpec {
             "storage" => {
                 self.storage = StorageSpec::parse(
                     value.as_str().ok_or_else(|| anyhow::anyhow!("storage must be a string"))?,
+                )?;
+            }
+            "compression" => {
+                self.compression = PipelineSpec::parse(
+                    value
+                        .as_str()
+                        .ok_or_else(|| anyhow::anyhow!("compression must be a string"))?,
                 )?;
             }
             "participation" => self.participation = ParticipationSpec::from_json(value)?,
@@ -869,6 +907,7 @@ mod tests {
             shards: 0,
             participation: Default::default(),
             storage: Default::default(),
+            compression: Default::default(),
         }
     }
 
@@ -1000,6 +1039,47 @@ mod tests {
         let Json::Obj(entries) = j else { panic!() };
         let trimmed = Json::Obj(entries.into_iter().filter(|(k, _)| k != "storage").collect());
         assert_eq!(ExperimentSpec::from_json(&trimmed).unwrap().storage, StorageSpec::Ram);
+    }
+
+    #[test]
+    fn compression_round_trips_and_overrides() {
+        let mut spec = tiny_spec();
+        assert!(spec.compression.is_empty(), "no compression is the default");
+        spec.algo = AlgoSpec::FedEP;
+        spec.compression = PipelineSpec::parse("topk@0.7,int8:ef").unwrap();
+        let rt = ExperimentSpec::parse(&spec.to_json().to_string()).unwrap();
+        assert_eq!(rt.compression.label(), "topk@0.7,int8:ef");
+        assert_eq!(spec, rt);
+
+        let mut spec = tiny_spec();
+        spec.algo = AlgoSpec::FedEP;
+        spec.apply("compression", &Json::from("topk,fp16")).unwrap();
+        assert_eq!(spec.compression.label(), "topk@0.4,fp16");
+        assert!(spec.apply("compression", &Json::from("gzip")).is_err());
+        spec.apply("compression", &Json::from("")).unwrap();
+        assert!(spec.compression.is_empty(), "--compress \"\" clears the pipeline");
+
+        // a spec file without the key parses to the empty pipeline
+        let j = tiny_spec().to_json();
+        let Json::Obj(entries) = j else { panic!() };
+        let trimmed =
+            Json::Obj(entries.into_iter().filter(|(k, _)| k != "compression").collect());
+        assert!(ExperimentSpec::from_json(&trimmed).unwrap().compression.is_empty());
+    }
+
+    #[test]
+    fn compression_scopes_to_the_dense_family() {
+        let mut spec = tiny_spec();
+        spec.compression = PipelineSpec::parse("topk,int8").unwrap();
+        assert!(spec.validate().is_err(), "feds carries its own Top-K transport");
+        spec.algo = AlgoSpec::Svd { cols: 8, plus: false };
+        assert!(spec.validate().is_err(), "svd carries its own low-rank transport");
+        spec.algo = AlgoSpec::Single;
+        assert!(spec.validate().is_err(), "single has no communication to compress");
+        spec.algo = AlgoSpec::FedEP;
+        spec.validate().unwrap();
+        spec.algo = AlgoSpec::FedEPL;
+        spec.validate().unwrap();
     }
 
     #[test]

@@ -74,6 +74,7 @@ fn tiny_spec(algo: AlgoSpec, max_rounds: usize) -> ExperimentSpec {
         shards: 0,
         participation: Default::default(),
         storage: Default::default(),
+        compression: Default::default(),
     }
 }
 

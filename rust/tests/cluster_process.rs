@@ -54,6 +54,7 @@ fn drill_spec() -> ExperimentSpec {
         shards: 0,
         participation: Default::default(),
         storage: Default::default(),
+        compression: Default::default(),
     }
 }
 

@@ -1,0 +1,141 @@
+//! End-to-end bar for the `--compress` stage stacks: an **empty**
+//! pipeline must be byte-identical (accounting) and bit-identical
+//! (metrics) to a run that never mentions the knob, for both transports
+//! and both exec modes; a **non-empty** stack must complete training,
+//! transmit strictly fewer bytes than the dense baseline, and stay
+//! transport- and exec-invariant itself.
+
+use feds::comm::accounting::Direction;
+use feds::fed::compression::PipelineSpec;
+use feds::fed::{ExecMode, RunOutcome};
+use feds::kge::Method;
+use feds::spec::{
+    AlgoSpec, BackendSpec, BudgetSpec, DataSpec, ExperimentSpec, Session, TransportSpec,
+};
+
+fn tiny_spec(
+    algo: AlgoSpec,
+    exec: ExecMode,
+    transport: TransportSpec,
+    compress: &str,
+) -> ExperimentSpec {
+    ExperimentSpec {
+        name: String::new(),
+        method: Method::TransE,
+        algo,
+        data: DataSpec {
+            entities: 192,
+            relations: 12,
+            triples: 2400,
+            clusters: 4,
+            clients: 3,
+            seed: 11,
+        },
+        backend: BackendSpec::Native {
+            dim: 16,
+            learning_rate: 5e-3,
+            batch: 64,
+            negatives: 16,
+            eval_batch: 32,
+        },
+        budget: BudgetSpec {
+            max_rounds: 6,
+            local_epochs: 1,
+            eval_every: 2,
+            patience: 3,
+            eval_cap: 64,
+        },
+        seed: 7,
+        exec,
+        transport,
+        shards: 2,
+        participation: Default::default(),
+        storage: Default::default(),
+        compression: PipelineSpec::parse(compress).unwrap(),
+    }
+}
+
+fn run(spec: &ExperimentSpec) -> RunOutcome {
+    let mut session = Session::new();
+    let mut run = session.build(spec).unwrap();
+    run.quiet();
+    run.execute().unwrap()
+}
+
+fn assert_identical(tag: &str, a: &RunOutcome, b: &RunOutcome) {
+    for dir in [Direction::Upload, Direction::Download] {
+        assert_eq!(a.acct.params_dir(dir), b.acct.params_dir(dir), "{tag}: params {dir:?}");
+        assert_eq!(a.acct.bytes_dir(dir), b.acct.bytes_dir(dir), "{tag}: bytes {dir:?}");
+    }
+    assert_eq!(a.acct.messages(), b.acct.messages(), "{tag}: messages");
+    let (x, y) = (&a.history.records, &b.history.records);
+    assert_eq!(x.len(), y.len(), "{tag}: record count");
+    assert_eq!(a.history.converged_idx, b.history.converged_idx, "{tag}: convergence");
+    for (r, s) in x.iter().zip(y.iter()) {
+        assert_eq!(r.round, s.round, "{tag}");
+        assert_eq!(r.params_cum, s.params_cum, "{tag}: params@{}", r.round);
+        assert_eq!(r.bytes_cum, s.bytes_cum, "{tag}: bytes@{}", r.round);
+        assert_eq!(r.mean_loss.to_bits(), s.mean_loss.to_bits(), "{tag}: loss@{}", r.round);
+        assert_eq!(r.test.mrr.to_bits(), s.test.mrr.to_bits(), "{tag}: test MRR@{}", r.round);
+    }
+}
+
+/// `--compress ""` is the identity: for every dense algorithm, both
+/// transports and both exec modes, a spec carrying the empty pipeline
+/// runs byte- and bit-identically to one that never set the knob.
+#[test]
+fn empty_pipeline_is_identical_to_no_knob() {
+    for algo in [AlgoSpec::FedEP, AlgoSpec::FedEPL] {
+        for exec in [ExecMode::Sequential, ExecMode::Threaded] {
+            for transport in [TransportSpec::Mpsc, TransportSpec::Tcp] {
+                let bare = tiny_spec(algo.clone(), exec, transport, "");
+                let mut knobbed = bare.clone();
+                knobbed.apply_str("compression", "").unwrap();
+                knobbed.validate().unwrap();
+                assert_eq!(bare, knobbed, "empty pipeline must compare equal");
+                let tag = format!("{algo:?}/{exec:?}/{transport:?}");
+                assert_identical(&tag, &run(&bare), &run(&knobbed));
+            }
+        }
+    }
+}
+
+/// A compressed FedEP run completes, learns (positive MRR), and puts
+/// strictly fewer bytes on the wire than the dense baseline — for every
+/// shipped stack shape.
+#[test]
+fn compressed_runs_transmit_fewer_bytes() {
+    let dense = run(&tiny_spec(AlgoSpec::FedEP, ExecMode::Sequential, TransportSpec::Mpsc, ""));
+    assert!(dense.acct.bytes() > 0);
+    for stack in ["topk", "topk,int8", "topk,fp16", "topk,svd@4", "topk,int8:ef"] {
+        let out =
+            run(&tiny_spec(AlgoSpec::FedEP, ExecMode::Sequential, TransportSpec::Mpsc, stack));
+        assert!(
+            !out.history.records.is_empty(),
+            "[{stack}] produced no evaluated rounds"
+        );
+        assert!(out.history.mrr_cg() > 0.0, "[{stack}] MRR collapsed");
+        assert!(
+            out.acct.bytes() < dense.acct.bytes(),
+            "[{stack}] transmitted {} bytes, dense only {}",
+            out.acct.bytes(),
+            dense.acct.bytes()
+        );
+    }
+}
+
+/// A non-empty stack is itself transport- and exec-invariant: the packed
+/// frames meter identically over mpsc and TCP, sequential and threaded.
+#[test]
+fn compressed_run_is_transport_and_exec_invariant() {
+    let stack = "topk@0.5,int8:ef";
+    let base = run(&tiny_spec(AlgoSpec::FedEP, ExecMode::Sequential, TransportSpec::Mpsc, stack));
+    for (exec, transport) in [
+        (ExecMode::Sequential, TransportSpec::Tcp),
+        (ExecMode::Threaded, TransportSpec::Mpsc),
+        (ExecMode::Threaded, TransportSpec::Tcp),
+    ] {
+        let other = run(&tiny_spec(AlgoSpec::FedEP, exec, transport, stack));
+        assert_identical(&format!("{exec:?}/{transport:?}"), &base, &other);
+    }
+}

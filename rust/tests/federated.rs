@@ -49,6 +49,7 @@ fn base_cfg(algo: Algo, rounds: usize) -> RoundParams {
         shards: 1,
         participation: Default::default(),
         storage: Default::default(),
+        compression: Default::default(),
     }
 }
 

@@ -1,11 +1,14 @@
 //! Property tests of the FedS protocol pieces in combination: server
 //! aggregation conservation, sign/row consistency, Eq. 4 merge algebra,
-//! sync cycle structure, and failure injection on the wire.
+//! sync cycle structure, failure injection on the wire, and the packed
+//! compression frames (stage-tagged `--compress` payloads).
 
 use feds::comm::accounting::{Accounting, Direction};
 use feds::comm::transport::{duplex, Endpoint, TcpTransport};
 use feds::comm::wire::{read_frame, write_frame};
+use feds::fed::compression::{int8_dequantize, int8_quantize, Pipeline, PipelineSpec};
 use feds::fed::protocol::{Download, Upload};
+use feds::store::StorageSpec;
 use feds::fed::topk::{select_by_change, select_by_priority, top_k_count};
 use feds::fed::{Server, SyncSchedule};
 use feds::util::prop::check;
@@ -296,6 +299,108 @@ fn endpoint_meters_sparse_frames_exactly() {
         assert_eq!(acct.params_dir(Direction::Download), down.params());
         assert_eq!(acct.bytes_dir(Direction::Upload), up.encode().len() as u64);
         assert_eq!(acct.bytes_dir(Direction::Download), down.encode().len() as u64);
+    });
+}
+
+/// Every stage-tag combination the pipeline grammar admits at depth ≤ 3
+/// (Top-K first when present, no duplicate stage kinds).
+const ALL_STACKS: &[&str] = &[
+    "topk",
+    "topk@0.25",
+    "topk:ef",
+    "int8",
+    "int8:ef",
+    "fp16",
+    "fp16:ef",
+    "svd@4",
+    "svd@4:ef",
+    "topk,int8",
+    "topk,int8:ef",
+    "topk,fp16",
+    "topk,fp16:ef",
+    "topk,svd@4",
+    "topk@0.5:ef,svd@4:ef",
+    "topk,int8:ef,svd@4",
+    "topk:ef,fp16:ef,svd@4:ef",
+    "int8,svd@4",
+    "fp16,svd@4",
+];
+
+/// Encode a random block through `stack` at `width`, wrap it in
+/// `Upload::Packed`, and hand it back with the frame.
+fn random_packed(rng: &mut Rng, stack: &str) -> (Upload, Vec<u8>) {
+    let width = 4 + 4 * rng.usize_below(4); // 4..=16, divisible for svd@4
+    let n = 1 + rng.usize_below(24);
+    let pipeline = Pipeline::new(&PipelineSpec::parse(stack).unwrap(), width).unwrap();
+    let ids: Vec<u32> = (0..n as u32).collect();
+    let deltas: Vec<f32> = (0..n * width).map(|_| rng.uniform(-2.0, 2.0)).collect();
+    let mut res = pipeline.make_residuals(&StorageSpec::Ram, n).unwrap();
+    let block = pipeline.encode(&ids, &deltas, None, &mut res);
+    let up = Upload::Packed {
+        round: rng.next_u64() as u32,
+        client: rng.u32_below(64) as u16,
+        block,
+    };
+    let frame = up.encode();
+    (up, frame)
+}
+
+/// Property: packed frames of every stage-tag combination round-trip the
+/// wire exactly, and the decoded block reconstructs through the pipeline.
+#[test]
+fn packed_frames_roundtrip_for_every_stack() {
+    check("packed_wire_roundtrip", 2, |rng| {
+        for stack in ALL_STACKS {
+            let (up, frame) = random_packed(rng, stack);
+            let got = Upload::decode(&frame).unwrap();
+            assert_eq!(got, up, "stack {stack}");
+            let Upload::Packed { round, block, .. } = got else { unreachable!() };
+            let down = Download::Packed { round, block: block.clone() };
+            let dframe = down.encode();
+            assert_eq!(Download::decode(&dframe).unwrap(), down, "stack {stack}");
+            // the decoded block is still decodable by the same pipeline
+            let width = block.width as usize;
+            let pipeline =
+                Pipeline::new(&PipelineSpec::parse(stack).unwrap(), width).unwrap();
+            let (idx, rows) = pipeline.decode(&block).unwrap();
+            assert_eq!(rows.len(), idx.len() * width, "stack {stack}");
+        }
+    });
+}
+
+/// Property: truncating or corrupting a packed frame at any byte yields a
+/// typed error, never a panic.
+#[test]
+fn malformed_packed_frames_error_not_panic() {
+    check("packed_malformed", 2, |rng| {
+        for stack in ["topk", "topk,int8:ef", "topk,fp16", "int8,svd@4"] {
+            let (_, frame) = random_packed(rng, stack);
+            for cut in 0..frame.len() {
+                assert!(Upload::decode(&frame[..cut]).is_err(), "cut {cut} stack {stack}");
+            }
+            let mut bad = frame.clone();
+            let at = rng.usize_below(bad.len());
+            bad[at] ^= 0xA5;
+            // any outcome but a panic is acceptable: most flips error,
+            // some land in the float payload and still decode
+            let _ = Upload::decode(&bad);
+        }
+    });
+}
+
+/// Property: the int8 row quantizer's reconstruction error is bounded by
+/// half a quantization step (scale / 254) per component.
+#[test]
+fn int8_row_error_bounded() {
+    check("int8_error_bound", 40, |rng| {
+        let n = 1 + rng.usize_below(64);
+        let vals: Vec<f32> = (0..n).map(|_| rng.uniform(-8.0, 8.0)).collect();
+        let (scale, codes) = int8_quantize(&vals);
+        let back = int8_dequantize(scale, &codes);
+        let bound = (scale / 254.0) * (1.0 + 1e-5) + 1e-30;
+        for (a, b) in vals.iter().zip(&back) {
+            assert!((a - b).abs() <= bound, "|{a} - {b}| > {bound} (scale {scale})");
+        }
     });
 }
 

@@ -2,6 +2,7 @@
 //! JSON → `ExperimentSpec` round-trips exactly for every `AlgoSpec`
 //! variant, and out-of-range knobs are rejected at validation.
 
+use feds::fed::compression::PipelineSpec;
 use feds::fed::ExecMode;
 use feds::kge::Method;
 use feds::spec::{
@@ -49,6 +50,25 @@ fn random_spec(rng: &mut Rng) -> ExperimentSpec {
             eval_batch: 1 + rng.usize_below(128),
         }
     };
+    // a compression stack is only legal on the dense family
+    let compression = match &algo {
+        AlgoSpec::FedEP | AlgoSpec::FedEPL | AlgoSpec::Kd => {
+            let stacks = [
+                "",
+                "topk",
+                "topk@0.25",
+                "topk:ef",
+                "int8",
+                "fp16:ef",
+                "svd@4",
+                "topk,int8:ef",
+                "topk@0.5,fp16",
+                "topk,svd@8:ef",
+            ];
+            PipelineSpec::parse(stacks[rng.usize_below(stacks.len())]).unwrap()
+        }
+        _ => PipelineSpec::default(),
+    };
     ExperimentSpec {
         name: if rng.bool(0.5) { format!("spec-{}", rng.below(1000)) } else { String::new() },
         method: *rng.choose(&Method::ALL),
@@ -87,6 +107,7 @@ fn random_spec(rng: &mut Rng) -> ExperimentSpec {
             1 => StorageSpec::Mmap { dir: None },
             _ => StorageSpec::Mmap { dir: Some(format!("/tmp/feds-{}", rng.below(100))) },
         },
+        compression,
     }
 }
 

@@ -44,6 +44,7 @@ fn tiny_spec(algo: AlgoSpec, exec: ExecMode) -> ExperimentSpec {
         shards: 0,
         participation: Default::default(),
         storage: Default::default(),
+        compression: Default::default(),
     }
 }
 

@@ -45,6 +45,7 @@ fn tiny_spec(algo: AlgoSpec, exec: ExecMode, transport: TransportSpec) -> Experi
         shards: 4,
         participation: Default::default(),
         storage: Default::default(),
+        compression: Default::default(),
     }
 }
 

@@ -7,7 +7,7 @@ Usage (CI runs this from rust/ right after each bench smoke step):
     python3 ../scripts/bench_gate.py \
         --baseline ../BENCH_train.json --fresh BENCH_train.json
 
-Two point shapes are understood, detected from the fresh file:
+Three point shapes are understood, detected from the fresh file:
 
 * **Speedup points** (BENCH_train.json) gate the speedup ratios
   (`train_speedup`, `kernel_speedup_*`): ratios of two timings taken on
@@ -21,6 +21,14 @@ Two point shapes are understood, detected from the fresh file:
   `rss_fraction` (peak RSS of an E=1M mmap run over its dense table
   bytes — well below 1 when only touched pages go resident; skipped
   when the fresh point lacks it, e.g. off-Linux).
+* **Bytes points** (BENCH_bytes.json, recognized by
+  `bytes_reduction_topk_int8`) gate the compression frontier:
+  `bytes_reduction_topk_int8` (bytes-per-round of the topk stack over
+  topk,int8) must reach `--bytes-floor` (default 3.0 — int8 rows carry
+  a quarter of the payload plus a per-row scale), while
+  `mrr_degradation_topk_int8` (relative converged-MRR loss of topk,int8
+  vs topk) must stay under `--mrr-degradation-max` (default 0.01).  The
+  reduction also honors the relative band vs the committed baseline.
 
 Two kinds of checks in either mode:
 
@@ -134,6 +142,55 @@ def gate_scale(args, baseline, fresh, bootstrap):
     return failures, checked
 
 
+def gate_bytes(args, baseline, fresh, bootstrap):
+    """Frontier checks: the reduction is a floor, the degradation a
+    ceiling. Returns (failures, checked)."""
+    failures = []
+    checked = 0
+
+    key = "bytes_reduction_topk_int8"
+    val = float(fresh[key])
+    checked += 1
+    verdicts = []
+    if val < args.bytes_floor:
+        failures.append(f"{key} = {val:.2f}x is below the absolute floor "
+                        f"{args.bytes_floor:.2f}x")
+        verdicts.append("FLOOR FAIL")
+    else:
+        verdicts.append("floor ok")
+    if not bootstrap and key in baseline:
+        want = args.band * float(baseline[key])
+        if val < want:
+            failures.append(
+                f"{key} = {val:.2f}x regressed below {args.band:.2f} x "
+                f"baseline {float(baseline[key]):.2f}x (= {want:.2f}x)")
+            verdicts.append("BAND FAIL")
+        else:
+            verdicts.append(f"band ok vs {float(baseline[key]):.2f}x")
+    elif bootstrap:
+        verdicts.append("band skipped (bootstrap baseline)")
+    else:
+        verdicts.append("band skipped (key not in baseline)")
+    print(f"bench_gate: {key:28s} {val:8.2f}x  [{'; '.join(verdicts)}]")
+
+    key = "mrr_degradation_topk_int8"
+    if key in fresh:
+        checked += 1
+        val = float(fresh[key])
+        if val > args.mrr_degradation_max:
+            failures.append(
+                f"{key} = {val:.4f} is above the absolute ceiling "
+                f"{args.mrr_degradation_max:.4f}")
+            verdict = "CEILING FAIL"
+        else:
+            verdict = "ceiling ok"
+        print(f"bench_gate: {key:28s} {val:8.4f}   [{verdict}]")
+    else:
+        print(f"bench_gate: {key:28s} {'—':>8}   [skipped (not in fresh point)]")
+
+    return failures, checked
+
+
 def main():
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--baseline", required=True, help="committed trajectory point")
@@ -149,13 +206,20 @@ def main():
                     help="absolute ceiling for scale_round_ratio (default 3.0)")
     ap.add_argument("--rss-frac-max", type=float, default=0.75,
                     help="absolute ceiling for rss_fraction (default 0.75)")
+    ap.add_argument("--bytes-floor", type=float, default=3.0,
+                    help="absolute floor for bytes_reduction_topk_int8 (default 3.0)")
+    ap.add_argument("--mrr-degradation-max", type=float, default=0.01,
+                    help="absolute ceiling for mrr_degradation_topk_int8 (default 0.01)")
     args = ap.parse_args()
 
     baseline = load(args.baseline)
     fresh = load(args.fresh)
     bootstrap = bool(baseline.get("bootstrap"))
 
-    if "scale_round_ratio" in fresh:
+    if "bytes_reduction_topk_int8" in fresh:
+        failures, checked = gate_bytes(args, baseline, fresh, bootstrap)
+        what = "frontier keys"
+    elif "scale_round_ratio" in fresh:
         failures, checked = gate_scale(args, baseline, fresh, bootstrap)
         what = "scale keys"
     else:

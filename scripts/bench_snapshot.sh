@@ -17,5 +17,6 @@ cargo bench --bench train_hot_path
 cargo bench --bench server_shards
 cargo bench --bench cluster_wallclock
 cargo bench --bench scale
+cargo bench --bench compression_frontier
 
 echo "bench_snapshot: refreshed $(ls ../BENCH_*.json | tr '\n' ' ')"
